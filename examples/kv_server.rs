@@ -1,0 +1,30 @@
+//! Domain scenario: a Redis-like KV server with collision chains in far
+//! memory, served by request-concurrent coroutines (the paper's Redis
+//! port). Reports throughput (requests per million cycles) and the mean
+//! request latency baseline-vs-AMU.
+//!
+//!     cargo run --release --example kv_server
+
+use amu_sim::config::SimConfig;
+use amu_sim::workloads::{build, Scale, Variant};
+
+fn main() {
+    println!("KV serving (YCSB-B-like, 95% GET / 5% SET, zipf keys)");
+    println!(
+        "{:>9} {:>14} {:>14} {:>12}",
+        "lat(us)", "base req/Mcyc", "amu req/Mcyc", "throughput x"
+    );
+    // 32 concurrent client coroutines x 4 ops each at test scale.
+    let requests = 32.0 * 4.0;
+    for lat in [200.0, 1000.0, 5000.0] {
+        let mut b = SimConfig::baseline().with_far_latency_ns(lat);
+        b.far.jitter_frac = 0.0;
+        let mut a = SimConfig::amu().with_far_latency_ns(lat);
+        a.far.jitter_frac = 0.0;
+        let base = build("redis", &b, Variant::Sync, Scale::Test).run(&b).unwrap();
+        let amu = build("redis", &a, Variant::Amu, Scale::Test).run(&a).unwrap();
+        let tb = requests / (base.stats.measured_cycles as f64 / 1e6);
+        let ta = requests / (amu.stats.measured_cycles as f64 / 1e6);
+        println!("{:>9.1} {:>14.1} {:>14.1} {:>11.2}x", lat / 1000.0, tb, ta, ta / tb);
+    }
+}

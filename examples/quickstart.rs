@@ -1,0 +1,38 @@
+//! Quickstart: simulate GUPS on the baseline and on the AMU at 1 µs far
+//! memory latency and print the speedup — the paper's elevator pitch.
+//!
+//!     cargo run --release --example quickstart
+
+use amu_sim::config::SimConfig;
+use amu_sim::workloads::{build, Scale, Variant};
+
+fn main() {
+    let latency_ns = 1000.0;
+    let base_cfg = SimConfig::baseline().with_far_latency_ns(latency_ns);
+    let amu_cfg = SimConfig::amu().with_far_latency_ns(latency_ns);
+
+    println!("GUPS @ {latency_ns} ns additional far-memory latency");
+    let base = build("gups", &base_cfg, Variant::Sync, Scale::Test)
+        .run(&base_cfg)
+        .expect("baseline run");
+    println!(
+        "  baseline : {:>9} cycles  ipc={:.2}  mlp={:.1}",
+        base.stats.measured_cycles,
+        base.stats.ipc(),
+        base.stats.mlp()
+    );
+    let amu = build("gups", &amu_cfg, Variant::Amu, Scale::Test)
+        .run(&amu_cfg)
+        .expect("amu run");
+    println!(
+        "  AMU      : {:>9} cycles  ipc={:.2}  mlp={:.1}  peak in-flight={}",
+        amu.stats.measured_cycles,
+        amu.stats.ipc(),
+        amu.stats.mlp(),
+        amu.stats.far_inflight.max
+    );
+    println!(
+        "  speedup  : {:.2}x",
+        base.stats.measured_cycles as f64 / amu.stats.measured_cycles as f64
+    );
+}

@@ -1,0 +1,58 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the Rust PJRT runtime.
+
+HLO text (NOT `lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()`)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the `xla` crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Runs once from `make artifacts`; the Rust binary is self-contained after.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, fn, example_args in model.entry_points():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest)} entries")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

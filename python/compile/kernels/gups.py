@@ -1,0 +1,124 @@
+"""Layer-1 Pallas kernels: the benchmark suite's payload transforms.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets a
+RISC-V OoO core, not a GPU, so there is no threadblock structure to port.
+What the far-memory tier actually *serves* in the evaluation are batched
+payload transforms — GUPS xor-updates, STREAM triad blocks, ELL SpMV row
+blocks, and multiplicative hashing. Each is expressed as a Pallas kernel
+tiled for VMEM via `BlockSpec` (lane-multiple blocks), with the HBM<->VMEM
+schedule carried by the grid. `interpret=True` everywhere: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, so numerics are validated
+through the interpret path and TPU efficiency is estimated analytically
+(EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane-friendly block sizes: multiples of 128 (TPU VPU lanes); 512 elements
+# of 4 B = 2 KiB per operand block, far under the VMEM budget, which lets
+# the compiler double-buffer the HBM streams.
+BLOCK = 512
+
+
+def _gups_kernel(vals_ref, idxs_ref, out_ref):
+    out_ref[...] = vals_ref[...] ^ idxs_ref[...]
+
+
+def gups_update(vals, idxs):
+    """new_vals = vals ^ idxs over int32 lanes (GUPS payload batch)."""
+    n = vals.shape[0]
+    assert n % BLOCK == 0, f"n={n} must be a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _gups_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(vals, idxs)
+
+
+def _triad_kernel(scalar_ref, b_ref, c_ref, out_ref):
+    out_ref[...] = b_ref[...] + scalar_ref[0] * c_ref[...]
+
+
+def stream_triad(b, c, scalar):
+    """a = b + scalar * c (STREAM triad blocks)."""
+    n = b.shape[0]
+    assert n % BLOCK == 0
+    grid = (n // BLOCK,)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    scalar_arr = jnp.asarray(scalar, dtype=b.dtype).reshape((1,))
+    return pl.pallas_call(
+        _triad_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda i: (0,)), spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), b.dtype),
+        interpret=True,
+    )(scalar_arr, b, c)
+
+
+def _hash_kernel(keys_ref, out_ref):
+    h = (keys_ref[...].astype(jnp.uint32) * jnp.uint32(0x9E3779B9)).astype(jnp.uint32)
+    h = h ^ (h >> jnp.uint32(16))
+    h = (h * jnp.uint32(0x85EBCA6B)).astype(jnp.uint32)
+    out_ref[...] = (h ^ (h >> jnp.uint32(13))).astype(jnp.int32)
+
+
+def hash_mult(keys):
+    """Batched multiplicative hash (KV-workload bucket selection)."""
+    n = keys.shape[0]
+    assert n % BLOCK == 0
+    grid = (n // BLOCK,)
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _hash_kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(keys)
+
+
+# SpMV: one grid step per row tile; the x vector is small enough to sit in
+# VMEM whole (matching the workload, where x is the node-local vector and
+# only the matrix streams from far memory). The inner contraction maps onto
+# the MXU when nnz is padded to the 128 lane multiple.
+ROW_TILE = 8
+
+
+def _spmv_kernel(vals_ref, cols_ref, x_ref, out_ref):
+    x = x_ref[...]
+    vals = vals_ref[...]
+    cols = cols_ref[...]
+    gathered = x[cols]  # (ROW_TILE, nnz) gather from VMEM
+    out_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def spmv_ell(vals, cols, x):
+    """y[r] = sum_j vals[r,j] * x[cols[r,j]] for an ELL row block."""
+    rows, nnz = vals.shape
+    assert rows % ROW_TILE == 0
+    grid = (rows // ROW_TILE,)
+    mat_spec = pl.BlockSpec((ROW_TILE, nnz), lambda i: (i, 0))
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            mat_spec,
+            mat_spec,
+            pl.BlockSpec(x.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), vals.dtype),
+        interpret=True,
+    )(vals, cols, x)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas payload kernels.
+
+These are the correctness references (pytest asserts kernel == ref); they
+also document the exact semantics the Rust integration tests mirror.
+"""
+
+import jax.numpy as jnp
+
+
+def gups_update_ref(vals, idxs):
+    """GUPS payload transform: new_val[i] = vals[i] ^ idxs[i]."""
+    return vals ^ idxs
+
+
+def stream_triad_ref(b, c, scalar):
+    """STREAM triad: a = b + scalar * c."""
+    return b + scalar * c
+
+
+def spmv_ell_ref(vals, cols, x):
+    """ELL SpMV row block: y[r] = sum_j vals[r, j] * x[cols[r, j]]."""
+    gathered = x[cols]  # (rows, nnz)
+    return jnp.sum(vals * gathered, axis=1)
+
+
+def hash_mult_ref(keys):
+    """Multiplicative hash used by the KV workloads (u32 splitmix round)."""
+    h = (keys * jnp.uint32(0x9E3779B9)).astype(jnp.uint32)
+    h = h ^ (h >> jnp.uint32(16))
+    h = (h * jnp.uint32(0x85EBCA6B)).astype(jnp.uint32)
+    return h ^ (h >> jnp.uint32(13))

@@ -1,0 +1,74 @@
+"""Layer-2 JAX model: the payload engine the Rust coordinator loads.
+
+Composes the Layer-1 Pallas kernels into the jitted entry points that are
+AOT-lowered to HLO text (see `aot.py`). Build-time only — never imported on
+the simulation path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gups as k
+
+# Fixed AOT shapes: one executable per entry point, mirrored by
+# rust/src/runtime/payload.rs.
+GUPS_BATCH = 4096
+TRIAD_N = 8192
+HASH_BATCH = 4096
+SPMV_ROWS = 256
+SPMV_NNZ = 32
+SPMV_XLEN = 2048
+
+
+def gups_step(vals, idxs):
+    """Fused GUPS payload step: hash the indices into the table's index
+    space *and* apply the xor update — the full far-memory-side transform
+    for one batch of updates."""
+    hashed = k.hash_mult(idxs)
+    return k.gups_update(vals, hashed)
+
+
+def entry_points():
+    """(name, fn, example_args) for every AOT artifact."""
+    i32 = jnp.int32
+    f32 = jnp.float32
+    return [
+        (
+            "gups_update",
+            k.gups_update,
+            (
+                jax.ShapeDtypeStruct((GUPS_BATCH,), i32),
+                jax.ShapeDtypeStruct((GUPS_BATCH,), i32),
+            ),
+        ),
+        (
+            "gups_step",
+            gups_step,
+            (
+                jax.ShapeDtypeStruct((GUPS_BATCH,), i32),
+                jax.ShapeDtypeStruct((GUPS_BATCH,), i32),
+            ),
+        ),
+        (
+            "stream_triad",
+            lambda b, c: k.stream_triad(b, c, 3.0),
+            (
+                jax.ShapeDtypeStruct((TRIAD_N,), f32),
+                jax.ShapeDtypeStruct((TRIAD_N,), f32),
+            ),
+        ),
+        (
+            "hash_mult",
+            k.hash_mult,
+            (jax.ShapeDtypeStruct((HASH_BATCH,), i32),),
+        ),
+        (
+            "spmv_ell",
+            k.spmv_ell,
+            (
+                jax.ShapeDtypeStruct((SPMV_ROWS, SPMV_NNZ), f32),
+                jax.ShapeDtypeStruct((SPMV_ROWS, SPMV_NNZ), i32),
+                jax.ShapeDtypeStruct((SPMV_XLEN,), f32),
+            ),
+        ),
+    ]

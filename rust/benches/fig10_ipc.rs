@@ -1,0 +1,12 @@
+//! Bench harness for paper Fig 10: IPC.
+use amu_sim::report;
+fn bench_scale() -> amu_sim::workloads::Scale {
+    match std::env::var("AMU_BENCH_SCALE").as_deref() {
+        Ok("paper") => amu_sim::workloads::Scale::Paper,
+        _ => amu_sim::workloads::Scale::Test,
+    }
+}
+fn main() {
+    let rows = report::sweep_cached(bench_scale(), false);
+    report::write_report("fig10", &report::fig10(&rows));
+}

@@ -1,0 +1,12 @@
+//! Bench harness for paper Fig 11: normalized static+dynamic power.
+use amu_sim::report;
+fn bench_scale() -> amu_sim::workloads::Scale {
+    match std::env::var("AMU_BENCH_SCALE").as_deref() {
+        Ok("paper") => amu_sim::workloads::Scale::Paper,
+        _ => amu_sim::workloads::Scale::Test,
+    }
+}
+fn main() {
+    let rows = report::sweep_cached(bench_scale(), false);
+    report::write_report("fig11", &report::fig11(&rows));
+}

@@ -1,0 +1,14 @@
+//! Bench harness for paper Fig 3: GUPS group-prefetch sensitivity across
+//! hardware scaling (cxl-ideal / x2 / x4).
+use amu_sim::report;
+fn bench_scale() -> amu_sim::workloads::Scale {
+    match std::env::var("AMU_BENCH_SCALE").as_deref() {
+        Ok("paper") => amu_sim::workloads::Scale::Paper,
+        _ => amu_sim::workloads::Scale::Test,
+    }
+}
+fn main() {
+    let t0 = std::time::Instant::now();
+    report::write_report("fig3", &report::fig3(bench_scale(), 1000.0));
+    eprintln!("[bench fig3] wall {:?}", t0.elapsed());
+}

@@ -1,0 +1,30 @@
+//! Microbenchmarks: simulator throughput (host cycles/sec) per subsystem —
+//! the §Perf measurement harness (criterion is unavailable offline; this
+//! reports wall-clock and simulated-cycle rates directly).
+use amu_sim::config::SimConfig;
+use amu_sim::report::run_one;
+use amu_sim::workloads::{Scale, Variant};
+
+fn time_one(bench: &str, config: &str, variant: Variant, lat: f64) {
+    let t0 = std::time::Instant::now();
+    let r = run_one(bench, config, variant, lat, Scale::Test).expect(bench);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{bench:>8} {config:>10} {:>6} @{lat:>6}ns: {:>10} cycles in {:>7.3}s = {:>6.2} Mcyc/s",
+        variant.tag(),
+        r.total_cycles,
+        dt,
+        r.total_cycles as f64 / dt / 1e6
+    );
+}
+
+fn main() {
+    println!("# simulator throughput microbenchmarks");
+    for lat in [100.0, 1000.0, 5000.0] {
+        time_one("gups", "baseline", Variant::Sync, lat);
+        time_one("gups", "amu", Variant::Amu, lat);
+    }
+    time_one("stream", "cxl-ideal", Variant::Sync, 1000.0);
+    time_one("bfs", "amu", Variant::Amu, 1000.0);
+    let _ = SimConfig::baseline();
+}

@@ -1,0 +1,12 @@
+//! Bench harness for paper Table 5: software memory disambiguation
+//! overhead (HJ, HT) across latencies.
+use amu_sim::report;
+fn bench_scale() -> amu_sim::workloads::Scale {
+    match std::env::var("AMU_BENCH_SCALE").as_deref() {
+        Ok("paper") => amu_sim::workloads::Scale::Paper,
+        _ => amu_sim::workloads::Scale::Test,
+    }
+}
+fn main() {
+    report::write_report("table5", &report::table5(bench_scale()));
+}

@@ -1,0 +1,5 @@
+//! Bench harness for paper Table 6: AMU hardware resource overhead.
+use amu_sim::report;
+fn main() {
+    report::write_report("table6", &report::table6());
+}

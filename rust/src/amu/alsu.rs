@@ -1,0 +1,120 @@
+//! ALSU-side state: list vector registers and the uncommitted-ID-register
+//! speculation contract (paper §4.2–4.3).
+//!
+//! A list vector register is a 512-bit physical vector register holding a
+//! pointer plus up to 31 16-bit IDs. ID-management micro-ops pop/push IDs
+//! at register speed; only when a register runs empty does the ALSU fetch a
+//! batch from the ASMC. Speculative pops are journaled per ROB entry and
+//! undone on squash — the timing equivalent of the paper's uncommitted ID
+//! register, which guarantees IDs fetched from the ASMC survive
+//! mispredictions. DMA-mode shrinks the registers to a single ID and makes
+//! ID micro-ops non-speculative, modeling an external engine.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LvrKind {
+    Free,
+    Finished,
+}
+
+#[derive(Debug)]
+pub struct Alsu {
+    pub free_lvr: Vec<u16>,
+    pub fin_lvr: Vec<u16>,
+    /// Nominal LVR capacity (31, or 1 in DMA-mode). Squash-undo may
+    /// transiently exceed this — that overflow *is* the uncommitted ID
+    /// register.
+    pub cap: usize,
+    pub dma_mode: bool,
+    /// Only one outstanding batch fetch until it completes (§4.3 case 3).
+    pub batch_busy: bool,
+}
+
+impl Alsu {
+    pub fn new(cap: usize, dma_mode: bool) -> Self {
+        Self {
+            free_lvr: Vec::with_capacity(cap * 2),
+            fin_lvr: Vec::with_capacity(cap * 2),
+            cap: cap.max(1),
+            dma_mode,
+            batch_busy: false,
+        }
+    }
+
+    fn lvr(&mut self, kind: LvrKind) -> &mut Vec<u16> {
+        match kind {
+            LvrKind::Free => &mut self.free_lvr,
+            LvrKind::Finished => &mut self.fin_lvr,
+        }
+    }
+
+    /// Pop an ID for a micro-op; journal the result for squash recovery.
+    pub fn pop(&mut self, kind: LvrKind) -> Option<u16> {
+        self.lvr(kind).pop()
+    }
+
+    /// Undo a speculative pop (squash recovery).
+    pub fn unpop(&mut self, kind: LvrKind, id: u16) {
+        self.lvr(kind).push(id);
+    }
+
+    /// Refill from a delivered ASMC batch.
+    pub fn refill(&mut self, kind: LvrKind, ids: &[u16]) {
+        self.lvr(kind).extend_from_slice(ids);
+    }
+
+    /// Recycle a getfin-returned ID locally if there is register room;
+    /// returns false if the caller should send it back to the ASMC.
+    pub fn recycle_free(&mut self, id: u16) -> bool {
+        if self.free_lvr.len() < self.cap {
+            self.free_lvr.push(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn ids_resident(&self) -> usize {
+        self.free_lvr.len() + self.fin_lvr.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pop_refill_unpop_roundtrip() {
+        let mut a = Alsu::new(31, false);
+        assert_eq!(a.pop(LvrKind::Free), None);
+        a.refill(LvrKind::Free, &[1, 2, 3]);
+        let id = a.pop(LvrKind::Free).unwrap();
+        assert_eq!(id, 3);
+        a.unpop(LvrKind::Free, id);
+        assert_eq!(a.free_lvr.len(), 3);
+    }
+
+    #[test]
+    fn recycle_respects_capacity() {
+        let mut a = Alsu::new(2, false);
+        assert!(a.recycle_free(1));
+        assert!(a.recycle_free(2));
+        assert!(!a.recycle_free(3), "full register: send back to ASMC");
+    }
+
+    #[test]
+    fn dma_mode_single_entry() {
+        let a = Alsu::new(1, true);
+        assert_eq!(a.cap, 1);
+        assert!(a.dma_mode);
+    }
+
+    #[test]
+    fn separate_registers() {
+        let mut a = Alsu::new(31, false);
+        a.refill(LvrKind::Free, &[7]);
+        a.refill(LvrKind::Finished, &[9]);
+        assert_eq!(a.pop(LvrKind::Finished), Some(9));
+        assert_eq!(a.pop(LvrKind::Free), Some(7));
+        assert_eq!(a.ids_resident(), 0);
+    }
+}

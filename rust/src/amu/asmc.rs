@@ -1,0 +1,520 @@
+//! ASMC — Asynchronous Scratchpad Memory Controller (paper §4.1, Fig 6).
+//!
+//! Owns the three SPM-resident metadata structures: the **free list**, the
+//! **finished list**, and the **AMART** (Asynchronous Memory Access Request
+//! Table, indexed by request ID). Converts committed AMI requests into far
+//! memory transfers, splitting >64 B granularities into line-sized
+//! sub-requests via a state machine with a bounded pending queue; caches
+//! list heads in registers so ID batch transfers run at register speed.
+//!
+//! Functionally, an `aload` copies far memory -> SPM at completion and an
+//! `astore` copies SPM -> far memory when the request is accepted (the data
+//! leaves the SPM with the request, like a store buffer read).
+
+use crate::config::AmuConfig;
+use crate::isa::mem::GuestMem;
+use crate::mem::MemSys;
+use crate::stats::Stats;
+use std::collections::VecDeque;
+
+/// A committed AMI request from the ALSU.
+#[derive(Debug, Clone, Copy)]
+pub struct AmiReq {
+    pub id: u16,
+    pub spm: u64,
+    pub mem: u64,
+    pub is_store: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchKind {
+    Free,
+    Finished,
+}
+
+/// Handle for an in-flight ALSU<->ASMC batch ID transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchTicket(pub u64);
+
+#[derive(Debug, Clone, Copy, Default)]
+struct AmartEntry {
+    spm: u64,
+    mem: u64,
+    gran: u64,
+    is_store: bool,
+    remaining_subs: u16,
+    issued_at: u64,
+    active: bool,
+}
+
+#[derive(Debug)]
+struct PendingBatch {
+    ticket: BatchTicket,
+    kind: BatchKind,
+    cap: usize,
+    /// When the request reaches the ASMC (lists are popped here).
+    arrive: u64,
+    /// When the response reaches the ALSU.
+    deliver: u64,
+    ids: Option<Vec<u16>>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct SubReq {
+    id: u16,
+    mem: u64,
+    bytes: u32,
+    is_store: bool,
+    sub_idx: u16,
+}
+
+const PENDING_QUEUE_DEPTH: usize = 32;
+
+pub struct Asmc {
+    cfg: AmuConfig,
+    pub granularity: u64,
+    pub queue_length: usize,
+    free_list: VecDeque<u16>,
+    finished_list: VecDeque<u16>,
+    amart: Vec<AmartEntry>,
+    req_queue: VecDeque<AmiReq>,
+    sub_queue: VecDeque<SubReq>,
+    batches: Vec<PendingBatch>,
+    next_ticket: u64,
+    /// IDs handed to the ALSU in free batches but not yet in-flight:
+    /// conservation invariant bookkeeping only.
+    pub ids_at_alsu: usize,
+    // Stats.
+    pub requests: u64,
+    pub subrequests: u64,
+    pub completions: u64,
+    pub alloc_failures: u64,
+}
+
+impl Asmc {
+    pub fn new(cfg: &AmuConfig) -> Self {
+        let ql = cfg.queue_length;
+        Self {
+            cfg: cfg.clone(),
+            granularity: 8,
+            queue_length: ql,
+            free_list: (1..=ql as u16).collect(),
+            finished_list: VecDeque::new(),
+            amart: vec![AmartEntry::default(); ql + 1],
+            req_queue: VecDeque::new(),
+            sub_queue: VecDeque::new(),
+            batches: Vec::new(),
+            next_ticket: 0,
+            ids_at_alsu: 0,
+            requests: 0,
+            subrequests: 0,
+            completions: 0,
+            alloc_failures: 0,
+        }
+    }
+
+    /// Reconfigure via `cfgwr` (queue_length reinitializes the metadata).
+    pub fn set_granularity(&mut self, g: u64) {
+        self.granularity = g.clamp(1, 4096);
+    }
+
+    pub fn set_queue_length(&mut self, ql: u64) {
+        let ql = (ql as usize).clamp(1, 4096);
+        self.queue_length = ql;
+        self.free_list = (1..=ql as u16).collect();
+        self.finished_list.clear();
+        self.amart = vec![AmartEntry::default(); ql + 1];
+        self.ids_at_alsu = 0;
+    }
+
+    pub fn queue_has_space(&self) -> bool {
+        self.req_queue.len() < PENDING_QUEUE_DEPTH
+    }
+
+    /// Accept a committed AMI request (caller checked `queue_has_space`).
+    pub fn push_request(&mut self, req: AmiReq) {
+        debug_assert!(self.queue_has_space());
+        debug_assert!(req.id as usize <= self.queue_length && req.id != 0);
+        self.req_queue.push_back(req);
+    }
+
+    /// ALSU requests a batch of IDs. `extra_latency` models DMA-mode uncore
+    /// hops. Returns a ticket; poll with [`Asmc::poll_batch`].
+    pub fn request_batch(
+        &mut self,
+        kind: BatchKind,
+        cap: usize,
+        now: u64,
+        extra_latency: u64,
+    ) -> BatchTicket {
+        self.next_ticket += 1;
+        let t = BatchTicket(self.next_ticket);
+        let half = self.cfg.asmc_round_trip / 2 + extra_latency;
+        self.batches.push(PendingBatch {
+            ticket: t,
+            kind,
+            cap,
+            arrive: now + half,
+            deliver: now + half * 2,
+            ids: None,
+        });
+        t
+    }
+
+    /// Check whether a batch response has arrived at the ALSU; returns the
+    /// IDs once `now >= deliver`. Delivered free-list IDs are accounted as
+    /// resident at the ALSU until they come back via a request or
+    /// [`Asmc::return_ids`].
+    pub fn poll_batch(&mut self, ticket: BatchTicket, now: u64) -> Option<Vec<u16>> {
+        let idx = self.batches.iter().position(|b| b.ticket == ticket)?;
+        if self.batches[idx].ids.is_some() && now >= self.batches[idx].deliver {
+            let b = self.batches.swap_remove(idx);
+            let ids = b.ids.unwrap();
+            // Both free IDs (awaiting allocation) and finished IDs (awaiting
+            // getfin, after which they become free again) live at the ALSU.
+            self.ids_at_alsu += ids.len();
+            return Some(ids);
+        }
+        None
+    }
+
+    /// Deliver any due batch regardless of ticket. Used when the micro-op
+    /// that initiated a batch fetch was squashed: the uncommitted-ID
+    /// register still captures the delivered IDs so they are not lost
+    /// (paper §4.3 case 3).
+    pub fn poll_any_batch(&mut self, now: u64) -> Option<(Vec<u16>, super::LvrKind)> {
+        let idx = self
+            .batches
+            .iter()
+            .position(|b| b.ids.is_some() && now >= b.deliver)?;
+        let b = self.batches.swap_remove(idx);
+        let ids = b.ids.unwrap();
+        self.ids_at_alsu += ids.len();
+        let kind = match b.kind {
+            BatchKind::Free => super::LvrKind::Free,
+            BatchKind::Finished => super::LvrKind::Finished,
+        };
+        Some((ids, kind))
+    }
+
+    /// Return IDs from the ALSU (squash recovery path / LVR writeback).
+    pub fn return_ids(&mut self, ids: &[u16]) {
+        for &id in ids {
+            debug_assert!(id != 0 && id as usize <= self.queue_length);
+            self.free_list.push_back(id);
+            self.ids_at_alsu = self.ids_at_alsu.saturating_sub(1);
+        }
+    }
+
+    /// One ASMC clock: process batch arrivals, accept requests, issue
+    /// sub-requests, and retire completions.
+    pub fn tick(
+        &mut self,
+        now: u64,
+        mem_sys: &mut MemSys,
+        guest: &mut GuestMem,
+        stats: &mut Stats,
+    ) {
+        // 1. Batch requests whose command has arrived: pop the lists.
+        for b in self.batches.iter_mut() {
+            if b.ids.is_none() && now >= b.arrive {
+                let list = match b.kind {
+                    BatchKind::Free => &mut self.free_list,
+                    BatchKind::Finished => &mut self.finished_list,
+                };
+                let n = b.cap.min(list.len());
+                let ids: Vec<u16> = list.drain(..n).collect();
+                if b.kind == BatchKind::Free && ids.is_empty() {
+                    self.alloc_failures += 1;
+                    stats.amart_full_events += 1;
+                }
+                stats.id_batch_fetches += 1;
+                b.ids = Some(ids);
+            }
+        }
+
+        // 2. Accept requests into the AMART and split into sub-requests.
+        for _ in 0..self.cfg.asmc_ops_per_cycle {
+            let Some(req) = self.req_queue.pop_front() else { break };
+            self.requests += 1;
+            self.ids_at_alsu = self.ids_at_alsu.saturating_sub(1);
+            let gran = self.granularity;
+            let n_subs = gran.div_ceil(64).max(1) as u16;
+            self.amart[req.id as usize] = AmartEntry {
+                spm: req.spm,
+                mem: req.mem,
+                gran,
+                is_store: req.is_store,
+                remaining_subs: n_subs,
+                issued_at: now,
+                active: true,
+            };
+            if req.is_store {
+                // Data leaves the SPM with the request.
+                guest.copy(req.mem, req.spm, gran as usize);
+                stats.astores += 1;
+            } else {
+                stats.aloads += 1;
+            }
+            // SPM metadata write cost is covered by the ops/cycle pacing.
+            stats.spm_accesses += 1;
+            for k in 0..n_subs {
+                let off = k as u64 * 64;
+                let bytes = (gran - off).min(64) as u32;
+                self.sub_queue.push_back(SubReq {
+                    id: req.id,
+                    mem: req.mem + off,
+                    bytes,
+                    is_store: req.is_store,
+                    sub_idx: k,
+                });
+            }
+        }
+
+        // 3. Issue sub-requests onto the link.
+        for _ in 0..self.cfg.asmc_ops_per_cycle {
+            let Some(sub) = self.sub_queue.pop_front() else { break };
+            self.subrequests += 1;
+            stats.amu_subrequests += 1;
+            let token = (sub.id as u32) << 8 | (sub.sub_idx as u32 & 0xff);
+            mem_sys.far_direct(sub.is_store, sub.mem, sub.bytes as usize, token, now);
+            if sub.is_store {
+                stats.far_writes += 1;
+            } else {
+                stats.far_reads += 1;
+            }
+            stats.far_bytes += sub.bytes as u64;
+        }
+
+        // 4. Retire completed sub-requests.
+        let completions: Vec<_> = mem_sys.asmc_completions.drain(..).collect();
+        for c in completions {
+            let id = (c.token >> 8) as usize;
+            let e = &mut self.amart[id];
+            debug_assert!(e.active, "completion for inactive AMART entry {id}");
+            e.remaining_subs -= 1;
+            if e.remaining_subs == 0 {
+                e.active = false;
+                if !e.is_store {
+                    // aload: data lands in SPM now.
+                    let (spm, mem, gran) = (e.spm, e.mem, e.gran);
+                    guest.copy(spm, mem, gran as usize);
+                }
+                self.finished_list.push_back(id as u16);
+                self.completions += 1;
+                stats.ami_completion_latency.add(now.saturating_sub(e.issued_at));
+                stats.spm_accesses += 1;
+            }
+        }
+    }
+
+    // ---- introspection for tests / invariants ----
+
+    pub fn free_len(&self) -> usize {
+        self.free_list.len()
+    }
+
+    pub fn batches_len(&self) -> usize {
+        self.batches.len()
+    }
+
+    pub fn finished_len(&self) -> usize {
+        self.finished_list.len()
+    }
+
+    pub fn inflight_amart(&self) -> usize {
+        self.amart.iter().filter(|e| e.active).count()
+    }
+
+    /// ID conservation: every ID `1..=queue_length` lives in exactly one
+    /// place — the free list, the finished list, an active AMART entry, the
+    /// ALSU (list vector registers / popped registers / the request queue,
+    /// all covered by `ids_at_alsu`), or an undelivered batch in flight.
+    pub fn id_conservation_holds(&self) -> bool {
+        let undelivered: usize = self
+            .batches
+            .iter()
+            .map(|b| b.ids.as_ref().map_or(0, |v| v.len()))
+            .sum();
+        self.free_list.len()
+            + self.finished_list.len()
+            + self.inflight_amart()
+            + self.ids_at_alsu
+            + undelivered
+            == self.queue_length
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::isa::mem::{FAR_BASE, SPM_BASE};
+
+    struct Rig {
+        asmc: Asmc,
+        mem: MemSys,
+        guest: GuestMem,
+        stats: Stats,
+    }
+
+    fn rig(latency_ns: f64) -> Rig {
+        let mut cfg = SimConfig::amu().with_far_latency_ns(latency_ns);
+        cfg.far.jitter_frac = 0.0;
+        Rig {
+            asmc: Asmc::new(&cfg.amu),
+            mem: MemSys::new(&cfg),
+            guest: GuestMem::new(),
+            stats: Stats::default(),
+        }
+    }
+
+    fn run(r: &mut Rig, from: u64, to: u64) {
+        for c in from..to {
+            r.mem.tick(c, 10, 4);
+            r.asmc.tick(c, &mut r.mem, &mut r.guest, &mut r.stats);
+        }
+    }
+
+    #[test]
+    fn aload_completes_and_moves_data() {
+        let mut r = rig(1000.0);
+        r.guest.write_u64(FAR_BASE + 320, 0xFEED);
+        r.asmc.push_request(AmiReq { id: 1, spm: SPM_BASE, mem: FAR_BASE + 320, is_store: false });
+        run(&mut r, 0, 10_000);
+        assert_eq!(r.asmc.finished_len(), 1);
+        assert_eq!(r.guest.read_u64(SPM_BASE), 0xFEED);
+        assert_eq!(r.stats.aloads, 1);
+        assert!(r.stats.ami_completion_latency.mean() >= 3000.0);
+    }
+
+    #[test]
+    fn astore_moves_data_at_accept_time() {
+        let mut r = rig(1000.0);
+        r.guest.write_u64(SPM_BASE + 64, 0xBEEF);
+        r.asmc.push_request(AmiReq { id: 2, spm: SPM_BASE + 64, mem: FAR_BASE, is_store: true });
+        run(&mut r, 0, 5); // just a few cycles: data already moved
+        assert_eq!(r.guest.read_u64(FAR_BASE), 0xBEEF);
+        // But completion (ack) takes the round trip.
+        assert_eq!(r.asmc.finished_len(), 0);
+        run(&mut r, 5, 10_000);
+        assert_eq!(r.asmc.finished_len(), 1);
+    }
+
+    #[test]
+    fn large_granularity_splits_into_subrequests() {
+        let mut r = rig(1000.0);
+        r.asmc.set_granularity(512);
+        for i in 0..512u64 {
+            r.guest.write(FAR_BASE + i, 1, i & 0xff);
+        }
+        r.asmc.push_request(AmiReq { id: 3, spm: SPM_BASE, mem: FAR_BASE, is_store: false });
+        run(&mut r, 0, 20_000);
+        assert_eq!(r.asmc.subrequests, 8, "512B / 64B = 8 sub-requests");
+        assert_eq!(r.asmc.finished_len(), 1, "one completion for the whole request");
+        for i in 0..512u64 {
+            assert_eq!(r.guest.read(SPM_BASE + i, 1), i & 0xff);
+        }
+    }
+
+    #[test]
+    fn free_batch_fetch_roundtrip() {
+        let mut r = rig(1000.0);
+        let t = r.asmc.request_batch(BatchKind::Free, 31, 0, 0);
+        assert!(r.asmc.poll_batch(t, 1).is_none(), "not ready immediately");
+        run(&mut r, 0, 30);
+        let ids = r.asmc.poll_batch(t, 30).expect("delivered after round trip");
+        assert_eq!(ids.len(), 31);
+        assert_eq!(r.asmc.free_len(), r.asmc.queue_length - 31);
+        // Conservation: 31 at ALSU.
+        assert_eq!(r.asmc.ids_at_alsu, 31);
+    }
+
+    #[test]
+    fn finished_batch_empty_when_nothing_done() {
+        let mut r = rig(1000.0);
+        let t = r.asmc.request_batch(BatchKind::Finished, 31, 0, 0);
+        run(&mut r, 0, 30);
+        let ids = r.asmc.poll_batch(t, 30).expect("delivered");
+        assert!(ids.is_empty(), "nothing finished yet");
+    }
+
+    #[test]
+    fn free_exhaustion_reports_alloc_failure() {
+        let mut cfg = SimConfig::amu();
+        cfg.amu.queue_length = 4;
+        let mut r = rig(1000.0);
+        r.asmc.set_queue_length(4);
+        let t1 = r.asmc.request_batch(BatchKind::Free, 31, 0, 0);
+        run(&mut r, 0, 30);
+        assert_eq!(r.asmc.poll_batch(t1, 30).unwrap().len(), 4);
+        let t2 = r.asmc.request_batch(BatchKind::Free, 31, 30, 0);
+        run(&mut r, 30, 60);
+        assert!(r.asmc.poll_batch(t2, 60).unwrap().is_empty());
+        assert_eq!(r.asmc.alloc_failures, 1);
+        drop(cfg);
+    }
+
+    #[test]
+    fn return_ids_restores_free_list() {
+        let mut r = rig(1000.0);
+        let t = r.asmc.request_batch(BatchKind::Free, 8, 0, 0);
+        run(&mut r, 0, 30);
+        let ids = r.asmc.poll_batch(t, 30).unwrap();
+        let before = r.asmc.free_len();
+        r.asmc.return_ids(&ids);
+        assert_eq!(r.asmc.free_len(), before + 8);
+        assert_eq!(r.asmc.ids_at_alsu, 0);
+    }
+
+    #[test]
+    fn pending_queue_backpressure() {
+        let mut r = rig(1000.0);
+        let mut pushed = 0;
+        for id in 1..=64u16 {
+            if r.asmc.queue_has_space() {
+                r.asmc.push_request(AmiReq {
+                    id,
+                    spm: SPM_BASE,
+                    mem: FAR_BASE + id as u64 * 64,
+                    is_store: false,
+                });
+                pushed += 1;
+            }
+        }
+        assert_eq!(pushed, PENDING_QUEUE_DEPTH, "queue depth enforced");
+    }
+
+    #[test]
+    fn many_outstanding_requests_supported() {
+        // The headline claim: hundreds of in-flight requests with no MSHR
+        // involvement.
+        let mut r = rig(5000.0);
+        for id in 1..=200u16 {
+            // Pace pushes with queue space.
+            let mut c = (id as u64) * 3;
+            loop {
+                run(&mut r, c, c + 1);
+                if r.asmc.queue_has_space() {
+                    break;
+                }
+                c += 1;
+            }
+            r.asmc.push_request(AmiReq {
+                id,
+                spm: SPM_BASE + (id as u64 % 64) * 64,
+                mem: FAR_BASE + id as u64 * 4096,
+                is_store: false,
+            });
+        }
+        run(&mut r, 700, 2000);
+        assert!(
+            r.asmc.inflight_amart() > 130,
+            "paper headline: >130 outstanding, got {}",
+            r.asmc.inflight_amart()
+        );
+        assert_eq!(r.mem.l1d.misses + r.mem.l2.misses, 0, "no cache resources used");
+        run(&mut r, 2000, 100_000);
+        assert_eq!(r.asmc.finished_len(), 200);
+    }
+}

@@ -1,0 +1,15 @@
+//! AMU — the paper's Asynchronous Memory Access Unit.
+//!
+//! Split exactly as in the paper (§3.2/§4): the **ALSU** lives in the
+//! pipeline and executes AMI micro-ops against *list vector registers*
+//! (batched ID transfer, §4.2) with squash-safe speculation (§4.3); the
+//! **ASMC** sits beside the L2 controller and owns the SPM-resident
+//! metadata — free list, finished list, and the AMART — converting AMI
+//! requests into far-memory transfers, splitting large granularities into
+//! line-sized sub-requests with a dedicated state machine.
+
+pub mod alsu;
+pub mod asmc;
+
+pub use alsu::{Alsu, LvrKind};
+pub use asmc::{AmiReq, Asmc, BatchKind, BatchTicket};

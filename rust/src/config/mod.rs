@@ -1,0 +1,516 @@
+//! Simulator configuration: the paper's Table 2 machine, the four evaluated
+//! configurations, hardware-scaled variants (Fig 3), and a TOML-lite
+//! override mechanism so experiments are reproducible from files.
+
+use crate::util::toml_lite::Document;
+
+/// Out-of-order core parameters (paper Table 2: Golden-Cove-like).
+#[derive(Debug, Clone)]
+pub struct CoreConfig {
+    pub freq_ghz: f64,
+    pub fetch_width: usize,
+    pub decode_width: usize,
+    pub issue_width: usize,
+    pub commit_width: usize,
+    /// Frontend pipeline depth fetch->dispatch (mispredict redirect cost).
+    pub frontend_depth: usize,
+    pub rob_entries: usize,
+    pub iq_entries: usize,
+    pub lq_entries: usize,
+    pub sq_entries: usize,
+    pub phys_regs: usize,
+    /// Post-commit store buffer entries (drain to L1D).
+    pub store_buffer: usize,
+    pub alu_units: usize,
+    pub mul_units: usize,
+    pub mem_ports: usize,
+    pub mul_latency: u64,
+    /// Branch predictor: gshare table bits and BTB entries.
+    pub bp_table_bits: usize,
+    pub btb_entries: usize,
+}
+
+impl Default for CoreConfig {
+    fn default() -> Self {
+        Self {
+            freq_ghz: 3.0,
+            fetch_width: 6,
+            decode_width: 6,
+            issue_width: 6,
+            commit_width: 6,
+            frontend_depth: 5,
+            rob_entries: 512,
+            iq_entries: 160,
+            lq_entries: 128,
+            sq_entries: 64,
+            phys_regs: 512,
+            store_buffer: 56,
+            alu_units: 4,
+            mul_units: 2,
+            mem_ports: 2,
+            mul_latency: 3,
+            bp_table_bits: 14,
+            btb_entries: 2048,
+        }
+    }
+}
+
+/// One cache level.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    pub size_bytes: usize,
+    pub ways: usize,
+    pub line_bytes: usize,
+    pub mshrs: usize,
+    pub hit_latency: u64,
+    /// Max demand accesses accepted per cycle.
+    pub ports: usize,
+}
+
+impl CacheConfig {
+    pub fn sets(&self) -> usize {
+        self.size_bytes / (self.ways * self.line_bytes)
+    }
+}
+
+/// Local DRAM (DDR4-2400-like, simplified bank model).
+#[derive(Debug, Clone)]
+pub struct DramConfig {
+    pub banks: usize,
+    /// Row-buffer hit / miss service times in ns.
+    pub row_hit_ns: f64,
+    pub row_miss_ns: f64,
+    pub row_bytes: usize,
+    /// Peak data bandwidth in GB/s (64B transfer serialization).
+    pub bandwidth_gbps: f64,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        Self {
+            banks: 32,
+            row_hit_ns: 15.0,
+            row_miss_ns: 45.0,
+            row_bytes: 8192,
+            bandwidth_gbps: 19.2,
+        }
+    }
+}
+
+/// Far memory: serial link (CXL-like) + remote memory controller.
+/// The paper models packet delay (size-dependent), link bandwidth, and a
+/// configurable *additional* latency — coherence internals are not modeled.
+#[derive(Debug, Clone)]
+pub struct FarMemConfig {
+    /// Additional one-way-pair (request+response) latency added by the far
+    /// tier, in nanoseconds. This is the swept x-axis of Figs 2/8/9/10.
+    pub added_latency_ns: f64,
+    /// Link bandwidth per direction, GB/s (CXL x8-ish).
+    pub bandwidth_gbps: f64,
+    /// Per-packet header bytes (flit/protocol overhead).
+    pub header_bytes: usize,
+    /// Uniform jitter fraction of added latency (far memory latency is
+    /// "long and highly variable"); 0.0 disables.
+    pub jitter_frac: f64,
+    /// Remote memory controller service config.
+    pub remote_dram: DramConfig,
+}
+
+impl Default for FarMemConfig {
+    fn default() -> Self {
+        Self {
+            added_latency_ns: 1000.0,
+            bandwidth_gbps: 16.0,
+            header_bytes: 16,
+            jitter_frac: 0.05,
+            remote_dram: DramConfig::default(),
+        }
+    }
+}
+
+/// Prefetcher configuration (CXL-Ideal carries an L2 best-offset PF).
+#[derive(Debug, Clone, Default)]
+pub struct PrefetchConfig {
+    pub l2_best_offset: bool,
+    /// Prefetch degree per trigger.
+    pub degree: usize,
+    /// Fraction of L2 MSHRs prefetches may occupy (demand priority).
+    pub mshr_quota: f64,
+}
+
+/// AMU / AMI configuration.
+#[derive(Debug, Clone)]
+pub struct AmuConfig {
+    pub enabled: bool,
+    /// SPM carved out of L2, bytes (paper: 64 KB fixed).
+    pub spm_bytes: usize,
+    /// AMART entries (queue_length config register default); bounds
+    /// outstanding AMI requests.
+    pub queue_length: usize,
+    /// IDs a list vector register can hold (512-bit reg, 16-bit IDs, one
+    /// slot for the pointer -> 31).
+    pub lvr_capacity: usize,
+    /// DMA-mode: models an external memory engine — LVR capacity 1, no
+    /// speculative ID micro-ops, extra uncore round-trip per interaction.
+    pub dma_mode: bool,
+    /// Extra one-way cycles for DMA-mode engine interaction (NoC/IO bus).
+    pub dma_uncore_cycles: u64,
+    /// ASMC internal ops per cycle (metadata state machine throughput).
+    pub asmc_ops_per_cycle: usize,
+    /// SPM access latency in cycles (L2-class).
+    pub spm_latency: u64,
+    /// Cycles for an ALSU<->ASMC round trip (ID batch fetch, L1-L2 path).
+    pub asmc_round_trip: u64,
+}
+
+impl Default for AmuConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            spm_bytes: 64 * 1024,
+            // 512 x 32 B AMART entries = 16 KB of the 64 KB SPM. Must leave
+            // batching headroom above the coroutine count: IDs parked in
+            // list vector registers and in-flight batches (up to ~3 x 31)
+            // are temporarily unavailable to allocation.
+            queue_length: 512,
+            lvr_capacity: 31,
+            dma_mode: false,
+            dma_uncore_cycles: 40,
+            asmc_ops_per_cycle: 2,
+            spm_latency: 10,
+            asmc_round_trip: 24,
+        }
+    }
+}
+
+/// Complete simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub name: String,
+    pub seed: u64,
+    pub core: CoreConfig,
+    pub l1d: CacheConfig,
+    pub l2: CacheConfig,
+    pub dram: DramConfig,
+    pub far: FarMemConfig,
+    pub prefetch: PrefetchConfig,
+    pub amu: AmuConfig,
+    /// Safety valve: abort runs exceeding this many cycles.
+    pub max_cycles: u64,
+}
+
+fn l1d_table2() -> CacheConfig {
+    CacheConfig {
+        size_bytes: 32 * 1024,
+        ways: 16,
+        line_bytes: 64,
+        mshrs: 48,
+        hit_latency: 4,
+        ports: 2,
+    }
+}
+
+fn l2_table2() -> CacheConfig {
+    CacheConfig {
+        size_bytes: 256 * 1024,
+        ways: 8,
+        line_bytes: 64,
+        mshrs: 48,
+        hit_latency: 10,
+        ports: 1,
+    }
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig::baseline()
+    }
+}
+
+impl SimConfig {
+    /// Paper Table 2 `Baseline` (Golden-Cove-like, no prefetcher, no AMU).
+    pub fn baseline() -> Self {
+        Self {
+            name: "baseline".into(),
+            seed: 0xA11_5EED,
+            core: CoreConfig::default(),
+            l1d: l1d_table2(),
+            l2: l2_table2(),
+            dram: DramConfig::default(),
+            far: FarMemConfig::default(),
+            prefetch: PrefetchConfig::default(),
+            amu: AmuConfig::default(),
+            max_cycles: 2_000_000_000,
+        }
+    }
+
+    /// `CXL Ideal (with BOP)`: 256 MSHRs at each level + L2 best-offset
+    /// prefetcher — the paper's upper bound for conventional scaling.
+    pub fn cxl_ideal() -> Self {
+        let mut c = Self::baseline();
+        c.name = "cxl-ideal".into();
+        c.l1d.mshrs = 256;
+        c.l2.mshrs = 256;
+        c.prefetch = PrefetchConfig { l2_best_offset: true, degree: 2, mshr_quota: 0.75 };
+        c
+    }
+
+    /// Proposed `AMU` configuration (64 KB SPM carved from L2).
+    pub fn amu() -> Self {
+        let mut c = Self::baseline();
+        c.name = "amu".into();
+        c.amu.enabled = true;
+        // SPM occupies 64 KB of the 256 KB L2: effective cache shrinks.
+        c.l2.size_bytes -= c.amu.spm_bytes;
+        c
+    }
+
+    /// `AMU (DMA-mode)`: external-engine simulation — LVR batching off,
+    /// no speculative ID micro-ops, extra uncore latency.
+    pub fn amu_dma() -> Self {
+        let mut c = Self::amu();
+        c.name = "amu-dma".into();
+        c.amu.dma_mode = true;
+        c.amu.lvr_capacity = 1;
+        c
+    }
+
+    /// Fig 3 hardware-scaled variants: multiply IQ/LSQ/ROB/MSHR/physregs.
+    pub fn scaled(base: &SimConfig, factor: usize, name: &str) -> Self {
+        let mut c = base.clone();
+        c.name = name.into();
+        c.core.rob_entries *= factor;
+        c.core.iq_entries *= factor;
+        c.core.lq_entries *= factor;
+        c.core.sq_entries *= factor;
+        c.core.phys_regs *= factor;
+        c.l1d.mshrs *= factor;
+        c.l2.mshrs *= factor;
+        c
+    }
+
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "baseline" => Some(Self::baseline()),
+            "cxl-ideal" | "cxl_ideal" | "cxl" => Some(Self::cxl_ideal()),
+            "amu" => Some(Self::amu()),
+            "amu-dma" | "amu_dma" | "dma" => Some(Self::amu_dma()),
+            "x2" => Some(Self::scaled(&Self::cxl_ideal(), 2, "x2")),
+            "x4" => Some(Self::scaled(&Self::cxl_ideal(), 4, "x4")),
+            _ => None,
+        }
+    }
+
+    pub fn preset_names() -> &'static [&'static str] {
+        &["baseline", "cxl-ideal", "amu", "amu-dma", "x2", "x4"]
+    }
+
+    /// Set far-memory added latency from nanoseconds.
+    pub fn with_far_latency_ns(mut self, ns: f64) -> Self {
+        self.far.added_latency_ns = ns;
+        self
+    }
+
+    pub fn far_latency_cycles(&self) -> u64 {
+        crate::util::ns_to_cycles(self.far.added_latency_ns, self.core.freq_ghz)
+    }
+
+    /// Apply `section.key` overrides from a TOML-lite document. Unknown keys
+    /// are rejected so config files can't silently rot.
+    pub fn apply_overrides(&mut self, doc: &Document) -> Result<(), String> {
+        for (key, _) in doc.entries.iter() {
+            let handled = self.apply_one(doc, key)?;
+            if !handled {
+                return Err(format!("unknown config key '{key}'"));
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_one(&mut self, doc: &Document, key: &str) -> Result<bool, String> {
+        macro_rules! set_u {
+            ($field:expr) => {{
+                $field = doc
+                    .get_u64(key)
+                    .ok_or_else(|| format!("'{key}' must be an integer"))?
+                    as _;
+                true
+            }};
+        }
+        macro_rules! set_f {
+            ($field:expr) => {{
+                $field = doc
+                    .get_f64(key)
+                    .ok_or_else(|| format!("'{key}' must be a number"))?;
+                true
+            }};
+        }
+        macro_rules! set_b {
+            ($field:expr) => {{
+                $field = doc
+                    .get_bool(key)
+                    .ok_or_else(|| format!("'{key}' must be a bool"))?;
+                true
+            }};
+        }
+        Ok(match key {
+            "seed" => set_u!(self.seed),
+            "max_cycles" => set_u!(self.max_cycles),
+            "name" => {
+                self.name = doc.get_str(key).ok_or("'name' must be a string")?.into();
+                true
+            }
+            "core.freq_ghz" => set_f!(self.core.freq_ghz),
+            "core.fetch_width" => set_u!(self.core.fetch_width),
+            "core.issue_width" => set_u!(self.core.issue_width),
+            "core.commit_width" => set_u!(self.core.commit_width),
+            "core.rob_entries" => set_u!(self.core.rob_entries),
+            "core.iq_entries" => set_u!(self.core.iq_entries),
+            "core.lq_entries" => set_u!(self.core.lq_entries),
+            "core.sq_entries" => set_u!(self.core.sq_entries),
+            "core.phys_regs" => set_u!(self.core.phys_regs),
+            "core.store_buffer" => set_u!(self.core.store_buffer),
+            "core.mem_ports" => set_u!(self.core.mem_ports),
+            "l1d.size_bytes" => set_u!(self.l1d.size_bytes),
+            "l1d.ways" => set_u!(self.l1d.ways),
+            "l1d.mshrs" => set_u!(self.l1d.mshrs),
+            "l1d.hit_latency" => set_u!(self.l1d.hit_latency),
+            "l2.size_bytes" => set_u!(self.l2.size_bytes),
+            "l2.ways" => set_u!(self.l2.ways),
+            "l2.mshrs" => set_u!(self.l2.mshrs),
+            "l2.hit_latency" => set_u!(self.l2.hit_latency),
+            "dram.bandwidth_gbps" => set_f!(self.dram.bandwidth_gbps),
+            "far.added_latency_ns" => set_f!(self.far.added_latency_ns),
+            "far.bandwidth_gbps" => set_f!(self.far.bandwidth_gbps),
+            "far.jitter_frac" => set_f!(self.far.jitter_frac),
+            "prefetch.l2_best_offset" => set_b!(self.prefetch.l2_best_offset),
+            "prefetch.degree" => set_u!(self.prefetch.degree),
+            "amu.enabled" => set_b!(self.amu.enabled),
+            "amu.spm_bytes" => set_u!(self.amu.spm_bytes),
+            "amu.queue_length" => set_u!(self.amu.queue_length),
+            "amu.lvr_capacity" => set_u!(self.amu.lvr_capacity),
+            "amu.dma_mode" => set_b!(self.amu.dma_mode),
+            "amu.spm_latency" => set_u!(self.amu.spm_latency),
+            _ => false,
+        })
+    }
+
+    /// Sanity checks that catch nonsensical configs before a run.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.core.rob_entries == 0 || self.core.phys_regs < 64 {
+            return Err("core too small (need >=64 phys regs, >0 ROB)".into());
+        }
+        if !self.l1d.size_bytes.is_power_of_two() || !self.l2.size_bytes.is_power_of_two() {
+            // L2 minus SPM may be non-power-of-two; allow multiples of way*line.
+            if self.l1d.size_bytes % (self.l1d.ways * self.l1d.line_bytes) != 0
+                || self.l2.size_bytes % (self.l2.ways * self.l2.line_bytes) != 0
+            {
+                return Err("cache sizes must be multiples of ways*line".into());
+            }
+        }
+        if self.amu.enabled {
+            let meta = self.amu.queue_length * 32; // AMART entry ~32 B
+            if meta >= self.amu.spm_bytes {
+                return Err(format!(
+                    "AMART metadata ({meta} B) must leave SPM data room ({} B)",
+                    self.amu.spm_bytes
+                ));
+            }
+        }
+        if self.far.added_latency_ns < 0.0 || self.far.bandwidth_gbps <= 0.0 {
+            return Err("far memory latency/bandwidth out of range".into());
+        }
+        Ok(())
+    }
+
+    /// The paper's swept far-memory latencies in ns (0.1–5 µs).
+    pub fn paper_latencies_ns() -> &'static [f64] {
+        &[100.0, 200.0, 500.0, 1000.0, 2000.0, 5000.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_baseline_matches_paper() {
+        let c = SimConfig::baseline();
+        assert_eq!(c.core.rob_entries, 512);
+        assert_eq!(c.core.phys_regs, 512);
+        assert_eq!(c.core.lq_entries + c.core.sq_entries, 192); // 192-entry LSQ
+        assert_eq!(c.l1d.size_bytes, 32 * 1024);
+        assert_eq!(c.l1d.ways, 16);
+        assert_eq!(c.l1d.mshrs, 48);
+        assert_eq!(c.l1d.hit_latency, 4);
+        assert_eq!(c.l2.size_bytes, 256 * 1024);
+        assert_eq!(c.l2.ways, 8);
+        assert_eq!(c.l2.hit_latency, 10);
+        assert!((c.core.freq_ghz - 3.0).abs() < 1e-12);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn cxl_ideal_has_256_mshrs_and_bop() {
+        let c = SimConfig::cxl_ideal();
+        assert_eq!(c.l1d.mshrs, 256);
+        assert_eq!(c.l2.mshrs, 256);
+        assert!(c.prefetch.l2_best_offset);
+    }
+
+    #[test]
+    fn amu_carves_spm_from_l2() {
+        let c = SimConfig::amu();
+        assert!(c.amu.enabled);
+        assert_eq!(c.amu.spm_bytes, 64 * 1024);
+        assert_eq!(c.l2.size_bytes, 192 * 1024);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn dma_mode_limits_lvr() {
+        let c = SimConfig::amu_dma();
+        assert!(c.amu.dma_mode);
+        assert_eq!(c.amu.lvr_capacity, 1);
+    }
+
+    #[test]
+    fn scaled_variants() {
+        let x2 = SimConfig::preset("x2").unwrap();
+        assert_eq!(x2.core.rob_entries, 1024);
+        assert_eq!(x2.l1d.mshrs, 512);
+        let x4 = SimConfig::preset("x4").unwrap();
+        assert_eq!(x4.core.rob_entries, 2048);
+    }
+
+    #[test]
+    fn far_latency_cycles() {
+        let c = SimConfig::baseline().with_far_latency_ns(1000.0);
+        assert_eq!(c.far_latency_cycles(), 3000); // 1 us @ 3 GHz
+    }
+
+    #[test]
+    fn overrides_apply_and_reject_unknown() {
+        let mut c = SimConfig::baseline();
+        let doc = crate::util::toml_lite::parse("[core]\nrob_entries = 64\n").unwrap();
+        c.apply_overrides(&doc).unwrap();
+        assert_eq!(c.core.rob_entries, 64);
+        let bad = crate::util::toml_lite::parse("[core]\nbogus = 1\n").unwrap();
+        assert!(c.apply_overrides(&bad).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_oversized_amart() {
+        let mut c = SimConfig::amu();
+        c.amu.queue_length = 4096; // 4096*32 = 128 KB > 64 KB SPM
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn all_presets_valid() {
+        for name in SimConfig::preset_names() {
+            let c = SimConfig::preset(name).unwrap();
+            c.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+}

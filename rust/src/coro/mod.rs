@@ -1,0 +1,329 @@
+//! Guest-side coroutine runtime (the paper's §5.2 framework, here emitted
+//! as guest assembly by a builder instead of C++20 coroutines).
+//!
+//! Every AMU workload runs N lightweight tasks over a scheduler whose event
+//! loop is exactly the paper's Figure 4 flow: a task issues `aload`,
+//! registers itself in a waiters table keyed by request ID, and suspends;
+//! the scheduler `getfin`s completed IDs and resumes the owning task.
+//! Context save/restore costs are real instructions, so scheduler overhead
+//! shows up in IPC and power exactly as the paper discusses.
+//!
+//! Memory layout (local DRAM):
+//! * TCB array — one 128 B block per task:
+//!   `[cont_pc][param0..3][save0..7][next_waiter][pad...]`
+//! * waiters table — `queue_length+1` words: request id -> TCB address.
+//! * ready ring — TCBs unblocked by the disambiguation layer (see
+//!   `disambig`), drained by the scheduler before polling.
+//!
+//! Register conventions (tasks must not touch r56–r63 except via helpers):
+//! r56 = TCB base, r57 = waiters base, r58 = current TCB, r59 = spawn
+//! cursor, r60 = finished-task count, r61 = task count, r62/r63 = scratch.
+
+pub mod disambig;
+
+use crate::isa::mem::Layout;
+use crate::isa::{Asm, GuestMem};
+use crate::stats::Region;
+
+pub const R_TCB_BASE: u8 = 56;
+pub const R_WAITERS: u8 = 57;
+pub const R_CUR_TCB: u8 = 58;
+pub const R_SPAWN: u8 = 59;
+pub const R_FINISHED: u8 = 60;
+pub const R_NTASKS: u8 = 61;
+pub const R_TMP: u8 = 62;
+pub const R_TMP2: u8 = 63;
+
+pub const TCB_SHIFT: u64 = 7; // 128 B per TCB
+pub const TCB_BYTES: u64 = 1 << TCB_SHIFT;
+pub const OFF_CONT: i64 = 0;
+pub const OFF_PARAM: i64 = 8; // 4 params
+pub const OFF_SAVE: i64 = 40; // 8 save slots
+pub const OFF_NEXT_WAITER: i64 = 104;
+
+pub const MAX_PARAMS: usize = 4;
+pub const MAX_SAVES: usize = 8;
+
+#[derive(Debug, Clone)]
+pub struct CoroRt {
+    pub ntasks: usize,
+    pub tcb_base: u64,
+    pub waiters_base: u64,
+    pub ready_base: u64,
+    pub ready_cap: u64, // power of two
+}
+
+impl CoroRt {
+    pub fn new(layout: &mut Layout, ntasks: usize, queue_length: usize) -> Self {
+        assert!(ntasks >= 1);
+        // Each task holds at most one outstanding request, but up to three
+        // LVR batches of IDs (~93) can be parked at the ALSU or in flight
+        // between ALSU and ASMC at any instant; without this headroom an
+        // allocation can transiently fail and strand a task.
+        assert!(
+            ntasks + 93 <= queue_length,
+            "more tasks ({ntasks}) than AMART entries ({queue_length}) minus \
+             batching headroom: ID allocation could fail"
+        );
+        let tcb_base = layout.alloc_local(ntasks as u64 * TCB_BYTES, 64);
+        let waiters_base = layout.alloc_local((queue_length as u64 + 1) * 8, 64);
+        let ready_cap = (ntasks as u64 + 1).next_power_of_two();
+        // ready ring: [head][tail][slots...]
+        let ready_base = layout.alloc_local(16 + ready_cap * 8, 64);
+        Self { ntasks, tcb_base, waiters_base, ready_base, ready_cap }
+    }
+
+    pub fn tcb_addr(&self, tid: usize) -> u64 {
+        self.tcb_base + (tid as u64) * TCB_BYTES
+    }
+
+    /// Host-side TCB initialization: continuation label is resolved after
+    /// assembly via `Program::labels`, so write TCBs with the *entry label
+    /// name* through [`CoroRt::write_tcbs`].
+    pub fn write_tcbs(
+        &self,
+        mem: &mut GuestMem,
+        prog: &crate::isa::Program,
+        entry_label: &str,
+        params: impl Fn(usize) -> [u64; MAX_PARAMS],
+    ) {
+        let entry = prog
+            .labels
+            .iter()
+            .find(|(n, _)| n == entry_label)
+            .unwrap_or_else(|| panic!("entry label '{entry_label}' not found"))
+            .1 as u64;
+        for tid in 0..self.ntasks {
+            let tcb = self.tcb_addr(tid);
+            mem.write_u64(tcb, entry);
+            let p = params(tid);
+            for (i, v) in p.iter().enumerate() {
+                mem.write_u64(tcb + OFF_PARAM as u64 + (i as u64) * 8, *v);
+            }
+            mem.write_u64(tcb + OFF_NEXT_WAITER as u64, 0);
+        }
+        // Clear ready ring head/tail.
+        mem.write_u64(self.ready_base, 0);
+        mem.write_u64(self.ready_base + 8, 0);
+    }
+
+    /// Emit runtime register setup. Call before `emit_scheduler`.
+    pub fn emit_prologue(&self, a: &mut Asm) {
+        a.region(Region::Scheduler);
+        a.li(R_TCB_BASE, self.tcb_base as i64);
+        a.li(R_WAITERS, self.waiters_base as i64);
+        a.li(R_SPAWN, 0);
+        a.li(R_FINISHED, 0);
+        a.li(R_NTASKS, self.ntasks as i64);
+        a.region(Region::Main);
+    }
+
+    /// Emit the scheduler event loop. Control flow:
+    /// ready-ring pop > spawn next task > getfin poll. Falls through to
+    /// `done_label` when all tasks finished. Tasks are entered via `jalr`.
+    pub fn emit_scheduler(&self, a: &mut Asm, done_label: &str) {
+        a.region(Region::Scheduler);
+        a.label("co_dispatch");
+        // 1. Ready ring (disambiguation wakeups) has priority.
+        a.li(R_TMP, self.ready_base as i64);
+        a.ld64(R_TMP2, R_TMP, 0); // head
+        a.ld64(R_TMP, R_TMP, 8); // tail
+        a.bne(R_TMP2, R_TMP, "co_pop_ready");
+        // 2. Spawn phase.
+        a.blt(R_SPAWN, R_NTASKS, "co_spawn");
+        // 3. All done?
+        a.beq(R_FINISHED, R_NTASKS, "co_all_done");
+        // 4. Poll for a completed request.
+        a.getfin(R_TMP);
+        a.beq(R_TMP, 0, "co_dispatch");
+        // waiters[id] -> TCB
+        a.slli(R_TMP, R_TMP, 3);
+        a.add(R_TMP, R_TMP, R_WAITERS);
+        a.ld64(R_CUR_TCB, R_TMP, 0);
+        a.ld64(R_TMP2, R_CUR_TCB, OFF_CONT);
+        a.jalr(0, R_TMP2); // resume task (returns via j co_dispatch)
+        // (not reached)
+        a.j("co_dispatch");
+
+        a.label("co_pop_ready");
+        // tcb = slots[head & (cap-1)]; head++
+        a.li(R_TMP, self.ready_base as i64);
+        a.ld64(R_TMP2, R_TMP, 0); // head
+        a.andi(R_CUR_TCB, R_TMP2, (self.ready_cap - 1) as i64);
+        a.slli(R_CUR_TCB, R_CUR_TCB, 3);
+        a.add(R_CUR_TCB, R_CUR_TCB, R_TMP);
+        a.ld64(R_CUR_TCB, R_CUR_TCB, 16);
+        a.addi(R_TMP2, R_TMP2, 1);
+        a.st64(R_TMP2, R_TMP, 0);
+        a.ld64(R_TMP2, R_CUR_TCB, OFF_CONT);
+        a.jalr(0, R_TMP2);
+        a.j("co_dispatch");
+
+        a.label("co_spawn");
+        a.slli(R_CUR_TCB, R_SPAWN, TCB_SHIFT as i64);
+        a.add(R_CUR_TCB, R_CUR_TCB, R_TCB_BASE);
+        a.addi(R_SPAWN, R_SPAWN, 1);
+        a.ld64(R_TMP2, R_CUR_TCB, OFF_CONT);
+        a.jalr(0, R_TMP2);
+        a.j("co_dispatch");
+
+        a.label("co_all_done");
+        a.j(done_label);
+        a.region(Region::Main);
+    }
+
+    /// Emit a task-entry parameter load from the current TCB.
+    pub fn emit_load_param(&self, a: &mut Asm, rd: u8, idx: usize) {
+        assert!(idx < MAX_PARAMS);
+        a.ld64(rd, R_CUR_TCB, OFF_PARAM + (idx as i64) * 8);
+    }
+
+    /// Suspend the current task until request `id_reg` completes:
+    /// saves `live` registers (≤8), registers in the waiters table, and
+    /// jumps to the scheduler. Control resumes at `resume` with the live
+    /// set restored.
+    pub fn emit_await(&self, a: &mut Asm, id_reg: u8, live: &[u8], resume: &str) {
+        assert!(live.len() <= MAX_SAVES);
+        assert!(id_reg != R_TMP2 && id_reg != R_CUR_TCB);
+        a.region(Region::Scheduler);
+        for (i, &r) in live.iter().enumerate() {
+            a.st64(r, R_CUR_TCB, OFF_SAVE + (i as i64) * 8);
+        }
+        a.li_label(R_TMP2, resume);
+        a.st64(R_TMP2, R_CUR_TCB, OFF_CONT);
+        // waiters[id] = tcb
+        a.slli(R_TMP2, id_reg, 3);
+        a.add(R_TMP2, R_TMP2, R_WAITERS);
+        a.st64(R_CUR_TCB, R_TMP2, 0);
+        a.j("co_dispatch");
+        a.label(resume);
+        for (i, &r) in live.iter().enumerate() {
+            a.ld64(r, R_CUR_TCB, OFF_SAVE + (i as i64) * 8);
+        }
+        a.region(Region::Main);
+    }
+
+    /// Emit task termination: bump the finished counter and return to the
+    /// scheduler.
+    pub fn emit_task_finish(&self, a: &mut Asm) {
+        a.region(Region::Scheduler);
+        a.addi(R_FINISHED, R_FINISHED, 1);
+        a.j("co_dispatch");
+        a.region(Region::Main);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::isa::mem::{FAR_BASE, SPM_BASE};
+    use crate::sim::Simulator;
+
+    /// N tasks each aload one far word into their SPM slot, add 1, and
+    /// astore it back. The archetypal AMU workload shape.
+    fn build_incr_workload(ntasks: usize, latency_ns: f64) -> Simulator {
+        let mut cfg = SimConfig::amu().with_far_latency_ns(latency_ns);
+        cfg.far.jitter_frac = 0.0;
+        let meta = cfg.amu.queue_length as u64 * 32;
+        let spm_data = cfg.amu.spm_bytes as u64 - meta;
+        let mut layout = Layout::new(spm_data as usize);
+        let rt = CoroRt::new(&mut layout, ntasks, cfg.amu.queue_length);
+        let far = layout.alloc_far(ntasks as u64 * 8, 64);
+
+        let mut a = Asm::new("coro-incr");
+        a.li(1, 8);
+        a.cfgwr(1, crate::isa::CfgReg::Granularity);
+        rt.emit_prologue(&mut a);
+        a.roi_begin();
+        a.j("sched");
+        a.label("task");
+        // params: p0 = far addr, p1 = spm slot addr
+        rt.emit_load_param(&mut a, 10, 0);
+        rt.emit_load_param(&mut a, 11, 1);
+        a.aload(12, 11, 10);
+        rt.emit_await(&mut a, 12, &[10, 11], "task_r1");
+        a.ld64(13, 11, 0);
+        a.addi(13, 13, 1);
+        a.st64(13, 11, 0);
+        a.ld64(13, 11, 0); // ensure the SPM write is architecturally done
+        a.astore(14, 11, 10);
+        rt.emit_await(&mut a, 14, &[], "task_r2");
+        rt.emit_task_finish(&mut a);
+        a.label("sched");
+        rt.emit_scheduler(&mut a, "done");
+        a.label("done");
+        a.roi_end();
+        a.halt();
+        let prog = a.finish();
+
+        let mut sim = Simulator::new(cfg, prog.clone());
+        for t in 0..ntasks {
+            sim.guest.write_u64(far + t as u64 * 8, 1000 + t as u64);
+        }
+        let spm_slots = SPM_BASE;
+        rt.write_tcbs(&mut sim.guest, &prog, "task", |tid| {
+            [far + tid as u64 * 8, spm_slots + tid as u64 * 64, 0, 0]
+        });
+        sim
+    }
+
+    #[test]
+    fn coro_increment_workload_correct() {
+        let ntasks = 32;
+        let mut sim = build_incr_workload(ntasks, 1000.0);
+        sim.run().expect("run");
+        for t in 0..ntasks as u64 {
+            let v = sim.guest.read_u64(FAR_BASE + t * 8);
+            assert_eq!(v, 1001 + t, "task {t} must increment its word");
+        }
+        assert!(sim.amu_ids_conserved());
+    }
+
+    #[test]
+    fn coroutines_overlap_latency() {
+        // 64 tasks at 2 us: serial would be ≥ 64 * 2 * 6000 = 768k cycles.
+        // Interleaved coroutines must overlap nearly all of it.
+        let mut sim = build_incr_workload(64, 2000.0);
+        sim.run().expect("run");
+        assert!(
+            sim.cycle < 120_000,
+            "coroutines failed to overlap: {} cycles",
+            sim.cycle
+        );
+        assert!(
+            sim.stats.far_inflight.max >= 32,
+            "peak MLP too low: {}",
+            sim.stats.far_inflight.max
+        );
+    }
+
+    #[test]
+    fn mlp_scales_with_task_count() {
+        let mut small = build_incr_workload(8, 2000.0);
+        small.run().unwrap();
+        let mut big = build_incr_workload(128, 2000.0);
+        big.run().unwrap();
+        let mlp_small = small.stats.mlp();
+        let mlp_big = big.stats.mlp();
+        assert!(
+            mlp_big > mlp_small * 2.0,
+            "MLP should scale with coroutines: {mlp_small:.1} -> {mlp_big:.1}"
+        );
+    }
+
+    #[test]
+    fn scheduler_cycles_attributed() {
+        let mut sim = build_incr_workload(32, 500.0);
+        sim.run().unwrap();
+        let sched = sim.stats.region_fraction(crate::stats::Region::Scheduler);
+        assert!(sched > 0.01, "scheduler region must be visible: {sched}");
+    }
+
+    #[test]
+    #[should_panic(expected = "more tasks")]
+    fn too_many_tasks_rejected() {
+        let mut layout = Layout::new(32 * 1024);
+        let _ = CoroRt::new(&mut layout, 600, 512);
+    }
+}

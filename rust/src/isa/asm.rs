@@ -1,0 +1,310 @@
+//! Assembler for guest programs: label resolution, typed emit helpers,
+//! one-level call/ret pseudo-ops, and region tagging for stats attribution.
+
+use super::inst::{CfgReg, Inst, Opcode, Program, LINK};
+use std::collections::HashMap;
+
+#[derive(Default)]
+pub struct Asm {
+    insts: Vec<Inst>,
+    labels: HashMap<String, usize>,
+    fixups: Vec<(usize, String)>,
+    region: u8,
+    name: String,
+}
+
+impl Asm {
+    pub fn new(name: &str) -> Self {
+        Asm { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Current instruction index (next emit position).
+    pub fn here(&self) -> usize {
+        self.insts.len()
+    }
+
+    /// Set the stats attribution region for subsequently emitted code.
+    pub fn region(&mut self, r: crate::stats::Region) -> &mut Self {
+        self.region = r as u8;
+        self
+    }
+
+    pub fn label(&mut self, name: &str) -> &mut Self {
+        let at = self.here();
+        let prev = self.labels.insert(name.to_string(), at);
+        assert!(prev.is_none(), "duplicate label '{name}'");
+        self
+    }
+
+    fn emit(&mut self, op: Opcode, rd: u8, rs1: u8, rs2: u8, imm: i64, size: u8) -> &mut Self {
+        self.insts.push(Inst { op, rd, rs1, rs2, imm, size, region: self.region });
+        self
+    }
+
+    fn emit_branch(&mut self, op: Opcode, rs1: u8, rs2: u8, target: &str) -> &mut Self {
+        let at = self.here();
+        self.fixups.push((at, target.to_string()));
+        self.emit(op, 0, rs1, rs2, 0, 0)
+    }
+
+    // --- ALU ---
+    pub fn add(&mut self, rd: u8, rs1: u8, rs2: u8) -> &mut Self {
+        self.emit(Opcode::Add, rd, rs1, rs2, 0, 0)
+    }
+    pub fn sub(&mut self, rd: u8, rs1: u8, rs2: u8) -> &mut Self {
+        self.emit(Opcode::Sub, rd, rs1, rs2, 0, 0)
+    }
+    pub fn xor(&mut self, rd: u8, rs1: u8, rs2: u8) -> &mut Self {
+        self.emit(Opcode::Xor, rd, rs1, rs2, 0, 0)
+    }
+    pub fn and(&mut self, rd: u8, rs1: u8, rs2: u8) -> &mut Self {
+        self.emit(Opcode::And, rd, rs1, rs2, 0, 0)
+    }
+    pub fn or(&mut self, rd: u8, rs1: u8, rs2: u8) -> &mut Self {
+        self.emit(Opcode::Or, rd, rs1, rs2, 0, 0)
+    }
+    pub fn sll(&mut self, rd: u8, rs1: u8, rs2: u8) -> &mut Self {
+        self.emit(Opcode::Sll, rd, rs1, rs2, 0, 0)
+    }
+    pub fn srl(&mut self, rd: u8, rs1: u8, rs2: u8) -> &mut Self {
+        self.emit(Opcode::Srl, rd, rs1, rs2, 0, 0)
+    }
+    pub fn mul(&mut self, rd: u8, rs1: u8, rs2: u8) -> &mut Self {
+        self.emit(Opcode::Mul, rd, rs1, rs2, 0, 0)
+    }
+    pub fn sltu(&mut self, rd: u8, rs1: u8, rs2: u8) -> &mut Self {
+        self.emit(Opcode::SltU, rd, rs1, rs2, 0, 0)
+    }
+    pub fn addi(&mut self, rd: u8, rs1: u8, imm: i64) -> &mut Self {
+        self.emit(Opcode::Addi, rd, rs1, 0, imm, 0)
+    }
+    pub fn xori(&mut self, rd: u8, rs1: u8, imm: i64) -> &mut Self {
+        self.emit(Opcode::Xori, rd, rs1, 0, imm, 0)
+    }
+    pub fn andi(&mut self, rd: u8, rs1: u8, imm: i64) -> &mut Self {
+        self.emit(Opcode::Andi, rd, rs1, 0, imm, 0)
+    }
+    pub fn ori(&mut self, rd: u8, rs1: u8, imm: i64) -> &mut Self {
+        self.emit(Opcode::Ori, rd, rs1, 0, imm, 0)
+    }
+    pub fn slli(&mut self, rd: u8, rs1: u8, imm: i64) -> &mut Self {
+        self.emit(Opcode::Slli, rd, rs1, 0, imm, 0)
+    }
+    pub fn srli(&mut self, rd: u8, rs1: u8, imm: i64) -> &mut Self {
+        self.emit(Opcode::Srli, rd, rs1, 0, imm, 0)
+    }
+    pub fn li(&mut self, rd: u8, imm: i64) -> &mut Self {
+        self.emit(Opcode::Li, rd, 0, 0, imm, 0)
+    }
+    /// Load the instruction index of `target` into `rd` (continuation
+    /// pointers for the coroutine runtime).
+    pub fn li_label(&mut self, rd: u8, target: &str) -> &mut Self {
+        let at = self.here();
+        self.fixups.push((at, target.to_string()));
+        self.emit(Opcode::Li, rd, 0, 0, 0, 0)
+    }
+    pub fn mv(&mut self, rd: u8, rs: u8) -> &mut Self {
+        self.addi(rd, rs, 0)
+    }
+
+    // --- memory ---
+    pub fn ld(&mut self, rd: u8, base: u8, off: i64, size: u8) -> &mut Self {
+        self.emit(Opcode::Ld, rd, base, 0, off, size)
+    }
+    pub fn st(&mut self, src: u8, base: u8, off: i64, size: u8) -> &mut Self {
+        self.emit(Opcode::St, 0, base, src, off, size)
+    }
+    pub fn ld64(&mut self, rd: u8, base: u8, off: i64) -> &mut Self {
+        self.ld(rd, base, off, 8)
+    }
+    pub fn st64(&mut self, src: u8, base: u8, off: i64) -> &mut Self {
+        self.st(src, base, off, 8)
+    }
+    pub fn prefetch(&mut self, base: u8, off: i64) -> &mut Self {
+        self.emit(Opcode::Prefetch, 0, base, 0, off, 64)
+    }
+    pub fn flush(&mut self, base: u8, off: i64) -> &mut Self {
+        self.emit(Opcode::Flush, 0, base, 0, off, 64)
+    }
+
+    // --- control ---
+    pub fn beq(&mut self, rs1: u8, rs2: u8, target: &str) -> &mut Self {
+        self.emit_branch(Opcode::Beq, rs1, rs2, target)
+    }
+    pub fn bne(&mut self, rs1: u8, rs2: u8, target: &str) -> &mut Self {
+        self.emit_branch(Opcode::Bne, rs1, rs2, target)
+    }
+    pub fn blt(&mut self, rs1: u8, rs2: u8, target: &str) -> &mut Self {
+        self.emit_branch(Opcode::Blt, rs1, rs2, target)
+    }
+    pub fn bge(&mut self, rs1: u8, rs2: u8, target: &str) -> &mut Self {
+        self.emit_branch(Opcode::Bge, rs1, rs2, target)
+    }
+    pub fn bltu(&mut self, rs1: u8, rs2: u8, target: &str) -> &mut Self {
+        self.emit_branch(Opcode::BltU, rs1, rs2, target)
+    }
+    pub fn j(&mut self, target: &str) -> &mut Self {
+        let at = self.here();
+        self.fixups.push((at, target.to_string()));
+        self.emit(Opcode::Jal, 0, 0, 0, 0, 0)
+    }
+    /// jal rd, label — rd receives the return instruction index.
+    pub fn jal(&mut self, rd: u8, target: &str) -> &mut Self {
+        let at = self.here();
+        self.fixups.push((at, target.to_string()));
+        self.emit(Opcode::Jal, rd, 0, 0, 0, 0)
+    }
+    /// Indirect jump to the instruction index in `rs1`; `rd` gets the link.
+    pub fn jalr(&mut self, rd: u8, rs1: u8) -> &mut Self {
+        self.emit(Opcode::Jalr, rd, rs1, 0, 0, 0)
+    }
+    pub fn jr(&mut self, rs1: u8) -> &mut Self {
+        self.jalr(0, rs1)
+    }
+    /// One-level call using the conventional link register r63.
+    pub fn call(&mut self, target: &str) -> &mut Self {
+        self.jal(LINK, target)
+    }
+    pub fn ret(&mut self) -> &mut Self {
+        self.jr(LINK)
+    }
+
+    // --- AMI ---
+    pub fn aload(&mut self, rd: u8, spm: u8, mem: u8) -> &mut Self {
+        // rd is written by the ID-allocation µop *before* the request µop
+        // reads rs1/rs2; aliasing them would feed the request the ID.
+        assert!(rd != spm && rd != mem, "aload: rd must not alias rs1/rs2");
+        self.emit(Opcode::ALoad, rd, spm, mem, 0, 0)
+    }
+    pub fn astore(&mut self, rd: u8, spm: u8, mem: u8) -> &mut Self {
+        assert!(rd != spm && rd != mem, "astore: rd must not alias rs1/rs2");
+        self.emit(Opcode::AStore, rd, spm, mem, 0, 0)
+    }
+    pub fn getfin(&mut self, rd: u8) -> &mut Self {
+        self.emit(Opcode::GetFin, rd, 0, 0, 0, 0)
+    }
+    pub fn cfgwr(&mut self, rs1: u8, cfg: CfgReg) -> &mut Self {
+        self.emit(Opcode::CfgWr, 0, rs1, 0, cfg as i64, 0)
+    }
+    pub fn cfgrd(&mut self, rd: u8, cfg: CfgReg) -> &mut Self {
+        self.emit(Opcode::CfgRd, rd, 0, 0, cfg as i64, 0)
+    }
+
+    // --- misc ---
+    pub fn nop(&mut self) -> &mut Self {
+        self.emit(Opcode::Nop, 0, 0, 0, 0, 0)
+    }
+    pub fn halt(&mut self) -> &mut Self {
+        self.emit(Opcode::Halt, 0, 0, 0, 0, 0)
+    }
+    pub fn roi_begin(&mut self) -> &mut Self {
+        self.emit(Opcode::Roi, 0, 0, 0, 1, 0)
+    }
+    pub fn roi_end(&mut self) -> &mut Self {
+        self.emit(Opcode::Roi, 0, 0, 0, 0, 0)
+    }
+
+    /// Emit `n` dependent ALU ops on `r` — models fixed software overhead
+    /// (e.g. context save/restore work we don't spell out instruction by
+    /// instruction).
+    pub fn burn(&mut self, r: u8, n: usize) -> &mut Self {
+        for _ in 0..n {
+            self.addi(r, r, 1);
+        }
+        self
+    }
+
+    /// Resolve labels and produce the program.
+    pub fn finish(mut self) -> Program {
+        for (at, name) in &self.fixups {
+            let target = *self
+                .labels
+                .get(name)
+                .unwrap_or_else(|| panic!("undefined label '{name}' (at inst {at})"));
+            self.insts[*at].imm = target as i64;
+        }
+        let mut labels: Vec<(String, usize)> = self.labels.into_iter().collect();
+        labels.sort_by_key(|(_, at)| *at);
+        Program { name: self.name, insts: self.insts, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::inst::Opcode;
+
+    #[test]
+    fn forward_and_backward_labels_resolve() {
+        let mut a = Asm::new("t");
+        a.label("top");
+        a.addi(1, 1, 1);
+        a.bne(1, 2, "done"); // forward
+        a.j("top"); // backward
+        a.label("done");
+        a.halt();
+        let p = a.finish();
+        assert_eq!(p.insts[1].imm, 3); // "done"
+        assert_eq!(p.insts[2].imm, 0); // "top"
+    }
+
+    #[test]
+    #[should_panic(expected = "undefined label")]
+    fn undefined_label_panics() {
+        let mut a = Asm::new("t");
+        a.j("nowhere");
+        a.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate label")]
+    fn duplicate_label_panics() {
+        let mut a = Asm::new("t");
+        a.label("x");
+        a.nop();
+        a.label("x");
+        a.finish();
+    }
+
+    #[test]
+    fn region_tagging() {
+        let mut a = Asm::new("t");
+        a.nop();
+        a.region(crate::stats::Region::Disambig);
+        a.nop();
+        a.region(crate::stats::Region::Main);
+        a.nop();
+        let p = a.finish();
+        assert_eq!(p.insts[0].region, 0);
+        assert_eq!(p.insts[1].region, 2);
+        assert_eq!(p.insts[2].region, 0);
+    }
+
+    #[test]
+    fn emit_helpers_encode_correctly() {
+        let mut a = Asm::new("t");
+        a.ld64(5, 6, 24);
+        a.st(7, 8, -8, 4);
+        a.aload(1, 2, 3);
+        let p = a.finish();
+        let ld = p.insts[0];
+        assert_eq!((ld.op, ld.rd, ld.rs1, ld.imm, ld.size), (Opcode::Ld, 5, 6, 24, 8));
+        let st = p.insts[1];
+        assert_eq!((st.op, st.rs1, st.rs2, st.imm, st.size), (Opcode::St, 8, 7, -8, 4));
+        let al = p.insts[2];
+        assert_eq!((al.op, al.rd, al.rs1, al.rs2), (Opcode::ALoad, 1, 2, 3));
+    }
+
+    #[test]
+    fn call_ret_use_link() {
+        let mut a = Asm::new("t");
+        a.call("f");
+        a.halt();
+        a.label("f");
+        a.ret();
+        let p = a.finish();
+        assert_eq!(p.insts[0].rd, LINK);
+        assert_eq!(p.insts[0].imm, 2);
+        assert_eq!(p.insts[2].rs1, LINK);
+    }
+}

@@ -1,0 +1,236 @@
+//! Guest instruction set.
+//!
+//! A compact RISC-style ISA sufficient to express the paper's benchmarks
+//! with real dependence chains, data-dependent branches and pointer chasing,
+//! plus the paper's AMI extension (`aload`/`astore`/`getfin`/`cfgrw`).
+//! Code addresses are instruction indices; data addresses are 64-bit byte
+//! addresses in the guest address space (see `super::mem` for the region
+//! map).
+
+/// Architectural registers r0..r63; r0 is hardwired to zero.
+pub const NUM_ARCH_REGS: usize = 64;
+pub const ZERO: u8 = 0;
+/// Conventional link register used by the assembler's call/ret pseudo-ops.
+pub const LINK: u8 = 63;
+
+/// AMI configuration registers (paper Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CfgReg {
+    Granularity = 0,
+    QueueBase = 1,
+    QueueLength = 2,
+}
+
+impl CfgReg {
+    pub fn from_imm(v: i64) -> CfgReg {
+        match v {
+            1 => CfgReg::QueueBase,
+            2 => CfgReg::QueueLength,
+            _ => CfgReg::Granularity,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Opcode {
+    // ALU register-register.
+    Add,
+    Sub,
+    Xor,
+    And,
+    Or,
+    Sll, // shift left logical by rs2
+    Srl,
+    Mul,
+    SltU, // rd = (rs1 < rs2) unsigned
+    // ALU register-immediate (imm).
+    Addi,
+    Xori,
+    Andi,
+    Ori,
+    Slli,
+    Srli,
+    Li, // rd = imm
+    // Memory: address = regs[rs1] + imm, `size` bytes (1/2/4/8).
+    Ld,
+    St, // stores regs[rs2]
+    // Software prefetch (asynchronous, best-effort, holds an MSHR).
+    Prefetch,
+    // Control: branch target / jump target in imm (instruction index).
+    Beq,
+    Bne,
+    Blt,  // signed
+    Bge,  // signed
+    BltU,
+    Jal,  // rd = next pc, jump to imm
+    Jalr, // rd = next pc, jump to regs[rs1] (indirect; coroutine dispatch)
+    // AMI (paper Table 1).
+    ALoad,  // rd = request id; rs1 = SPM addr, rs2 = memory addr
+    AStore, // rd = request id; rs1 = SPM addr, rs2 = memory addr
+    GetFin, // rd = completed id, or 0 if none finished
+    CfgWr,  // cfg[imm] = regs[rs1]
+    CfgRd,  // rd = cfg[imm]
+    // Misc.
+    Nop,
+    Halt,
+    /// Region-of-interest marker: imm=1 begin, imm=0 end (measurement window).
+    Roi,
+    /// Cache flush of the line containing regs[rs1]+imm (region transition
+    /// between sync and async phases, paper §5.3.2).
+    Flush,
+}
+
+/// One decoded guest instruction. Flat layout keeps the pipeline simple.
+#[derive(Debug, Clone, Copy)]
+pub struct Inst {
+    pub op: Opcode,
+    pub rd: u8,
+    pub rs1: u8,
+    pub rs2: u8,
+    pub imm: i64,
+    /// Memory access size in bytes (Ld/St).
+    pub size: u8,
+    /// Stats attribution region (see `stats::Region`), set by the assembler.
+    pub region: u8,
+}
+
+impl Inst {
+    pub fn nop() -> Inst {
+        Inst { op: Opcode::Nop, rd: 0, rs1: 0, rs2: 0, imm: 0, size: 0, region: 0 }
+    }
+
+    pub fn is_branch(&self) -> bool {
+        matches!(
+            self.op,
+            Opcode::Beq
+                | Opcode::Bne
+                | Opcode::Blt
+                | Opcode::Bge
+                | Opcode::BltU
+                | Opcode::Jal
+                | Opcode::Jalr
+        )
+    }
+
+    pub fn is_mem(&self) -> bool {
+        matches!(self.op, Opcode::Ld | Opcode::St | Opcode::Prefetch | Opcode::Flush)
+    }
+
+    pub fn is_ami(&self) -> bool {
+        matches!(
+            self.op,
+            Opcode::ALoad | Opcode::AStore | Opcode::GetFin | Opcode::CfgWr | Opcode::CfgRd
+        )
+    }
+
+    /// Does this instruction write `rd`?
+    pub fn writes_rd(&self) -> bool {
+        match self.op {
+            Opcode::St
+            | Opcode::Prefetch
+            | Opcode::Beq
+            | Opcode::Bne
+            | Opcode::Blt
+            | Opcode::Bge
+            | Opcode::BltU
+            | Opcode::CfgWr
+            | Opcode::Nop
+            | Opcode::Halt
+            | Opcode::Roi
+            | Opcode::Flush => false,
+            _ => self.rd != ZERO,
+        }
+    }
+
+    /// Source registers actually read (for rename/dependency tracking).
+    pub fn sources(&self) -> (Option<u8>, Option<u8>) {
+        use Opcode::*;
+        match self.op {
+            Add | Sub | Xor | And | Or | Sll | Srl | Mul | SltU => {
+                (Some(self.rs1), Some(self.rs2))
+            }
+            Addi | Xori | Andi | Ori | Slli | Srli => (Some(self.rs1), None),
+            Li | Nop | Halt | Roi | GetFin | CfgRd | Jal => (None, None),
+            Ld | Prefetch | Flush | Jalr => (Some(self.rs1), None),
+            St => (Some(self.rs1), Some(self.rs2)),
+            Beq | Bne | Blt | Bge | BltU => (Some(self.rs1), Some(self.rs2)),
+            ALoad | AStore => (Some(self.rs1), Some(self.rs2)),
+            CfgWr => (Some(self.rs1), None),
+        }
+    }
+}
+
+/// An assembled guest program.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub name: String,
+    pub insts: Vec<Inst>,
+    /// Label name -> instruction index (kept for disassembly/debugging).
+    pub labels: Vec<(String, usize)>,
+}
+
+impl Program {
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    pub fn disasm(&self, pc: usize) -> String {
+        let i = &self.insts[pc];
+        for (name, at) in &self.labels {
+            if *at == pc {
+                return format!("{pc:6} <{name}>: {:?}", i);
+            }
+        }
+        format!("{pc:6}: {:?}", i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_reg_never_written() {
+        let mut i = Inst::nop();
+        i.op = Opcode::Li;
+        i.rd = ZERO;
+        assert!(!i.writes_rd());
+        i.rd = 5;
+        assert!(i.writes_rd());
+    }
+
+    #[test]
+    fn classifications() {
+        let mut i = Inst::nop();
+        i.op = Opcode::ALoad;
+        assert!(i.is_ami() && !i.is_mem() && !i.is_branch());
+        i.op = Opcode::Ld;
+        assert!(i.is_mem() && !i.is_ami());
+        i.op = Opcode::Jalr;
+        assert!(i.is_branch());
+    }
+
+    #[test]
+    fn sources_match_semantics() {
+        let mut i = Inst::nop();
+        i.op = Opcode::St;
+        i.rs1 = 3;
+        i.rs2 = 4;
+        assert_eq!(i.sources(), (Some(3), Some(4)));
+        i.op = Opcode::Li;
+        assert_eq!(i.sources(), (None, None));
+        i.op = Opcode::GetFin;
+        assert_eq!(i.sources(), (None, None));
+    }
+
+    #[test]
+    fn cfg_reg_roundtrip() {
+        assert_eq!(CfgReg::from_imm(0), CfgReg::Granularity);
+        assert_eq!(CfgReg::from_imm(1), CfgReg::QueueBase);
+        assert_eq!(CfgReg::from_imm(2), CfgReg::QueueLength);
+    }
+}

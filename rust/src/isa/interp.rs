@@ -1,0 +1,468 @@
+//! Functional (timing-free) interpreter for guest programs.
+//!
+//! Used as the correctness oracle for the OoO core model (both must reach
+//! the same architectural state) and for fast workload unit tests. AMI
+//! semantics are modeled functionally: data moves at request time and
+//! completions are delivered by `getfin` in a configurable order — FIFO or
+//! seeded-random — so workload programs can be checked against *any* legal
+//! completion order, which is exactly the property the paper's coroutine
+//! framework must tolerate.
+
+use super::inst::{CfgReg, Opcode, Program, NUM_ARCH_REGS};
+use super::mem::GuestMem;
+use crate::util::prng::Xoshiro256;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompletionOrder {
+    Fifo,
+    /// Deliver completions in pseudo-random order (seeded).
+    Random(u64),
+}
+
+pub struct Interp<'a> {
+    pub regs: [u64; NUM_ARCH_REGS],
+    pub pc: usize,
+    pub mem: &'a mut GuestMem,
+    pub halted: bool,
+    pub steps: u64,
+    pub roi_steps: u64,
+    in_roi: bool,
+    // AMI state.
+    granularity: u64,
+    queue_length: u64,
+    free_ids: VecDeque<u16>,
+    finished: Vec<u16>,
+    order: CompletionOrder,
+    rng: Xoshiro256,
+    /// Completions withheld to simulate in-flight latency: a request only
+    /// becomes getfin-visible after `visibility_delay` further getfin polls.
+    pending: VecDeque<(u16, u64)>,
+    poll_count: u64,
+    visibility_delay: u64,
+}
+
+#[derive(Debug)]
+pub struct InterpResult {
+    pub steps: u64,
+    pub roi_steps: u64,
+    pub halted: bool,
+}
+
+impl<'a> Interp<'a> {
+    pub fn new(mem: &'a mut GuestMem, order: CompletionOrder) -> Self {
+        let seed = match order {
+            CompletionOrder::Random(s) => s,
+            CompletionOrder::Fifo => 0,
+        };
+        let mut it = Interp {
+            regs: [0; NUM_ARCH_REGS],
+            pc: 0,
+            mem,
+            halted: false,
+            steps: 0,
+            roi_steps: 0,
+            in_roi: false,
+            granularity: 8,
+            queue_length: 256,
+            free_ids: VecDeque::new(),
+            finished: Vec::new(),
+            order,
+            rng: Xoshiro256::new(seed ^ 0x17e7_e57a),
+            pending: VecDeque::new(),
+            poll_count: 0,
+            visibility_delay: 3,
+        };
+        it.reset_ids();
+        it
+    }
+
+    fn reset_ids(&mut self) {
+        self.free_ids = (1..=self.queue_length as u16).collect();
+        self.finished.clear();
+        self.pending.clear();
+    }
+
+    fn alloc_id(&mut self) -> u64 {
+        match self.free_ids.pop_front() {
+            Some(id) => id as u64,
+            None => 0, // allocation failure per the ISA spec
+        }
+    }
+
+    /// Run until halt or `max_steps`; returns Err on runaway.
+    pub fn run(&mut self, prog: &Program, max_steps: u64) -> Result<InterpResult, String> {
+        while !self.halted {
+            if self.steps >= max_steps {
+                return Err(format!(
+                    "interp exceeded {max_steps} steps at pc={} ({})",
+                    self.pc,
+                    prog.disasm(self.pc.min(prog.len().saturating_sub(1)))
+                ));
+            }
+            self.step(prog)?;
+        }
+        Ok(InterpResult { steps: self.steps, roi_steps: self.roi_steps, halted: self.halted })
+    }
+
+    pub fn step(&mut self, prog: &Program) -> Result<(), String> {
+        if self.pc >= prog.len() {
+            return Err(format!("pc {} out of range", self.pc));
+        }
+        let i = prog.insts[self.pc];
+        self.steps += 1;
+        if self.in_roi {
+            self.roi_steps += 1;
+        }
+        let mut next = self.pc + 1;
+        let rs1 = self.regs[i.rs1 as usize];
+        let rs2 = self.regs[i.rs2 as usize];
+        let wr = |regs: &mut [u64; NUM_ARCH_REGS], rd: u8, v: u64| {
+            if rd != 0 {
+                regs[rd as usize] = v;
+            }
+        };
+        use Opcode::*;
+        match i.op {
+            Add => wr(&mut self.regs, i.rd, rs1.wrapping_add(rs2)),
+            Sub => wr(&mut self.regs, i.rd, rs1.wrapping_sub(rs2)),
+            Xor => wr(&mut self.regs, i.rd, rs1 ^ rs2),
+            And => wr(&mut self.regs, i.rd, rs1 & rs2),
+            Or => wr(&mut self.regs, i.rd, rs1 | rs2),
+            Sll => wr(&mut self.regs, i.rd, rs1.wrapping_shl(rs2 as u32 & 63)),
+            Srl => wr(&mut self.regs, i.rd, rs1.wrapping_shr(rs2 as u32 & 63)),
+            Mul => wr(&mut self.regs, i.rd, rs1.wrapping_mul(rs2)),
+            SltU => wr(&mut self.regs, i.rd, (rs1 < rs2) as u64),
+            Addi => wr(&mut self.regs, i.rd, rs1.wrapping_add(i.imm as u64)),
+            Xori => wr(&mut self.regs, i.rd, rs1 ^ i.imm as u64),
+            Andi => wr(&mut self.regs, i.rd, rs1 & i.imm as u64),
+            Ori => wr(&mut self.regs, i.rd, rs1 | i.imm as u64),
+            Slli => wr(&mut self.regs, i.rd, rs1.wrapping_shl(i.imm as u32 & 63)),
+            Srli => wr(&mut self.regs, i.rd, rs1.wrapping_shr(i.imm as u32 & 63)),
+            Li => wr(&mut self.regs, i.rd, i.imm as u64),
+            Ld => {
+                let addr = rs1.wrapping_add(i.imm as u64);
+                let v = self.mem.read(addr, i.size);
+                wr(&mut self.regs, i.rd, v);
+            }
+            St => {
+                let addr = rs1.wrapping_add(i.imm as u64);
+                self.mem.write(addr, i.size, rs2);
+            }
+            Prefetch | Flush => {} // timing-only
+            Beq => {
+                if rs1 == rs2 {
+                    next = i.imm as usize;
+                }
+            }
+            Bne => {
+                if rs1 != rs2 {
+                    next = i.imm as usize;
+                }
+            }
+            Blt => {
+                if (rs1 as i64) < (rs2 as i64) {
+                    next = i.imm as usize;
+                }
+            }
+            Bge => {
+                if (rs1 as i64) >= (rs2 as i64) {
+                    next = i.imm as usize;
+                }
+            }
+            BltU => {
+                if rs1 < rs2 {
+                    next = i.imm as usize;
+                }
+            }
+            Jal => {
+                wr(&mut self.regs, i.rd, (self.pc + 1) as u64);
+                next = i.imm as usize;
+            }
+            Jalr => {
+                wr(&mut self.regs, i.rd, (self.pc + 1) as u64);
+                next = rs1 as usize;
+            }
+            ALoad => {
+                let id = self.alloc_id();
+                if id != 0 {
+                    // rs1 = SPM addr, rs2 = memory addr (paper Table 1).
+                    self.mem.copy(rs1, rs2, self.granularity as usize);
+                    self.pending.push_back((id as u16, self.poll_count));
+                }
+                wr(&mut self.regs, i.rd, id);
+            }
+            AStore => {
+                let id = self.alloc_id();
+                if id != 0 {
+                    self.mem.copy(rs2, rs1, self.granularity as usize);
+                    self.pending.push_back((id as u16, self.poll_count));
+                }
+                wr(&mut self.regs, i.rd, id);
+            }
+            GetFin => {
+                self.poll_count += 1;
+                // Promote pending requests that have "aged" enough.
+                while let Some(&(id, at)) = self.pending.front() {
+                    if self.poll_count >= at + self.visibility_delay {
+                        self.finished.push(id);
+                        self.pending.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                let id = if self.finished.is_empty() {
+                    // Nothing ready: if requests are pending, force-age the
+                    // oldest so pure polling loops always terminate.
+                    if let Some((id, _)) = self.pending.pop_front() {
+                        self.finished.push(id);
+                        self.pop_finished()
+                    } else {
+                        0
+                    }
+                } else {
+                    self.pop_finished()
+                };
+                if id != 0 {
+                    self.free_ids.push_back(id as u16);
+                }
+                wr(&mut self.regs, i.rd, id);
+            }
+            CfgWr => match CfgReg::from_imm(i.imm) {
+                CfgReg::Granularity => self.granularity = rs1.max(1),
+                CfgReg::QueueBase => {} // metadata base; functional no-op
+                CfgReg::QueueLength => {
+                    self.queue_length = rs1.clamp(1, 4096);
+                    self.reset_ids();
+                }
+            },
+            CfgRd => {
+                let v = match CfgReg::from_imm(i.imm) {
+                    CfgReg::Granularity => self.granularity,
+                    CfgReg::QueueBase => 0,
+                    CfgReg::QueueLength => self.queue_length,
+                };
+                wr(&mut self.regs, i.rd, v);
+            }
+            Nop => {}
+            Halt => self.halted = true,
+            Roi => self.in_roi = i.imm == 1,
+        }
+        self.pc = next;
+        Ok(())
+    }
+
+    fn pop_finished(&mut self) -> u64 {
+        if self.finished.is_empty() {
+            return 0;
+        }
+        let idx = match self.order {
+            CompletionOrder::Fifo => 0,
+            CompletionOrder::Random(_) => self.rng.below(self.finished.len() as u64) as usize,
+        };
+        self.finished.swap_remove(idx) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::Asm;
+    use crate::isa::mem::{GuestMem, FAR_BASE, LOCAL_BASE, SPM_BASE};
+
+    fn run(prog: &Program, mem: &mut GuestMem) -> [u64; NUM_ARCH_REGS] {
+        let mut it = Interp::new(mem, CompletionOrder::Fifo);
+        it.run(prog, 1_000_000).expect("interp failed");
+        it.regs
+    }
+
+    #[test]
+    fn alu_loop_sums() {
+        // r2 = sum(0..10)
+        let mut a = Asm::new("sum");
+        a.li(1, 0).li(2, 0).li(3, 10);
+        a.label("loop");
+        a.add(2, 2, 1);
+        a.addi(1, 1, 1);
+        a.blt(1, 3, "loop");
+        a.halt();
+        let mut mem = GuestMem::new();
+        let regs = run(&a.finish(), &mut mem);
+        assert_eq!(regs[2], 45);
+    }
+
+    #[test]
+    fn loads_stores_roundtrip() {
+        let mut a = Asm::new("mem");
+        a.li(1, LOCAL_BASE as i64);
+        a.li(2, 0x1234);
+        a.st64(2, 1, 8);
+        a.ld64(3, 1, 8);
+        a.halt();
+        let mut mem = GuestMem::new();
+        let regs = run(&a.finish(), &mut mem);
+        assert_eq!(regs[3], 0x1234);
+    }
+
+    #[test]
+    fn aload_moves_far_to_spm() {
+        let mut mem = GuestMem::new();
+        mem.write_u64(FAR_BASE + 64, 0xABCD);
+        let mut a = Asm::new("ami");
+        a.li(1, (SPM_BASE + 128) as i64);
+        a.li(2, (FAR_BASE + 64) as i64);
+        a.aload(3, 1, 2); // id in r3
+        a.label("poll");
+        a.getfin(4);
+        a.beq(4, 0, "poll");
+        a.ld64(5, 1, 0);
+        a.halt();
+        let regs = run(&a.finish(), &mut mem);
+        assert_ne!(regs[3], 0, "id allocation must succeed");
+        assert_eq!(regs[4], regs[3], "getfin returns the completed id");
+        assert_eq!(regs[5], 0xABCD);
+    }
+
+    #[test]
+    fn astore_moves_spm_to_far() {
+        let mut mem = GuestMem::new();
+        mem.write_u64(SPM_BASE, 0x5577);
+        let mut a = Asm::new("ami");
+        a.li(1, SPM_BASE as i64);
+        a.li(2, (FAR_BASE + 256) as i64);
+        a.astore(3, 1, 2);
+        a.label("poll");
+        a.getfin(4);
+        a.beq(4, 0, "poll");
+        a.halt();
+        let mut it_mem = mem;
+        run(&a.finish(), &mut it_mem);
+        assert_eq!(it_mem.read_u64(FAR_BASE + 256), 0x5577);
+    }
+
+    #[test]
+    fn granularity_config_controls_copy_size() {
+        let mut mem = GuestMem::new();
+        for i in 0..64 {
+            mem.write(FAR_BASE + i, 1, (i + 1) & 0xff);
+        }
+        let mut a = Asm::new("gran");
+        a.li(1, 64).cfgwr(1, CfgReg::Granularity);
+        a.li(2, SPM_BASE as i64);
+        a.li(3, FAR_BASE as i64);
+        a.aload(4, 2, 3);
+        a.label("poll");
+        a.getfin(5);
+        a.beq(5, 0, "poll");
+        a.halt();
+        let mut m = mem;
+        run(&a.finish(), &mut m);
+        for i in 0..64u64 {
+            assert_eq!(m.read(SPM_BASE + i, 1), (i + 1) & 0xff);
+        }
+    }
+
+    #[test]
+    fn id_exhaustion_returns_zero() {
+        let mut mem = GuestMem::new();
+        let mut a = Asm::new("exhaust");
+        a.li(1, 2).cfgwr(1, CfgReg::QueueLength);
+        a.li(2, SPM_BASE as i64);
+        a.li(3, FAR_BASE as i64);
+        a.aload(4, 2, 3);
+        a.aload(5, 2, 3);
+        a.aload(6, 2, 3); // queue_length=2 -> must fail
+        a.halt();
+        let regs = run(&a.finish(), &mut mem);
+        assert_ne!(regs[4], 0);
+        assert_ne!(regs[5], 0);
+        assert_eq!(regs[6], 0);
+    }
+
+    #[test]
+    fn getfin_recycles_ids() {
+        let mut mem = GuestMem::new();
+        let mut a = Asm::new("recycle");
+        a.li(1, 1).cfgwr(1, CfgReg::QueueLength);
+        a.li(2, SPM_BASE as i64);
+        a.li(3, FAR_BASE as i64);
+        // Two sequential aloads with a getfin drain between them.
+        a.aload(4, 2, 3);
+        a.label("p1");
+        a.getfin(5);
+        a.beq(5, 0, "p1");
+        a.aload(6, 2, 3);
+        a.halt();
+        let regs = run(&a.finish(), &mut mem);
+        assert_ne!(regs[4], 0);
+        assert_ne!(regs[6], 0, "id must be recycled after getfin");
+    }
+
+    #[test]
+    fn random_completion_order_is_deterministic_per_seed() {
+        let prog = {
+            let mut a = Asm::new("multi");
+            a.li(1, SPM_BASE as i64);
+            a.li(2, FAR_BASE as i64);
+            for k in 0..4 {
+                a.addi(3, 1, k * 64);
+                a.addi(4, 2, k * 64);
+                a.aload(5, 3, 4);
+            }
+            // collect 4 completions, recording the first
+            a.li(10, 0);
+            a.label("poll");
+            a.getfin(6);
+            a.beq(6, 0, "poll");
+            a.bne(10, 0, "skip");
+            a.mv(10, 6);
+            a.label("skip");
+            a.addi(11, 11, 1);
+            a.li(12, 4);
+            a.blt(11, 12, "poll");
+            a.halt();
+            a.finish()
+        };
+        let first = |seed: u64| {
+            let mut mem = GuestMem::new();
+            let mut it = Interp::new(&mut mem, CompletionOrder::Random(seed));
+            it.run(&prog, 100_000).unwrap();
+            it.regs[10]
+        };
+        assert_eq!(first(1), first(1), "same seed, same order");
+    }
+
+    #[test]
+    fn call_ret() {
+        let mut a = Asm::new("call");
+        a.li(1, 5);
+        a.call("double");
+        a.halt();
+        a.label("double");
+        a.add(1, 1, 1);
+        a.ret();
+        let mut mem = GuestMem::new();
+        let regs = run(&a.finish(), &mut mem);
+        assert_eq!(regs[1], 10);
+    }
+
+    #[test]
+    fn roi_counts_steps() {
+        let mut a = Asm::new("roi");
+        a.nop().roi_begin().nop().nop().roi_end().halt();
+        let mut mem = GuestMem::new();
+        let mut it = Interp::new(&mut mem, CompletionOrder::Fifo);
+        let r = it.run(&a.finish(), 1000).unwrap();
+        assert_eq!(r.roi_steps, 3); // nop, nop, roi_end
+    }
+
+    #[test]
+    fn runaway_detected() {
+        let mut a = Asm::new("spin");
+        a.label("top");
+        a.j("top");
+        let mut mem = GuestMem::new();
+        let mut it = Interp::new(&mut mem, CompletionOrder::Fifo);
+        assert!(it.run(&a.finish(), 1000).is_err());
+    }
+}

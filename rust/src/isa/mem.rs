@@ -1,0 +1,274 @@
+//! Guest physical address space: region map + sparse paged memory.
+//!
+//! Regions (fixed mapping, no translation modeled — the paper treats
+//! address translation as orthogonal and assumes a conventional TLB):
+//!
+//! * `LOCAL`  — local DDR4 DRAM.
+//! * `FAR`    — far memory behind the serial link (CXL-like).
+//! * `SPM`    — the L2 carve-out scratchpad: fixed-latency, never misses.
+//!
+//! Workload setup uses the bump allocators in [`Layout`]; the simulated
+//! core and the functional interpreter both read/write through [`GuestMem`].
+
+use std::collections::HashMap;
+
+pub const LOCAL_BASE: u64 = 0x0000_0000_1000_0000;
+pub const LOCAL_END: u64 = 0x0000_0010_0000_0000;
+pub const FAR_BASE: u64 = 0x0000_0040_0000_0000;
+pub const FAR_END: u64 = 0x0000_0080_0000_0000;
+pub const SPM_BASE: u64 = 0x0000_00F0_0000_0000;
+/// Generous bound; the configured SPM data area is much smaller.
+pub const SPM_END: u64 = SPM_BASE + (1 << 20);
+
+pub const PAGE_BYTES: usize = 4096;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemRegion {
+    Local,
+    Far,
+    Spm,
+}
+
+pub fn region_of(addr: u64) -> MemRegion {
+    if (FAR_BASE..FAR_END).contains(&addr) {
+        MemRegion::Far
+    } else if (SPM_BASE..SPM_END).contains(&addr) {
+        MemRegion::Spm
+    } else {
+        MemRegion::Local
+    }
+}
+
+/// Sparse paged guest memory with a one-page lookup cache.
+#[derive(Default)]
+pub struct GuestMem {
+    pages: HashMap<u64, Box<[u8; PAGE_BYTES]>>,
+    last_page: Option<(u64, *mut [u8; PAGE_BYTES])>,
+}
+
+// SAFETY: the raw pointer cache is only used single-threaded and is
+// invalidated on any structural change (we never remove pages).
+unsafe impl Send for GuestMem {}
+
+impl GuestMem {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn page_mut(&mut self, pno: u64) -> &mut [u8; PAGE_BYTES] {
+        if let Some((cached, ptr)) = self.last_page {
+            if cached == pno {
+                // SAFETY: pages are boxed (stable addresses) and never freed.
+                return unsafe { &mut *ptr };
+            }
+        }
+        let page = self
+            .pages
+            .entry(pno)
+            .or_insert_with(|| Box::new([0u8; PAGE_BYTES]));
+        let ptr: *mut [u8; PAGE_BYTES] = &mut **page;
+        self.last_page = Some((pno, ptr));
+        unsafe { &mut *ptr }
+    }
+
+    /// Read `size` (1/2/4/8) bytes, zero-extended. Unaligned and
+    /// page-crossing accesses are supported (byte loop fallback).
+    #[inline]
+    pub fn read(&mut self, addr: u64, size: u8) -> u64 {
+        let pno = addr / PAGE_BYTES as u64;
+        let off = (addr % PAGE_BYTES as u64) as usize;
+        if off + size as usize <= PAGE_BYTES {
+            let page = self.page_mut(pno);
+            let mut buf = [0u8; 8];
+            buf[..size as usize].copy_from_slice(&page[off..off + size as usize]);
+            u64::from_le_bytes(buf)
+        } else {
+            let mut v = 0u64;
+            for i in 0..size as u64 {
+                v |= (self.read(addr + i, 1) & 0xff) << (8 * i);
+            }
+            v
+        }
+    }
+
+    /// Write the low `size` bytes of `value`.
+    #[inline]
+    pub fn write(&mut self, addr: u64, size: u8, value: u64) {
+        let pno = addr / PAGE_BYTES as u64;
+        let off = (addr % PAGE_BYTES as u64) as usize;
+        if off + size as usize <= PAGE_BYTES {
+            let page = self.page_mut(pno);
+            page[off..off + size as usize]
+                .copy_from_slice(&value.to_le_bytes()[..size as usize]);
+        } else {
+            for i in 0..size as u64 {
+                self.write(addr + i, 1, (value >> (8 * i)) & 0xff);
+            }
+        }
+    }
+
+    pub fn read_u64(&mut self, addr: u64) -> u64 {
+        self.read(addr, 8)
+    }
+
+    pub fn write_u64(&mut self, addr: u64, value: u64) {
+        self.write(addr, 8, value)
+    }
+
+    /// Bulk copy helpers (workload setup, AMU block transfers).
+    pub fn write_block(&mut self, addr: u64, data: &[u8]) {
+        for (i, b) in data.iter().enumerate() {
+            self.write(addr + i as u64, 1, *b as u64);
+        }
+    }
+
+    pub fn read_block(&mut self, addr: u64, len: usize) -> Vec<u8> {
+        (0..len).map(|i| self.read(addr + i as u64, 1) as u8).collect()
+    }
+
+    /// Copy `len` bytes inside guest memory (AMU data movement).
+    pub fn copy(&mut self, dst: u64, src: u64, len: usize) {
+        // Buffered to tolerate overlap.
+        let data = self.read_block(src, len);
+        self.write_block(dst, &data);
+    }
+
+    /// FNV-1a checksum of a block (workload result validation).
+    pub fn checksum(&mut self, addr: u64, len: usize) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for i in 0..len {
+            h ^= self.read(addr + i as u64, 1);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    pub fn page_count(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+/// Bump allocators per region for workload setup.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    local_brk: u64,
+    far_brk: u64,
+    spm_brk: u64,
+    spm_limit: u64,
+}
+
+impl Layout {
+    /// `spm_data_bytes` is the software-visible SPM data area (total SPM
+    /// minus the AMART metadata area managed by the ASMC).
+    pub fn new(spm_data_bytes: usize) -> Self {
+        Self {
+            local_brk: LOCAL_BASE,
+            far_brk: FAR_BASE,
+            spm_brk: SPM_BASE,
+            spm_limit: SPM_BASE + spm_data_bytes as u64,
+        }
+    }
+
+    fn bump(brk: &mut u64, size: u64, align: u64) -> u64 {
+        let a = align.max(1);
+        let base = (*brk + a - 1) / a * a;
+        *brk = base + size;
+        base
+    }
+
+    pub fn alloc_local(&mut self, size: u64, align: u64) -> u64 {
+        assert!(self.local_brk + size < LOCAL_END, "local region exhausted");
+        Self::bump(&mut self.local_brk, size, align)
+    }
+
+    pub fn alloc_far(&mut self, size: u64, align: u64) -> u64 {
+        assert!(self.far_brk + size < FAR_END, "far region exhausted");
+        Self::bump(&mut self.far_brk, size, align)
+    }
+
+    /// SPM data-area allocation; panics if the program over-allocates the
+    /// scratchpad — a real bug in a workload port.
+    pub fn alloc_spm(&mut self, size: u64, align: u64) -> u64 {
+        let base = Self::bump(&mut self.spm_brk, size, align);
+        assert!(
+            self.spm_brk <= self.spm_limit,
+            "SPM data area exhausted: need {} more bytes",
+            self.spm_brk - self.spm_limit
+        );
+        base
+    }
+
+    pub fn spm_remaining(&self) -> u64 {
+        self.spm_limit - self.spm_brk
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_classification() {
+        assert_eq!(region_of(LOCAL_BASE), MemRegion::Local);
+        assert_eq!(region_of(FAR_BASE), MemRegion::Far);
+        assert_eq!(region_of(FAR_BASE + 0x1000), MemRegion::Far);
+        assert_eq!(region_of(SPM_BASE + 16), MemRegion::Spm);
+    }
+
+    #[test]
+    fn read_write_roundtrip_sizes() {
+        let mut m = GuestMem::new();
+        m.write(LOCAL_BASE, 8, 0x1122_3344_5566_7788);
+        assert_eq!(m.read(LOCAL_BASE, 8), 0x1122_3344_5566_7788);
+        assert_eq!(m.read(LOCAL_BASE, 4), 0x5566_7788);
+        assert_eq!(m.read(LOCAL_BASE, 2), 0x7788);
+        assert_eq!(m.read(LOCAL_BASE, 1), 0x88);
+        m.write(LOCAL_BASE + 3, 2, 0xABCD);
+        assert_eq!(m.read(LOCAL_BASE + 3, 2), 0xABCD);
+    }
+
+    #[test]
+    fn page_crossing_access() {
+        let mut m = GuestMem::new();
+        let addr = LOCAL_BASE + PAGE_BYTES as u64 - 3;
+        m.write(addr, 8, 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(m.read(addr, 8), 0xDEAD_BEEF_CAFE_F00D);
+    }
+
+    #[test]
+    fn zero_initialized() {
+        let mut m = GuestMem::new();
+        assert_eq!(m.read(FAR_BASE + 12345, 8), 0);
+    }
+
+    #[test]
+    fn copy_and_checksum() {
+        let mut m = GuestMem::new();
+        let data: Vec<u8> = (0..=255).collect();
+        m.write_block(FAR_BASE, &data);
+        m.copy(SPM_BASE, FAR_BASE, 256);
+        assert_eq!(m.read_block(SPM_BASE, 256), data);
+        assert_eq!(m.checksum(SPM_BASE, 256), m.checksum(FAR_BASE, 256));
+    }
+
+    #[test]
+    fn layout_alignment_and_regions() {
+        let mut l = Layout::new(48 * 1024);
+        let a = l.alloc_local(100, 64);
+        assert_eq!(a % 64, 0);
+        assert_eq!(region_of(a), MemRegion::Local);
+        let f = l.alloc_far(1 << 20, 4096);
+        assert_eq!(f % 4096, 0);
+        assert_eq!(region_of(f), MemRegion::Far);
+        let s = l.alloc_spm(1024, 64);
+        assert_eq!(region_of(s), MemRegion::Spm);
+    }
+
+    #[test]
+    #[should_panic(expected = "SPM data area exhausted")]
+    fn spm_overallocation_panics() {
+        let mut l = Layout::new(1024);
+        l.alloc_spm(2048, 8);
+    }
+}

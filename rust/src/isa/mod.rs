@@ -1,0 +1,12 @@
+//! Guest ISA: instruction set, assembler, address space, and a functional
+//! interpreter used as the timing model's architectural oracle.
+
+pub mod asm;
+pub mod inst;
+pub mod interp;
+pub mod mem;
+
+pub use asm::Asm;
+pub use inst::{CfgReg, Inst, Opcode, Program};
+pub use interp::{CompletionOrder, Interp};
+pub use mem::{region_of, GuestMem, Layout, MemRegion, FAR_BASE, LOCAL_BASE, SPM_BASE};

@@ -1,0 +1,27 @@
+//! amu-sim — reproduction of *"Asynchronous Memory Access Unit: Exploiting
+//! Massive Parallelism for Far Memory Access"* (ACM TACO 2024).
+//!
+//! A cycle-level out-of-order core + memory-hierarchy simulator with the
+//! paper's AMI ISA extension and AMU function unit, the coroutine software
+//! stack, the 11-benchmark evaluation suite, and report generators for
+//! every figure and table in the paper's evaluation. See DESIGN.md for the
+//! architecture and EXPERIMENTS.md for measured results.
+
+pub mod amu;
+pub mod area;
+pub mod coro;
+pub mod config;
+pub mod isa;
+pub mod mem;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod testing;
+pub mod util;
+pub mod workloads;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

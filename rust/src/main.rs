@@ -1,0 +1,169 @@
+//! amu-sim command-line launcher.
+//!
+//! Subcommands:
+//!   run     — simulate one benchmark under one configuration
+//!   report  — regenerate paper figures/tables (fig2..fig11, table4..6, all)
+//!   list    — enumerate benchmarks and configuration presets
+//!   payload — smoke-test the PJRT payload engine (artifacts/)
+
+use amu_sim::config::SimConfig;
+use amu_sim::report;
+use amu_sim::util::cli::{self, flag, opt, Spec};
+use amu_sim::workloads::{self, Scale, Variant};
+
+const RUN_SPECS: &[Spec] = &[
+    opt("bench", "benchmark name (see `list`)"),
+    opt("config", "configuration preset (baseline|cxl-ideal|amu|amu-dma|x2|x4)"),
+    opt("latency-ns", "additional far-memory latency in ns"),
+    opt("scale", "test|paper"),
+    opt("variant", "sync|amu|llvm|gp<N>|pf<N>"),
+    opt("config-file", "TOML-lite overrides applied on top of the preset"),
+    flag("quiet", "suppress progress output"),
+];
+
+fn parse_scale(s: &str) -> Scale {
+    match s {
+        "paper" => Scale::Paper,
+        _ => Scale::Test,
+    }
+}
+
+fn parse_variant(s: &str, cfg: &SimConfig) -> Variant {
+    if s == "sync" {
+        Variant::Sync
+    } else if s == "amu" {
+        Variant::Amu
+    } else if s == "llvm" {
+        Variant::AmuLlvm
+    } else if let Some(g) = s.strip_prefix("gp") {
+        Variant::GroupPrefetch(g.parse().unwrap_or(16))
+    } else if let Some(g) = s.strip_prefix("pf") {
+        Variant::SwPrefetch { batch: g.parse().unwrap_or(16), depth: 0 }
+    } else {
+        workloads::variant_for(cfg)
+    }
+}
+
+fn cmd_run(argv: &[String]) -> Result<(), String> {
+    let args = cli::parse(argv, RUN_SPECS).map_err(|e| e.to_string())?;
+    let bench = args.get_str("bench", "gups");
+    let config = args.get_str("config", "baseline");
+    let latency = args.get_f64("latency-ns", 1000.0).map_err(|e| e.to_string())?;
+    let scale = parse_scale(&args.get_str("scale", "test"));
+    let mut cfg = SimConfig::preset(&config)
+        .ok_or_else(|| format!("unknown config '{config}'"))?
+        .with_far_latency_ns(latency);
+    if let Some(path) = args.get("config-file") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let doc = amu_sim::util::toml_lite::parse(&text).map_err(|e| e.to_string())?;
+        cfg.apply_overrides(&doc)?;
+    }
+    let variant = parse_variant(&args.get_str("variant", "auto"), &cfg);
+    let r = report::run_one(&bench, &config, variant, latency, scale)?;
+    println!(
+        "bench={} config={} variant={} latency={}ns",
+        r.bench, r.config, r.variant, r.latency_ns
+    );
+    println!(
+        "  cycles(measured)={}  total={}  insts={}",
+        r.measured_cycles, r.total_cycles, r.insts
+    );
+    println!(
+        "  ipc={:.3}  mlp={:.2}  peak_inflight={}",
+        r.ipc, r.mlp, r.peak_inflight
+    );
+    println!(
+        "  energy: dynamic={:.2}uJ static={:.2}uJ  disambig={:.2}%  host={}ms",
+        r.dynamic_uj,
+        r.static_uj,
+        r.disambig_frac * 100.0,
+        r.host_ms
+    );
+    Ok(())
+}
+
+fn cmd_report(argv: &[String]) -> Result<(), String> {
+    let specs: &[Spec] = &[opt("scale", "test|paper"), flag("quiet", "less progress")];
+    let args = cli::parse(&argv[1..], specs).map_err(|e| e.to_string())?;
+    let what = argv.first().map(|s| s.as_str()).unwrap_or("all");
+    let scale = parse_scale(&args.get_str("scale", "paper"));
+    let quiet = args.has_flag("quiet");
+    let needs_sweep = matches!(
+        what,
+        "fig2" | "fig8" | "fig9" | "fig10" | "fig11" | "headline" | "all"
+    );
+    let rows = if needs_sweep {
+        report::sweep_cached(scale, quiet)
+    } else {
+        Vec::new()
+    };
+    let emit = |name: &str, body: String| report::write_report(name, &body);
+    match what {
+        "fig2" => emit("fig2", report::fig2(&rows)),
+        "fig3" => emit("fig3", report::fig3(scale, 1000.0)),
+        "fig8" => emit("fig8", report::fig8(&rows)),
+        "fig9" => emit("fig9", report::fig9(&rows)),
+        "fig10" => emit("fig10", report::fig10(&rows)),
+        "fig11" => emit("fig11", report::fig11(&rows)),
+        "table4" => emit("table4", report::table4(scale)),
+        "table5" => emit("table5", report::table5(scale)),
+        "table6" => emit("table6", report::table6()),
+        "headline" => emit("headline", report::headline(&rows)),
+        "all" => {
+            emit("fig2", report::fig2(&rows));
+            emit("fig3", report::fig3(scale, 1000.0));
+            emit("fig8", report::fig8(&rows));
+            emit("fig9", report::fig9(&rows));
+            emit("fig10", report::fig10(&rows));
+            emit("fig11", report::fig11(&rows));
+            emit("table4", report::table4(scale));
+            emit("table5", report::table5(scale));
+            emit("table6", report::table6());
+            emit("headline", report::headline(&rows));
+        }
+        other => return Err(format!("unknown report '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_payload() -> Result<(), String> {
+    let rt = amu_sim::runtime::Runtime::load_default().map_err(|e| e.to_string())?;
+    println!("payload engine on platform={}", rt.platform());
+    let vals: Vec<i32> = (0..amu_sim::runtime::GUPS_BATCH as i32).collect();
+    let idxs: Vec<i32> = (0..amu_sim::runtime::GUPS_BATCH as i32).rev().collect();
+    let out = rt.gups_update(&vals, &idxs).map_err(|e| e.to_string())?;
+    let ok = out
+        .iter()
+        .zip(vals.iter().zip(idxs.iter()))
+        .all(|(o, (v, i))| *o == v ^ i);
+    println!("gups_update[{}] check: {}", out.len(), if ok { "OK" } else { "MISMATCH" });
+    if !ok {
+        return Err("payload engine mismatch".into());
+    }
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let result = match argv.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&argv[1..]),
+        Some("report") => cmd_report(&argv[1..]),
+        Some("payload") => cmd_payload(),
+        Some("list") => {
+            println!("benchmarks: {}", workloads::ALL.join(" "));
+            println!("configs:    {}", SimConfig::preset_names().join(" "));
+            Ok(())
+        }
+        _ => {
+            eprintln!("amu-sim {} — AMU paper reproduction", amu_sim::version());
+            eprintln!("usage: amu-sim <run|report|payload|list> [options]");
+            eprintln!("{}", cli::usage("amu-sim run", RUN_SPECS));
+            eprintln!("reports: fig2 fig3 fig8 fig9 fig10 fig11 table4 table5 table6 headline all");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,400 @@
+//! Set-associative write-back cache with MSHRs.
+//!
+//! Used for both L1D and L2. The MSHR file is the paper's central scarce
+//! resource: a cache-missing access holds an MSHR for the full miss
+//! latency, and MSHR exhaustion back-pressures the pipeline — exactly the
+//! synchronous-semantics bottleneck AMI is designed to break.
+
+use crate::config::CacheConfig;
+
+pub const LINE_BYTES: u64 = 64;
+
+#[inline]
+pub fn line_of(addr: u64) -> u64 {
+    addr & !(LINE_BYTES - 1)
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Line {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    prefetched: bool,
+    last_use: u64,
+}
+
+/// Who gets notified when a miss fills.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// Core token (load or store) — `is_store` sets the line dirty on fill.
+    Core { token: u32, is_store: bool },
+    /// A lower-level cache waits for this fill (L2 MSHR -> L1 fill).
+    FillL1,
+    /// Hardware or software prefetch: nobody to notify.
+    Prefetch,
+}
+
+#[derive(Debug, Clone)]
+pub struct Mshr {
+    pub line: u64,
+    pub targets: Vec<Target>,
+    /// Completion routed over the far link (for MLP accounting).
+    pub is_far: bool,
+    pub allocated_at: u64,
+}
+
+const MAX_TARGETS: usize = 16;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Victim {
+    pub line: u64,
+    pub dirty: bool,
+}
+
+pub struct Cache {
+    sets: usize,
+    ways: usize,
+    lines: Vec<Line>,
+    mshrs: Vec<Option<Mshr>>,
+    clock: u64,
+    pub name: &'static str,
+    // Stats.
+    pub accesses: u64,
+    pub misses: u64,
+    pub prefetch_hits: u64,
+    pub writebacks: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LookupResult {
+    Hit,
+    Miss,
+}
+
+impl Cache {
+    pub fn new(cfg: &CacheConfig, name: &'static str) -> Self {
+        let sets = cfg.sets();
+        assert!(sets > 0, "{name}: zero sets");
+        Self {
+            sets,
+            ways: cfg.ways,
+            lines: vec![Line::default(); sets * cfg.ways],
+            mshrs: vec![None; cfg.mshrs],
+            clock: 0,
+            name,
+            accesses: 0,
+            misses: 0,
+            prefetch_hits: 0,
+            writebacks: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, line: u64) -> usize {
+        ((line / LINE_BYTES) % self.sets as u64) as usize
+    }
+
+    fn slot_range(&self, set: usize) -> std::ops::Range<usize> {
+        set * self.ways..(set + 1) * self.ways
+    }
+
+    /// Tag probe without state change.
+    pub fn probe(&self, line: u64) -> bool {
+        let set = self.set_of(line);
+        self.lines[self.slot_range(set)]
+            .iter()
+            .any(|l| l.valid && l.tag == line)
+    }
+
+    /// Demand access: updates LRU and dirty bit; returns Hit/Miss.
+    pub fn access(&mut self, line: u64, is_write: bool) -> LookupResult {
+        debug_assert_eq!(line % LINE_BYTES, 0);
+        self.clock += 1;
+        self.accesses += 1;
+        let set = self.set_of(line);
+        let clock = self.clock;
+        for l in &mut self.lines[set * self.ways..(set + 1) * self.ways] {
+            if l.valid && l.tag == line {
+                l.last_use = clock;
+                if is_write {
+                    l.dirty = true;
+                }
+                if l.prefetched {
+                    l.prefetched = false;
+                    self.prefetch_hits += 1;
+                }
+                return LookupResult::Hit;
+            }
+        }
+        self.misses += 1;
+        LookupResult::Miss
+    }
+
+    /// Install a filled line; returns the evicted victim, if any.
+    pub fn install(&mut self, line: u64, dirty: bool, prefetched: bool) -> Option<Victim> {
+        self.clock += 1;
+        let set = self.set_of(line);
+        let range = self.slot_range(set);
+        // Already present (e.g. refill raced a writeback-install): update.
+        let clock = self.clock;
+        for l in &mut self.lines[range.clone()] {
+            if l.valid && l.tag == line {
+                l.dirty |= dirty;
+                l.last_use = clock;
+                return None;
+            }
+        }
+        // Choose an invalid way or the LRU way.
+        let mut victim_idx = range.start;
+        let mut best = u64::MAX;
+        for i in range {
+            let l = &self.lines[i];
+            if !l.valid {
+                victim_idx = i;
+                break;
+            }
+            if l.last_use < best {
+                best = l.last_use;
+                victim_idx = i;
+            }
+        }
+        let old = self.lines[victim_idx];
+        self.lines[victim_idx] =
+            Line { tag: line, valid: true, dirty, prefetched, last_use: self.clock };
+        if old.valid {
+            if old.dirty {
+                self.writebacks += 1;
+            }
+            Some(Victim { line: old.tag, dirty: old.dirty })
+        } else {
+            None
+        }
+    }
+
+    /// Invalidate `line`; returns whether it was present and dirty.
+    pub fn invalidate(&mut self, line: u64) -> Option<bool> {
+        let set = self.set_of(line);
+        for l in &mut self.lines[set * self.ways..(set + 1) * self.ways] {
+            if l.valid && l.tag == line {
+                l.valid = false;
+                let was_dirty = l.dirty;
+                if was_dirty {
+                    self.writebacks += 1;
+                }
+                return Some(was_dirty);
+            }
+        }
+        None
+    }
+
+    /// Mark a present line dirty (store completing into an existing line).
+    pub fn mark_dirty(&mut self, line: u64) -> bool {
+        let set = self.set_of(line);
+        for l in &mut self.lines[set * self.ways..(set + 1) * self.ways] {
+            if l.valid && l.tag == line {
+                l.dirty = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    // ---- MSHR management ----
+
+    pub fn mshr_find(&mut self, line: u64) -> Option<&mut Mshr> {
+        self.mshrs
+            .iter_mut()
+            .filter_map(|m| m.as_mut())
+            .find(|m| m.line == line)
+    }
+
+    /// Allocate an MSHR for `line` with one initial target.
+    /// Returns false if the file is full (structural hazard).
+    pub fn mshr_alloc(&mut self, line: u64, target: Target, is_far: bool, now: u64) -> bool {
+        debug_assert!(self.mshr_find(line).is_none(), "{}: double alloc", self.name);
+        for slot in self.mshrs.iter_mut() {
+            if slot.is_none() {
+                *slot = Some(Mshr { line, targets: vec![target], is_far, allocated_at: now });
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Add a secondary-miss target; false if the target list is full.
+    pub fn mshr_add_target(&mut self, line: u64, target: Target) -> bool {
+        match self.mshr_find(line) {
+            Some(m) if m.targets.len() < MAX_TARGETS => {
+                m.targets.push(target);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Remove and return the MSHR for `line` (on fill).
+    pub fn mshr_take(&mut self, line: u64) -> Option<Mshr> {
+        for slot in self.mshrs.iter_mut() {
+            if slot.as_ref().is_some_and(|m| m.line == line) {
+                return slot.take();
+            }
+        }
+        None
+    }
+
+    pub fn mshr_used(&self) -> usize {
+        self.mshrs.iter().filter(|m| m.is_some()).count()
+    }
+
+    pub fn mshr_capacity(&self) -> usize {
+        self.mshrs.len()
+    }
+
+    pub fn mshr_full(&self) -> bool {
+        self.mshrs.iter().all(|m| m.is_some())
+    }
+
+    /// Number of MSHRs holding prefetch-only requests (quota enforcement).
+    pub fn mshr_prefetch_used(&self) -> usize {
+        self.mshrs
+            .iter()
+            .filter_map(|m| m.as_ref())
+            .filter(|m| m.targets.iter().all(|t| *t == Target::Prefetch))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CacheConfig;
+
+    fn small() -> Cache {
+        Cache::new(
+            &CacheConfig {
+                size_bytes: 4 * 1024,
+                ways: 4,
+                line_bytes: 64,
+                mshrs: 4,
+                hit_latency: 4,
+                ports: 2,
+            },
+            "test",
+        )
+    }
+
+    #[test]
+    fn miss_then_hit_after_install() {
+        let mut c = small();
+        assert_eq!(c.access(0x1000, false), LookupResult::Miss);
+        assert!(c.install(0x1000, false, false).is_none());
+        assert_eq!(c.access(0x1000, false), LookupResult::Hit);
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.accesses, 2);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = small();
+        // 4 ways; fill 5 lines in the same set (set stride = sets*64 = 16*64).
+        let stride = 16 * 64u64;
+        for i in 0..4 {
+            c.install(i * stride, false, false);
+        }
+        // Touch line 0 to make it MRU.
+        c.access(0, false);
+        let v = c.install(4 * stride, false, false).expect("eviction");
+        assert_eq!(v.line, stride, "LRU (line 1) should be evicted");
+        assert!(c.probe(0));
+        assert!(!c.probe(stride));
+    }
+
+    #[test]
+    fn dirty_victim_reported() {
+        let mut c = small();
+        let stride = 16 * 64u64;
+        c.install(0, false, false);
+        c.access(0, true); // dirty it
+        for i in 1..=4 {
+            c.install(i * stride, false, false);
+        }
+        // line 0 eventually evicted dirty
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn invalidate_returns_dirtiness() {
+        let mut c = small();
+        c.install(0x40, true, false);
+        assert_eq!(c.invalidate(0x40), Some(true));
+        assert_eq!(c.invalidate(0x40), None);
+        assert!(!c.probe(0x40));
+    }
+
+    #[test]
+    fn mshr_alloc_and_exhaustion() {
+        let mut c = small();
+        for i in 0..4 {
+            assert!(c.mshr_alloc(
+                i * 64,
+                Target::Core { token: i as u32, is_store: false },
+                false,
+                0
+            ));
+        }
+        assert!(c.mshr_full());
+        assert!(!c.mshr_alloc(0x9999 & !63, Target::Prefetch, false, 0));
+        let m = c.mshr_take(0).unwrap();
+        assert_eq!(m.targets.len(), 1);
+        assert!(!c.mshr_full());
+    }
+
+    #[test]
+    fn secondary_miss_merges() {
+        let mut c = small();
+        assert!(c.mshr_alloc(0x1000, Target::Core { token: 1, is_store: false }, true, 5));
+        assert!(c.mshr_add_target(0x1000, Target::Core { token: 2, is_store: true }));
+        let m = c.mshr_take(0x1000).unwrap();
+        assert_eq!(m.targets.len(), 2);
+        assert!(m.is_far);
+        assert_eq!(m.allocated_at, 5);
+        assert_eq!(c.mshr_used(), 0);
+    }
+
+    #[test]
+    fn target_list_cap() {
+        let mut c = small();
+        c.mshr_alloc(0, Target::Prefetch, false, 0);
+        for _ in 0..MAX_TARGETS - 1 {
+            assert!(c.mshr_add_target(0, Target::Prefetch));
+        }
+        assert!(!c.mshr_add_target(0, Target::Prefetch), "cap at {MAX_TARGETS}");
+    }
+
+    #[test]
+    fn prefetch_hit_accounting() {
+        let mut c = small();
+        c.install(0x80, false, true);
+        assert_eq!(c.access(0x80, false), LookupResult::Hit);
+        assert_eq!(c.prefetch_hits, 1);
+        // Second hit doesn't double count.
+        c.access(0x80, false);
+        assert_eq!(c.prefetch_hits, 1);
+    }
+
+    #[test]
+    fn install_existing_line_merges_dirty() {
+        let mut c = small();
+        c.install(0x100 & !63, false, false);
+        assert!(c.install(0x100 & !63, true, false).is_none());
+        assert_eq!(c.invalidate(0x100 & !63), Some(true));
+    }
+
+    #[test]
+    fn prefetch_mshr_quota_counting() {
+        let mut c = small();
+        c.mshr_alloc(0, Target::Prefetch, false, 0);
+        c.mshr_alloc(64, Target::Core { token: 1, is_store: false }, false, 0);
+        assert_eq!(c.mshr_prefetch_used(), 1);
+    }
+}

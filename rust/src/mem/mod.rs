@@ -1,0 +1,569 @@
+//! Memory system: L1D + L2 caches with MSHRs, local DRAM, the far-memory
+//! serial link, prefetching, and the SPM carve-out — glued together with a
+//! deterministic event queue and driven by the cycle-stepped core.
+//!
+//! Demand path: core -> L1D -> L2 -> {DRAM | far link}. AMU path: the ASMC
+//! issues far requests directly onto the link (data lands in the SPM, not
+//! the caches), which is why AMI requests consume no cache MSHRs — the
+//! paper's key resource argument.
+
+pub mod cache;
+pub mod dram;
+pub mod link;
+pub mod prefetch;
+
+use crate::config::SimConfig;
+use crate::isa::mem::{region_of, MemRegion};
+use cache::{line_of, Cache, LookupResult, Target};
+use dram::Dram;
+use link::FarLink;
+use prefetch::BestOffset;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    Load,
+    Store,
+    Prefetch,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitResult {
+    Accepted,
+    MshrFull,
+    PortBusy,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub token: u32,
+    pub cycle: u64,
+    pub was_store: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    /// L1 miss request reaches L2.
+    L2Req { line: u64, to_l1: bool, is_store: bool },
+    /// Retry an L2 request that found the MSHR file full.
+    L2Fill { line: u64 },
+    L1Fill { line: u64 },
+    /// Deliver a demand completion to the core.
+    Done { token: u32, is_store: bool },
+    /// ASMC far request finished (sub-request granularity).
+    AsmcDone { token: u32 },
+}
+
+pub struct MemSys {
+    pub l1d: Cache,
+    pub l2: Cache,
+    pub dram: Dram,
+    pub link: FarLink,
+    bop: Option<BestOffset>,
+    pf_quota: usize,
+    events: BinaryHeap<Reverse<(u64, u64, Ev)>>,
+    seq: u64,
+    /// Demand completions for the core, drained every cycle.
+    pub completions: Vec<Completion>,
+    /// Far-request completions for the ASMC.
+    pub asmc_completions: Vec<Completion>,
+    // L1 port accounting.
+    ports: usize,
+    ports_used: usize,
+    port_cycle: u64,
+    pub mshr_rejects: u64,
+    pub pf_issued: u64,
+}
+
+impl MemSys {
+    pub fn new(cfg: &SimConfig) -> Self {
+        let bop = if cfg.prefetch.l2_best_offset {
+            Some(BestOffset::new())
+        } else {
+            None
+        };
+        let pf_quota =
+            ((cfg.l2.mshrs as f64) * cfg.prefetch.mshr_quota.clamp(0.0, 1.0)) as usize;
+        Self {
+            l1d: Cache::new(&cfg.l1d, "L1D"),
+            l2: Cache::new(&cfg.l2, "L2"),
+            dram: Dram::new(&cfg.dram, cfg.core.freq_ghz),
+            link: FarLink::new(&cfg.far, cfg.core.freq_ghz, cfg.seed),
+            bop,
+            pf_quota,
+            events: BinaryHeap::new(),
+            seq: 0,
+            completions: Vec::new(),
+            asmc_completions: Vec::new(),
+            ports: cfg.l1d.ports,
+            ports_used: 0,
+            port_cycle: 0,
+            mshr_rejects: 0,
+            pf_issued: 0,
+        }
+    }
+
+    #[inline]
+    fn schedule(&mut self, at: u64, ev: Ev) {
+        self.seq += 1;
+        self.events.push(Reverse((at, self.seq, ev)));
+    }
+
+    /// Demand access from the core (L1D). `token` is returned on completion.
+    pub fn submit(
+        &mut self,
+        kind: AccessKind,
+        addr: u64,
+        token: u32,
+        now: u64,
+        l1_hit_lat: u64,
+    ) -> SubmitResult {
+        // Port accounting per cycle.
+        if self.port_cycle != now {
+            self.port_cycle = now;
+            self.ports_used = 0;
+        }
+        if self.ports_used >= self.ports {
+            return SubmitResult::PortBusy;
+        }
+        let line = line_of(addr);
+        let is_store = kind == AccessKind::Store;
+        match self.l1d.access(line, is_store) {
+            LookupResult::Hit => {
+                self.ports_used += 1;
+                if kind != AccessKind::Prefetch {
+                    self.schedule(now + l1_hit_lat, Ev::Done { token, is_store });
+                }
+                SubmitResult::Accepted
+            }
+            LookupResult::Miss => {
+                let target = match kind {
+                    AccessKind::Prefetch => Target::Prefetch,
+                    _ => Target::Core { token, is_store },
+                };
+                if self.l1d.mshr_find(line).is_some() {
+                    // Secondary miss: merge.
+                    if self.l1d.mshr_add_target(line, target) {
+                        self.ports_used += 1;
+                        SubmitResult::Accepted
+                    } else {
+                        self.mshr_rejects += 1;
+                        SubmitResult::MshrFull
+                    }
+                } else {
+                    let is_far = region_of(addr) == MemRegion::Far;
+                    if self.l1d.mshr_alloc(line, target, is_far, now) {
+                        self.ports_used += 1;
+                        self.schedule(
+                            now + l1_hit_lat,
+                            Ev::L2Req { line, to_l1: true, is_store },
+                        );
+                        SubmitResult::Accepted
+                    } else {
+                        self.mshr_rejects += 1;
+                        SubmitResult::MshrFull
+                    }
+                }
+            }
+        }
+    }
+
+    /// ASMC far read/write of `bytes` at `addr`; completion shows up in
+    /// `asmc_completions` with `token`. Bypasses the caches entirely.
+    pub fn far_direct(&mut self, is_write: bool, addr: u64, bytes: usize, token: u32, now: u64) {
+        let t = if is_write {
+            self.link.write(now, addr, bytes)
+        } else {
+            self.link.read(now, addr, bytes)
+        };
+        self.schedule(t.done, Ev::AsmcDone { token });
+    }
+
+    /// Flush one line out of L1D+L2 (sync/async region transition).
+    pub fn flush_line(&mut self, addr: u64, now: u64) {
+        let line = line_of(addr);
+        if self.l1d.invalidate(line) == Some(true) {
+            // Dirty in L1: push down to L2 (install as dirty if present).
+            if !self.l2.mark_dirty(line) {
+                self.writeback_to_memory(line, now);
+            }
+        }
+        if self.l2.invalidate(line) == Some(true) {
+            self.writeback_to_memory(line, now);
+        }
+    }
+
+    fn writeback_to_memory(&mut self, line: u64, now: u64) {
+        match region_of(line) {
+            MemRegion::Far => self.link.posted_write(now, line, 64),
+            _ => {
+                self.dram.service(now, line, true);
+            }
+        }
+    }
+
+    fn route_l2_miss(&mut self, line: u64, now: u64) -> u64 {
+        match region_of(line) {
+            MemRegion::Far => self.link.read(now, line, 64).done,
+            _ => self.dram.service(now, line, false),
+        }
+    }
+
+    /// Try to issue a hardware prefetch of `line` into L2.
+    fn issue_l2_prefetch(&mut self, line: u64, now: u64, l2_lat: u64) {
+        if self.l2.probe(line) || self.l2.mshr_find(line).is_some() {
+            return;
+        }
+        if self.l2.mshr_prefetch_used() >= self.pf_quota || self.l2.mshr_full() {
+            return;
+        }
+        let is_far = region_of(line) == MemRegion::Far;
+        if self.l2.mshr_alloc(line, Target::Prefetch, is_far, now) {
+            self.pf_issued += 1;
+            let done = self.route_l2_miss(line, now + l2_lat);
+            self.schedule(done, Ev::L2Fill { line });
+        }
+    }
+
+    /// Advance to `now`: process all events due at or before `now`.
+    /// Completions appear in `self.completions` / `self.asmc_completions`.
+    pub fn tick(&mut self, now: u64, l2_hit_lat: u64, l2_to_l1: u64) {
+        while let Some(Reverse((at, _, _))) = self.events.peek() {
+            if *at > now {
+                break;
+            }
+            let Reverse((at, _, ev)) = self.events.pop().unwrap();
+            match ev {
+                Ev::L2Req { line, to_l1, is_store } => {
+                    // BOP observes demand traffic at L2.
+                    if let Some(bop) = self.bop.as_mut() {
+                        if let Some(pf_line) = bop.on_demand(line) {
+                            if region_of(pf_line) == region_of(line) {
+                                self.issue_l2_prefetch(pf_line, at, l2_hit_lat);
+                            }
+                        }
+                    }
+                    match self.l2.access(line, false) {
+                        LookupResult::Hit => {
+                            if to_l1 {
+                                self.schedule(at + l2_hit_lat + l2_to_l1, Ev::L1Fill { line });
+                            }
+                        }
+                        LookupResult::Miss => {
+                            let target = if to_l1 { Target::FillL1 } else { Target::Prefetch };
+                            if self.l2.mshr_find(line).is_some() {
+                                if !self.l2.mshr_add_target(line, target) {
+                                    // Target list full: retry shortly.
+                                    self.schedule(
+                                        at + 2,
+                                        Ev::L2Req { line, to_l1, is_store },
+                                    );
+                                }
+                            } else if self.l2.mshr_alloc(
+                                line,
+                                target,
+                                region_of(line) == MemRegion::Far,
+                                at,
+                            ) {
+                                let done = self.route_l2_miss(line, at + l2_hit_lat);
+                                self.schedule(done, Ev::L2Fill { line });
+                            } else {
+                                // L2 MSHRs exhausted: retry. The L1 MSHR
+                                // stays occupied — back-pressure propagates.
+                                self.mshr_rejects += 1;
+                                self.schedule(at + 2, Ev::L2Req { line, to_l1, is_store });
+                            }
+                        }
+                    }
+                }
+                Ev::L2Fill { line } => {
+                    let mshr = self.l2.mshr_take(line).expect("L2 fill without MSHR");
+                    if mshr.is_far {
+                        self.link.complete();
+                    }
+                    if let Some(bop) = self.bop.as_mut() {
+                        bop.on_fill(line);
+                    }
+                    let prefetched =
+                        mshr.targets.iter().all(|t| matches!(t, Target::Prefetch));
+                    if let Some(v) = self.l2.install(line, false, prefetched) {
+                        if v.dirty {
+                            self.writeback_to_memory(v.line, at);
+                        }
+                    }
+                    if mshr.targets.iter().any(|t| matches!(t, Target::FillL1)) {
+                        self.schedule(at + l2_to_l1, Ev::L1Fill { line });
+                    }
+                }
+                Ev::L1Fill { line } => {
+                    let mshr = self.l1d.mshr_take(line).expect("L1 fill without MSHR");
+                    let any_store = mshr
+                        .targets
+                        .iter()
+                        .any(|t| matches!(t, Target::Core { is_store: true, .. }));
+                    let all_pf = mshr.targets.iter().all(|t| matches!(t, Target::Prefetch));
+                    if let Some(v) = self.l1d.install(line, any_store, all_pf) {
+                        if v.dirty {
+                            // Write back into L2; if absent there, straight
+                            // to memory (no-allocate on writeback).
+                            if !self.l2.mark_dirty(v.line) {
+                                self.writeback_to_memory(v.line, at);
+                            }
+                        }
+                    }
+                    for t in mshr.targets {
+                        if let Target::Core { token, is_store } = t {
+                            self.schedule(at + 1, Ev::Done { token, is_store });
+                        }
+                    }
+                }
+                Ev::Done { token, is_store } => {
+                    self.completions.push(Completion { token, cycle: at, was_store: is_store });
+                }
+                Ev::AsmcDone { token } => {
+                    self.link.complete();
+                    self.asmc_completions
+                        .push(Completion { token, cycle: at, was_store: false });
+                }
+            }
+        }
+    }
+
+    /// Far requests currently in flight (demand + AMU) — the Fig 9 metric.
+    pub fn far_inflight(&self) -> u64 {
+        self.link.inflight
+    }
+
+    pub fn pending_events(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Earliest pending event cycle (for idle fast-forwarding).
+    pub fn next_event_cycle(&self) -> Option<u64> {
+        self.events.peek().map(|Reverse((at, _, _))| *at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::isa::mem::{FAR_BASE, LOCAL_BASE};
+
+    fn memsys(cfg: &SimConfig) -> MemSys {
+        MemSys::new(cfg)
+    }
+
+    fn drain_until(m: &mut MemSys, token: u32, max: u64) -> u64 {
+        for c in 0..max {
+            m.tick(c, 10, 4);
+            if let Some(done) = m.completions.iter().find(|x| x.token == token) {
+                return done.cycle;
+            }
+        }
+        panic!("token {token} never completed");
+    }
+
+    #[test]
+    fn l1_hit_completes_fast() {
+        let cfg = SimConfig::baseline();
+        let mut m = memsys(&cfg);
+        // Prime the line.
+        assert_eq!(
+            m.submit(AccessKind::Load, LOCAL_BASE, 1, 0, 4),
+            SubmitResult::Accepted
+        );
+        let t1 = drain_until(&mut m, 1, 100_000);
+        // Second access: hit.
+        assert_eq!(
+            m.submit(AccessKind::Load, LOCAL_BASE, 2, t1 + 1, 4),
+            SubmitResult::Accepted
+        );
+        let t2 = drain_until(&mut m, 2, t1 + 100);
+        assert_eq!(t2 - (t1 + 1), 4, "L1 hit latency");
+    }
+
+    #[test]
+    fn local_miss_latency_reasonable() {
+        let cfg = SimConfig::baseline();
+        let mut m = memsys(&cfg);
+        m.submit(AccessKind::Load, LOCAL_BASE + 1 << 20, 1, 0, 4);
+        let t = drain_until(&mut m, 1, 100_000);
+        // L1 lat + L2 lat + DRAM row miss (135c) + xfer (10) + fill hops.
+        assert!(t > 100 && t < 400, "local miss latency {t}");
+    }
+
+    #[test]
+    fn far_miss_latency_includes_link() {
+        let cfg = SimConfig::baseline().with_far_latency_ns(1000.0);
+        let mut m = memsys(&cfg);
+        m.submit(AccessKind::Load, FAR_BASE, 1, 0, 4);
+        let t = drain_until(&mut m, 1, 1_000_000);
+        assert!(t >= 3000, "far miss must include 3000-cycle link RTT, got {t}");
+        assert!(t < 4500, "far miss too slow: {t}");
+    }
+
+    #[test]
+    fn mshr_exhaustion_rejects() {
+        let mut cfg = SimConfig::baseline();
+        cfg.l1d.mshrs = 2;
+        let mut m = memsys(&cfg);
+        assert_eq!(
+            m.submit(AccessKind::Load, FAR_BASE, 1, 0, 4),
+            SubmitResult::Accepted
+        );
+        assert_eq!(
+            m.submit(AccessKind::Load, FAR_BASE + 4096, 2, 1, 4),
+            SubmitResult::Accepted
+        );
+        assert_eq!(
+            m.submit(AccessKind::Load, FAR_BASE + 8192, 3, 2, 4),
+            SubmitResult::MshrFull
+        );
+        assert_eq!(m.mshr_rejects, 1);
+    }
+
+    #[test]
+    fn secondary_miss_merges_same_line() {
+        let mut cfg = SimConfig::baseline();
+        cfg.l1d.mshrs = 1;
+        let mut m = memsys(&cfg);
+        assert_eq!(
+            m.submit(AccessKind::Load, FAR_BASE, 1, 0, 4),
+            SubmitResult::Accepted
+        );
+        // Same line: merge into existing MSHR even though the file is full.
+        assert_eq!(
+            m.submit(AccessKind::Load, FAR_BASE + 8, 2, 1, 4),
+            SubmitResult::Accepted
+        );
+        let t1 = drain_until(&mut m, 1, 1_000_000);
+        // Both complete off one fill.
+        assert!(m.completions.iter().any(|c| c.token == 2));
+        assert!(t1 >= 3000);
+    }
+
+    #[test]
+    fn port_limit_per_cycle() {
+        let cfg = SimConfig::baseline(); // 2 ports
+        let mut m = memsys(&cfg);
+        assert_eq!(m.submit(AccessKind::Load, LOCAL_BASE, 1, 5, 4), SubmitResult::Accepted);
+        assert_eq!(
+            m.submit(AccessKind::Load, LOCAL_BASE + 64, 2, 5, 4),
+            SubmitResult::Accepted
+        );
+        assert_eq!(
+            m.submit(AccessKind::Load, LOCAL_BASE + 128, 3, 5, 4),
+            SubmitResult::PortBusy
+        );
+        // Next cycle the port frees up.
+        assert_eq!(
+            m.submit(AccessKind::Load, LOCAL_BASE + 128, 3, 6, 4),
+            SubmitResult::Accepted
+        );
+    }
+
+    #[test]
+    fn store_miss_write_allocates_and_dirties() {
+        let cfg = SimConfig::baseline();
+        let mut m = memsys(&cfg);
+        m.submit(AccessKind::Store, LOCAL_BASE + 4096, 1, 0, 4);
+        let t = drain_until(&mut m, 1, 100_000);
+        assert!(m.completions[0].was_store);
+        // Line now present and dirty: flushing writes it back.
+        let wb_before = m.dram.writes;
+        m.flush_line(LOCAL_BASE + 4096, t + 1);
+        assert_eq!(m.dram.writes, wb_before + 1);
+    }
+
+    #[test]
+    fn asmc_far_direct_bypasses_caches() {
+        let cfg = SimConfig::amu().with_far_latency_ns(1000.0);
+        let mut m = memsys(&cfg);
+        let l1_misses_before = m.l1d.misses;
+        m.far_direct(false, FAR_BASE, 8, 7, 0);
+        let mut done = 0;
+        for c in 0..1_000_000 {
+            m.tick(c, 10, 4);
+            if let Some(x) = m.asmc_completions.first() {
+                done = x.cycle;
+                break;
+            }
+        }
+        assert!(done >= 3000);
+        assert_eq!(m.l1d.misses, l1_misses_before, "no cache involvement");
+        assert_eq!(m.far_inflight(), 0);
+    }
+
+    #[test]
+    fn far_inflight_tracks_outstanding() {
+        let cfg = SimConfig::amu().with_far_latency_ns(1000.0);
+        let mut m = memsys(&cfg);
+        for i in 0..10 {
+            m.far_direct(false, FAR_BASE + i * 4096, 8, i as u32, 0);
+        }
+        assert_eq!(m.far_inflight(), 10);
+        for c in 0..1_000_000 {
+            m.tick(c, 10, 4);
+            if m.asmc_completions.len() == 10 {
+                break;
+            }
+        }
+        assert_eq!(m.far_inflight(), 0);
+    }
+
+    #[test]
+    fn bop_prefetches_timely_on_slow_sequential_stream() {
+        // Local DRAM (~165-cycle miss) with 200-cycle demand spacing: a
+        // 1-line offset prefetch has enough lead time to land before the
+        // demand — prefetch hits must accrue.
+        let cfg = SimConfig::cxl_ideal();
+        let mut m = memsys(&cfg);
+        for i in 0..2000u64 {
+            let cycle = i * 200;
+            let addr = LOCAL_BASE + (1 << 22) + i * 64;
+            m.tick(cycle, 10, 4);
+            assert_eq!(
+                m.submit(AccessKind::Load, addr, i as u32, cycle, 4),
+                SubmitResult::Accepted
+            );
+        }
+        for c in 2000 * 200..2000 * 200 + 10_000 {
+            m.tick(c, 10, 4);
+        }
+        assert!(m.pf_issued > 100, "BOP should train on a sequential stream: {}", m.pf_issued);
+        assert!(m.l2.prefetch_hits > 50, "prefetches should be useful: {}", m.l2.prefetch_hits);
+    }
+
+    #[test]
+    fn bop_prefetches_are_late_at_far_latency() {
+        // The same stream at back-to-back pace against 1.5k-cycle far
+        // latency: prefetches are issued but arrive late (merge with the
+        // demand miss) — the paper's prefetch-timeliness problem.
+        let mut cfg = SimConfig::cxl_ideal().with_far_latency_ns(500.0);
+        cfg.far.jitter_frac = 0.0;
+        let mut m = memsys(&cfg);
+        let mut cycle = 0u64;
+        for i in 0..3000u64 {
+            let addr = FAR_BASE + i * 64;
+            loop {
+                m.tick(cycle, 10, 4);
+                match m.submit(AccessKind::Load, addr, i as u32, cycle, 4) {
+                    SubmitResult::Accepted => break,
+                    _ => cycle += 1,
+                }
+            }
+            cycle += 2;
+        }
+        for c in cycle..cycle + 100_000 {
+            m.tick(c, 10, 4);
+        }
+        assert!(m.pf_issued > 100, "BOP still issues: {}", m.pf_issued);
+        let hit_rate = m.l2.prefetch_hits as f64 / m.pf_issued as f64;
+        assert!(
+            hit_rate < 0.5,
+            "at far latency most prefetches should be late, hit rate {hit_rate}"
+        );
+    }
+}

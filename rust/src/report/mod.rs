@@ -1,0 +1,541 @@
+//! Report generators: regenerate every table and figure in the paper's
+//! evaluation (§6) from simulation. Each generator prints the same
+//! rows/series the paper reports and writes CSV into `results/`.
+//!
+//! The Fig 8/9/10/11 sweep (11 benchmarks x 4 configs x 6 latencies) is
+//! shared through an on-disk cache (`results/sweep_<scale>.csv`), so the
+//! per-figure bench harnesses do not re-simulate.
+
+use crate::config::SimConfig;
+use crate::power::{estimate, EnergyModel, PowerBreakdown};
+use crate::util::geomean;
+use crate::workloads::{self, Scale, Variant};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunResult {
+    pub bench: String,
+    pub config: String,
+    pub variant: String,
+    pub latency_ns: f64,
+    pub measured_cycles: u64,
+    pub total_cycles: u64,
+    pub insts: u64,
+    pub ipc: f64,
+    pub mlp: f64,
+    pub peak_inflight: u64,
+    pub dynamic_uj: f64,
+    pub static_uj: f64,
+    pub disambig_frac: f64,
+    pub host_ms: u64,
+}
+
+impl RunResult {
+    pub fn power(&self) -> PowerBreakdown {
+        PowerBreakdown { dynamic_uj: self.dynamic_uj, static_uj: self.static_uj }
+    }
+}
+
+pub fn results_dir() -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+fn config_by_name(name: &str, latency_ns: f64) -> SimConfig {
+    SimConfig::preset(name)
+        .unwrap_or_else(|| panic!("unknown config '{name}'"))
+        .with_far_latency_ns(latency_ns)
+}
+
+/// Run one benchmark under one configuration.
+pub fn run_one(
+    bench: &str,
+    config: &str,
+    variant: Variant,
+    latency_ns: f64,
+    scale: Scale,
+) -> Result<RunResult, String> {
+    let cfg = config_by_name(config, latency_ns);
+    let spec = workloads::build(bench, &cfg, variant, scale);
+    let t0 = std::time::Instant::now();
+    let sim = spec.run(&cfg)?;
+    let host_ms = t0.elapsed().as_millis() as u64;
+    let p = estimate(&cfg, &sim.stats, &EnergyModel::default());
+    Ok(RunResult {
+        bench: bench.into(),
+        config: config.into(),
+        variant: variant.tag(),
+        latency_ns,
+        measured_cycles: sim.stats.measured_cycles.max(1),
+        total_cycles: sim.cycle,
+        insts: sim.stats.insts_committed,
+        ipc: sim.stats.ipc(),
+        mlp: sim.stats.mlp(),
+        peak_inflight: sim.stats.far_inflight.max,
+        dynamic_uj: p.dynamic_uj,
+        static_uj: p.static_uj,
+        disambig_frac: sim.stats.region_fraction(crate::stats::Region::Disambig),
+        host_ms,
+    })
+}
+
+pub const SWEEP_CONFIGS: &[&str] = &["baseline", "cxl-ideal", "amu", "amu-dma"];
+
+fn scale_tag(scale: Scale) -> &'static str {
+    match scale {
+        Scale::Test => "test",
+        Scale::Paper => "paper",
+    }
+}
+
+const CSV_HEADER: &str = "bench,config,variant,latency_ns,measured_cycles,total_cycles,\
+insts,ipc,mlp,peak_inflight,dynamic_uj,static_uj,disambig_frac,host_ms";
+
+fn to_csv_row(r: &RunResult) -> String {
+    format!(
+        "{},{},{},{},{},{},{},{:.6},{:.4},{},{:.6},{:.6},{:.6},{}",
+        r.bench,
+        r.config,
+        r.variant,
+        r.latency_ns,
+        r.measured_cycles,
+        r.total_cycles,
+        r.insts,
+        r.ipc,
+        r.mlp,
+        r.peak_inflight,
+        r.dynamic_uj,
+        r.static_uj,
+        r.disambig_frac,
+        r.host_ms
+    )
+}
+
+fn parse_csv(text: &str) -> Option<Vec<RunResult>> {
+    let mut out = Vec::new();
+    for line in text.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 14 {
+            return None;
+        }
+        out.push(RunResult {
+            bench: f[0].into(),
+            config: f[1].into(),
+            variant: f[2].into(),
+            latency_ns: f[3].parse().ok()?,
+            measured_cycles: f[4].parse().ok()?,
+            total_cycles: f[5].parse().ok()?,
+            insts: f[6].parse().ok()?,
+            ipc: f[7].parse().ok()?,
+            mlp: f[8].parse().ok()?,
+            peak_inflight: f[9].parse().ok()?,
+            dynamic_uj: f[10].parse().ok()?,
+            static_uj: f[11].parse().ok()?,
+            disambig_frac: f[12].parse().ok()?,
+            host_ms: f[13].parse().ok()?,
+        });
+    }
+    Some(out)
+}
+
+/// The shared Fig 8/9/10/11 sweep, cached in `results/`.
+pub fn sweep_cached(scale: Scale, quiet: bool) -> Vec<RunResult> {
+    let path = results_dir().join(format!("sweep_{}.csv", scale_tag(scale)));
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        if let Some(rows) = parse_csv(&text) {
+            let expected =
+                workloads::ALL.len() * SWEEP_CONFIGS.len() * SimConfig::paper_latencies_ns().len();
+            if rows.len() == expected {
+                if !quiet {
+                    eprintln!("[sweep] using cached {}", path.display());
+                }
+                return rows;
+            }
+        }
+    }
+    let mut rows = Vec::new();
+    for bench in workloads::ALL {
+        for config in SWEEP_CONFIGS {
+            for &lat in SimConfig::paper_latencies_ns() {
+                let cfg = config_by_name(config, lat);
+                let variant = workloads::variant_for(&cfg);
+                if !quiet {
+                    eprintln!("[sweep] {bench} {config} @{lat}ns ...");
+                }
+                let r = run_one(bench, config, variant, lat, scale)
+                    .unwrap_or_else(|e| panic!("sweep failed: {e}"));
+                rows.push(r);
+            }
+        }
+    }
+    let mut csv = String::from(CSV_HEADER);
+    csv.push('\n');
+    for r in &rows {
+        csv.push_str(&to_csv_row(r));
+        csv.push('\n');
+    }
+    std::fs::write(&path, csv).ok();
+    rows
+}
+
+fn find<'a>(
+    rows: &'a [RunResult],
+    bench: &str,
+    config: &str,
+    lat: f64,
+) -> Option<&'a RunResult> {
+    rows.iter()
+        .find(|r| r.bench == bench && r.config == config && r.latency_ns == lat)
+}
+
+/// Baseline-at-100ns normalization denominator for one benchmark.
+fn norm_base(rows: &[RunResult], bench: &str) -> f64 {
+    find(rows, bench, "baseline", 100.0)
+        .map(|r| r.measured_cycles as f64)
+        .unwrap_or(1.0)
+}
+
+// ---------------------------------------------------------------- figures
+
+/// Fig 2: baseline slowdown vs far-memory latency (motivation).
+pub fn fig2(rows: &[RunResult]) -> String {
+    let mut s = String::new();
+    writeln!(s, "# Fig 2 — baseline slowdown vs far-memory latency").unwrap();
+    write!(s, "{:>8}", "lat(us)").unwrap();
+    for b in workloads::ALL {
+        write!(s, "{b:>9}").unwrap();
+    }
+    writeln!(s).unwrap();
+    for &lat in SimConfig::paper_latencies_ns() {
+        write!(s, "{:>8.1}", lat / 1000.0).unwrap();
+        for b in workloads::ALL {
+            let base = norm_base(rows, b);
+            let v = find(rows, b, "baseline", lat)
+                .map(|r| r.measured_cycles as f64 / base)
+                .unwrap_or(f64::NAN);
+            write!(s, "{v:>9.2}").unwrap();
+        }
+        writeln!(s).unwrap();
+    }
+    s
+}
+
+/// Fig 8: normalized execution time per benchmark / config / latency.
+pub fn fig8(rows: &[RunResult]) -> String {
+    let mut s = String::new();
+    writeln!(
+        s,
+        "# Fig 8 — normalized execution time (lower is better; norm = baseline @0.1us)"
+    )
+    .unwrap();
+    for b in workloads::ALL {
+        writeln!(s, "\n## {b}").unwrap();
+        write!(s, "{:>10}", "lat(us)").unwrap();
+        for c in SWEEP_CONFIGS {
+            write!(s, "{c:>11}").unwrap();
+        }
+        writeln!(s).unwrap();
+        let base = norm_base(rows, b);
+        for &lat in SimConfig::paper_latencies_ns() {
+            write!(s, "{:>10.1}", lat / 1000.0).unwrap();
+            for c in SWEEP_CONFIGS {
+                let v = find(rows, b, c, lat)
+                    .map(|r| r.measured_cycles as f64 / base)
+                    .unwrap_or(f64::NAN);
+                write!(s, "{v:>11.3}").unwrap();
+            }
+            writeln!(s).unwrap();
+        }
+    }
+    s
+}
+
+/// Fig 9 (MLP) / Fig 10 (IPC) share a formatter.
+fn metric_table(rows: &[RunResult], title: &str, f: impl Fn(&RunResult) -> f64) -> String {
+    let mut s = String::new();
+    writeln!(s, "# {title}").unwrap();
+    for b in workloads::ALL {
+        writeln!(s, "\n## {b}").unwrap();
+        write!(s, "{:>10}", "lat(us)").unwrap();
+        for c in SWEEP_CONFIGS {
+            write!(s, "{c:>11}").unwrap();
+        }
+        writeln!(s).unwrap();
+        for &lat in SimConfig::paper_latencies_ns() {
+            write!(s, "{:>10.1}", lat / 1000.0).unwrap();
+            for c in SWEEP_CONFIGS {
+                let v = find(rows, b, c, lat).map(&f).unwrap_or(f64::NAN);
+                write!(s, "{v:>11.2}").unwrap();
+            }
+            writeln!(s).unwrap();
+        }
+    }
+    s
+}
+
+pub fn fig9(rows: &[RunResult]) -> String {
+    metric_table(rows, "Fig 9 — MLP (average in-flight far-memory requests)", |r| r.mlp)
+}
+
+pub fn fig10(rows: &[RunResult]) -> String {
+    metric_table(rows, "Fig 10 — IPC", |r| r.ipc)
+}
+
+/// Fig 11: energy normalized to baseline @0.1us, split static/dynamic.
+/// (The paper's "power consumption" bars shrink when runtime shrinks —
+/// i.e. they are run energy with a static component proportional to time.)
+pub fn fig11(rows: &[RunResult]) -> String {
+    let mut s = String::new();
+    writeln!(s, "# Fig 11 — normalized energy (static+dynamic; norm = baseline @0.1us)").unwrap();
+    writeln!(s, "{:>8} {:>10} {:>12} {:>10} {:>10} {:>10}", "bench", "config", "lat(us)", "static", "dynamic", "total").unwrap();
+    for b in workloads::ALL {
+        let base = find(rows, b, "baseline", 100.0)
+            .map(|r| r.dynamic_uj + r.static_uj)
+            .unwrap_or(1.0);
+        for c in SWEEP_CONFIGS {
+            for &lat in [500.0, 1000.0].iter() {
+                if let Some(r) = find(rows, b, c, lat) {
+                    let st = r.static_uj / base;
+                    let dy = r.dynamic_uj / base;
+                    writeln!(
+                        s,
+                        "{:>8} {:>10} {:>12.1} {:>10.3} {:>10.3} {:>10.3}",
+                        b,
+                        c,
+                        lat / 1000.0,
+                        st,
+                        dy,
+                        st + dy
+                    )
+                    .unwrap();
+                }
+            }
+        }
+    }
+    // Paper's headline geomeans: AMU/baseline power at 0.5us and 1us.
+    for &lat in [500.0, 1000.0].iter() {
+        let ratios: Vec<f64> = workloads::ALL
+            .iter()
+            .filter_map(|b| {
+                let amu = find(rows, b, "amu", lat)?;
+                let base = find(rows, b, "baseline", lat)?;
+                Some(
+                    (amu.total_power()) / (base.total_power()),
+                )
+            })
+            .collect();
+        if let Some(g) = geomean(&ratios) {
+            writeln!(s, "\ngeomean AMU/baseline energy @{}us = {g:.2}", lat / 1000.0).unwrap();
+        }
+    }
+    s
+}
+
+impl RunResult {
+    fn total_power(&self) -> f64 {
+        self.dynamic_uj + self.static_uj
+    }
+}
+
+/// Fig 3: GUPS group-prefetch sensitivity across hardware scaling.
+pub fn fig3(scale: Scale, latency_ns: f64) -> String {
+    let groups = [2usize, 4, 8, 16, 32, 64, 128];
+    let configs = ["cxl-ideal", "x2", "x4"];
+    let mut s = String::new();
+    writeln!(
+        s,
+        "# Fig 3 — GUPS with group prefetching vs group size (latency {}ns)",
+        latency_ns
+    )
+    .unwrap();
+    write!(s, "{:>10}", "group").unwrap();
+    for c in configs {
+        write!(s, "{c:>12}").unwrap();
+    }
+    writeln!(s, "{:>12}", "(cycles)").unwrap();
+    // Baseline bars: plain GUPS per config.
+    write!(s, "{:>10}", "none").unwrap();
+    for c in configs {
+        let r = run_one("gups", c, Variant::Sync, latency_ns, scale).unwrap();
+        write!(s, "{:>12}", r.measured_cycles).unwrap();
+    }
+    writeln!(s).unwrap();
+    for g in groups {
+        write!(s, "{g:>10}").unwrap();
+        for c in configs {
+            let r = run_one("gups", c, Variant::GroupPrefetch(g), latency_ns, scale).unwrap();
+            write!(s, "{:>12}", r.measured_cycles).unwrap();
+        }
+        writeln!(s).unwrap();
+    }
+    s
+}
+
+/// Table 4: baseline vs best software prefetch vs AMU vs LLVM-AMU for
+/// GUPS / HJ / STREAM.
+pub fn table4(scale: Scale) -> String {
+    let benches = ["gups", "hj", "stream"];
+    let pf_groups = [2usize, 8, 32, 128];
+    let mut s = String::new();
+    writeln!(s, "# Table 4 — normalized execution time (norm = cxl-ideal @0.1us per bench)").unwrap();
+    writeln!(
+        s,
+        "{:>8} {:>8} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "bench", "lat(us)", "CXL", "PF(best)", "pf-cfg", "AMU", "LLVM-AMU"
+    )
+    .unwrap();
+    for b in benches {
+        let base = run_one(b, "cxl-ideal", Variant::Sync, 100.0, scale)
+            .unwrap()
+            .measured_cycles as f64;
+        for &lat in SimConfig::paper_latencies_ns() {
+            let cxl = run_one(b, "cxl-ideal", Variant::Sync, lat, scale).unwrap();
+            let mut best_pf = f64::INFINITY;
+            let mut best_cfg = 0usize;
+            for &g in &pf_groups {
+                let v = if b == "stream" {
+                    Variant::SwPrefetch { batch: g, depth: 0 }
+                } else {
+                    Variant::GroupPrefetch(g)
+                };
+                let r = run_one(b, "cxl-ideal", v, lat, scale).unwrap();
+                if (r.measured_cycles as f64) < best_pf {
+                    best_pf = r.measured_cycles as f64;
+                    best_cfg = g;
+                }
+            }
+            let amu = run_one(b, "amu", Variant::Amu, lat, scale).unwrap();
+            let llvm = run_one(b, "amu", Variant::AmuLlvm, lat, scale).unwrap();
+            writeln!(
+                s,
+                "{:>8} {:>8.1} {:>10.2} {:>10.2} {:>10} {:>10.2} {:>10.2}",
+                b,
+                lat / 1000.0,
+                cxl.measured_cycles as f64 / base,
+                best_pf / base,
+                best_cfg,
+                amu.measured_cycles as f64 / base,
+                llvm.measured_cycles as f64 / base,
+            )
+            .unwrap();
+        }
+    }
+    s
+}
+
+/// Table 5: % of execution time spent on software disambiguation (HJ, HT).
+pub fn table5(scale: Scale) -> String {
+    let mut s = String::new();
+    writeln!(s, "# Table 5 — execution time share of software disambiguation").unwrap();
+    write!(s, "{:>8}", "bench").unwrap();
+    for &lat in SimConfig::paper_latencies_ns() {
+        write!(s, "{:>9.1}", lat / 1000.0).unwrap();
+    }
+    writeln!(s, "   (us columns)").unwrap();
+    for b in ["hj", "ht"] {
+        write!(s, "{b:>8}").unwrap();
+        for &lat in SimConfig::paper_latencies_ns() {
+            let r = run_one(b, "amu", Variant::Amu, lat, scale).unwrap();
+            write!(s, "{:>8.2}%", r.disambig_frac * 100.0).unwrap();
+        }
+        writeln!(s).unwrap();
+    }
+    s
+}
+
+/// Table 6: hardware resource overhead vs NanHu-G.
+pub fn table6() -> String {
+    let t = crate::area::table6(&crate::area::NanhuBase::default());
+    let mut s = String::new();
+    writeln!(s, "# Table 6 — resource utilization vs NanHu-G").unwrap();
+    writeln!(
+        s,
+        "LUT(logic) +{:.1}%  LUT(mem) +{:.1}%  FF +{:.1}%  BRAM +{:.0}%  URAM +{:.0}%",
+        t.lut_logic_pct, t.lut_mem_pct, t.ff_pct, t.bram_pct, t.uram_pct
+    )
+    .unwrap();
+    writeln!(s, "ASIC: {:.0} gates, area +{:.2}%", t.asic_gates, t.asic_area_pct).unwrap();
+    writeln!(
+        s,
+        "AMU storage overhead: {:.1} KB (independent of required MLP)",
+        crate::area::storage_overhead_bytes() as f64 / 1024.0
+    )
+    .unwrap();
+    s
+}
+
+/// Headline numbers (abstract / §6.3).
+pub fn headline(rows: &[RunResult]) -> String {
+    let mut s = String::new();
+    writeln!(s, "# Headline reproduction").unwrap();
+    // Mean speedup of AMU over baseline at 1us across memory-bound suite.
+    let speedups: Vec<f64> = workloads::ALL
+        .iter()
+        .filter_map(|b| {
+            let amu = find(rows, b, "amu", 1000.0)?;
+            let base = find(rows, b, "baseline", 1000.0)?;
+            Some(base.measured_cycles as f64 / amu.measured_cycles as f64)
+        })
+        .collect();
+    if let Some(g) = geomean(&speedups) {
+        writeln!(
+            s,
+            "geomean AMU speedup @1us over baseline: {g:.2}x (paper: 2.42x)"
+        )
+        .unwrap();
+    }
+    if let (Some(amu), Some(base)) = (
+        find(rows, "gups", "amu", 5000.0),
+        find(rows, "gups", "baseline", 5000.0),
+    ) {
+        writeln!(
+            s,
+            "GUPS @5us: {:.2}x speedup (paper: 26.86x); peak in-flight {} (paper: >130)",
+            base.measured_cycles as f64 / amu.measured_cycles as f64,
+            amu.peak_inflight
+        )
+        .unwrap();
+        writeln!(s, "GUPS @5us avg MLP: {:.1}", amu.mlp).unwrap();
+    }
+    s
+}
+
+pub fn write_report(name: &str, body: &str) {
+    let path = results_dir().join(format!("{name}.txt"));
+    std::fs::write(&path, body).ok();
+    println!("{body}");
+    eprintln!("[report] wrote {}", path.display());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_one_produces_metrics() {
+        let r = run_one("gups", "baseline", Variant::Sync, 200.0, Scale::Test).unwrap();
+        assert!(r.measured_cycles > 0);
+        assert!(r.ipc > 0.0);
+        assert!(r.dynamic_uj > 0.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let r = run_one("gups", "amu", Variant::Amu, 200.0, Scale::Test).unwrap();
+        let csv = format!("{CSV_HEADER}\n{}\n", to_csv_row(&r));
+        let parsed = parse_csv(&csv).expect("parse");
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].bench, "gups");
+        assert_eq!(parsed[0].measured_cycles, r.measured_cycles);
+        assert_eq!(parsed[0].peak_inflight, r.peak_inflight);
+    }
+
+    #[test]
+    fn table6_report_renders() {
+        let t = table6();
+        assert!(t.contains("LUT"));
+        assert!(t.contains("71510") || t.contains("71,510") || t.contains("gates"));
+    }
+}

@@ -1,0 +1,160 @@
+//! Branch prediction: gshare direction predictor + BTB (with last-target
+//! indirect prediction for `jalr`).
+//!
+//! The coroutine scheduler's indirect dispatch (`jr cont_pc`) is highly
+//! polymorphic, so indirect mispredictions are a real, measured part of
+//! the AMU software overhead — exactly as in the paper's IPC discussion.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Prediction {
+    pub taken: bool,
+    /// Predicted next pc (instruction index).
+    pub target: Option<usize>,
+}
+
+pub struct BranchPredictor {
+    /// 2-bit saturating counters.
+    pht: Vec<u8>,
+    history: u64,
+    history_mask: u64,
+    btb: Vec<BtbEntry>,
+    pub lookups: u64,
+    pub mispredicts: u64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct BtbEntry {
+    pc: usize,
+    target: usize,
+    valid: bool,
+}
+
+impl BranchPredictor {
+    pub fn new(table_bits: usize, btb_entries: usize) -> Self {
+        Self {
+            pht: vec![1u8; 1 << table_bits], // weakly not-taken
+            history: 0,
+            history_mask: (1u64 << table_bits.min(63)) - 1,
+            btb: vec![BtbEntry::default(); btb_entries.next_power_of_two()],
+            lookups: 0,
+            mispredicts: 0,
+        }
+    }
+
+    #[inline]
+    fn pht_index(&self, pc: usize) -> usize {
+        (((pc as u64) ^ self.history) & self.history_mask) as usize
+    }
+
+    #[inline]
+    fn btb_index(&self, pc: usize) -> usize {
+        pc & (self.btb.len() - 1)
+    }
+
+    /// Predict a conditional branch at `pc` with static target `target`.
+    pub fn predict_cond(&mut self, pc: usize, target: usize) -> Prediction {
+        self.lookups += 1;
+        let taken = self.pht[self.pht_index(pc)] >= 2;
+        Prediction { taken, target: if taken { Some(target) } else { None } }
+    }
+
+    /// Predict an indirect jump (`jalr`) via the BTB's last-seen target.
+    pub fn predict_indirect(&mut self, pc: usize) -> Prediction {
+        self.lookups += 1;
+        let e = self.btb[self.btb_index(pc)];
+        if e.valid && e.pc == pc {
+            Prediction { taken: true, target: Some(e.target) }
+        } else {
+            Prediction { taken: true, target: None } // unknown: frontend stalls
+        }
+    }
+
+    /// Update on resolution. Returns true if this was a misprediction.
+    pub fn update_cond(&mut self, pc: usize, pred: Prediction, taken: bool) -> bool {
+        let idx = self.pht_index(pc);
+        let c = &mut self.pht[idx];
+        if taken {
+            *c = (*c + 1).min(3);
+        } else {
+            *c = c.saturating_sub(1);
+        }
+        self.history = (self.history << 1) | taken as u64;
+        let mis = pred.taken != taken;
+        if mis {
+            self.mispredicts += 1;
+        }
+        mis
+    }
+
+    pub fn update_indirect(&mut self, pc: usize, pred: Prediction, target: usize) -> bool {
+        let idx = self.btb_index(pc);
+        self.btb[idx] = BtbEntry { pc, target, valid: true };
+        let mis = pred.target != Some(target);
+        if mis {
+            self.mispredicts += 1;
+        }
+        mis
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learns_always_taken_loop() {
+        // gshare: the rolling history changes the PHT index until it
+        // saturates, so convergence takes ~history-length iterations.
+        let mut bp = BranchPredictor::new(10, 64);
+        let mut warm_mispredicts = 0;
+        let mut late_mispredicts = 0;
+        for i in 0..200 {
+            let p = bp.predict_cond(7, 3);
+            if bp.update_cond(7, p, true) {
+                if i < 100 {
+                    warm_mispredicts += 1;
+                } else {
+                    late_mispredicts += 1;
+                }
+            }
+        }
+        assert!(warm_mispredicts <= 25, "warmup too slow: {warm_mispredicts}");
+        assert_eq!(late_mispredicts, 0, "steady state must be perfect");
+    }
+
+    #[test]
+    fn learns_alternating_with_history() {
+        let mut bp = BranchPredictor::new(12, 64);
+        let mut late_mispredicts = 0;
+        for i in 0..400 {
+            let taken = i % 2 == 0;
+            let p = bp.predict_cond(9, 2);
+            let mis = bp.update_cond(9, p, taken);
+            if i > 200 && mis {
+                late_mispredicts += 1;
+            }
+        }
+        assert!(late_mispredicts < 20, "history should capture alternation: {late_mispredicts}");
+    }
+
+    #[test]
+    fn indirect_repeats_last_target() {
+        let mut bp = BranchPredictor::new(10, 64);
+        let p0 = bp.predict_indirect(5);
+        assert_eq!(p0.target, None, "cold BTB");
+        bp.update_indirect(5, p0, 42);
+        let p1 = bp.predict_indirect(5);
+        assert_eq!(p1.target, Some(42));
+        assert!(bp.update_indirect(5, p1, 77), "target change mispredicts");
+        assert_eq!(bp.predict_indirect(5).target, Some(77));
+    }
+
+    #[test]
+    fn mispredict_counting() {
+        let mut bp = BranchPredictor::new(10, 64);
+        let p = bp.predict_cond(1, 9); // predicts not-taken initially
+        assert!(!p.taken);
+        assert!(bp.update_cond(1, p, true));
+        assert_eq!(bp.mispredicts, 1);
+    }
+}

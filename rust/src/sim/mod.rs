@@ -1,0 +1,17 @@
+//! Cycle-stepped out-of-order core + whole-system simulator.
+//!
+//! Models the paper's Table 2 machine: a 6-wide OoO pipeline with ROB,
+//! unified issue queue, split load/store queues, physical register file,
+//! post-commit store buffer, gshare+BTB branch prediction, and the AMU's
+//! ALSU integrated as two extra function units. Synchronous loads/stores
+//! traverse the L1D/L2/MSHR hierarchy in `crate::mem`; AMI requests flow
+//! through the ASMC in `crate::amu` and bypass the caches entirely.
+//!
+//! The simulator executes guest programs *functionally at execute/commit
+//! time* while modeling timing structurally, and its architectural results
+//! are cross-checked against the `isa::interp` oracle in tests.
+
+pub mod bpred;
+mod pipeline;
+
+pub use pipeline::{SimResult, Simulator};

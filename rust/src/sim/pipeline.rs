@@ -1,0 +1,1861 @@
+//! The out-of-order pipeline and whole-system `Simulator`.
+//!
+//! Stage order inside one tick (reverse pipeline order so results are
+//! consumed no earlier than the following cycle): memory-system events →
+//! ASMC → ALSU batch delivery → writeback → commit → store-buffer/LSQ
+//! pumps → issue → rename/dispatch → fetch → per-cycle stats.
+
+use crate::amu::{Alsu, AmiReq, Asmc, BatchKind, BatchTicket, LvrKind};
+use crate::config::SimConfig;
+use crate::isa::inst::{CfgReg, Inst, Opcode};
+use crate::isa::mem::{region_of, GuestMem, MemRegion};
+use crate::isa::Program;
+use crate::mem::{AccessKind, MemSys, SubmitResult};
+use crate::sim::bpred::{BranchPredictor, Prediction};
+use crate::stats::{Region, Stats};
+use std::collections::VecDeque;
+
+const NO_REG: u32 = u32::MAX;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum UopKind {
+    Alu,
+    Mul,
+    Branch,
+    Jump, // unconditional with static target (no prediction needed)
+    IndirectJump,
+    Load,
+    Store,
+    Prefetch,
+    Flush,
+    AIdAlloc,
+    AExec { is_store: bool },
+    GetFin,
+    CfgWr,
+    CfgRd,
+    Roi,
+    Nop,
+    Halt,
+}
+
+impl UopKind {
+    fn needs_execution(self) -> bool {
+        !matches!(self, UopKind::Nop | UopKind::Roi | UopKind::Halt)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct FetchedUop {
+    seq: u64,
+    pc: usize,
+    inst: Inst,
+    kind: UopKind,
+    last_of_inst: bool,
+    pred: Option<Prediction>,
+    ready_at: u64,
+}
+
+#[derive(Debug)]
+struct RobEntry {
+    seq: u64,
+    pc: usize,
+    inst: Inst,
+    kind: UopKind,
+    last_of_inst: bool,
+    region: u8,
+    // Rename state.
+    prd: u32,
+    old_prd: u32,
+    prs: [u32; 3],
+    // Progress.
+    in_iq: bool,
+    executing: bool,
+    completed: bool,
+    result: u64,
+    // Branches.
+    pred: Option<Prediction>,
+    // Memory.
+    lq_idx: bool, // occupies a LQ slot
+    sq_idx: bool, // occupies a SQ slot
+    // AMI bookkeeping.
+    lvr_undo: Option<(LvrKind, u16)>,
+    ami_vals: Option<(u64, u64, u64)>, // (id, spm, mem)
+    batch_wait: Option<BatchTicket>,
+    issued_batch: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LqState {
+    WaitAddr,
+    WaitIssue,
+    Issued,
+    Done,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct LqEntry {
+    seq: u64,
+    addr: u64,
+    size: u8,
+    has_addr: bool,
+    state: LqState,
+    issue_cycle: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct SqEntry {
+    seq: u64,
+    addr: u64,
+    size: u8,
+    value: u64,
+    has_addr: bool,
+    /// Data operand captured (STA/STD split: addr can be known first).
+    has_value: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct SbEntry {
+    addr: u64,
+    issued: bool,
+    done: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum TokenTarget {
+    Load(u64),  // seq
+    StoreBuf(u64), // sb id
+}
+
+pub struct SimResult {
+    pub cycles: u64,
+    pub committed_insts: u64,
+}
+
+/// Whole-system simulator: one OoO core + memory system (+ AMU).
+pub struct Simulator {
+    pub cfg: SimConfig,
+    pub prog: Program,
+    pub guest: GuestMem,
+    pub memsys: MemSys,
+    pub asmc: Asmc,
+    alsu: Alsu,
+    bp: BranchPredictor,
+    pub stats: Stats,
+
+    // Clock / termination.
+    pub cycle: u64,
+    pub done: bool,
+
+    // Frontend.
+    pc: usize,
+    next_seq: u64,
+    fetch_halted: bool,
+    fetch_blocked_on: Option<u64>,
+    fetch_q: VecDeque<FetchedUop>,
+
+    // Rename.
+    map: [u32; 64],
+    prf_val: Vec<u64>,
+    prf_ready: Vec<bool>,
+    prf_free: Vec<u32>,
+
+    // Backend.
+    rob: VecDeque<RobEntry>,
+    iq: Vec<u64>,
+    lq: Vec<LqEntry>,
+    sq: Vec<SqEntry>,
+    sb: VecDeque<(u64, SbEntry)>, // (sb id, entry)
+    next_sb_id: u64,
+    writeback: Vec<(u64, u64)>, // (when, seq)
+    /// Stores whose address executed but whose data operand is still being
+    /// produced (split STA/STD semantics: the address must not wait for the
+    /// data, or independent younger loads serialize behind it).
+    std_wait: Vec<u64>,
+
+    // Memory tokens.
+    tokens: Vec<Option<TokenTarget>>,
+    token_free: Vec<u32>,
+
+    // Measurement window.
+    in_roi: bool,
+    last_far_inflight: u64,
+    /// Set when the architectural state diverges in an unrecoverable way.
+    pub error: Option<String>,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig, prog: Program) -> Self {
+        cfg.validate().expect("invalid config");
+        let n_prf = cfg.core.phys_regs.max(80);
+        let mut map = [0u32; 64];
+        for (i, m) in map.iter_mut().enumerate() {
+            *m = i as u32;
+        }
+        let prf_free: Vec<u32> = (64..n_prf as u32).rev().collect();
+        let memsys = MemSys::new(&cfg);
+        let asmc = Asmc::new(&cfg.amu);
+        let alsu = Alsu::new(cfg.amu.lvr_capacity, cfg.amu.dma_mode);
+        let bp = BranchPredictor::new(cfg.core.bp_table_bits, cfg.core.btb_entries);
+        Self {
+            prog,
+            guest: GuestMem::new(),
+            memsys,
+            asmc,
+            alsu,
+            bp,
+            stats: Stats::default(),
+            cycle: 0,
+            done: false,
+            pc: 0,
+            next_seq: 0,
+            fetch_halted: false,
+            fetch_blocked_on: None,
+            fetch_q: VecDeque::new(),
+            map,
+            prf_val: vec![0; n_prf],
+            prf_ready: vec![true; n_prf],
+            prf_free,
+            rob: VecDeque::new(),
+            iq: Vec::new(),
+            lq: Vec::new(),
+            sq: Vec::new(),
+            sb: VecDeque::new(),
+            next_sb_id: 0,
+            writeback: Vec::new(),
+            std_wait: Vec::new(),
+            tokens: Vec::new(),
+            token_free: Vec::new(),
+            in_roi: false,
+            last_far_inflight: 0,
+            error: None,
+            cfg,
+        }
+    }
+
+    // ---------------- token helpers ----------------
+
+    fn token_alloc(&mut self, target: TokenTarget) -> u32 {
+        if let Some(t) = self.token_free.pop() {
+            self.tokens[t as usize] = Some(target);
+            t
+        } else {
+            self.tokens.push(Some(target));
+            (self.tokens.len() - 1) as u32
+        }
+    }
+
+    fn token_take(&mut self, t: u32) -> Option<TokenTarget> {
+        let out = self.tokens[t as usize].take();
+        if out.is_some() {
+            self.token_free.push(t);
+        }
+        out
+    }
+
+    fn token_cancel(&mut self, t: u32) {
+        // Completion will arrive later and be dropped.
+        self.tokens[t as usize] = None;
+        self.token_free.push(t);
+    }
+
+    // ---------------- ROB helpers ----------------
+
+    #[inline]
+    fn rob_idx(&self, seq: u64) -> Option<usize> {
+        let head = self.rob.front()?.seq;
+        if seq < head {
+            return None;
+        }
+        let idx = (seq - head) as usize;
+        if idx < self.rob.len() {
+            debug_assert_eq!(self.rob[idx].seq, seq);
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
+    fn all_older_completed(&self, seq: u64) -> bool {
+        for e in self.rob.iter() {
+            if e.seq >= seq {
+                return true;
+            }
+            if !e.completed {
+                return false;
+            }
+        }
+        true
+    }
+
+    // ---------------- decode / µop expansion ----------------
+
+    fn uop_kind(inst: &Inst) -> UopKind {
+        use Opcode::*;
+        match inst.op {
+            Add | Sub | Xor | And | Or | Sll | Srl | SltU | Addi | Xori | Andi | Ori
+            | Slli | Srli | Li => UopKind::Alu,
+            Mul => UopKind::Mul,
+            Beq | Bne | Blt | Bge | BltU => UopKind::Branch,
+            Jal => UopKind::Jump,
+            Jalr => UopKind::IndirectJump,
+            Ld => UopKind::Load,
+            St => UopKind::Store,
+            Prefetch => UopKind::Prefetch,
+            Flush => UopKind::Flush,
+            GetFin => UopKind::GetFin,
+            CfgWr => UopKind::CfgWr,
+            CfgRd => UopKind::CfgRd,
+            Nop => UopKind::Nop,
+            Halt => UopKind::Halt,
+            Roi => UopKind::Roi,
+            ALoad | AStore => unreachable!("expanded at fetch"),
+        }
+    }
+
+    // ---------------- fetch ----------------
+
+    fn fetch(&mut self) {
+        if self.fetch_halted || self.done {
+            return;
+        }
+        if self.fetch_blocked_on.is_some() {
+            return;
+        }
+        let width = self.cfg.core.fetch_width;
+        let depth = self.cfg.core.frontend_depth as u64;
+        let qcap = width * (self.cfg.core.frontend_depth + 3);
+        let mut fetched_insts = 0;
+        while fetched_insts < width && self.fetch_q.len() + 2 <= qcap {
+            if self.pc >= self.prog.insts.len() {
+                self.fetch_halted = true;
+                break;
+            }
+            let inst = self.prog.insts[self.pc];
+            let pc = self.pc;
+            let ready_at = self.cycle + depth;
+            let push = |s: &mut Self, kind, last, pred| {
+                let seq = s.next_seq;
+                s.next_seq += 1;
+                s.fetch_q.push_back(FetchedUop {
+                    seq,
+                    pc,
+                    inst,
+                    kind,
+                    last_of_inst: last,
+                    pred,
+                    ready_at,
+                });
+                s.stats.fetched_uops += 1;
+                seq
+            };
+            match inst.op {
+                Opcode::ALoad | Opcode::AStore => {
+                    let is_store = inst.op == Opcode::AStore;
+                    push(self, UopKind::AIdAlloc, false, None);
+                    push(self, UopKind::AExec { is_store }, true, None);
+                    self.pc += 1;
+                }
+                Opcode::Beq | Opcode::Bne | Opcode::Blt | Opcode::Bge | Opcode::BltU => {
+                    let pred = self.bp.predict_cond(pc, inst.imm as usize);
+                    let taken = pred.taken;
+                    push(self, UopKind::Branch, true, Some(pred));
+                    self.stats.branches += 1;
+                    if taken {
+                        self.pc = inst.imm as usize;
+                        break; // end fetch group at a predicted-taken branch
+                    } else {
+                        self.pc += 1;
+                    }
+                }
+                Opcode::Jal => {
+                    push(self, UopKind::Jump, true, None);
+                    self.pc = inst.imm as usize;
+                    break;
+                }
+                Opcode::Jalr => {
+                    let pred = self.bp.predict_indirect(pc);
+                    let seq = push(self, UopKind::IndirectJump, true, Some(pred));
+                    self.stats.branches += 1;
+                    match pred.target {
+                        Some(t) => {
+                            self.pc = t;
+                            break;
+                        }
+                        None => {
+                            // Unknown target: frontend stalls until resolve.
+                            self.fetch_blocked_on = Some(seq);
+                            return;
+                        }
+                    }
+                }
+                Opcode::Halt => {
+                    push(self, UopKind::Halt, true, None);
+                    self.fetch_halted = true;
+                    return;
+                }
+                _ => {
+                    let kind = Self::uop_kind(&inst);
+                    push(self, kind, true, None);
+                    self.pc += 1;
+                }
+            }
+            fetched_insts += 1;
+        }
+    }
+
+    // ---------------- rename / dispatch ----------------
+
+    fn dispatch(&mut self) {
+        for _ in 0..self.cfg.core.decode_width {
+            let Some(fu) = self.fetch_q.front() else { break };
+            if fu.ready_at > self.cycle {
+                break;
+            }
+            if self.rob.len() >= self.cfg.core.rob_entries {
+                break;
+            }
+            let kind = fu.kind;
+            if kind.needs_execution() && self.iq.len() >= self.cfg.core.iq_entries {
+                break;
+            }
+            let needs_lq = kind == UopKind::Load;
+            let needs_sq = kind == UopKind::Store;
+            if needs_lq && self.lq.len() >= self.cfg.core.lq_entries {
+                break;
+            }
+            if needs_sq && self.sq.len() >= self.cfg.core.sq_entries {
+                break;
+            }
+            let inst = fu.inst;
+            let writes_rd = match kind {
+                UopKind::AIdAlloc | UopKind::GetFin | UopKind::CfgRd => inst.rd != 0,
+                UopKind::AExec { .. } => false,
+                _ => inst.writes_rd(),
+            };
+            if writes_rd && self.prf_free.is_empty() {
+                break;
+            }
+            let fu = self.fetch_q.pop_front().unwrap();
+
+            // Source mapping.
+            let mut prs = [NO_REG; 3];
+            match kind {
+                UopKind::AExec { .. } => {
+                    prs[0] = self.map[inst.rs1 as usize];
+                    prs[1] = self.map[inst.rs2 as usize];
+                    prs[2] = self.map[inst.rd as usize]; // the allocated ID
+                }
+                UopKind::AIdAlloc | UopKind::GetFin | UopKind::CfgRd => {}
+                _ => {
+                    let (s1, s2) = inst.sources();
+                    if let Some(r) = s1 {
+                        prs[0] = self.map[r as usize];
+                    }
+                    if let Some(r) = s2 {
+                        prs[1] = self.map[r as usize];
+                    }
+                }
+            }
+
+            // Destination rename.
+            let (prd, old_prd) = if writes_rd {
+                let p = self.prf_free.pop().unwrap();
+                let old = self.map[inst.rd as usize];
+                self.map[inst.rd as usize] = p;
+                self.prf_ready[p as usize] = false;
+                self.stats.regfile_writes += 1;
+                (p, old)
+            } else {
+                (NO_REG, NO_REG)
+            };
+
+            let completed = !kind.needs_execution();
+            let entry = RobEntry {
+                seq: fu.seq,
+                pc: fu.pc,
+                inst,
+                kind,
+                last_of_inst: fu.last_of_inst,
+                region: inst.region,
+                prd,
+                old_prd,
+                prs,
+                in_iq: !completed,
+                executing: false,
+                completed,
+                result: 0,
+                pred: fu.pred,
+                lq_idx: needs_lq,
+                sq_idx: needs_sq,
+                lvr_undo: None,
+                ami_vals: None,
+                batch_wait: None,
+                issued_batch: false,
+            };
+            if needs_lq {
+                self.lq.push(LqEntry {
+                    seq: fu.seq,
+                    addr: 0,
+                    size: inst.size,
+                    has_addr: false,
+                    state: LqState::WaitAddr,
+                    issue_cycle: 0,
+                });
+            }
+            if needs_sq {
+                self.sq.push(SqEntry {
+                    seq: fu.seq,
+                    addr: 0,
+                    size: inst.size,
+                    value: 0,
+                    has_addr: false,
+                    has_value: false,
+                });
+            }
+            if !completed {
+                self.iq.push(fu.seq);
+                self.stats.iq_writes += 1;
+            }
+            self.stats.rob_writes += 1;
+            self.rob.push_back(entry);
+        }
+    }
+
+    // ---------------- issue / execute ----------------
+
+    fn src_ready(&self, prs: &[u32; 3]) -> bool {
+        prs.iter().all(|&p| p == NO_REG || self.prf_ready[p as usize])
+    }
+
+    fn src_val(&self, p: u32) -> u64 {
+        if p == NO_REG {
+            0
+        } else {
+            self.prf_val[p as usize]
+        }
+    }
+
+    fn issue(&mut self) {
+        let mut alu_left = self.cfg.core.alu_units;
+        let mut mul_left = self.cfg.core.mul_units;
+        let mut agu_left = self.cfg.core.mem_ports;
+        let mut id_unit_left = 1usize; // ALSU ID-management unit
+        let mut req_unit_left = 1usize; // ALSU request-generation unit
+        let mut issued = 0usize;
+        let width = self.cfg.core.issue_width;
+
+        let iq_snapshot: Vec<u64> = self.iq.clone();
+        for seq in iq_snapshot {
+            if issued >= width {
+                break;
+            }
+            let Some(idx) = self.rob_idx(seq) else { continue };
+            let (kind, prs, pc, inst) = {
+                let e = &self.rob[idx];
+                if e.executing || e.completed || !e.in_iq {
+                    continue;
+                }
+                (e.kind, e.prs, e.pc, e.inst)
+            };
+            let ready = if kind == UopKind::Store {
+                // STA/STD split: issue address generation as soon as the
+                // base register is ready; the data is captured later.
+                prs[0] == NO_REG || self.prf_ready[prs[0] as usize]
+            } else {
+                self.src_ready(&prs)
+            };
+            if !ready {
+                continue;
+            }
+            // Structural hazards per kind.
+            let unit_ok = match kind {
+                UopKind::Alu | UopKind::Branch | UopKind::Jump | UopKind::IndirectJump
+                | UopKind::Flush => alu_left > 0,
+                UopKind::Mul => mul_left > 0,
+                UopKind::Load | UopKind::Store | UopKind::Prefetch => agu_left > 0,
+                UopKind::AIdAlloc | UopKind::GetFin => id_unit_left > 0,
+                UopKind::AExec { .. } | UopKind::CfgWr | UopKind::CfgRd => req_unit_left > 0,
+                _ => true,
+            };
+            if !unit_ok {
+                continue;
+            }
+            // DMA-mode: ID micro-ops are non-speculative — oldest-only.
+            if self.alsu.dma_mode
+                && matches!(kind, UopKind::AIdAlloc | UopKind::GetFin)
+                && !self.all_older_completed(seq)
+            {
+                continue;
+            }
+            let v1 = self.src_val(prs[0]);
+            let v2 = self.src_val(prs[1]);
+            let v3 = self.src_val(prs[2]);
+            self.stats.regfile_reads +=
+                prs.iter().filter(|&&p| p != NO_REG).count() as u64;
+
+            let now = self.cycle;
+            let mut complete_at = now + 1;
+            let mut result = 0u64;
+            let mut keep_in_iq = false;
+
+            match kind {
+                UopKind::Alu | UopKind::Jump => {
+                    alu_left -= 1;
+                    result = Self::alu_result(&inst, v1, v2, pc);
+                }
+                UopKind::Mul => {
+                    mul_left -= 1;
+                    result = v1.wrapping_mul(v2);
+                    complete_at = now + self.cfg.core.mul_latency;
+                }
+                UopKind::Branch | UopKind::IndirectJump => {
+                    alu_left -= 1;
+                    result = (pc + 1) as u64; // link value for jalr
+                }
+                UopKind::Load => {
+                    agu_left -= 1;
+                    let addr = v1.wrapping_add(inst.imm as u64);
+                    if let Some(l) = self.lq.iter_mut().find(|l| l.seq == seq) {
+                        l.addr = addr;
+                        l.has_addr = true;
+                        l.state = LqState::WaitIssue;
+                    }
+                    // Execution continues in the LQ pump; µop completes when
+                    // data arrives.
+                    let e = &mut self.rob[idx];
+                    e.in_iq = false;
+                    e.executing = true;
+                    self.iq.retain(|&s| s != seq);
+                    issued += 1;
+                    continue;
+                }
+                UopKind::Store => {
+                    agu_left -= 1;
+                    let addr = v1.wrapping_add(inst.imm as u64);
+                    let data_ready =
+                        prs[1] == NO_REG || self.prf_ready[prs[1] as usize];
+                    if let Some(s) = self.sq.iter_mut().find(|s| s.seq == seq) {
+                        s.addr = addr;
+                        s.has_addr = true;
+                        if data_ready {
+                            s.value =
+                                if prs[1] == NO_REG { 0 } else { self.prf_val[prs[1] as usize] };
+                            s.has_value = true;
+                        }
+                    }
+                    self.stats.lsq_searches += 1;
+                    if !data_ready {
+                        // STD pending: complete when the data register
+                        // becomes ready (see `std_pump`).
+                        let e = &mut self.rob[idx];
+                        e.in_iq = false;
+                        e.executing = true;
+                        self.iq.retain(|&s| s != seq);
+                        self.std_wait.push(seq);
+                        issued += 1;
+                        continue;
+                    }
+                }
+                UopKind::Prefetch => {
+                    agu_left -= 1;
+                    let addr = v1.wrapping_add(inst.imm as u64);
+                    if region_of(addr) != MemRegion::Spm {
+                        let t = self.token_alloc(TokenTarget::Load(u64::MAX));
+                        let r = self.memsys.submit(
+                            AccessKind::Prefetch,
+                            addr,
+                            t,
+                            now,
+                            self.cfg.l1d.hit_latency,
+                        );
+                        match r {
+                            SubmitResult::Accepted => self.stats.prefetches_issued += 1,
+                            _ => self.token_cancel(t), // best effort: drop
+                        }
+                    }
+                }
+                UopKind::Flush => {
+                    alu_left -= 1;
+                    let addr = v1.wrapping_add(inst.imm as u64);
+                    self.rob[idx].ami_vals = Some((0, addr, 0));
+                    complete_at = now + self.cfg.l1d.hit_latency;
+                }
+                UopKind::AExec { .. } => {
+                    req_unit_left -= 1;
+                    // (id, spm, mem) captured for the commit-time handoff.
+                    self.rob[idx].ami_vals = Some((v3, v1, v2));
+                }
+                UopKind::CfgWr => {
+                    req_unit_left -= 1;
+                    self.rob[idx].ami_vals = Some((v1, 0, 0));
+                }
+                UopKind::CfgRd => {
+                    req_unit_left -= 1;
+                    result = match CfgReg::from_imm(inst.imm) {
+                        CfgReg::Granularity => self.asmc.granularity,
+                        CfgReg::QueueBase => 0,
+                        CfgReg::QueueLength => self.asmc.queue_length as u64,
+                    };
+                }
+                UopKind::AIdAlloc => {
+                    id_unit_left -= 1;
+                    match self.try_id_uop(idx, LvrKind::Free, now) {
+                        IdUopOutcome::Got(id) => result = id as u64,
+                        IdUopOutcome::Wait => {} // waiting on batch delivery
+                        IdUopOutcome::Retry => keep_in_iq = true, // busy: retry
+                    }
+                }
+                UopKind::GetFin => {
+                    id_unit_left -= 1;
+                    self.stats.getfins += 1;
+                    match self.try_id_uop(idx, LvrKind::Finished, now) {
+                        IdUopOutcome::Got(id) => result = id as u64,
+                        IdUopOutcome::Wait => {}
+                        IdUopOutcome::Retry => keep_in_iq = true,
+                    }
+                }
+                UopKind::Nop | UopKind::Roi | UopKind::Halt => unreachable!(),
+            }
+
+            let e = &mut self.rob[idx];
+            if keep_in_iq {
+                // Structural retry next cycle (stay in IQ).
+                continue;
+            }
+            e.in_iq = false;
+            self.iq.retain(|&s| s != seq);
+            issued += 1;
+            if e.batch_wait.is_some() {
+                e.executing = true; // completes on batch delivery
+                continue;
+            }
+            e.executing = true;
+            e.result = result;
+            self.writeback.push((complete_at, seq));
+            self.stats.iq_wakeups += 1;
+        }
+    }
+
+    fn alu_result(inst: &Inst, v1: u64, v2: u64, pc: usize) -> u64 {
+        use Opcode::*;
+        match inst.op {
+            Add => v1.wrapping_add(v2),
+            Sub => v1.wrapping_sub(v2),
+            Xor => v1 ^ v2,
+            And => v1 & v2,
+            Or => v1 | v2,
+            Sll => v1.wrapping_shl(v2 as u32 & 63),
+            Srl => v1.wrapping_shr(v2 as u32 & 63),
+            SltU => (v1 < v2) as u64,
+            Addi => v1.wrapping_add(inst.imm as u64),
+            Xori => v1 ^ inst.imm as u64,
+            Andi => v1 & inst.imm as u64,
+            Ori => v1 | inst.imm as u64,
+            Slli => v1.wrapping_shl(inst.imm as u32 & 63),
+            Srli => v1.wrapping_shr(inst.imm as u32 & 63),
+            Li => inst.imm as u64,
+            Jal => (pc + 1) as u64,
+            _ => 0,
+        }
+    }
+
+    fn try_id_uop(&mut self, rob_idx: usize, kind: LvrKind, now: u64) -> IdUopOutcome {
+        if let Some(id) = self.alsu.pop(kind) {
+            self.rob[rob_idx].lvr_undo = Some((kind, id));
+            return IdUopOutcome::Got(id);
+        }
+        if self.alsu.batch_busy {
+            return IdUopOutcome::Retry;
+        }
+        // Initiate a batch fetch (the uncommitted-ID-register slot).
+        let extra = if self.alsu.dma_mode {
+            self.cfg.amu.dma_uncore_cycles
+        } else {
+            0
+        };
+        let bk = match kind {
+            LvrKind::Free => BatchKind::Free,
+            LvrKind::Finished => BatchKind::Finished,
+        };
+        let ticket = self.asmc.request_batch(bk, self.alsu.cap, now, extra);
+        self.alsu.batch_busy = true;
+        let e = &mut self.rob[rob_idx];
+        e.batch_wait = Some(ticket);
+        e.issued_batch = true;
+        IdUopOutcome::Wait
+    }
+
+    /// Poll in-flight ALSU batch deliveries and complete waiting µops.
+    fn alsu_poll(&mut self) {
+        let now = self.cycle;
+        // At most one batch outstanding (batch_busy contract).
+        let waiting: Vec<u64> = self
+            .rob
+            .iter()
+            .filter(|e| e.batch_wait.is_some())
+            .map(|e| e.seq)
+            .collect();
+        for seq in waiting {
+            let Some(idx) = self.rob_idx(seq) else { continue };
+            let ticket = self.rob[idx].batch_wait.unwrap();
+            if let Some(ids) = self.asmc.poll_batch(ticket, now) {
+                let kind = match self.rob[idx].kind {
+                    UopKind::AIdAlloc => LvrKind::Free,
+                    UopKind::GetFin => LvrKind::Finished,
+                    _ => unreachable!(),
+                };
+                self.alsu.refill(kind, &ids);
+                self.alsu.batch_busy = false;
+                let result = match self.alsu.pop(kind) {
+                    Some(id) => {
+                        self.rob[idx].lvr_undo = Some((kind, id));
+                        id as u64
+                    }
+                    None => {
+                        if kind == LvrKind::Finished {
+                            self.stats.getfin_misses += 1;
+                        }
+                        0
+                    }
+                };
+                let e = &mut self.rob[idx];
+                e.batch_wait = None;
+                e.result = result;
+                self.writeback.push((now + 1, seq));
+            }
+        }
+        // If the batch initiator was squashed, the delivery still clears the
+        // busy flag (uncommitted-ID-register recovery): handled in squash by
+        // keeping a phantom entry? Simpler: orphaned tickets are drained
+        // here.
+        if self.alsu.batch_busy && !self.rob.iter().any(|e| e.batch_wait.is_some()) {
+            // The waiting µop was squashed; poll its ticket via the ASMC by
+            // scanning — tickets are monotonically assigned, so we ask the
+            // ASMC for any deliverable batch addressed to us.
+            if let Some(ids) = self.asmc.poll_any_batch(now) {
+                // IDs land in the free LVR (they are free IDs by
+                // construction of the squash path — finished-batch IDs are
+                // finished; route by the batch's kind).
+                self.alsu.refill(ids.1, &ids.0);
+                self.alsu.batch_busy = false;
+            }
+        }
+    }
+
+    // ---------------- LSQ pumps ----------------
+
+    fn min_unknown_store_seq(&self) -> u64 {
+        self.sq
+            .iter()
+            .filter(|s| !s.has_addr)
+            .map(|s| s.seq)
+            .min()
+            .unwrap_or(u64::MAX)
+    }
+
+    /// STD pump: stores whose address executed earlier capture their data
+    /// operand as soon as it is produced, then complete.
+    fn std_pump(&mut self) {
+        let now = self.cycle;
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.std_wait.len() {
+            let seq = self.std_wait[i];
+            let Some(idx) = self.rob_idx(seq) else {
+                self.std_wait.swap_remove(i);
+                continue;
+            };
+            let prs1 = self.rob[idx].prs[1];
+            if prs1 == NO_REG || self.prf_ready[prs1 as usize] {
+                let v = if prs1 == NO_REG { 0 } else { self.prf_val[prs1 as usize] };
+                if let Some(sq) = self.sq.iter_mut().find(|s| s.seq == seq) {
+                    sq.value = v;
+                    sq.has_value = true;
+                }
+                done.push(seq);
+                self.std_wait.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        for seq in done {
+            self.writeback.push((now + 1, seq));
+        }
+    }
+
+    fn lq_pump(&mut self) {
+        let now = self.cycle;
+        let unknown_min = self.min_unknown_store_seq();
+        let mut issued = 0usize;
+        let max_issue = self.cfg.core.mem_ports;
+        let lq_len = self.lq.len();
+        for i in 0..lq_len {
+            if issued >= max_issue {
+                break;
+            }
+            let l = self.lq[i];
+            if l.state != LqState::WaitIssue {
+                continue;
+            }
+            // Conservative ordering: all older stores must have addresses.
+            if unknown_min < l.seq {
+                continue;
+            }
+            self.stats.lsq_searches += 1;
+            // Overlap check against older stores.
+            let mut forward: Option<u64> = None;
+            let mut must_wait = false;
+            for s in self.sq.iter() {
+                if s.seq >= l.seq || !s.has_addr {
+                    continue;
+                }
+                let (la, lz) = (l.addr, l.addr + l.size as u64);
+                let (sa, sz) = (s.addr, s.addr + s.size as u64);
+                if la < sz && sa < lz {
+                    if sa == la && s.size == l.size && s.has_value {
+                        forward = Some(s.value); // youngest older wins
+                    } else {
+                        // Partial overlap, or the store's data is not yet
+                        // captured: wait.
+                        must_wait = true;
+                        forward = None;
+                    }
+                }
+            }
+            if must_wait {
+                continue;
+            }
+            let Some(idx) = self.rob_idx(l.seq) else { continue };
+            if let Some(v) = forward {
+                let e = &mut self.rob[idx];
+                e.result = v;
+                self.lq[i].state = LqState::Done;
+                self.writeback.push((now + 1, l.seq));
+                issued += 1;
+                continue;
+            }
+            match region_of(l.addr) {
+                MemRegion::Spm => {
+                    self.stats.spm_accesses += 1;
+                    self.lq[i].state = LqState::Issued;
+                    self.lq[i].issue_cycle = now;
+                    // Value read at completion.
+                    self.writeback.push((now + self.cfg.amu.spm_latency, l.seq));
+                    issued += 1;
+                }
+                _ => {
+                    let t = self.token_alloc(TokenTarget::Load(l.seq));
+                    match self.memsys.submit(
+                        AccessKind::Load,
+                        l.addr,
+                        t,
+                        now,
+                        self.cfg.l1d.hit_latency,
+                    ) {
+                        SubmitResult::Accepted => {
+                            self.stats.l1d_accesses += 1;
+                            self.lq[i].state = LqState::Issued;
+                            self.lq[i].issue_cycle = now;
+                            issued += 1;
+                        }
+                        _ => {
+                            self.token_cancel(t);
+                            // Retry next cycle; MSHR/port pressure.
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn sb_pump(&mut self) {
+        let now = self.cycle;
+        // Issue the oldest unissued store-buffer entry (one per cycle).
+        let next = self
+            .sb
+            .iter()
+            .find(|(_, e)| !e.issued)
+            .map(|(id, e)| (*id, e.addr));
+        if let Some((id, addr)) = next {
+            if region_of(addr) == MemRegion::Spm {
+                // Fixed-latency SPM write: no cache, no MSHR.
+                self.stats.spm_accesses += 1;
+                if let Some((_, e)) = self.sb.iter_mut().find(|(i, _)| *i == id) {
+                    e.issued = true;
+                    e.done = true;
+                }
+            } else {
+                let t = self.token_alloc(TokenTarget::StoreBuf(id));
+                match self
+                    .memsys
+                    .submit(AccessKind::Store, addr, t, now, self.cfg.l1d.hit_latency)
+                {
+                    SubmitResult::Accepted => {
+                        self.stats.l1d_accesses += 1;
+                        if let Some((_, e)) = self.sb.iter_mut().find(|(i, _)| *i == id) {
+                            e.issued = true;
+                        }
+                    }
+                    _ => self.token_cancel(t),
+                }
+            }
+        }
+        // Retire finished entries from the front.
+        while matches!(self.sb.front(), Some((_, e)) if e.done) {
+            self.sb.pop_front();
+        }
+    }
+
+    // ---------------- writeback ----------------
+
+    fn writeback_stage(&mut self) {
+        let now = self.cycle;
+        let mut due: Vec<u64> = Vec::new();
+        self.writeback.retain(|&(when, seq)| {
+            if when <= now {
+                due.push(seq);
+                false
+            } else {
+                true
+            }
+        });
+        for seq in due {
+            let Some(idx) = self.rob_idx(seq) else { continue };
+            // A load completing from memory/SPM reads its value now (the
+            // architectural state reflects exactly the stores that committed
+            // before it, which the LSQ ordering rules guarantee are the ones
+            // it must observe). Forwarded loads (state Done) already carry
+            // their value from the store queue.
+            if self.rob[idx].kind == UopKind::Load {
+                let info = self
+                    .lq
+                    .iter()
+                    .find(|l| l.seq == seq)
+                    .map(|l| (l.addr, l.size, l.state));
+                let Some((addr, size, state)) = info else { continue };
+                if state == LqState::Issued {
+                    let v = self.guest.read(addr, size);
+                    self.rob[idx].result = v;
+                }
+                if let Some(l) = self.lq.iter_mut().find(|l| l.seq == seq) {
+                    l.state = LqState::Done;
+                }
+            }
+            let (kind, inst, pc, pred, prs) = {
+                let e = &mut self.rob[idx];
+                e.completed = true;
+                e.executing = false;
+                if e.prd != NO_REG {
+                    self.prf_val[e.prd as usize] = e.result;
+                    self.prf_ready[e.prd as usize] = true;
+                }
+                (e.kind, e.inst, e.pc, e.pred, e.prs)
+            };
+            // Branch resolution.
+            match kind {
+                UopKind::Branch => {
+                    let taken = Self::branch_taken(
+                        &inst,
+                        self.prf_val[prs[0] as usize],
+                        self.prf_val[prs[1] as usize],
+                    );
+                    let pred = pred.unwrap();
+                    let target = if taken { inst.imm as usize } else { pc + 1 };
+                    let mis = self.bp.update_cond(pc, pred, taken);
+                    if mis {
+                        self.stats.branch_mispredicts += 1;
+                        self.squash(seq, target);
+                    }
+                }
+                UopKind::IndirectJump => {
+                    let target = self.prf_val[prs[0] as usize] as usize;
+                    let pred = pred.unwrap();
+                    self.bp.update_indirect(pc, pred, target);
+                    if self.fetch_blocked_on == Some(seq) {
+                        // Frontend stalled on this jalr: redirect, no squash.
+                        self.fetch_blocked_on = None;
+                        self.pc = target;
+                    } else if pred.target != Some(target) {
+                        self.stats.branch_mispredicts += 1;
+                        self.squash(seq, target);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn branch_taken(inst: &Inst, v1: u64, v2: u64) -> bool {
+        match inst.op {
+            Opcode::Beq => v1 == v2,
+            Opcode::Bne => v1 != v2,
+            Opcode::Blt => (v1 as i64) < (v2 as i64),
+            Opcode::Bge => (v1 as i64) >= (v2 as i64),
+            Opcode::BltU => v1 < v2,
+            _ => unreachable!(),
+        }
+    }
+
+    // ---------------- squash ----------------
+
+    fn squash(&mut self, after_seq: u64, new_pc: usize) {
+        // Drop younger frontend µops wholesale.
+        self.fetch_q.clear();
+        self.fetch_halted = false;
+        if let Some(b) = self.fetch_blocked_on {
+            if b > after_seq {
+                self.fetch_blocked_on = None;
+            }
+        }
+        self.pc = new_pc;
+        // Walk ROB tail -> after_seq, undoing state.
+        while let Some(e) = self.rob.back() {
+            if e.seq <= after_seq {
+                break;
+            }
+            let e = self.rob.pop_back().unwrap();
+            self.stats.squashed_uops += 1;
+            if e.prd != NO_REG {
+                self.map[e.inst.rd as usize] = e.old_prd;
+                self.prf_free.push(e.prd);
+            }
+            if let Some((kind, id)) = e.lvr_undo {
+                self.alsu.unpop(kind, id);
+            }
+            if e.issued_batch && e.batch_wait.is_some() {
+                // Batch still in flight; delivery is captured by
+                // `alsu_poll`'s orphan path and the busy flag stays set
+                // until it lands.
+            }
+            if e.lq_idx {
+                // Cancel any in-flight memory token for this load.
+                let seq = e.seq;
+                for t in 0..self.tokens.len() {
+                    if matches!(self.tokens[t], Some(TokenTarget::Load(s)) if s == seq) {
+                        self.token_cancel(t as u32);
+                    }
+                }
+                self.lq.retain(|l| l.seq != seq);
+            }
+            if e.sq_idx {
+                self.sq.retain(|s| s.seq != e.seq);
+            }
+        }
+        self.iq.retain(|&s| s <= after_seq);
+        self.writeback.retain(|&(_, s)| s <= after_seq);
+        self.std_wait.retain(|&s| s <= after_seq);
+        self.next_seq = after_seq + 1;
+    }
+
+    // ---------------- commit ----------------
+
+    fn commit(&mut self) {
+        for _ in 0..self.cfg.core.commit_width {
+            let Some(head) = self.rob.front() else { break };
+            if !head.completed {
+                break;
+            }
+            let kind = head.kind;
+            // Structural commit gates.
+            match kind {
+                UopKind::Store => {
+                    if self.sb.len() >= self.cfg.core.store_buffer {
+                        break;
+                    }
+                }
+                UopKind::AExec { .. } => {
+                    let id = head.ami_vals.map(|v| v.0).unwrap_or(0);
+                    if id != 0 && !self.asmc.queue_has_space() {
+                        break; // ASMC pending queue full: backpressure
+                    }
+                }
+                UopKind::Halt => {
+                    self.done = true;
+                    return;
+                }
+                _ => {}
+            }
+            let e = self.rob.pop_front().unwrap();
+            self.stats.uops_committed += 1;
+            if e.last_of_inst {
+                self.stats.insts_committed += 1;
+                if self.in_roi {
+                    self.stats.measured_insts += 1;
+                }
+            }
+            self.stats.region_uops[(e.region as usize).min(3)] += 1;
+            if e.old_prd != NO_REG {
+                self.prf_free.push(e.old_prd);
+            }
+            match e.kind {
+                UopKind::Store => {
+                    // Architectural memory write + store buffer entry.
+                    let s = self
+                        .sq
+                        .iter()
+                        .position(|s| s.seq == e.seq)
+                        .expect("store commit without SQ entry");
+                    let sq = self.sq.remove(s);
+                    debug_assert!(sq.has_addr);
+                    self.guest.write(sq.addr, sq.size, sq.value);
+                    let id = self.next_sb_id;
+                    self.next_sb_id += 1;
+                    self.sb.push_back((
+                        id,
+                        SbEntry { addr: sq.addr, issued: false, done: false },
+                    ));
+                }
+                UopKind::Load => {
+                    self.lq.retain(|l| l.seq != e.seq);
+                }
+                UopKind::AExec { is_store } => {
+                    if let Some((id, spm, mem)) = e.ami_vals {
+                        if id != 0 {
+                            self.asmc.push_request(AmiReq {
+                                id: id as u16,
+                                spm,
+                                mem,
+                                is_store,
+                            });
+                        }
+                    }
+                }
+                UopKind::GetFin => {
+                    // A returned ID becomes free again (paper: getfin puts it
+                    // back into the free list); recycle locally when there is
+                    // register room.
+                    if e.result != 0 && !self.alsu.recycle_free(e.result as u16) {
+                        self.asmc.return_ids(&[e.result as u16]);
+                    }
+                }
+                UopKind::CfgWr => {
+                    let v = e.ami_vals.map(|x| x.0).unwrap_or(0);
+                    match CfgReg::from_imm(e.inst.imm) {
+                        CfgReg::Granularity => self.asmc.set_granularity(v),
+                        CfgReg::QueueBase => {}
+                        CfgReg::QueueLength => self.asmc.set_queue_length(v),
+                    }
+                }
+                UopKind::Flush => {
+                    if let Some((_, addr, _)) = e.ami_vals {
+                        self.memsys.flush_line(addr, self.cycle);
+                    }
+                }
+                UopKind::Roi => {
+                    self.in_roi = e.inst.imm == 1;
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // ---------------- memory completion handling ----------------
+
+    fn drain_mem_completions(&mut self) {
+        let completions: Vec<_> = self.memsys.completions.drain(..).collect();
+        for c in completions {
+            match self.token_take(c.token) {
+                Some(TokenTarget::Load(seq)) => {
+                    if seq == u64::MAX {
+                        continue; // software prefetch
+                    }
+                    if let Some(idx) = self.rob_idx(seq) {
+                        if self.rob[idx].kind == UopKind::Load && !self.rob[idx].completed {
+                            let issue = self
+                                .lq
+                                .iter()
+                                .find(|l| l.seq == seq)
+                                .map(|l| l.issue_cycle)
+                                .unwrap_or(self.cycle);
+                            let lat = self.cycle.saturating_sub(issue);
+                            self.stats.sync_load_latency.add(lat);
+                            self.writeback.push((self.cycle, seq));
+                        }
+                    }
+                }
+                Some(TokenTarget::StoreBuf(id)) => {
+                    if let Some((_, e)) = self.sb.iter_mut().find(|(i, _)| *i == id) {
+                        e.done = true;
+                    }
+                }
+                None => {} // squashed load or dropped prefetch
+            }
+        }
+    }
+
+    // ---------------- per-cycle stats ----------------
+
+    fn cycle_stats(&mut self) {
+        let c = self.cycle;
+        let s = &mut self.stats;
+        s.rob_occ.update(c, self.rob.len() as u64);
+        s.iq_occ.update(c, self.iq.len() as u64);
+        s.lq_occ.update(c, self.lq.len() as u64);
+        s.sq_occ.update(c, self.sq.len() as u64);
+        s.l1d_mshr_occ.update(c, self.memsys.l1d.mshr_used() as u64);
+        s.l2_mshr_occ.update(c, self.memsys.l2.mshr_used() as u64);
+        let fi = self.memsys.far_inflight();
+        if fi != self.last_far_inflight {
+            s.far_inflight.update(c, fi);
+            self.last_far_inflight = fi;
+        }
+        s.amu_inflight.update(c, self.asmc.inflight_amart() as u64);
+        if self.in_roi {
+            s.measured_cycles += 1;
+        }
+        // Region attribution: the ROB head's region owns this cycle.
+        let region = self
+            .rob
+            .front()
+            .map(|e| e.region)
+            .unwrap_or(Region::Main as u8);
+        s.region_cycles[(region as usize).min(3)] += 1;
+    }
+
+    // ---------------- top-level ----------------
+
+    pub fn tick(&mut self) {
+        let now = self.cycle;
+        self.memsys
+            .tick(now, self.cfg.l2.hit_latency, self.cfg.l1d.hit_latency);
+        self.drain_mem_completions();
+        if self.cfg.amu.enabled {
+            self.asmc
+                .tick(now, &mut self.memsys, &mut self.guest, &mut self.stats);
+            self.alsu_poll();
+        }
+        self.writeback_stage();
+        self.commit();
+        if self.done {
+            return;
+        }
+        self.sb_pump();
+        self.std_pump();
+        self.lq_pump();
+        self.issue();
+        self.dispatch();
+        self.fetch();
+        self.cycle_stats();
+        self.cycle += 1;
+        self.stats.cycles = self.cycle;
+    }
+
+    /// Architectural value of guest register `r` (via the rename map).
+    pub fn arch_reg(&self, r: u8) -> u64 {
+        self.prf_val[self.map[r as usize] as usize]
+    }
+
+    /// AMU ID-conservation invariant, checkable mid-run from tests: the
+    /// ASMC-side ledger (free + finished + in-flight + at-ALSU + batches)
+    /// must always cover exactly `queue_length` IDs.
+    pub fn amu_ids_conserved(&self) -> bool {
+        !self.cfg.amu.enabled || self.asmc.id_conservation_holds()
+    }
+
+    /// Run to completion (Halt) or `max_cycles`.
+    pub fn run(&mut self) -> Result<SimResult, String> {
+        let max = self.cfg.max_cycles;
+        while !self.done {
+            if self.cycle >= max {
+                return Err(format!(
+                    "simulation exceeded {max} cycles at pc={} (rob={}, iq={}, fetch_q={})",
+                    self.rob.front().map(|e| e.pc).unwrap_or(self.pc),
+                    self.rob.len(),
+                    self.iq.len(),
+                    self.fetch_q.len()
+                ));
+            }
+            self.tick();
+            if self.cycle % 10_000 == 0 && std::env::var("AMU_SIM_TRACE").is_ok() {
+                eprintln!(
+                    "[trace] cyc={} pc={} rob={} iq={} lq={} sq={} wb={} tokens={} fetchq={} committed={} inflight={} batches={} memev={} stdw={}",
+                    self.cycle,
+                    self.rob.front().map(|e| e.pc).unwrap_or(self.pc),
+                    self.rob.len(),
+                    self.iq.len(),
+                    self.lq.len(),
+                    self.sq.len(),
+                    self.writeback.len(),
+                    self.tokens.len(),
+                    self.fetch_q.len(),
+                    self.stats.uops_committed,
+                    self.memsys.far_inflight(),
+                    self.asmc.batches_len(),
+                    self.memsys.pending_events(),
+                    self.std_wait.len(),
+                );
+            }
+            // Deadlock detector: nothing in flight and nothing fetchable.
+            if self.rob.is_empty()
+                && self.fetch_q.is_empty()
+                && self.fetch_halted
+                && self.fetch_blocked_on.is_none()
+                && !self.done
+                && self.sb.is_empty()
+            {
+                return Err("pipeline drained without Halt (fell off program end)".into());
+            }
+        }
+        Ok(SimResult {
+            cycles: self.cycle,
+            committed_insts: self.stats.insts_committed,
+        })
+    }
+}
+
+enum IdUopOutcome {
+    Got(u16),
+    Wait,
+    Retry,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::interp::{CompletionOrder, Interp};
+    use crate::isa::mem::{FAR_BASE, LOCAL_BASE, SPM_BASE};
+    use crate::isa::Asm;
+
+    fn run_sim(cfg: SimConfig, prog: Program) -> Simulator {
+        let mut sim = Simulator::new(cfg, prog);
+        sim.run().expect("sim failed");
+        sim
+    }
+
+    fn run_sim_with_mem<F: FnOnce(&mut GuestMem)>(
+        cfg: SimConfig,
+        prog: Program,
+        init: F,
+    ) -> Simulator {
+        let mut sim = Simulator::new(cfg, prog);
+        init(&mut sim.guest);
+        sim.run().expect("sim failed");
+        sim
+    }
+
+    #[test]
+    fn alu_loop_matches_interp() {
+        let mut a = Asm::new("sum");
+        a.li(1, 0).li(2, 0).li(3, 100);
+        a.label("loop");
+        a.add(2, 2, 1);
+        a.addi(1, 1, 1);
+        a.blt(1, 3, "loop");
+        a.halt();
+        let prog = a.finish();
+        let sim = run_sim(SimConfig::baseline(), prog.clone());
+        assert_eq!(sim.arch_reg(2), 4950);
+        // Cross-check against the functional oracle.
+        let mut mem = GuestMem::new();
+        let mut it = Interp::new(&mut mem, CompletionOrder::Fifo);
+        it.run(&prog, 100_000).unwrap();
+        assert_eq!(it.regs[2], sim.arch_reg(2));
+    }
+
+    #[test]
+    fn alu_loop_ipc_is_superscalar_ish() {
+        let mut a = Asm::new("ipc");
+        // Independent work: 4 chains.
+        a.li(1, 0).li(2, 0).li(3, 0).li(4, 0).li(5, 0).li(6, 5000);
+        a.label("loop");
+        a.addi(1, 1, 1);
+        a.addi(2, 2, 1);
+        a.addi(3, 3, 1);
+        a.addi(4, 4, 1);
+        a.addi(5, 5, 1);
+        a.blt(5, 6, "loop");
+        a.halt();
+        let sim = run_sim(SimConfig::baseline(), a.finish());
+        let ipc = sim.stats.insts_committed as f64 / sim.cycle as f64;
+        assert!(ipc > 2.0, "6-wide core should sustain ipc > 2 on ALU loop: {ipc:.2}");
+    }
+
+    #[test]
+    fn store_load_roundtrip_local() {
+        let mut a = Asm::new("mem");
+        a.li(1, LOCAL_BASE as i64);
+        a.li(2, 0xDEAD);
+        a.st64(2, 1, 16);
+        a.ld64(3, 1, 16);
+        a.halt();
+        let sim = run_sim(SimConfig::baseline(), a.finish());
+        assert_eq!(sim.arch_reg(3), 0xDEAD, "store-to-load forwarding value");
+    }
+
+    #[test]
+    fn partial_overlap_store_load_stalls_but_correct() {
+        let mut a = Asm::new("partial");
+        a.li(1, LOCAL_BASE as i64);
+        a.li(2, 0x1122334455667788u64 as i64);
+        a.st64(2, 1, 0);
+        a.ld(3, 1, 4, 4); // upper half: partial overlap, must wait for commit
+        a.halt();
+        let sim = run_sim(SimConfig::baseline(), a.finish());
+        assert_eq!(sim.arch_reg(3), 0x11223344);
+    }
+
+    #[test]
+    fn far_load_pays_link_latency() {
+        let mk = |ns: f64| {
+            let mut a = Asm::new("far");
+            a.li(1, FAR_BASE as i64);
+            a.roi_begin();
+            a.ld64(2, 1, 0);
+            a.roi_end();
+            a.halt();
+            let mut cfg = SimConfig::baseline().with_far_latency_ns(ns);
+            cfg.far.jitter_frac = 0.0;
+            run_sim(cfg, a.finish())
+        };
+        let fast = mk(100.0);
+        let slow = mk(2000.0);
+        let d = slow.cycle as i64 - fast.cycle as i64;
+        assert!(d > 5000, "2us vs 0.1us far load must differ by ~5.7k cycles: {d}");
+    }
+
+    #[test]
+    fn branchy_program_matches_interp() {
+        // Data-dependent branches over a pseudo-random array.
+        let mut a = Asm::new("branchy");
+        a.li(1, LOCAL_BASE as i64); // base
+        a.li(2, 0); // i
+        a.li(3, 256); // n
+        a.li(4, 0); // acc
+        a.label("loop");
+        a.slli(5, 2, 3);
+        a.add(5, 5, 1);
+        a.ld64(6, 5, 0);
+        a.andi(7, 6, 1);
+        a.beq(7, 0, "even");
+        a.add(4, 4, 6);
+        a.j("next");
+        a.label("even");
+        a.sub(4, 4, 6);
+        a.label("next");
+        a.addi(2, 2, 1);
+        a.blt(2, 3, "loop");
+        a.halt();
+        let prog = a.finish();
+        let init = |mem: &mut GuestMem| {
+            let mut rng = crate::util::prng::Xoshiro256::new(42);
+            for i in 0..256u64 {
+                mem.write_u64(LOCAL_BASE + i * 8, rng.next_u64() >> 32);
+            }
+        };
+        let sim = run_sim_with_mem(SimConfig::baseline(), prog.clone(), init);
+        let mut mem = GuestMem::new();
+        init(&mut mem);
+        let mut it = Interp::new(&mut mem, CompletionOrder::Fifo);
+        it.run(&prog, 1_000_000).unwrap();
+        assert_eq!(sim.arch_reg(4), it.regs[4], "squash recovery must be exact");
+        assert!(sim.stats.branch_mispredicts > 0, "random branches must mispredict");
+        assert!(sim.stats.squashed_uops > 0);
+    }
+
+    #[test]
+    fn jalr_dispatch_works() {
+        // Computed dispatch: r1 holds target.
+        let mut a = Asm::new("jalr");
+        a.li(2, 0);
+        a.li(1, 6); // target = label "t1" (instruction index 6)
+        a.jalr(3, 1);
+        a.li(2, 111); // skipped
+        a.halt();
+        a.nop();
+        // index 6:
+        a.label("t1");
+        a.addi(2, 2, 7);
+        a.halt();
+        let prog = a.finish();
+        // Verify label landed where the literal says.
+        assert_eq!(prog.labels.iter().find(|(n, _)| n == "t1").unwrap().1, 6);
+        let sim = run_sim(SimConfig::baseline(), prog);
+        assert_eq!(sim.arch_reg(2), 7);
+        assert_eq!(sim.arch_reg(3), 3, "link register value");
+    }
+
+    #[test]
+    fn ami_aload_roundtrip_on_amu_config() {
+        let mut a = Asm::new("ami");
+        a.li(1, (SPM_BASE + 128) as i64);
+        a.li(2, (FAR_BASE + 64) as i64);
+        a.aload(3, 1, 2);
+        a.label("poll");
+        a.getfin(4);
+        a.beq(4, 0, "poll");
+        a.ld64(5, 1, 0);
+        a.halt();
+        let mut cfg = SimConfig::amu().with_far_latency_ns(1000.0);
+        cfg.far.jitter_frac = 0.0;
+        let sim = run_sim_with_mem(cfg, a.finish(), |mem| {
+            mem.write_u64(FAR_BASE + 64, 0xABCD);
+        });
+        assert_ne!(sim.arch_reg(3), 0, "id allocated");
+        assert_eq!(sim.arch_reg(4), sim.arch_reg(3), "getfin returns the id");
+        assert_eq!(sim.arch_reg(5), 0xABCD, "data landed in SPM");
+        assert!(sim.cycle > 3000, "must include the far round trip");
+        assert!(sim.amu_ids_conserved());
+    }
+
+    #[test]
+    fn ami_astore_writes_far_memory() {
+        let mut a = Asm::new("astore");
+        a.li(1, SPM_BASE as i64);
+        a.li(2, 0x77AA);
+        a.st64(2, 1, 0); // write SPM
+        a.ld64(6, 1, 0); // force ordering: read it back before astore
+        a.li(3, (FAR_BASE + 256) as i64);
+        a.astore(4, 1, 3);
+        a.label("poll");
+        a.getfin(5);
+        a.beq(5, 0, "poll");
+        a.halt();
+        let mut cfg = SimConfig::amu().with_far_latency_ns(500.0);
+        cfg.far.jitter_frac = 0.0;
+        let mut sim = Simulator::new(cfg, a.finish());
+        sim.run().unwrap();
+        assert_eq!(sim.guest.read_u64(FAR_BASE + 256), 0x77AA);
+        assert!(sim.amu_ids_conserved());
+    }
+
+    #[test]
+    fn many_aloads_reach_high_mlp() {
+        // 64 independent aloads in flight before polling: the AMU must
+        // track them all concurrently with no MSHR pressure.
+        let mut a = Asm::new("mlp");
+        a.li(1, SPM_BASE as i64);
+        a.li(2, FAR_BASE as i64);
+        a.li(10, 0); // counter of completed
+        a.li(11, 64);
+        a.roi_begin();
+        for k in 0..64i64 {
+            a.addi(3, 1, k * 64);
+            a.addi(4, 2, k * 4096);
+            a.aload(5, 3, 4);
+        }
+        a.label("poll");
+        a.getfin(6);
+        a.beq(6, 0, "poll");
+        a.addi(10, 10, 1);
+        a.blt(10, 11, "poll");
+        a.roi_end();
+        a.halt();
+        let mut cfg = SimConfig::amu().with_far_latency_ns(2000.0);
+        cfg.far.jitter_frac = 0.0;
+        let mut sim = Simulator::new(cfg, a.finish());
+        sim.run().unwrap();
+        assert!(
+            sim.stats.far_inflight.max >= 48,
+            "peak far MLP should approach 64: {}",
+            sim.stats.far_inflight.max
+        );
+        // All 64 complete in roughly ONE round trip if truly overlapped:
+        // far latency 6000 cycles; serial would be 384k cycles.
+        assert!(
+            sim.cycle < 30_000,
+            "aloads must overlap, not serialize: {} cycles",
+            sim.cycle
+        );
+        assert!(sim.amu_ids_conserved());
+    }
+
+    #[test]
+    fn baseline_sync_loads_hit_mshr_wall() {
+        // The same 64 independent far accesses with synchronous loads on
+        // the baseline: bounded by LQ/MSHR, still overlapped but the core
+        // must hold resources. Sanity: it completes and is slower per-access
+        // than the AMU version at high latency.
+        let mut a = Asm::new("sync64");
+        a.li(2, FAR_BASE as i64);
+        a.li(10, 0);
+        a.roi_begin();
+        for k in 0..64i64 {
+            a.ld64(5, 2, k * 4096);
+            a.add(10, 10, 5);
+        }
+        a.roi_end();
+        a.halt();
+        let mut cfg = SimConfig::baseline().with_far_latency_ns(2000.0);
+        cfg.far.jitter_frac = 0.0;
+        let mut sim = Simulator::new(cfg, a.finish());
+        sim.run().unwrap();
+        assert!(sim.stats.far_inflight.max >= 16, "OoO should overlap some");
+        assert!(sim.cycle < 200_000);
+    }
+
+    #[test]
+    fn id_exhaustion_returns_zero_and_recovers() {
+        let mut a = Asm::new("exhaust");
+        a.li(1, 2);
+        a.cfgwr(1, CfgReg::QueueLength);
+        a.li(2, SPM_BASE as i64);
+        a.li(3, FAR_BASE as i64);
+        // Issue 3 aloads with queue_length=2: LVR batch gets both free ids;
+        // third allocation must return 0.
+        a.aload(4, 2, 3);
+        a.aload(5, 2, 3);
+        a.aload(6, 2, 3);
+        // Drain both.
+        a.li(10, 0);
+        a.label("poll");
+        a.getfin(7);
+        a.beq(7, 0, "poll");
+        a.addi(10, 10, 1);
+        a.li(11, 2);
+        a.blt(10, 11, "poll");
+        a.halt();
+        let mut cfg = SimConfig::amu().with_far_latency_ns(200.0);
+        cfg.far.jitter_frac = 0.0;
+        let sim = run_sim(cfg, a.finish());
+        assert_ne!(sim.arch_reg(4), 0);
+        assert_ne!(sim.arch_reg(5), 0);
+        assert_eq!(sim.arch_reg(6), 0, "third alloc must fail with queue_length=2");
+        assert!(sim.amu_ids_conserved());
+    }
+
+    #[test]
+    fn dma_mode_is_slower_than_amu() {
+        let prog = || {
+            let mut a = Asm::new("dma");
+            a.li(1, SPM_BASE as i64);
+            a.li(2, FAR_BASE as i64);
+            a.li(10, 0);
+            a.li(11, 32);
+            a.roi_begin();
+            for k in 0..32i64 {
+                a.addi(3, 1, k * 64);
+                a.addi(4, 2, k * 4096);
+                a.aload(5, 3, 4);
+            }
+            a.label("poll");
+            a.getfin(6);
+            a.beq(6, 0, "poll");
+            a.addi(10, 10, 1);
+            a.blt(10, 11, "poll");
+            a.roi_end();
+            a.halt();
+            a.finish()
+        };
+        let mut amu_cfg = SimConfig::amu().with_far_latency_ns(1000.0);
+        amu_cfg.far.jitter_frac = 0.0;
+        let mut dma_cfg = SimConfig::amu_dma().with_far_latency_ns(1000.0);
+        dma_cfg.far.jitter_frac = 0.0;
+        let amu = run_sim(amu_cfg, prog());
+        let dma = run_sim(dma_cfg, prog());
+        assert!(
+            dma.cycle > amu.cycle,
+            "DMA-mode ({}) must be slower than AMU ({})",
+            dma.cycle,
+            amu.cycle
+        );
+    }
+
+    #[test]
+    fn squash_preserves_amu_ids() {
+        // A data-dependent branch guards an aload; mispredictions will
+        // speculatively execute IdAlloc µops that later squash. IDs must
+        // survive.
+        let mut a = Asm::new("squashids");
+        a.li(1, SPM_BASE as i64);
+        a.li(2, FAR_BASE as i64);
+        a.li(10, 0); // i
+        a.li(11, 64); // n
+        a.li(12, 0); // issued count
+        a.label("loop");
+        // pseudo-random condition: hash(i) & 1
+        a.mul(5, 10, 10);
+        a.addi(5, 5, 12345);
+        a.andi(5, 5, 1);
+        a.beq(5, 0, "skip");
+        a.aload(6, 1, 2);
+        a.addi(12, 12, 0); // keep
+        a.label("drain");
+        a.getfin(7);
+        a.beq(7, 0, "drain");
+        a.label("skip");
+        a.addi(10, 10, 1);
+        a.blt(10, 11, "loop");
+        a.halt();
+        let mut cfg = SimConfig::amu().with_far_latency_ns(200.0);
+        cfg.far.jitter_frac = 0.0;
+        let mut sim = Simulator::new(cfg, a.finish());
+        sim.run().unwrap();
+        assert!(sim.stats.branch_mispredicts > 0, "need mispredicts to test rollback");
+        assert!(sim.amu_ids_conserved(), "IDs lost or duplicated across squashes");
+    }
+
+    #[test]
+    fn roi_markers_bound_measurement() {
+        let mut a = Asm::new("roi");
+        a.li(1, 0);
+        a.li(2, 1000);
+        a.label("warm"); // unmeasured warmup loop
+        a.addi(1, 1, 1);
+        a.blt(1, 2, "warm");
+        a.roi_begin();
+        a.li(3, 0);
+        a.li(4, 100);
+        a.label("hot");
+        a.addi(3, 3, 1);
+        a.blt(3, 4, "hot");
+        a.roi_end();
+        a.halt();
+        let sim = run_sim(SimConfig::baseline(), a.finish());
+        assert!(sim.stats.measured_cycles > 0);
+        assert!(sim.stats.measured_cycles < sim.cycle / 2, "ROI excludes warmup");
+        assert!(sim.stats.measured_insts >= 200);
+    }
+
+    #[test]
+    fn prefetch_op_brings_line_in() {
+        let mut a = Asm::new("pf");
+        a.li(1, (FAR_BASE + 1 << 16) as i64);
+        a.prefetch(1, 0);
+        // Busy wait doing unrelated work ~ the far latency.
+        a.li(2, 0);
+        a.li(3, 2000);
+        a.label("spin");
+        a.addi(2, 2, 1);
+        a.blt(2, 3, "spin");
+        a.roi_begin();
+        a.ld64(4, 1, 0); // should now hit in cache
+        a.roi_end();
+        a.halt();
+        let mut cfg = SimConfig::baseline().with_far_latency_ns(500.0);
+        cfg.far.jitter_frac = 0.0;
+        let sim = run_sim(cfg, a.finish());
+        assert_eq!(sim.stats.prefetches_issued, 1);
+        assert!(
+            sim.stats.measured_cycles < 100,
+            "prefetched load should hit: {} cycles",
+            sim.stats.measured_cycles
+        );
+    }
+
+    #[test]
+    fn mixed_program_guest_memory_matches_interp() {
+        // Writes a deterministic pattern through loops/branches/stores.
+        let mut a = Asm::new("mixed");
+        a.li(1, LOCAL_BASE as i64);
+        a.li(2, 0);
+        a.li(3, 128);
+        a.label("loop");
+        a.mul(4, 2, 2);
+        a.xori(4, 4, 0x5A);
+        a.slli(5, 2, 3);
+        a.add(5, 5, 1);
+        a.st64(4, 5, 0);
+        a.addi(2, 2, 1);
+        a.blt(2, 3, "loop");
+        a.halt();
+        let prog = a.finish();
+        let mut sim = Simulator::new(SimConfig::baseline(), prog.clone());
+        sim.run().unwrap();
+        let mut mem = GuestMem::new();
+        let mut it = Interp::new(&mut mem, CompletionOrder::Fifo);
+        it.run(&prog, 1_000_000).unwrap();
+        let sim_sum = sim.guest.checksum(LOCAL_BASE, 128 * 8);
+        let ref_sum = mem.checksum(LOCAL_BASE, 128 * 8);
+        assert_eq!(sim_sum, ref_sum, "architectural memory state must match oracle");
+    }
+}

@@ -1,0 +1,293 @@
+//! Simulation statistics: counters, time-weighted occupancy integrators,
+//! histograms, and region-tagged cycle attribution.
+//!
+//! Everything the report generators need (IPC, MLP, power inputs,
+//! disambiguation overhead) is collected here so the pipeline and memory
+//! models stay free of formatting concerns.
+
+/// Time-weighted average of a level signal (e.g. "requests in flight").
+/// `update` must be called with non-decreasing cycles.
+#[derive(Debug, Clone, Default)]
+pub struct Integrator {
+    last_cycle: u64,
+    value: u64,
+    area: u128,
+    pub max: u64,
+}
+
+impl Integrator {
+    #[inline]
+    pub fn update(&mut self, cycle: u64, value: u64) {
+        debug_assert!(cycle >= self.last_cycle, "time went backwards");
+        self.area += (cycle - self.last_cycle) as u128 * self.value as u128;
+        self.last_cycle = cycle;
+        self.value = value;
+        if value > self.max {
+            self.max = value;
+        }
+    }
+
+    #[inline]
+    pub fn add(&mut self, cycle: u64, delta: i64) {
+        let v = (self.value as i64 + delta).max(0) as u64;
+        self.update(cycle, v);
+    }
+
+    pub fn current(&self) -> u64 {
+        self.value
+    }
+
+    /// Average level over `[0, end_cycle]`.
+    pub fn average(&self, end_cycle: u64) -> f64 {
+        if end_cycle == 0 {
+            return 0.0;
+        }
+        let area = self.area
+            + (end_cycle.saturating_sub(self.last_cycle)) as u128 * self.value as u128;
+        area as f64 / end_cycle as f64
+    }
+}
+
+/// Power-of-two bucketed histogram for latencies / sizes.
+#[derive(Debug, Clone)]
+pub struct Hist {
+    pub buckets: [u64; 64],
+    pub count: u64,
+    pub sum: u128,
+    pub min: u64,
+    pub max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self { buckets: [0; 64], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl Hist {
+    #[inline]
+    pub fn add(&mut self, v: u64) {
+        let b = 64 - v.leading_zeros() as usize; // 0 -> bucket 0
+        self.buckets[b.min(63)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate percentile via bucket upper bounds.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return if i == 0 { 0 } else { 1u64 << i };
+            }
+        }
+        self.max
+    }
+}
+
+/// Guest-code regions for cycle attribution (Table 5 uses `Disambig`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    Main = 0,
+    Scheduler = 1,
+    Disambig = 2,
+    Setup = 3,
+}
+
+pub const NUM_REGIONS: usize = 4;
+
+impl Region {
+    pub fn from_u8(v: u8) -> Region {
+        match v {
+            1 => Region::Scheduler,
+            2 => Region::Disambig,
+            3 => Region::Setup,
+            _ => Region::Main,
+        }
+    }
+}
+
+/// All statistics for one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    // Progress.
+    pub cycles: u64,
+    pub insts_committed: u64,
+    pub uops_committed: u64,
+    pub measured_cycles: u64, // cycles inside the region-of-interest
+    pub measured_insts: u64,
+
+    // Frontend / speculation.
+    pub fetched_uops: u64,
+    pub branches: u64,
+    pub branch_mispredicts: u64,
+    pub squashed_uops: u64,
+
+    // Structure occupancy (time-weighted; for power + diagnostics).
+    pub rob_occ: Integrator,
+    pub iq_occ: Integrator,
+    pub lq_occ: Integrator,
+    pub sq_occ: Integrator,
+    pub l1d_mshr_occ: Integrator,
+    pub l2_mshr_occ: Integrator,
+
+    // Far memory parallelism (Fig 9): in-flight far requests.
+    pub far_inflight: Integrator,
+    pub amu_inflight: Integrator,
+
+    // Structure event counts (power model inputs).
+    pub rob_writes: u64,
+    pub iq_writes: u64,
+    pub iq_wakeups: u64,
+    pub regfile_reads: u64,
+    pub regfile_writes: u64,
+    pub lsq_searches: u64,
+
+    // Memory system.
+    pub l1d_accesses: u64,
+    pub l1d_misses: u64,
+    pub l2_accesses: u64,
+    pub l2_misses: u64,
+    pub spm_accesses: u64,
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+    pub far_reads: u64,
+    pub far_writes: u64,
+    pub far_bytes: u64,
+    pub link_stall_cycles: u64,
+    pub prefetches_issued: u64,
+    pub prefetches_useful: u64,
+    pub mshr_reject_events: u64,
+
+    // AMU.
+    pub aloads: u64,
+    pub astores: u64,
+    pub getfins: u64,
+    pub getfin_misses: u64, // getfin returned "nothing finished"
+    pub id_batch_fetches: u64,
+    pub amu_subrequests: u64,
+    pub amu_speculative_rollbacks: u64,
+    pub amart_full_events: u64,
+
+    // Latency distributions.
+    pub far_read_latency: Hist,
+    pub sync_load_latency: Hist,
+    pub ami_completion_latency: Hist,
+
+    // Region-tagged cycle attribution (ROB-head heuristic).
+    pub region_cycles: [u64; NUM_REGIONS],
+    pub region_uops: [u64; NUM_REGIONS],
+}
+
+impl Stats {
+    pub fn ipc(&self) -> f64 {
+        if self.measured_cycles == 0 {
+            0.0
+        } else {
+            self.measured_insts as f64 / self.measured_cycles as f64
+        }
+    }
+
+    /// Average MLP = mean number of in-flight far-memory requests
+    /// (demand + AMU) over the measured window. Uses total cycles because
+    /// integrators span the whole run; workloads keep setup off the far path.
+    pub fn mlp(&self) -> f64 {
+        self.far_inflight.average(self.cycles)
+    }
+
+    pub fn branch_mpki(&self) -> f64 {
+        if self.insts_committed == 0 {
+            0.0
+        } else {
+            self.branch_mispredicts as f64 * 1000.0 / self.insts_committed as f64
+        }
+    }
+
+    pub fn region_fraction(&self, r: Region) -> f64 {
+        let total: u64 = self.region_cycles.iter().sum();
+        if total == 0 {
+            0.0
+        } else {
+            self.region_cycles[r as usize] as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integrator_average() {
+        let mut i = Integrator::default();
+        i.update(0, 2); // value 2 during [0,10)
+        i.update(10, 4); // value 4 during [10,20)
+        assert!((i.average(20) - 3.0).abs() < 1e-12);
+        assert_eq!(i.max, 4);
+        assert_eq!(i.current(), 4);
+    }
+
+    #[test]
+    fn integrator_add_saturates_at_zero() {
+        let mut i = Integrator::default();
+        i.add(0, 1);
+        i.add(5, -3);
+        assert_eq!(i.current(), 0);
+    }
+
+    #[test]
+    fn integrator_tail_extension() {
+        let mut i = Integrator::default();
+        i.update(0, 10);
+        // no update since cycle 0; average over 100 cycles is still 10
+        assert!((i.average(100) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hist_mean_and_percentile() {
+        let mut h = Hist::default();
+        for v in [1u64, 2, 4, 8, 1000] {
+            h.add(v);
+        }
+        assert_eq!(h.count, 5);
+        assert!((h.mean() - 203.0).abs() < 1.0);
+        assert!(h.percentile(50.0) <= 8);
+        assert!(h.percentile(100.0) >= 1000 || h.percentile(100.0) == h.max);
+        assert_eq!(h.min, 1);
+        assert_eq!(h.max, 1000);
+    }
+
+    #[test]
+    fn ipc_and_mlp() {
+        let mut s = Stats::default();
+        s.measured_cycles = 100;
+        s.measured_insts = 250;
+        assert!((s.ipc() - 2.5).abs() < 1e-12);
+        s.cycles = 100;
+        s.far_inflight.update(0, 8);
+        assert!((s.mlp() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn region_fraction() {
+        let mut s = Stats::default();
+        s.region_cycles[Region::Main as usize] = 90;
+        s.region_cycles[Region::Disambig as usize] = 10;
+        assert!((s.region_fraction(Region::Disambig) - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,213 @@
+//! Minimal command-line argument parser (no `clap` in the offline image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed getters and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, Vec<String>>,
+    pub flags: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct ArgError(pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+impl std::error::Error for ArgError {}
+
+/// Declarative option spec so `parse` can distinguish value-taking options
+/// from boolean flags and emit usage text.
+pub struct Spec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+pub const fn opt(name: &'static str, help: &'static str) -> Spec {
+    Spec { name, takes_value: true, help }
+}
+
+pub const fn flag(name: &'static str, help: &'static str) -> Spec {
+    Spec { name, takes_value: false, help }
+}
+
+pub fn usage(cmd: &str, specs: &[Spec]) -> String {
+    let mut s = format!("usage: {cmd} [options]\n");
+    for sp in specs {
+        let v = if sp.takes_value { " <value>" } else { "" };
+        s.push_str(&format!("  --{}{:<12} {}\n", sp.name, v, sp.help));
+    }
+    s
+}
+
+/// Parse `argv` (without the program name) against `specs`.
+pub fn parse(argv: &[String], specs: &[Spec]) -> Result<Args, ArgError> {
+    let mut out = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(body) = a.strip_prefix("--") {
+            let (key, inline_val) = match body.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (body.to_string(), None),
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == key)
+                .ok_or_else(|| ArgError(format!("unknown option --{key}")))?;
+            if spec.takes_value {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| ArgError(format!("--{key} needs a value")))?
+                    }
+                };
+                out.options.entry(key).or_default().push(val);
+            } else {
+                if inline_val.is_some() {
+                    return Err(ArgError(format!("--{key} takes no value")));
+                }
+                out.flags.push(key);
+            }
+        } else {
+            out.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+impl Args {
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.options
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => parse_u64(s).map_err(|e| ArgError(format!("--{name}: {e}"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .map_err(|_| ArgError(format!("--{name}: bad float '{s}'"))),
+        }
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+}
+
+/// Parse integers with optional `k`/`m`/`g` (binary) and `_` separators,
+/// e.g. `64k`, `1m`, `1_000_000`.
+pub fn parse_u64(s: &str) -> Result<u64, String> {
+    let s = s.trim().replace('_', "");
+    if s.is_empty() {
+        return Err("empty integer".into());
+    }
+    let (digits, mult) = match s.chars().last().unwrap().to_ascii_lowercase() {
+        'k' => (&s[..s.len() - 1], 1024u64),
+        'm' => (&s[..s.len() - 1], 1024 * 1024),
+        'g' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (&s[..], 1),
+    };
+    let base = if let Some(hex) = digits.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).map_err(|_| format!("bad integer '{s}'"))?
+    } else {
+        digits.parse::<u64>().map_err(|_| format!("bad integer '{s}'"))?
+    };
+    base.checked_mul(mult).ok_or_else(|| format!("integer overflow '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPECS: &[Spec] = &[
+        opt("latency", "far memory latency"),
+        opt("config", "preset name"),
+        flag("verbose", "chatty output"),
+    ];
+
+    #[test]
+    fn parses_positional_options_flags() {
+        let a = parse(&argv(&["run", "--latency", "1000", "--verbose"]), SPECS).unwrap();
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("latency"), Some("1000"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = parse(&argv(&["--latency=5us_is_not_a_number"]), SPECS).unwrap();
+        assert_eq!(a.get("latency"), Some("5us_is_not_a_number"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&argv(&["--bogus"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&argv(&["--latency"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parse(&argv(&["--verbose=1"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn repeated_option_keeps_all_and_last_wins() {
+        let a = parse(&argv(&["--latency", "1", "--latency", "2"]), SPECS).unwrap();
+        assert_eq!(a.get_all("latency"), vec!["1", "2"]);
+        assert_eq!(a.get("latency"), Some("2"));
+    }
+
+    #[test]
+    fn suffix_integers() {
+        assert_eq!(parse_u64("64k").unwrap(), 64 * 1024);
+        assert_eq!(parse_u64("1m").unwrap(), 1024 * 1024);
+        assert_eq!(parse_u64("0x10").unwrap(), 16);
+        assert_eq!(parse_u64("1_000").unwrap(), 1000);
+        assert!(parse_u64("banana").is_err());
+    }
+
+    #[test]
+    fn typed_getters_defaults() {
+        let a = parse(&argv(&[]), SPECS).unwrap();
+        assert_eq!(a.get_u64("latency", 300).unwrap(), 300);
+        assert_eq!(a.get_str("config", "baseline"), "baseline");
+    }
+}

@@ -1,0 +1,60 @@
+//! Shared utilities: deterministic PRNG, CLI parsing, config file parsing,
+//! plus small formatting helpers used by the report generators.
+
+pub mod cli;
+pub mod prng;
+pub mod toml_lite;
+
+/// Geometric mean of positive values; `None` if empty or any non-positive.
+pub fn geomean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() || xs.iter().any(|&x| x <= 0.0) {
+        return None;
+    }
+    let log_sum: f64 = xs.iter().map(|x| x.ln()).sum();
+    Some((log_sum / xs.len() as f64).exp())
+}
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Format a cycle count as a human-readable duration at `freq_ghz`.
+pub fn cycles_to_us(cycles: u64, freq_ghz: f64) -> f64 {
+    cycles as f64 / (freq_ghz * 1000.0)
+}
+
+/// Nanoseconds to core cycles at `freq_ghz` (rounded to nearest cycle).
+pub fn ns_to_cycles(ns: f64, freq_ghz: f64) -> u64 {
+    (ns * freq_ghz).round() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        let g = geomean(&[1.0, 4.0]).unwrap();
+        assert!((g - 2.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_none());
+        assert!(geomean(&[1.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn cycle_time_conversions() {
+        assert_eq!(ns_to_cycles(1000.0, 3.0), 3000); // 1 us @3GHz
+        assert!((cycles_to_us(3000, 3.0) - 1.0).abs() < 1e-12);
+        assert_eq!(ns_to_cycles(100.0, 3.0), 300);
+    }
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

@@ -1,0 +1,215 @@
+//! A small TOML-subset parser for simulator config files (no `serde`/`toml`
+//! in the offline image).
+//!
+//! Supported subset — more than enough for flat simulator configs:
+//! `[section]` headers, `key = value` with integers (incl. `0x`, `k/m/g`
+//! suffixes), floats, booleans, quoted strings, and `#` comments.
+//! Values are exposed as `section.key` lookups with typed getters.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+#[derive(Debug, Default)]
+pub struct Document {
+    /// Flattened `section.key -> value`; top-level keys have no prefix.
+    pub entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error on line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for ParseError {}
+
+pub fn parse(src: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(body) = line.strip_prefix('[') {
+            let name = body
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| err(lineno, "expected key = value"))?;
+        let key = k.trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let value = parse_value(v.trim()).map_err(|m| err(lineno, &m))?;
+        doc.entries.insert(full, value);
+    }
+    Ok(doc)
+}
+
+fn err(line: usize, msg: &str) -> ParseError {
+    ParseError { line, msg: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must survive.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let inner = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // Integer (with suffix support) before float: "1e3" stays float.
+    if let Ok(u) = super::cli::parse_u64(s.strip_prefix('-').unwrap_or(s)) {
+        let has_float_marker = s.contains('.') || s.contains('e') || s.contains('E');
+        if !has_float_marker {
+            let v = u as i64;
+            return Ok(Value::Int(if s.starts_with('-') { -v } else { v }));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("unparseable value '{s}'"))
+}
+
+impl Document {
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        match self.entries.get(key)? {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_u64(&self, key: &str) -> Option<u64> {
+        self.get_i64(key).and_then(|v| u64::try_from(v).ok())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        match self.entries.get(key)? {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.entries.get(key)? {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.entries.get(key)? {
+            Value::Str(v) => Some(v.as_str()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+# top comment
+seed = 42
+[core]
+rob = 512
+width = 6
+freq_ghz = 3.0
+smt = false
+name = "golden-cove-like"  # trailing comment
+[mem]
+l2_kb = 256
+far_latency = 1_000
+spm = 64k
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_u64("seed"), Some(42));
+        assert_eq!(doc.get_u64("core.rob"), Some(512));
+        assert_eq!(doc.get_f64("core.freq_ghz"), Some(3.0));
+        assert_eq!(doc.get_bool("core.smt"), Some(false));
+        assert_eq!(doc.get_str("core.name"), Some("golden-cove-like"));
+        assert_eq!(doc.get_u64("mem.far_latency"), Some(1000));
+        assert_eq!(doc.get_u64("mem.spm"), Some(64 * 1024));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("[]").is_err());
+        assert!(parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = parse("x = 3\ny = 2.5\n").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(3.0));
+        assert_eq!(doc.get_f64("y"), Some(2.5));
+        assert_eq!(doc.get_i64("y"), None);
+    }
+
+    #[test]
+    fn negative_ints() {
+        let doc = parse("x = -7\n").unwrap();
+        assert_eq!(doc.get_i64("x"), Some(-7));
+    }
+
+    #[test]
+    fn hash_inside_string_survives() {
+        let doc = parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b"));
+    }
+}

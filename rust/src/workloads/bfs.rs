@@ -1,0 +1,428 @@
+//! BFS — Graph500-style breadth-first search. The graph's adjacency
+//! (col_idx) lives in far memory; row pointers, the parent array and the
+//! frontier queues are local (the small hot metadata). The AMU port is
+//! level-synchronized: each level restarts the coroutine pool, tasks claim
+//! frontier vertices from a shared cursor and fetch adjacency in 64 B
+//! chunks via `aload`.
+
+use super::common::*;
+use crate::config::SimConfig;
+use crate::coro::{CoroRt, R_FINISHED, R_NTASKS, R_SPAWN, R_TCB_BASE, TCB_SHIFT};
+use crate::isa::mem::SPM_BASE;
+use crate::isa::Asm;
+use crate::util::prng::Xoshiro256;
+
+pub struct BfsParams {
+    pub vertices: u64,
+    pub edges: u64,
+    pub tasks: usize,
+}
+
+impl BfsParams {
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Test => Self { vertices: 512, edges: 4096, tasks: 32 },
+            Scale::Paper => Self { vertices: 16384, edges: 262144, tasks: 128 },
+        }
+    }
+}
+
+/// Deterministic random graph in CSR form (undirected, root = 0).
+pub struct Graph {
+    pub row_ptr: Vec<u64>,
+    pub col_idx: Vec<u64>,
+}
+
+pub fn gen_graph(p: &BfsParams, seed: u64) -> Graph {
+    let mut rng = Xoshiro256::new(seed);
+    let v = p.vertices;
+    let mut adj: Vec<Vec<u64>> = vec![Vec::new(); v as usize];
+    // A Hamiltonian-ish backbone keeps the graph connected.
+    for i in 1..v {
+        let j = rng.below(i);
+        adj[i as usize].push(j);
+        adj[j as usize].push(i);
+    }
+    while adj.iter().map(|a| a.len() as u64).sum::<u64>() < p.edges {
+        let a = rng.below(v);
+        let b = rng.below(v);
+        if a != b {
+            adj[a as usize].push(b);
+            adj[b as usize].push(a);
+        }
+    }
+    let mut row_ptr = Vec::with_capacity(v as usize + 1);
+    let mut col_idx = Vec::new();
+    row_ptr.push(0);
+    for l in &adj {
+        col_idx.extend_from_slice(l);
+        row_ptr.push(col_idx.len() as u64);
+    }
+    Graph { row_ptr, col_idx }
+}
+
+fn host_bfs_levels(g: &Graph, v: u64) -> Vec<i64> {
+    let mut level = vec![-1i64; v as usize];
+    level[0] = 0;
+    let mut frontier = vec![0u64];
+    let mut l = 0;
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &u in &frontier {
+            for e in g.row_ptr[u as usize]..g.row_ptr[u as usize + 1] {
+                let w = g.col_idx[e as usize] as usize;
+                if level[w] < 0 {
+                    level[w] = l + 1;
+                    next.push(w as u64);
+                }
+            }
+        }
+        frontier = next;
+        l += 1;
+    }
+    level
+}
+
+struct Mem {
+    row_ptr: u64,    // local
+    col_idx: u64,    // far
+    parent: u64,     // local: 0 = unvisited, else parent+1
+    frontier_a: u64, // local
+    frontier_b: u64,
+    cells: u64, // [fsize][nsize][cursor][curbase][nextbase]
+}
+
+fn validate_levels(
+    sim: &mut crate::sim::Simulator,
+    g: &Graph,
+    v: u64,
+    parent_base: u64,
+) -> Result<(), String> {
+    let want = host_bfs_levels(g, v);
+    // Derive levels from the parent array.
+    let mut got = vec![-1i64; v as usize];
+    for s in 0..v as usize {
+        if got[s] >= 0 {
+            continue;
+        }
+        // Follow parents to a resolved vertex or the root.
+        let mut chain = Vec::new();
+        let mut cur = s;
+        loop {
+            if got[cur] >= 0 {
+                break;
+            }
+            let p = sim.guest.read_u64(parent_base + cur as u64 * 8);
+            if p == 0 {
+                // unvisited
+                break;
+            }
+            chain.push(cur);
+            if cur == 0 {
+                got[0] = 0;
+                chain.pop();
+                break;
+            }
+            cur = (p - 1) as usize;
+            if chain.len() > v as usize {
+                return Err("parent cycle".into());
+            }
+        }
+        if got[cur] >= 0 || cur == 0 {
+            let mut l = got[cur];
+            for &c in chain.iter().rev() {
+                l += 1;
+                got[c] = l;
+            }
+        }
+    }
+    for i in 0..v as usize {
+        if got[i] != want[i] {
+            return Err(format!(
+                "vertex {i}: level {} != expected {}",
+                got[i], want[i]
+            ));
+        }
+    }
+    Ok(())
+}
+
+pub fn build(cfg: &SimConfig, variant: Variant, scale: Scale) -> WorkloadSpec {
+    let mut p = BfsParams::new(scale);
+    p.tasks = default_tasks(cfg, p.tasks);
+    let g = std::rc::Rc::new(gen_graph(&p, 99));
+    let mut layout = mk_layout(cfg);
+    let v = p.vertices;
+    let ne = g.col_idx.len() as u64;
+    let m = Mem {
+        row_ptr: layout.alloc_local((v + 1) * 8, 64),
+        col_idx: layout.alloc_far(ne * 8, 4096),
+        parent: layout.alloc_local(v * 8, 64),
+        frontier_a: layout.alloc_local(v * 8, 64),
+        frontier_b: layout.alloc_local(v * 8, 64),
+        cells: layout.alloc_local(64, 64),
+    };
+    let setup = {
+        let g = g.clone();
+        let (rp, ci, par, fa, cells) = (m.row_ptr, m.col_idx, m.parent, m.frontier_a, m.cells);
+        let (fa_cell, fb_cell) = (m.frontier_a, m.frontier_b);
+        move |sim: &mut crate::sim::Simulator| {
+            for (i, r) in g.row_ptr.iter().enumerate() {
+                sim.guest.write_u64(rp + i as u64 * 8, *r);
+            }
+            for (i, c) in g.col_idx.iter().enumerate() {
+                sim.guest.write_u64(ci + i as u64 * 8, *c);
+            }
+            // root = 0: parent[0] = 0+1, frontier = [0], fsize = 1
+            sim.guest.write_u64(par, 1);
+            sim.guest.write_u64(fa, 0);
+            sim.guest.write_u64(cells, 1); // fsize
+            sim.guest.write_u64(cells + 8, 0); // nsize
+            sim.guest.write_u64(cells + 16, 0); // cursor
+            sim.guest.write_u64(cells + 24, fa_cell); // cur frontier base
+            sim.guest.write_u64(cells + 32, fb_cell); // next frontier base
+        }
+    };
+    match variant {
+        Variant::Amu | Variant::AmuLlvm => build_amu(cfg, &mut layout, p, m, g, setup),
+        _ => build_sync(p, m, g, setup),
+    }
+}
+
+fn build_sync(
+    p: BfsParams,
+    m: Mem,
+    g: std::rc::Rc<Graph>,
+    setup: impl Fn(&mut crate::sim::Simulator) + 'static,
+) -> WorkloadSpec {
+    let mut a = Asm::new("bfs-sync");
+    let cells = m.cells;
+    a.li(40, cells as i64);
+    a.roi_begin();
+    a.label("level");
+    a.ld64(41, 40, 0); // fsize
+    a.beq(41, 0, "bfs_done");
+    a.li(42, 0); // idx
+    a.st64(0, 40, 8); // nsize = 0
+    a.label("u_loop");
+    a.bge(42, 41, "level_end");
+    a.ld64(43, 40, 24); // cur frontier base
+    a.slli(44, 42, 3);
+    a.add(44, 44, 43);
+    a.ld64(45, 44, 0); // u
+    // edge range
+    a.li(46, m.row_ptr as i64);
+    a.slli(47, 45, 3);
+    a.add(47, 47, 46);
+    a.ld64(48, 47, 0); // start
+    a.ld64(49, 47, 8); // end
+    a.label("e_loop");
+    a.bge(48, 49, "u_next");
+    a.li(46, m.col_idx as i64);
+    a.slli(47, 48, 3);
+    a.add(47, 47, 46);
+    a.ld64(50, 47, 0); // v (far load)
+    // parent check
+    a.li(46, m.parent as i64);
+    a.slli(47, 50, 3);
+    a.add(47, 47, 46);
+    a.ld64(51, 47, 0);
+    a.bne(51, 0, "e_next");
+    a.addi(51, 45, 1);
+    a.st64(51, 47, 0); // parent[v] = u+1
+    // push next frontier
+    a.ld64(51, 40, 8); // nsize
+    a.ld64(46, 40, 32); // next base
+    a.slli(52, 51, 3);
+    a.add(52, 52, 46);
+    a.st64(50, 52, 0);
+    a.addi(51, 51, 1);
+    a.st64(51, 40, 8);
+    a.label("e_next");
+    a.addi(48, 48, 1);
+    a.j("e_loop");
+    a.label("u_next");
+    a.addi(42, 42, 1);
+    a.j("u_loop");
+    a.label("level_end");
+    // swap frontiers; fsize = nsize
+    a.ld64(43, 40, 24);
+    a.ld64(44, 40, 32);
+    a.st64(44, 40, 24);
+    a.st64(43, 40, 32);
+    a.ld64(45, 40, 8);
+    a.st64(45, 40, 0);
+    a.j("level");
+    a.label("bfs_done");
+    a.roi_end();
+    a.halt();
+    let prog = a.finish();
+    let v = p.vertices;
+    let parent = m.parent;
+    WorkloadSpec {
+        name: "bfs".into(),
+        prog,
+        setup: Box::new(setup),
+        validate: Box::new(move |sim| validate_levels(sim, &g, v, parent)),
+    }
+}
+
+fn build_amu(
+    cfg: &SimConfig,
+    layout: &mut crate::isa::mem::Layout,
+    p: BfsParams,
+    m: Mem,
+    g: std::rc::Rc<Graph>,
+    setup: impl Fn(&mut crate::sim::Simulator) + 'static,
+) -> WorkloadSpec {
+    // Custom scaffold: the scheduler is re-entered once per BFS level.
+    let rt = CoroRt::new(layout, p.tasks, cfg.amu.queue_length);
+    let cells = m.cells;
+    let ntasks = p.tasks;
+    let mut a = Asm::new("bfs-amu");
+    a.li(1, 64);
+    a.cfgwr(1, crate::isa::CfgReg::Granularity);
+    rt.emit_prologue(&mut a);
+    a.roi_begin();
+    a.li(40, cells as i64);
+    a.label("level");
+    a.ld64(41, 40, 0); // fsize
+    a.beq(41, 0, "bfs_done");
+    a.st64(0, 40, 8); // nsize = 0
+    a.st64(0, 40, 16); // cursor = 0
+    // Reset the coroutine pool: every TCB continues at "task".
+    a.li(R_SPAWN, 0);
+    a.li(R_FINISHED, 0);
+    a.li(42, 0);
+    a.li_label(43, "task");
+    a.label("reset_loop");
+    a.slli(44, 42, TCB_SHIFT as i64);
+    a.add(44, 44, R_TCB_BASE);
+    a.st64(43, 44, 0); // cont_pc = task
+    a.addi(42, 42, 1);
+    a.blt(42, R_NTASKS, "reset_loop");
+    a.j("co_dispatch");
+
+    a.label("task");
+    rt.emit_load_param(&mut a, 11, 1); // spm slot
+    a.li(20, cells as i64);
+    a.label("t_claim");
+    // idx = cursor++
+    a.ld64(21, 20, 16);
+    a.addi(22, 21, 1);
+    a.st64(22, 20, 16);
+    a.ld64(23, 20, 0); // fsize
+    a.bge(21, 23, "t_finish");
+    a.ld64(23, 20, 24); // cur frontier base
+    a.slli(24, 21, 3);
+    a.add(24, 24, 23);
+    a.ld64(25, 24, 0); // u
+    // edge range from local row_ptr
+    a.li(26, m.row_ptr as i64);
+    a.slli(27, 25, 3);
+    a.add(27, 27, 26);
+    a.ld64(28, 27, 0); // start
+    a.ld64(29, 27, 8); // end
+    a.label("t_chunk");
+    a.bge(28, 29, "t_claim");
+    // chunk: up to 8 neighbors from col_idx[start..]
+    a.li(26, m.col_idx as i64);
+    a.slli(27, 28, 3);
+    a.add(27, 27, 26); // far addr
+    a.aload(30, 11, 27);
+    rt.emit_await(&mut a, 30, &[11, 20, 25, 28, 29], "t_r1");
+    // count = min(8, end-start)
+    a.sub(31, 29, 28);
+    a.li(26, 8);
+    a.blt(31, 26, "t_cnt_ok");
+    a.mv(31, 26);
+    a.label("t_cnt_ok");
+    a.li(21, 0); // k
+    a.label("t_kloop");
+    a.slli(22, 21, 3);
+    a.add(22, 22, 11);
+    a.ld64(23, 22, 0); // v
+    // parent check (local)
+    a.li(24, m.parent as i64);
+    a.slli(22, 23, 3);
+    a.add(22, 22, 24);
+    a.ld64(24, 22, 0);
+    a.bne(24, 0, "t_knext");
+    a.addi(24, 25, 1);
+    a.st64(24, 22, 0); // parent[v] = u+1
+    // push into next frontier
+    a.ld64(24, 20, 8); // nsize
+    a.ld64(22, 20, 32); // next base
+    a.slli(26, 24, 3);
+    a.add(26, 26, 22);
+    a.st64(23, 26, 0);
+    a.addi(24, 24, 1);
+    a.st64(24, 20, 8);
+    a.label("t_knext");
+    a.addi(21, 21, 1);
+    a.blt(21, 31, "t_kloop");
+    a.add(28, 28, 31);
+    a.j("t_chunk");
+    a.label("t_finish");
+    rt.emit_task_finish(&mut a);
+
+    a.label("sched");
+    rt.emit_scheduler(&mut a, "level_end");
+    a.label("level_end");
+    // swap frontiers; fsize = nsize
+    a.ld64(43, 40, 24);
+    a.ld64(44, 40, 32);
+    a.st64(44, 40, 24);
+    a.st64(43, 40, 32);
+    a.ld64(45, 40, 8);
+    a.st64(45, 40, 0);
+    a.j("level");
+    a.label("bfs_done");
+    a.roi_end();
+    a.halt();
+    let prog = a.finish();
+
+    let rt_setup = rt.clone();
+    let prog2 = prog.clone();
+    let v = p.vertices;
+    let parent = m.parent;
+    WorkloadSpec {
+        name: "bfs".into(),
+        prog,
+        setup: Box::new(move |sim| {
+            setup(sim);
+            rt_setup.write_tcbs(&mut sim.guest, &prog2, "task", |tid| {
+                [tid as u64, SPM_BASE + tid as u64 * 64, 0, 0]
+            });
+            let _ = ntasks;
+        }),
+        validate: Box::new(move |sim| validate_levels(sim, &g, v, parent)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_bfs_is_sane() {
+        let p = BfsParams::new(Scale::Test);
+        let g = gen_graph(&p, 99);
+        let levels = host_bfs_levels(&g, p.vertices);
+        assert!(levels.iter().all(|&l| l >= 0), "graph must be connected");
+    }
+
+    #[test]
+    fn sync_bfs_validates() {
+        let cfg = SimConfig::baseline().with_far_latency_ns(200.0);
+        build(&cfg, Variant::Sync, Scale::Test).run(&cfg).expect("bfs sync");
+    }
+
+    #[test]
+    fn amu_bfs_validates() {
+        let mut cfg = SimConfig::amu().with_far_latency_ns(500.0);
+        cfg.far.jitter_frac = 0.0;
+        let sim = build(&cfg, Variant::Amu, Scale::Test).run(&cfg).expect("bfs amu");
+        assert!(sim.stats.far_inflight.max >= 4, "MLP {}", sim.stats.far_inflight.max);
+    }
+}

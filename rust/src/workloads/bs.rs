@@ -1,0 +1,250 @@
+//! BS — binary search over a sorted far-memory array (paper Table 3:
+//! 256 coroutines, 16 B elements, random keys, shared array).
+//!
+//! Each lookup is a ~log2(N)-step chain of *dependent* far accesses: the
+//! classic pointer-chase shape where request-level parallelism (many
+//! concurrent searches) is the only available MLP.
+
+use super::common::*;
+use crate::config::SimConfig;
+use crate::coro::{CoroRt, OFF_PARAM, R_CUR_TCB};
+use crate::isa::mem::SPM_BASE;
+use crate::isa::Asm;
+
+pub struct BsParams {
+    pub elems: u64, // power of two; element = 16 B [key][value]
+    pub tasks: usize,
+    pub searches_per_task: u64,
+}
+
+impl BsParams {
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Test => Self { elems: 1 << 12, tasks: 32, searches_per_task: 2 },
+            Scale::Paper => Self { elems: 1 << 17, tasks: 256, searches_per_task: 4 },
+        }
+    }
+}
+
+/// key of element i = 2*i+1; value = i*13. Searched keys hit exactly when
+/// odd and in range.
+fn search_key(task: u64, k: u64, elems: u64) -> u64 {
+    host_hash(task * 8191 + k) % (2 * elems)
+}
+
+/// Host-side expected sum of found values for one task.
+fn expected_task_sum(tid: u64, p: &BsParams) -> u64 {
+    let mut sum = 0u64;
+    for k in 0..p.searches_per_task {
+        let key = search_key(tid, k, p.elems);
+        // Binary search for exact key 2*i+1.
+        if key % 2 == 1 {
+            let i = key / 2;
+            if i < p.elems {
+                sum = sum.wrapping_add(i.wrapping_mul(13));
+            }
+        }
+    }
+    sum
+}
+
+pub fn build(cfg: &SimConfig, variant: Variant, scale: Scale) -> WorkloadSpec {
+    let mut p = BsParams::new(scale);
+    p.tasks = default_tasks(cfg, p.tasks);
+    let mut layout = mk_layout(cfg);
+    let arr = layout.alloc_far(p.elems * 16, 4096);
+    let setup_arr = move |sim: &mut crate::sim::Simulator, elems: u64| {
+        for i in 0..elems {
+            sim.guest.write_u64(arr + i * 16, 2 * i + 1);
+            sim.guest.write_u64(arr + i * 16 + 8, i.wrapping_mul(13));
+        }
+    };
+    match variant {
+        Variant::Amu | Variant::AmuLlvm => build_amu(cfg, &mut layout, p, arr, setup_arr),
+        _ => build_sync(p, arr, setup_arr),
+    }
+}
+
+/// Emit one binary-search step body shared by both variants is impractical
+/// (different load mechanisms), so each variant carries its own loop.
+fn build_sync(
+    p: BsParams,
+    arr: u64,
+    setup_arr: impl Fn(&mut crate::sim::Simulator, u64) + 'static,
+) -> WorkloadSpec {
+    let mut a = Asm::new("bs-sync");
+    a.li(1, arr as i64);
+    a.li(4, 0); // sum
+    a.li(20, 0); // task
+    a.li(21, p.tasks as i64);
+    a.roi_begin();
+    a.label("task_loop");
+    a.li(22, 0); // k
+    a.li(23, p.searches_per_task as i64);
+    a.label("k_loop");
+    // key = hash(task*8191 + k) % 2N  (2N is a power of two)
+    a.li(5, 8191);
+    a.mul(5, 20, 5);
+    a.add(5, 5, 22);
+    emit_hash(&mut a, 6, 5, 7);
+    a.li(7, (2 * p.elems - 1) as i64);
+    a.and(6, 6, 7); // key
+    // binary search [lo, hi)
+    a.li(8, 0); // lo
+    a.li(9, p.elems as i64); // hi
+    a.label("bs_loop");
+    a.bge(8, 9, "bs_done");
+    a.add(10, 8, 9);
+    a.srli(10, 10, 1); // mid
+    a.slli(11, 10, 4);
+    a.add(11, 11, 1);
+    a.ld64(12, 11, 0); // key[mid]
+    a.beq(12, 6, "bs_hit");
+    a.bltu(12, 6, "bs_right");
+    a.mv(9, 10); // hi = mid
+    a.j("bs_loop");
+    a.label("bs_right");
+    a.addi(8, 10, 1); // lo = mid+1
+    a.j("bs_loop");
+    a.label("bs_hit");
+    a.ld64(13, 11, 8);
+    a.add(4, 4, 13);
+    a.label("bs_done");
+    a.addi(22, 22, 1);
+    a.blt(22, 23, "k_loop");
+    a.addi(20, 20, 1);
+    a.blt(20, 21, "task_loop");
+    a.roi_end();
+    // Publish the sum for validation.
+    a.li(14, crate::isa::mem::LOCAL_BASE as i64);
+    a.st64(4, 14, 0);
+    a.halt();
+    let prog = a.finish();
+    let expected: u64 = (0..p.tasks as u64)
+        .map(|t| expected_task_sum(t, &p))
+        .fold(0u64, |a, b| a.wrapping_add(b));
+    let elems = p.elems;
+    WorkloadSpec {
+        name: "bs".into(),
+        prog,
+        setup: Box::new(move |sim| setup_arr(sim, elems)),
+        validate: Box::new(move |sim| {
+            let got = sim.guest.read_u64(crate::isa::mem::LOCAL_BASE);
+            if got == expected {
+                Ok(())
+            } else {
+                Err(format!("sum {got} != expected {expected}"))
+            }
+        }),
+    }
+}
+
+fn build_amu(
+    cfg: &SimConfig,
+    layout: &mut crate::isa::mem::Layout,
+    p: BsParams,
+    arr: u64,
+    setup_arr: impl Fn(&mut crate::sim::Simulator, u64) + 'static,
+) -> WorkloadSpec {
+    let elems = p.elems;
+    let per_task = p.searches_per_task;
+    let (prog, rt) = AmuScaffold::build(
+        "bs-amu",
+        layout,
+        cfg,
+        p.tasks,
+        16, // one 16 B element per aload
+        |a: &mut Asm, rt: &CoroRt| {
+            // params: p0 = tid, p1 = spm slot; accumulator published to p3.
+            rt.emit_load_param(a, 10, 0); // tid
+            rt.emit_load_param(a, 11, 1); // spm slot
+            a.li(12, 0); // k
+            a.li(13, 0); // sum
+            a.label("b_kloop");
+            a.li(5, 8191);
+            a.mul(5, 10, 5);
+            a.add(5, 5, 12);
+            emit_hash(a, 14, 5, 15);
+            a.li(15, (2 * elems - 1) as i64);
+            a.and(14, 14, 15); // key
+            a.li(15, 0); // lo
+            a.li(16, elems as i64); // hi
+            a.label("b_loop");
+            a.bge(15, 16, "b_done");
+            a.add(17, 15, 16);
+            a.srli(17, 17, 1); // mid
+            a.slli(18, 17, 4);
+            a.li(19, arr as i64);
+            a.add(18, 18, 19); // far element addr
+            a.aload(20, 11, 18);
+            rt.emit_await(a, 20, &[10, 11, 12, 13, 14, 15, 16, 17], "b_r1");
+            a.ld64(19, 11, 0); // key[mid]
+            a.beq(19, 14, "b_hit");
+            a.bltu(19, 14, "b_right");
+            a.mv(16, 17);
+            a.j("b_loop");
+            a.label("b_right");
+            a.addi(15, 17, 1);
+            a.j("b_loop");
+            a.label("b_hit");
+            a.ld64(19, 11, 8);
+            a.add(13, 13, 19);
+            a.label("b_done");
+            a.addi(12, 12, 1);
+            a.li(19, per_task as i64);
+            a.blt(12, 19, "b_kloop");
+            // Publish per-task sum into TCB param 3.
+            a.st64(13, R_CUR_TCB, OFF_PARAM + 24);
+            rt.emit_task_finish(a);
+        },
+    );
+    let rt_setup = rt.clone();
+    let rt_check = rt.clone();
+    let prog2 = prog.clone();
+    let expected: Vec<u64> =
+        (0..p.tasks as u64).map(|t| expected_task_sum(t, &p)).collect();
+    WorkloadSpec {
+        name: "bs".into(),
+        prog,
+        setup: Box::new(move |sim| {
+            setup_arr(sim, elems);
+            rt_setup.write_tcbs(&mut sim.guest, &prog2, "task", |tid| {
+                [tid as u64, SPM_BASE + tid as u64 * 64, 0, 0]
+            });
+        }),
+        validate: Box::new(move |sim| {
+            // Per-task sums published into TCB param slot 3.
+            for (tid, want) in expected.iter().enumerate() {
+                let got =
+                    sim.guest.read_u64(rt_check.tcb_addr(tid) + OFF_PARAM as u64 + 24);
+                if got != *want {
+                    return Err(format!("task {tid}: sum {got} != {want}"));
+                }
+            }
+            Ok(())
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_bs_validates() {
+        let cfg = SimConfig::baseline().with_far_latency_ns(200.0);
+        build(&cfg, Variant::Sync, Scale::Test).run(&cfg).expect("bs sync");
+    }
+
+    #[test]
+    fn amu_bs_validates_and_overlaps_chains() {
+        let mut cfg = SimConfig::amu().with_far_latency_ns(1000.0);
+        cfg.far.jitter_frac = 0.0;
+        let sim = build(&cfg, Variant::Amu, Scale::Test).run(&cfg).expect("bs amu");
+        assert!(
+            sim.stats.far_inflight.max >= 16,
+            "concurrent searches must overlap: {}",
+            sim.stats.far_inflight.max
+        );
+    }
+}

@@ -1,0 +1,180 @@
+//! Shared infrastructure for the benchmark suite: the `WorkloadSpec`
+//! contract, size presets, AMU scaffolding, and guest-side hash helpers.
+
+use crate::config::SimConfig;
+use crate::coro::CoroRt;
+use crate::isa::mem::Layout;
+use crate::isa::{Asm, Program};
+use crate::sim::Simulator;
+
+/// A runnable benchmark instance: program + memory setup + validation.
+pub struct WorkloadSpec {
+    pub name: String,
+    pub prog: Program,
+    /// Initializes guest memory (datasets, TCBs) before the run.
+    pub setup: Box<dyn Fn(&mut Simulator)>,
+    /// Checks the architectural result after the run.
+    pub validate: Box<dyn Fn(&mut Simulator) -> Result<(), String>>,
+}
+
+impl WorkloadSpec {
+    /// Instantiate a simulator with memory initialized.
+    pub fn instantiate(&self, cfg: &SimConfig) -> Simulator {
+        let mut sim = Simulator::new(cfg.clone(), self.prog.clone());
+        (self.setup)(&mut sim);
+        sim
+    }
+
+    /// Run to completion and validate; returns the simulator for metrics.
+    pub fn run(&self, cfg: &SimConfig) -> Result<Simulator, String> {
+        let mut sim = self.instantiate(cfg);
+        sim.run().map_err(|e| format!("{}: {e}", self.name))?;
+        (self.validate)(&mut sim).map_err(|e| format!("{}: validation: {e}", self.name))?;
+        Ok(sim)
+    }
+}
+
+/// Benchmark scale: `Test` keeps CI fast; `Paper` is used by the report
+/// and bench harnesses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Test,
+    Paper,
+}
+
+/// Which implementation of a benchmark to build.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Variant {
+    /// Conventional synchronous loads/stores (Baseline / CXL-Ideal input).
+    Sync,
+    /// Coroutine + AMI port (the paper's §5.2 paradigm).
+    Amu,
+    /// Group-prefetching GUPS (Fig 3): prefetch a group, then update it.
+    GroupPrefetch(usize),
+    /// Compiler-style software prefetching (Table 4 `PF x-y`).
+    SwPrefetch { batch: usize, depth: usize },
+    /// Compiler-generated AMI (Table 4 `LLVM AMU`): software-pipelined
+    /// event loop at fixed 8 B granularity, no coroutine context overhead.
+    AmuLlvm,
+}
+
+impl Variant {
+    pub fn tag(&self) -> String {
+        match self {
+            Variant::Sync => "sync".into(),
+            Variant::Amu => "amu".into(),
+            Variant::GroupPrefetch(g) => format!("gp{g}"),
+            Variant::SwPrefetch { batch, depth } => format!("pf{batch}-{depth}"),
+            Variant::AmuLlvm => "llvm".into(),
+        }
+    }
+}
+
+/// SPM data-area bytes available to software under `cfg` (total minus the
+/// ASMC metadata area).
+pub fn spm_data_bytes(cfg: &SimConfig) -> u64 {
+    cfg.amu.spm_bytes as u64 - cfg.amu.queue_length as u64 * 32
+}
+
+pub fn mk_layout(cfg: &SimConfig) -> Layout {
+    Layout::new(spm_data_bytes(cfg) as usize)
+}
+
+/// Coroutine count used by the RLP benchmarks (paper: 256, 128 for SL),
+/// clamped to the AMART capacity.
+pub fn default_tasks(cfg: &SimConfig, want: usize) -> usize {
+    want.min(cfg.amu.queue_length)
+}
+
+/// Emit `rd = splitmix-style hash of rs` (clobbers `tmp`).
+/// Matches [`host_hash`]; used to generate reproducible random access
+/// streams inside guest code without memory-resident index arrays.
+pub fn emit_hash(a: &mut Asm, rd: u8, rs: u8, tmp: u8) {
+    debug_assert!(rd != rs && rd != tmp && rs != tmp);
+    a.li(tmp, 0x9E37_79B9_7F4A_7C15u64 as i64);
+    a.mul(rd, rs, tmp);
+    a.srli(tmp, rd, 31);
+    a.xor(rd, rd, tmp);
+    a.li(tmp, 0xBF58_476D_1CE4_E5B9u64 as i64);
+    a.mul(rd, rd, tmp);
+    a.srli(tmp, rd, 27);
+    a.xor(rd, rd, tmp);
+}
+
+/// Host-side mirror of [`emit_hash`].
+pub fn host_hash(x: u64) -> u64 {
+    let mut v = x.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    v ^= v >> 31;
+    v = v.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    v ^= v >> 27;
+    v
+}
+
+/// Standard AMU-workload skeleton: configures granularity, emits the
+/// coroutine prologue/scheduler and ROI around the user task body.
+///
+/// `emit_task(asm, rt)` must emit code starting at label `"task"` and end
+/// with `rt.emit_task_finish`.
+pub struct AmuScaffold {
+    pub rt: CoroRt,
+}
+
+impl AmuScaffold {
+    pub fn build(
+        name: &str,
+        layout: &mut Layout,
+        cfg: &SimConfig,
+        ntasks: usize,
+        granularity: u64,
+        emit_task: impl FnOnce(&mut Asm, &CoroRt),
+    ) -> (Program, CoroRt) {
+        let rt = CoroRt::new(layout, ntasks, cfg.amu.queue_length);
+        let mut a = Asm::new(name);
+        a.li(1, granularity as i64);
+        a.cfgwr(1, crate::isa::CfgReg::Granularity);
+        rt.emit_prologue(&mut a);
+        a.roi_begin();
+        a.j("sched");
+        a.label("task");
+        emit_task(&mut a, &rt);
+        a.label("sched");
+        rt.emit_scheduler(&mut a, "done");
+        a.label("done");
+        a.roi_end();
+        a.halt();
+        (a.finish(), rt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_and_guest_hash_agree() {
+        use crate::isa::interp::{CompletionOrder, Interp};
+        use crate::isa::GuestMem;
+        let mut a = Asm::new("hash");
+        a.li(1, 12345);
+        emit_hash(&mut a, 2, 1, 3);
+        a.halt();
+        let prog = a.finish();
+        let mut mem = GuestMem::new();
+        let mut it = Interp::new(&mut mem, CompletionOrder::Fifo);
+        it.run(&prog, 1000).unwrap();
+        assert_eq!(it.regs[2], host_hash(12345));
+    }
+
+    #[test]
+    fn spm_budget_positive_for_amu_preset() {
+        let cfg = SimConfig::amu();
+        assert!(spm_data_bytes(&cfg) >= 32 * 1024);
+    }
+
+    #[test]
+    fn variant_tags() {
+        assert_eq!(Variant::Sync.tag(), "sync");
+        assert_eq!(Variant::GroupPrefetch(32).tag(), "gp32");
+        assert_eq!(Variant::SwPrefetch { batch: 8, depth: 0 }.tag(), "pf8-0");
+    }
+}

@@ -1,0 +1,238 @@
+//! HPCG — the SpMV kernel that dominates HPCG, over a 27-point-stencil-like
+//! sparse matrix in ELL format. Matrix rows (values + column indices, one
+//! 512 B block per row) live in far memory (paper: "matrices are allocated
+//! in far memory"); the x and y vectors are local. The AMU port streams
+//! row blocks through the SPM at large granularity.
+
+use super::common::*;
+use crate::config::SimConfig;
+use crate::coro::CoroRt;
+use crate::isa::mem::SPM_BASE;
+use crate::isa::Asm;
+
+pub struct HpcgParams {
+    pub rows: u64,
+    pub nnz_per_row: u64, // 27, padded into a 512 B row block
+    pub tasks: usize,
+}
+
+impl HpcgParams {
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Test => Self { rows: 512, nnz_per_row: 27, tasks: 16 },
+            Scale::Paper => Self { rows: 8192, nnz_per_row: 27, tasks: 64 },
+        }
+    }
+}
+
+const ROW_BLOCK: u64 = 512; // 27 * (8B val + 8B idx) = 432, padded to 512
+
+fn val_of(r: u64, j: u64) -> u64 {
+    (host_hash(r * 29 + j) & 0xFF) + 1
+}
+
+fn col_of(r: u64, j: u64, rows: u64) -> u64 {
+    // stencil-ish: mostly near-diagonal with a few far columns
+    let off = host_hash(r * 53 + j * 7) % 64;
+    (r + off) % rows
+}
+
+fn x_of(i: u64) -> u64 {
+    (i & 0x3FF) + 1
+}
+
+fn expected_y(p: &HpcgParams) -> Vec<u64> {
+    (0..p.rows)
+        .map(|r| {
+            (0..p.nnz_per_row)
+                .map(|j| val_of(r, j).wrapping_mul(x_of(col_of(r, j, p.rows))))
+                .fold(0u64, |a, b| a.wrapping_add(b))
+        })
+        .collect()
+}
+
+pub fn build(cfg: &SimConfig, variant: Variant, scale: Scale) -> WorkloadSpec {
+    let mut p = HpcgParams::new(scale);
+    p.tasks = default_tasks(cfg, p.tasks);
+    let mut layout = mk_layout(cfg);
+    let mat = layout.alloc_far(p.rows * ROW_BLOCK, 4096);
+    let xv = layout.alloc_local(p.rows * 8, 64);
+    let yv = layout.alloc_local(p.rows * 8, 64);
+    let setup = {
+        let (mat, xv, rows, nnz) = (mat, xv, p.rows, p.nnz_per_row);
+        move |sim: &mut crate::sim::Simulator| {
+            for r in 0..rows {
+                let base = mat + r * ROW_BLOCK;
+                for j in 0..nnz {
+                    sim.guest.write_u64(base + j * 16, val_of(r, j));
+                    sim.guest.write_u64(base + j * 16 + 8, col_of(r, j, rows));
+                }
+            }
+            for i in 0..rows {
+                sim.guest.write_u64(xv + i * 8, x_of(i));
+            }
+        }
+    };
+    let validate = {
+        let want = expected_y(&p);
+        let (yv, rows) = (yv, p.rows);
+        move |sim: &mut crate::sim::Simulator| -> Result<(), String> {
+            for r in 0..rows {
+                let got = sim.guest.read_u64(yv + r * 8);
+                if got != want[r as usize] {
+                    return Err(format!("y[{r}] = {got}, want {}", want[r as usize]));
+                }
+            }
+            Ok(())
+        }
+    };
+    match variant {
+        Variant::Amu | Variant::AmuLlvm => {
+            build_amu(cfg, &mut layout, p, mat, xv, yv, setup, validate)
+        }
+        _ => build_sync(p, mat, xv, yv, setup, validate),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_sync(
+    p: HpcgParams,
+    mat: u64,
+    xv: u64,
+    yv: u64,
+    setup: impl Fn(&mut crate::sim::Simulator) + 'static,
+    validate: impl Fn(&mut crate::sim::Simulator) -> Result<(), String> + 'static,
+) -> WorkloadSpec {
+    let mut a = Asm::new("hpcg-sync");
+    a.li(1, mat as i64);
+    a.li(2, xv as i64);
+    a.li(3, yv as i64);
+    a.li(4, 0); // r
+    a.li(5, p.rows as i64);
+    a.roi_begin();
+    a.label("row");
+    a.li(6, ROW_BLOCK as i64);
+    a.mul(6, 6, 4);
+    a.add(6, 6, 1); // row base (far)
+    a.li(7, 0); // j
+    a.li(8, p.nnz_per_row as i64);
+    a.li(9, 0); // acc
+    a.label("nz");
+    a.slli(10, 7, 4);
+    a.add(10, 10, 6);
+    a.ld64(11, 10, 0); // val (far)
+    a.ld64(12, 10, 8); // col (far)
+    a.slli(12, 12, 3);
+    a.add(12, 12, 2);
+    a.ld64(13, 12, 0); // x[col] (local)
+    a.mul(11, 11, 13);
+    a.add(9, 9, 11);
+    a.addi(7, 7, 1);
+    a.blt(7, 8, "nz");
+    a.slli(10, 4, 3);
+    a.add(10, 10, 3);
+    a.st64(9, 10, 0); // y[r]
+    a.addi(4, 4, 1);
+    a.blt(4, 5, "row");
+    a.roi_end();
+    a.halt();
+    WorkloadSpec {
+        name: "hpcg".into(),
+        prog: a.finish(),
+        setup: Box::new(setup),
+        validate: Box::new(validate),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_amu(
+    cfg: &SimConfig,
+    layout: &mut crate::isa::mem::Layout,
+    p: HpcgParams,
+    mat: u64,
+    xv: u64,
+    yv: u64,
+    setup: impl Fn(&mut crate::sim::Simulator) + 'static,
+    validate: impl Fn(&mut crate::sim::Simulator) -> Result<(), String> + 'static,
+) -> WorkloadSpec {
+    let tasks = p.tasks as u64;
+    let per_task = p.rows / tasks;
+    assert!(per_task >= 1);
+    let nnz = p.nnz_per_row;
+    let (prog, rt) = AmuScaffold::build(
+        "hpcg-amu",
+        layout,
+        cfg,
+        p.tasks,
+        ROW_BLOCK,
+        |a: &mut Asm, rt: &CoroRt| {
+            rt.emit_load_param(a, 10, 0); // first row
+            rt.emit_load_param(a, 11, 1); // spm slot (512 B)
+            a.li(12, per_task as i64);
+            a.label("hp_row");
+            a.li(13, ROW_BLOCK as i64);
+            a.mul(13, 13, 10);
+            a.li(14, mat as i64);
+            a.add(14, 14, 13);
+            a.aload(15, 11, 14);
+            rt.emit_await(a, 15, &[10, 11, 12], "hp_r1");
+            // SpMV inner product from the SPM block, x local.
+            a.li(16, 0); // j
+            a.li(17, nnz as i64);
+            a.li(18, 0); // acc
+            a.li(19, xv as i64);
+            a.label("hp_nz");
+            a.slli(20, 16, 4);
+            a.add(20, 20, 11);
+            a.ld64(21, 20, 0); // val (SPM)
+            a.ld64(22, 20, 8); // col (SPM)
+            a.slli(22, 22, 3);
+            a.add(22, 22, 19);
+            a.ld64(23, 22, 0); // x[col]
+            a.mul(21, 21, 23);
+            a.add(18, 18, 21);
+            a.addi(16, 16, 1);
+            a.blt(16, 17, "hp_nz");
+            a.li(20, yv as i64);
+            a.slli(21, 10, 3);
+            a.add(20, 20, 21);
+            a.st64(18, 20, 0); // y[row] (local)
+            a.addi(10, 10, 1);
+            a.addi(12, 12, -1);
+            a.bne(12, 0, "hp_row");
+            rt.emit_task_finish(a);
+        },
+    );
+    let rt_setup = rt.clone();
+    let prog2 = prog.clone();
+    WorkloadSpec {
+        name: "hpcg".into(),
+        prog,
+        setup: Box::new(move |sim| {
+            setup(sim);
+            rt_setup.write_tcbs(&mut sim.guest, &prog2, "task", |tid| {
+                [tid as u64 * per_task, SPM_BASE + tid as u64 * ROW_BLOCK, 0, 0]
+            });
+        }),
+        validate: Box::new(validate),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_hpcg_validates() {
+        let cfg = SimConfig::baseline().with_far_latency_ns(200.0);
+        build(&cfg, Variant::Sync, Scale::Test).run(&cfg).expect("hpcg sync");
+    }
+
+    #[test]
+    fn amu_hpcg_validates() {
+        let mut cfg = SimConfig::amu().with_far_latency_ns(1000.0);
+        cfg.far.jitter_frac = 0.0;
+        let sim = build(&cfg, Variant::Amu, Scale::Test).run(&cfg).expect("hpcg amu");
+        assert_eq!(sim.asmc.granularity, 512);
+    }
+}

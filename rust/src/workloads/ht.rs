@@ -1,0 +1,395 @@
+//! HT — chained hash table (ASCYLIB-style). Buckets live in local memory;
+//! the 24 B `[key][value][next]` nodes live in far memory. Coroutines run
+//! a 75 % lookup / 25 % insert mix; inserts claim the bucket through the
+//! software disambiguation layer (this is one of Table 5's two workloads).
+//!
+//! Determinism: lookups target only pre-populated keys (insert-at-head
+//! never breaks an existing chain, so they always hit); inserted keys are
+//! unique per (task, op), so the final key set is order-independent.
+
+use super::common::*;
+use crate::config::SimConfig;
+use crate::coro::disambig::DisambigRt;
+use crate::coro::{CoroRt, OFF_PARAM, R_CUR_TCB};
+use crate::isa::mem::SPM_BASE;
+use crate::isa::Asm;
+
+pub struct HtParams {
+    pub buckets: u64, // power of two
+    pub preload: u64,
+    pub tasks: usize,
+    pub ops_per_task: u64,
+}
+
+impl HtParams {
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Test => {
+                Self { buckets: 256, preload: 256, tasks: 32, ops_per_task: 4 }
+            }
+            Scale::Paper => {
+                Self { buckets: 4096, preload: 4096, tasks: 256, ops_per_task: 8 }
+            }
+        }
+    }
+}
+
+const NODE_BYTES: u64 = 24;
+const NODE_STRIDE: u64 = 64;
+
+fn pkey(i: u64) -> u64 {
+    i * 5 + 7
+}
+
+fn bucket_of(key: u64, buckets: u64) -> u64 {
+    host_hash(key.wrapping_mul(0x100_0193)) & (buckets - 1)
+}
+
+/// op o of task t: insert if `host_hash(t*977+o) % 4 == 0`.
+fn op_is_insert(t: u64, o: u64) -> bool {
+    host_hash(t * 977 + o + 55) % 4 == 0
+}
+
+fn lookup_target(t: u64, o: u64, preload: u64) -> u64 {
+    pkey(host_hash(t * 31 + o * 17 + 2) % preload)
+}
+
+#[allow(dead_code)] // host-side mirror of the guest insert-key scheme
+fn insert_key(t: u64, o: u64) -> u64 {
+    // Outside the preload key space (preload keys are ≡ 7 mod 5... i.e.
+    // pkey(i) = 5i+7; choose keys ≡ 3 mod 5 to guarantee uniqueness).
+    (t * 4096 + o) * 5 + 3
+}
+
+struct Model {
+    bucket_base: u64,
+    node_base: u64,
+    pool_base: u64,
+}
+
+pub fn build(cfg: &SimConfig, variant: Variant, scale: Scale) -> WorkloadSpec {
+    let mut p = HtParams::new(scale);
+    p.tasks = default_tasks(cfg, p.tasks);
+    let mut layout = mk_layout(cfg);
+    let m = Model {
+        bucket_base: layout.alloc_local(p.buckets * 8, 64),
+        node_base: layout.alloc_far(p.preload * NODE_STRIDE, 4096),
+        pool_base: layout
+            .alloc_far(p.tasks as u64 * p.ops_per_task * NODE_STRIDE, 4096),
+    };
+    let setup = {
+        let (bb, nb, buckets, preload) = (m.bucket_base, m.node_base, p.buckets, p.preload);
+        move |sim: &mut crate::sim::Simulator| {
+            // Chain preloaded nodes into buckets (host-side build phase).
+            let mut heads = vec![0u64; buckets as usize];
+            for i in 0..preload {
+                let key = pkey(i);
+                let b = bucket_of(key, buckets) as usize;
+                let addr = nb + i * NODE_STRIDE;
+                sim.guest.write_u64(addr, key);
+                sim.guest.write_u64(addr + 8, key.wrapping_mul(3));
+                sim.guest.write_u64(addr + 16, heads[b]);
+                heads[b] = addr;
+            }
+            for (b, h) in heads.iter().enumerate() {
+                sim.guest.write_u64(bb + b as u64 * 8, *h);
+            }
+        }
+    };
+    match variant {
+        Variant::Amu | Variant::AmuLlvm => build_amu(cfg, &mut layout, p, m, setup),
+        _ => build_sync(p, m, setup),
+    }
+}
+
+/// Expected per-task sum of looked-up values.
+fn expected_task_sum(t: u64, p: &HtParams) -> u64 {
+    let mut sum = 0u64;
+    for o in 0..p.ops_per_task {
+        if !op_is_insert(t, o) {
+            let key = lookup_target(t, o, p.preload);
+            sum = sum.wrapping_add(key.wrapping_mul(3));
+        }
+    }
+    sum
+}
+
+fn total_inserts(p: &HtParams) -> u64 {
+    (0..p.tasks as u64)
+        .map(|t| (0..p.ops_per_task).filter(|&o| op_is_insert(t, o)).count() as u64)
+        .sum()
+}
+
+/// Walk all chains and check key population (shared by both variants).
+fn validate_structure(
+    sim: &mut crate::sim::Simulator,
+    p: &HtParams,
+    m_bucket_base: u64,
+) -> Result<(), String> {
+    let mut found = 0u64;
+    for b in 0..p.buckets {
+        let mut cur = sim.guest.read_u64(m_bucket_base + b * 8);
+        let mut hops = 0;
+        while cur != 0 {
+            found += 1;
+            hops += 1;
+            if hops > p.preload + 100_000 {
+                return Err(format!("cycle in bucket {b}"));
+            }
+            cur = sim.guest.read_u64(cur + 16);
+        }
+    }
+    let want = p.preload + total_inserts(p);
+    if found == want {
+        Ok(())
+    } else {
+        Err(format!("node count {found} != {want} (lost inserts)"))
+    }
+}
+
+fn emit_key_gen(a: &mut Asm, tid: u8, op: u8, p: &HtParams) {
+    // r30 = is_insert, r31 = key. Clobbers r28/r29.
+    // is_insert = hash(t*977+o+55) % 4 == 0
+    a.li(28, 977);
+    a.mul(28, tid, 28);
+    a.add(28, 28, op);
+    a.addi(28, 28, 55);
+    emit_hash(a, 29, 28, 30);
+    a.andi(30, 29, 3);
+    a.li(28, 1);
+    a.sltu(30, 30, 28); // r30 = 1 iff (h & 3) == 0 -> insert
+    // lookup key = pkey(hash(t*31+o*17+2) % preload)
+    a.li(28, 31);
+    a.mul(28, tid, 28);
+    a.li(29, 17);
+    a.mul(29, op, 29);
+    a.add(28, 28, 29);
+    a.addi(28, 28, 2);
+    emit_hash(a, 31, 28, 29);
+    a.li(29, (p.preload - 1) as i64);
+    // preload is a power of two at both scales.
+    debug_assert!(p.preload.is_power_of_two());
+    a.and(31, 31, 29);
+    a.li(29, 5);
+    a.mul(31, 31, 29);
+    a.addi(31, 31, 7); // pkey
+    // if insert: key = (t*4096+o)*5+3
+    a.beq(30, 0, "keygen_done");
+    a.slli(31, tid, 12);
+    a.add(31, 31, op);
+    a.li(29, 5);
+    a.mul(31, 31, 29);
+    a.addi(31, 31, 3);
+    a.label("keygen_done");
+}
+
+fn build_sync(p: HtParams, m: Model, setup: impl Fn(&mut crate::sim::Simulator) + 'static) -> WorkloadSpec {
+    let mut a = Asm::new("ht-sync");
+    let (bb, pool) = (m.bucket_base, m.pool_base);
+    a.li(4, 0); // sum
+    a.li(20, 0); // tid
+    a.li(21, p.tasks as i64);
+    a.roi_begin();
+    a.label("t_loop");
+    a.li(22, 0); // op
+    a.li(23, p.ops_per_task as i64);
+    a.label("o_loop");
+    emit_key_gen(&mut a, 20, 22, &p);
+    // bucket addr -> r26
+    a.li(26, 0x100_0193);
+    a.mul(26, 31, 26);
+    emit_hash(&mut a, 27, 26, 25);
+    a.li(25, (p.buckets - 1) as i64);
+    a.and(27, 27, 25);
+    a.slli(27, 27, 3);
+    a.li(26, bb as i64);
+    a.add(26, 26, 27); // bucket addr
+    a.bne(30, 0, "insert");
+    // Lookup: walk chain with sync far loads.
+    a.ld64(8, 26, 0);
+    a.label("walk");
+    a.beq(8, 0, "op_done"); // (pre-populated keys always hit)
+    a.ld64(9, 8, 0);
+    a.beq(9, 31, "hit");
+    a.ld64(8, 8, 16);
+    a.j("walk");
+    a.label("hit");
+    a.ld64(10, 8, 8);
+    a.add(4, 4, 10);
+    a.j("op_done");
+    // Insert: node = pool + (tid*ops + op)*64; write node; push head.
+    a.label("insert");
+    a.li(9, p.ops_per_task as i64);
+    a.mul(9, 20, 9);
+    a.add(9, 9, 22);
+    a.slli(9, 9, 6);
+    a.li(10, pool as i64);
+    a.add(9, 9, 10); // node addr
+    a.st64(31, 9, 0); // key
+    a.li(10, 999);
+    a.st64(10, 9, 8); // value
+    a.ld64(10, 26, 0); // head
+    a.st64(10, 9, 16); // next
+    a.st64(9, 26, 0); // head = node
+    a.label("op_done");
+    a.addi(22, 22, 1);
+    a.blt(22, 23, "o_loop");
+    a.addi(20, 20, 1);
+    a.blt(20, 21, "t_loop");
+    a.roi_end();
+    a.li(14, crate::isa::mem::LOCAL_BASE as i64);
+    a.st64(4, 14, 0);
+    a.halt();
+    let prog = a.finish();
+    let expected: u64 = (0..p.tasks as u64)
+        .map(|t| expected_task_sum(t, &p))
+        .fold(0u64, |x, y| x.wrapping_add(y));
+    let bb2 = m.bucket_base;
+    WorkloadSpec {
+        name: "ht".into(),
+        prog,
+        setup: Box::new(setup),
+        validate: Box::new(move |sim| {
+            let got = sim.guest.read_u64(crate::isa::mem::LOCAL_BASE);
+            if got != expected {
+                return Err(format!("sum {got} != {expected}"));
+            }
+            validate_structure(sim, &p, bb2)
+        }),
+    }
+}
+
+fn build_amu(
+    cfg: &SimConfig,
+    layout: &mut crate::isa::mem::Layout,
+    p: HtParams,
+    m: Model,
+    setup: impl Fn(&mut crate::sim::Simulator) + 'static,
+) -> WorkloadSpec {
+    let dis = DisambigRt::new(layout, (p.tasks as u64 * 16).next_power_of_two());
+    let (bb, pool) = (m.bucket_base, m.pool_base);
+    let ops = p.ops_per_task;
+    let pc = p.clone_for_emit();
+    let (prog, rt) = AmuScaffold::build(
+        "ht-amu",
+        layout,
+        cfg,
+        p.tasks,
+        NODE_BYTES,
+        |a: &mut Asm, rt: &CoroRt| {
+            rt.emit_load_param(a, 10, 0); // tid
+            rt.emit_load_param(a, 11, 1); // spm slot
+            a.li(12, 0); // op
+            a.li(13, 0); // sum
+            a.label("h_oloop");
+            emit_key_gen(a, 10, 12, &pc); // r30 = is_insert, r31 = key
+            // bucket addr -> r18
+            a.li(18, 0x100_0193);
+            a.mul(18, 31, 18);
+            emit_hash(a, 19, 18, 17);
+            a.li(17, (pc.buckets - 1) as i64);
+            a.and(19, 19, 17);
+            a.slli(19, 19, 3);
+            a.li(18, bb as i64);
+            a.add(18, 18, 19); // bucket addr (local)
+            a.bne(30, 0, "h_insert");
+            // --- lookup ---
+            a.ld64(15, 18, 0); // head (local)
+            a.label("h_walk");
+            a.beq(15, 0, "h_opdone");
+            a.aload(16, 11, 15);
+            rt.emit_await(a, 16, &[10, 11, 12, 13, 15, 31], "h_r1");
+            a.ld64(17, 11, 0);
+            a.beq(17, 31, "h_hit");
+            a.ld64(15, 11, 16);
+            a.j("h_walk");
+            a.label("h_hit");
+            a.ld64(17, 11, 8);
+            a.add(13, 13, 17);
+            a.j("h_opdone");
+            // --- insert (bucket claimed via disambiguation) ---
+            a.label("h_insert");
+            dis.emit_start_access(rt, a, 18, 14, &[10, 11, 12, 13, 14, 18, 31]);
+            // node addr = pool + (tid*ops + op)*64
+            a.li(15, ops as i64);
+            a.mul(15, 10, 15);
+            a.add(15, 15, 12);
+            a.slli(15, 15, 6);
+            a.li(16, pool as i64);
+            a.add(15, 15, 16);
+            // build node in SPM
+            a.st64(31, 11, 0);
+            a.li(16, 999);
+            a.st64(16, 11, 8);
+            a.ld64(16, 18, 0); // head (local, claimed)
+            a.st64(16, 11, 16);
+            a.astore(17, 11, 15);
+            rt.emit_await(a, 17, &[10, 11, 12, 13, 14, 15, 18], "h_r2");
+            a.st64(15, 18, 0); // publish new head
+            dis.emit_end_access(rt, a, 14);
+            a.label("h_opdone");
+            a.addi(12, 12, 1);
+            a.li(17, ops as i64);
+            a.blt(12, 17, "h_oloop");
+            a.st64(13, R_CUR_TCB, OFF_PARAM + 24);
+            rt.emit_task_finish(a);
+        },
+    );
+    let rt_setup = rt.clone();
+    let rt_check = rt.clone();
+    let prog2 = prog.clone();
+    let expected: Vec<u64> =
+        (0..p.tasks as u64).map(|t| expected_task_sum(t, &p)).collect();
+    let bb2 = m.bucket_base;
+    WorkloadSpec {
+        name: "ht".into(),
+        prog,
+        setup: Box::new(move |sim| {
+            setup(sim);
+            rt_setup.write_tcbs(&mut sim.guest, &prog2, "task", |tid| {
+                [tid as u64, SPM_BASE + tid as u64 * 64, 0, 0]
+            });
+        }),
+        validate: Box::new(move |sim| {
+            for (tid, want) in expected.iter().enumerate() {
+                let got =
+                    sim.guest.read_u64(rt_check.tcb_addr(tid) + OFF_PARAM as u64 + 24);
+                if got != *want {
+                    return Err(format!("task {tid}: sum {got} != {want}"));
+                }
+            }
+            validate_structure(sim, &p, bb2)
+        }),
+    }
+}
+
+impl HtParams {
+    fn clone_for_emit(&self) -> HtParams {
+        HtParams {
+            buckets: self.buckets,
+            preload: self.preload,
+            tasks: self.tasks,
+            ops_per_task: self.ops_per_task,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_ht_validates() {
+        let cfg = SimConfig::baseline().with_far_latency_ns(200.0);
+        build(&cfg, Variant::Sync, Scale::Test).run(&cfg).expect("ht sync");
+    }
+
+    #[test]
+    fn amu_ht_validates_with_disambiguation() {
+        let mut cfg = SimConfig::amu().with_far_latency_ns(500.0);
+        cfg.far.jitter_frac = 0.0;
+        let sim = build(&cfg, Variant::Amu, Scale::Test).run(&cfg).expect("ht amu");
+        let frac = sim.stats.region_fraction(crate::stats::Region::Disambig);
+        assert!(frac > 0.0, "disambiguation work must be attributed");
+    }
+}

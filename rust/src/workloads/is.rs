@@ -1,0 +1,351 @@
+//! IS — NAS Parallel Benchmarks Integer Sort (counting sort / bucket
+//! ranking). Keys live in far memory; the histogram is local. The AMU
+//! port streams keys through the SPM in 512 B blocks (the paper evaluates
+//! IS for large-granularity benefit), then scatters ranked keys back with
+//! 8 B writes — switching the granularity config register between phases.
+
+use super::common::*;
+use crate::config::SimConfig;
+use crate::coro::CoroRt;
+use crate::isa::mem::SPM_BASE;
+use crate::isa::{Asm, CfgReg};
+
+pub struct IsParams {
+    pub keys: u64,
+    pub key_range: u64, // power of two
+    pub tasks: usize,
+}
+
+impl IsParams {
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Test => Self { keys: 4096, key_range: 512, tasks: 16 },
+            Scale::Paper => Self { keys: 65536, key_range: 1024, tasks: 64 },
+        }
+    }
+}
+
+fn key_at(i: u64, range: u64) -> u64 {
+    host_hash(i ^ 0x15) & (range - 1)
+}
+
+pub fn build(cfg: &SimConfig, variant: Variant, scale: Scale) -> WorkloadSpec {
+    let mut p = IsParams::new(scale);
+    p.tasks = default_tasks(cfg, p.tasks);
+    let mut layout = mk_layout(cfg);
+    let keys = layout.alloc_far(p.keys * 8, 4096);
+    let out = layout.alloc_far(p.keys * 8, 4096);
+    let hist = layout.alloc_local(p.key_range * 8, 64);
+    let setup = {
+        let (keys, n, range) = (keys, p.keys, p.key_range);
+        move |sim: &mut crate::sim::Simulator| {
+            for i in 0..n {
+                sim.guest.write_u64(keys + i * 8, key_at(i, range));
+            }
+        }
+    };
+    let validate = {
+        let (out, n) = (out, p.keys);
+        move |sim: &mut crate::sim::Simulator| -> Result<(), String> {
+            let mut prev = 0u64;
+            for i in 0..n {
+                let v = sim.guest.read_u64(out + i * 8);
+                if v < prev {
+                    return Err(format!("out[{i}] = {v} < out[{}] = {prev}", i - 1));
+                }
+                prev = v;
+            }
+            Ok(())
+        }
+    };
+    match variant {
+        Variant::Amu | Variant::AmuLlvm => {
+            build_amu(cfg, &mut layout, p, keys, out, hist, setup, validate)
+        }
+        _ => build_sync(p, keys, out, hist, setup, validate),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_sync(
+    p: IsParams,
+    keys: u64,
+    out: u64,
+    hist: u64,
+    setup: impl Fn(&mut crate::sim::Simulator) + 'static,
+    validate: impl Fn(&mut crate::sim::Simulator) -> Result<(), String> + 'static,
+) -> WorkloadSpec {
+    let mut a = Asm::new("is-sync");
+    a.roi_begin();
+    // Phase 1: histogram.
+    a.li(1, keys as i64);
+    a.li(2, hist as i64);
+    a.li(3, 0);
+    a.li(4, p.keys as i64);
+    a.label("count");
+    a.slli(5, 3, 3);
+    a.add(5, 5, 1);
+    a.ld64(6, 5, 0); // key (far)
+    a.slli(6, 6, 3);
+    a.add(6, 6, 2);
+    a.ld64(7, 6, 0);
+    a.addi(7, 7, 1);
+    a.st64(7, 6, 0);
+    a.addi(3, 3, 1);
+    a.blt(3, 4, "count");
+    // Phase 2: exclusive prefix sum -> start offsets.
+    a.li(3, 0);
+    a.li(8, 0); // running
+    a.li(4, p.key_range as i64);
+    a.label("scan");
+    a.slli(5, 3, 3);
+    a.add(5, 5, 2);
+    a.ld64(6, 5, 0);
+    a.st64(8, 5, 0);
+    a.add(8, 8, 6);
+    a.addi(3, 3, 1);
+    a.blt(3, 4, "scan");
+    // Phase 3: permute.
+    a.li(3, 0);
+    a.li(4, p.keys as i64);
+    a.li(9, out as i64);
+    a.label("permute");
+    a.slli(5, 3, 3);
+    a.add(5, 5, 1);
+    a.ld64(6, 5, 0); // key
+    a.slli(7, 6, 3);
+    a.add(7, 7, 2);
+    a.ld64(8, 7, 0); // rank
+    a.addi(10, 8, 1);
+    a.st64(10, 7, 0);
+    a.slli(8, 8, 3);
+    a.add(8, 8, 9);
+    a.st64(6, 8, 0); // out[rank] = key (far store)
+    a.addi(3, 3, 1);
+    a.blt(3, 4, "permute");
+    a.roi_end();
+    a.halt();
+    WorkloadSpec {
+        name: "is".into(),
+        prog: a.finish(),
+        setup: Box::new(setup),
+        validate: Box::new(validate),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_amu(
+    cfg: &SimConfig,
+    layout: &mut crate::isa::mem::Layout,
+    p: IsParams,
+    keys: u64,
+    out: u64,
+    hist: u64,
+    setup: impl Fn(&mut crate::sim::Simulator) + 'static,
+    validate: impl Fn(&mut crate::sim::Simulator) -> Result<(), String> + 'static,
+) -> WorkloadSpec {
+    const BLOCK_WORDS: u64 = 64; // 512 B
+    let tasks = p.tasks as u64;
+    let blocks = p.keys / BLOCK_WORDS;
+    let per_task_blocks = blocks / tasks;
+    let per_task_keys = p.keys / tasks;
+    assert!(per_task_blocks >= 1);
+    // Three task generations (reset like BFS): 0 = histogram (512 B reads),
+    // 1 = rank computation into a local staging array (512 B reads),
+    // 2 = ranked scatter (8 B writes). The granularity register is switched
+    // only between generations, when no requests are in flight.
+    let rt = CoroRt::new(layout, p.tasks, cfg.amu.queue_length);
+    let phase_cell = layout.alloc_local(8, 8);
+    let staging = layout.alloc_local(p.keys * 16, 64); // [key][rank] pairs
+
+    let mut a = Asm::new("is-amu");
+    a.li(1, 512);
+    a.cfgwr(1, CfgReg::Granularity);
+    rt.emit_prologue(&mut a);
+    a.roi_begin();
+    a.j("sched");
+
+    // ---- task: dispatch on phase ----
+    a.label("task");
+    a.li(20, phase_cell as i64);
+    a.ld64(20, 20, 0);
+    a.li(21, 1);
+    a.beq(20, 21, "task_rank");
+    a.bne(20, 0, "task_scatter");
+    // Phase 0: histogram over this task's block range.
+    rt.emit_load_param(&mut a, 10, 0); // first block
+    rt.emit_load_param(&mut a, 11, 1); // spm slot
+    a.li(12, per_task_blocks as i64);
+    a.label("c_loop");
+    a.li(13, (BLOCK_WORDS * 8) as i64);
+    a.mul(13, 13, 10);
+    a.li(14, keys as i64);
+    a.add(14, 14, 13);
+    a.aload(15, 11, 14);
+    rt.emit_await(&mut a, 15, &[10, 11, 12], "c_r1");
+    a.li(16, 0);
+    a.li(17, BLOCK_WORDS as i64);
+    a.li(18, hist as i64);
+    a.label("c_kloop");
+    a.slli(19, 16, 3);
+    a.add(19, 19, 11);
+    a.ld64(21, 19, 0);
+    a.slli(21, 21, 3);
+    a.add(21, 21, 18);
+    a.ld64(22, 21, 0);
+    a.addi(22, 22, 1);
+    a.st64(22, 21, 0);
+    a.addi(16, 16, 1);
+    a.blt(16, 17, "c_kloop");
+    a.addi(10, 10, 1);
+    a.addi(12, 12, -1);
+    a.bne(12, 0, "c_loop");
+    rt.emit_task_finish(&mut a);
+
+    // Phase 1: re-stream blocks, allocate ranks, stage [key][rank] locally.
+    a.label("task_rank");
+    rt.emit_load_param(&mut a, 10, 0);
+    rt.emit_load_param(&mut a, 11, 1);
+    a.li(12, per_task_blocks as i64);
+    a.label("r_loop");
+    a.li(13, (BLOCK_WORDS * 8) as i64);
+    a.mul(13, 13, 10);
+    a.li(14, keys as i64);
+    a.add(14, 14, 13);
+    a.aload(15, 11, 14);
+    rt.emit_await(&mut a, 15, &[10, 11, 12], "r_r1");
+    a.li(16, 0);
+    a.li(17, BLOCK_WORDS as i64);
+    a.label("r_kloop");
+    a.slli(19, 16, 3);
+    a.add(19, 19, 11);
+    a.ld64(21, 19, 0); // key
+    a.li(18, hist as i64);
+    a.slli(22, 21, 3);
+    a.add(22, 22, 18);
+    a.ld64(23, 22, 0); // rank
+    a.addi(24, 23, 1);
+    a.st64(24, 22, 0);
+    // staging[block*64 + k] = (key, rank)
+    a.li(25, BLOCK_WORDS as i64);
+    a.mul(25, 25, 10);
+    a.add(25, 25, 16);
+    a.slli(25, 25, 4);
+    a.li(26, staging as i64);
+    a.add(25, 25, 26);
+    a.st64(21, 25, 0);
+    a.st64(23, 25, 8);
+    a.addi(16, 16, 1);
+    a.blt(16, 17, "r_kloop");
+    a.addi(10, 10, 1);
+    a.addi(12, 12, -1);
+    a.bne(12, 0, "r_loop");
+    rt.emit_task_finish(&mut a);
+
+    // Phase 2: ranked scatter at 8 B granularity from the staging array.
+    a.label("task_scatter");
+    rt.emit_load_param(&mut a, 10, 2); // first key index
+    rt.emit_load_param(&mut a, 11, 1); // spm slot (staging word at +512)
+    a.li(12, per_task_keys as i64);
+    a.addi(13, 11, 512);
+    a.label("x_loop");
+    a.slli(14, 10, 4);
+    a.li(15, staging as i64);
+    a.add(14, 14, 15);
+    a.ld64(16, 14, 0); // key
+    a.ld64(17, 14, 8); // rank
+    a.st64(16, 13, 0); // SPM staging word
+    a.li(18, out as i64);
+    a.slli(17, 17, 3);
+    a.add(18, 18, 17);
+    a.astore(19, 13, 18);
+    rt.emit_await(&mut a, 19, &[10, 11, 12, 13], "x_r1");
+    a.addi(10, 10, 1);
+    a.addi(12, 12, -1);
+    a.bne(12, 0, "x_loop");
+    rt.emit_task_finish(&mut a);
+
+    a.label("sched");
+    rt.emit_scheduler(&mut a, "phase_end");
+    a.label("phase_end");
+    a.li(20, phase_cell as i64);
+    a.ld64(21, 20, 0);
+    a.li(22, 2);
+    a.beq(21, 22, "all_done");
+    a.bne(21, 0, "to_phase2");
+    // After phase 0: exclusive scan of the histogram (serial, local).
+    a.li(3, 0);
+    a.li(8, 0);
+    a.li(4, p.key_range as i64);
+    a.li(2, hist as i64);
+    a.label("scan");
+    a.slli(5, 3, 3);
+    a.add(5, 5, 2);
+    a.ld64(6, 5, 0);
+    a.st64(8, 5, 0);
+    a.add(8, 8, 6);
+    a.addi(3, 3, 1);
+    a.blt(3, 4, "scan");
+    a.li(21, 1);
+    a.st64(21, 20, 0);
+    a.j("reset_pool");
+    a.label("to_phase2");
+    a.li(21, 2);
+    a.st64(21, 20, 0);
+    a.li(22, 8); // scatter granularity
+    a.cfgwr(22, CfgReg::Granularity);
+    a.label("reset_pool");
+    a.li(crate::coro::R_SPAWN, 0);
+    a.li(crate::coro::R_FINISHED, 0);
+    a.li(22, 0);
+    a.li_label(23, "task");
+    a.label("reset_loop");
+    a.slli(24, 22, crate::coro::TCB_SHIFT as i64);
+    a.add(24, 24, crate::coro::R_TCB_BASE);
+    a.st64(23, 24, 0);
+    a.addi(22, 22, 1);
+    a.blt(22, crate::coro::R_NTASKS, "reset_loop");
+    a.j("co_dispatch");
+    a.label("all_done");
+    a.roi_end();
+    a.halt();
+    let prog = a.finish();
+
+    let rt_setup = rt.clone();
+    let prog2 = prog.clone();
+    WorkloadSpec {
+        name: "is".into(),
+        prog,
+        setup: Box::new(move |sim| {
+            setup(sim);
+            rt_setup.write_tcbs(&mut sim.guest, &prog2, "task", |tid| {
+                [
+                    tid as u64 * per_task_blocks,
+                    SPM_BASE + tid as u64 * (512 + 64),
+                    tid as u64 * per_task_keys,
+                    0,
+                ]
+            });
+        }),
+        validate: Box::new(validate),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_is_sorts() {
+        let cfg = SimConfig::baseline().with_far_latency_ns(200.0);
+        build(&cfg, Variant::Sync, Scale::Test).run(&cfg).expect("is sync");
+    }
+
+    #[test]
+    fn amu_is_sorts() {
+        let mut cfg = SimConfig::amu().with_far_latency_ns(500.0);
+        cfg.far.jitter_frac = 0.0;
+        let sim = build(&cfg, Variant::Amu, Scale::Test).run(&cfg).expect("is amu");
+        assert!(sim.stats.amu_subrequests > 0);
+    }
+}

@@ -1,0 +1,256 @@
+//! LL — hand-over-hand linked-list lookup (Herlihy & Shavit) over a far
+//! memory list. Nodes are 24 B `[key][value][next]`, placed in *shuffled*
+//! order so traversal is a genuine pointer chase with zero spatial
+//! locality. Each coroutine looks up keys in a sorted singly-linked list.
+
+use super::common::*;
+use crate::config::SimConfig;
+use crate::coro::{CoroRt, OFF_PARAM, R_CUR_TCB};
+use crate::isa::mem::SPM_BASE;
+use crate::isa::Asm;
+use crate::util::prng::Xoshiro256;
+
+pub struct LlParams {
+    pub nodes: u64,
+    pub tasks: usize,
+    pub lookups_per_task: u64,
+}
+
+impl LlParams {
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Test => Self { nodes: 48, tasks: 32, lookups_per_task: 1 },
+            Scale::Paper => Self { nodes: 192, tasks: 256, lookups_per_task: 2 },
+        }
+    }
+}
+
+const NODE_BYTES: u64 = 24;
+
+/// Node i (in key order) has key 3*i+1, value i*31. Placement shuffled.
+struct ListModel {
+    head_addr: u64,
+    addrs: Vec<u64>, // key-order index -> node addr
+}
+
+fn build_list_model(base: u64, p: &LlParams, seed: u64) -> ListModel {
+    let mut rng = Xoshiro256::new(seed);
+    let perm = rng.permutation(p.nodes as usize);
+    let addrs: Vec<u64> = (0..p.nodes).map(|i| base + perm[i as usize] * 64).collect();
+    ListModel { head_addr: addrs[0], addrs }
+}
+
+pub fn build(cfg: &SimConfig, variant: Variant, scale: Scale) -> WorkloadSpec {
+    let mut p = LlParams::new(scale);
+    p.tasks = default_tasks(cfg, p.tasks);
+    let mut layout = mk_layout(cfg);
+    let base = layout.alloc_far(p.nodes * 64, 4096);
+    let model = build_list_model(base, &p, 77);
+    let head = model.head_addr;
+    let setup_list = {
+        let addrs = model.addrs.clone();
+        let nodes = p.nodes;
+        move |sim: &mut crate::sim::Simulator| {
+            for i in 0..nodes {
+                let a = addrs[i as usize];
+                sim.guest.write_u64(a, 3 * i + 1); // key
+                sim.guest.write_u64(a + 8, i.wrapping_mul(31)); // value
+                let next = if i + 1 < nodes { addrs[i as usize + 1] } else { 0 };
+                sim.guest.write_u64(a + 16, next);
+            }
+        }
+    };
+    match variant {
+        Variant::Amu | Variant::AmuLlvm => build_amu(cfg, &mut layout, p, head, setup_list),
+        _ => build_sync(p, head, setup_list),
+    }
+}
+
+fn build_sync(
+    p: LlParams,
+    head: u64,
+    setup_list: impl Fn(&mut crate::sim::Simulator) + 'static,
+) -> WorkloadSpec {
+    let mut a = Asm::new("ll-sync");
+    a.li(4, 0); // sum
+    a.li(20, 0); // tid
+    a.li(21, p.tasks as i64);
+    a.roi_begin();
+    a.label("t_loop");
+    a.li(22, 0); // k
+    a.li(23, p.lookups_per_task as i64);
+    a.label("k_loop");
+    a.li(5, 131);
+    a.mul(5, 20, 5);
+    a.li(6, 7);
+    a.mul(6, 22, 6);
+    a.add(5, 5, 6);
+    a.addi(5, 5, 3);
+    emit_hash(&mut a, 6, 5, 7);
+    // key = h % 3N (modulo by repeated subtract is too slow; use the same
+    // trick as the host: h % m via h - (h/m)*m is unavailable without div,
+    // so the host precomputes: key space must be power-of-two-free. Use
+    // multiplicative range reduction: key = (h >> 32) * 3N >> 32.
+    a.srli(6, 6, 32);
+    a.li(7, (3 * p.nodes) as i64);
+    a.mul(6, 6, 7);
+    a.srli(6, 6, 32); // key in [0, 3N)
+    // walk the list
+    a.li(8, head as i64);
+    a.label("walk");
+    a.beq(8, 0, "miss");
+    a.ld64(9, 8, 0); // key
+    a.beq(9, 6, "hit");
+    a.bltu(6, 9, "miss"); // sorted: passed it
+    a.ld64(8, 8, 16); // next
+    a.j("walk");
+    a.label("hit");
+    a.ld64(10, 8, 8);
+    a.add(4, 4, 10);
+    a.label("miss");
+    a.addi(22, 22, 1);
+    a.blt(22, 23, "k_loop");
+    a.addi(20, 20, 1);
+    a.blt(20, 21, "t_loop");
+    a.roi_end();
+    a.li(14, crate::isa::mem::LOCAL_BASE as i64);
+    a.st64(4, 14, 0);
+    a.halt();
+    let prog = a.finish();
+    // Host model must use the same range reduction.
+    let expected: u64 = (0..p.tasks as u64)
+        .map(|t| expected_task_sum_mulred(t, &p))
+        .fold(0u64, |x, y| x.wrapping_add(y));
+    WorkloadSpec {
+        name: "ll".into(),
+        prog,
+        setup: Box::new(setup_list),
+        validate: Box::new(move |sim| {
+            let got = sim.guest.read_u64(crate::isa::mem::LOCAL_BASE);
+            if got == expected {
+                Ok(())
+            } else {
+                Err(format!("sum {got} != expected {expected}"))
+            }
+        }),
+    }
+}
+
+/// Host mirror of the guest's multiplicative range reduction.
+fn mulred_key(tid: u64, k: u64, nodes: u64) -> u64 {
+    let h = host_hash(tid * 131 + k * 7 + 3);
+    ((h >> 32) * (3 * nodes)) >> 32
+}
+
+fn expected_task_sum_mulred(tid: u64, p: &LlParams) -> u64 {
+    let mut sum = 0u64;
+    for k in 0..p.lookups_per_task {
+        let key = mulred_key(tid, k, p.nodes);
+        if key % 3 == 1 {
+            let i = key / 3;
+            if i < p.nodes {
+                sum = sum.wrapping_add(i.wrapping_mul(31));
+            }
+        }
+    }
+    sum
+}
+
+fn build_amu(
+    cfg: &SimConfig,
+    layout: &mut crate::isa::mem::Layout,
+    p: LlParams,
+    head: u64,
+    setup_list: impl Fn(&mut crate::sim::Simulator) + 'static,
+) -> WorkloadSpec {
+    let nodes = p.nodes;
+    let per_task = p.lookups_per_task;
+    let (prog, rt) = AmuScaffold::build(
+        "ll-amu",
+        layout,
+        cfg,
+        p.tasks,
+        NODE_BYTES,
+        |a: &mut Asm, rt: &CoroRt| {
+            rt.emit_load_param(a, 10, 0); // tid
+            rt.emit_load_param(a, 11, 1); // spm slot
+            a.li(12, 0); // k
+            a.li(13, 0); // sum
+            a.label("l_kloop");
+            a.li(5, 131);
+            a.mul(5, 10, 5);
+            a.li(6, 7);
+            a.mul(6, 12, 6);
+            a.add(5, 5, 6);
+            a.addi(5, 5, 3);
+            emit_hash(a, 14, 5, 15);
+            a.srli(14, 14, 32);
+            a.li(15, (3 * nodes) as i64);
+            a.mul(14, 14, 15);
+            a.srli(14, 14, 32); // key
+            a.li(15, head as i64); // cur node far addr
+            a.label("l_walk");
+            a.beq(15, 0, "l_miss");
+            a.aload(16, 11, 15);
+            rt.emit_await(a, 16, &[10, 11, 12, 13, 14, 15], "l_r1");
+            a.ld64(17, 11, 0); // key
+            a.beq(17, 14, "l_hit");
+            a.bltu(14, 17, "l_miss");
+            a.ld64(15, 11, 16); // next
+            a.j("l_walk");
+            a.label("l_hit");
+            a.ld64(17, 11, 8);
+            a.add(13, 13, 17);
+            a.label("l_miss");
+            a.addi(12, 12, 1);
+            a.li(17, per_task as i64);
+            a.blt(12, 17, "l_kloop");
+            a.st64(13, R_CUR_TCB, OFF_PARAM + 24);
+            rt.emit_task_finish(a);
+        },
+    );
+    let rt_setup = rt.clone();
+    let rt_check = rt.clone();
+    let prog2 = prog.clone();
+    let expected: Vec<u64> =
+        (0..p.tasks as u64).map(|t| expected_task_sum_mulred(t, &p)).collect();
+    WorkloadSpec {
+        name: "ll".into(),
+        prog,
+        setup: Box::new(move |sim| {
+            setup_list(sim);
+            rt_setup.write_tcbs(&mut sim.guest, &prog2, "task", |tid| {
+                [tid as u64, SPM_BASE + tid as u64 * 64, 0, 0]
+            });
+        }),
+        validate: Box::new(move |sim| {
+            for (tid, want) in expected.iter().enumerate() {
+                let got =
+                    sim.guest.read_u64(rt_check.tcb_addr(tid) + OFF_PARAM as u64 + 24);
+                if got != *want {
+                    return Err(format!("task {tid}: sum {got} != {want}"));
+                }
+            }
+            Ok(())
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_ll_validates() {
+        let cfg = SimConfig::baseline().with_far_latency_ns(200.0);
+        build(&cfg, Variant::Sync, Scale::Test).run(&cfg).expect("ll sync");
+    }
+
+    #[test]
+    fn amu_ll_validates_and_overlaps() {
+        let mut cfg = SimConfig::amu().with_far_latency_ns(1000.0);
+        cfg.far.jitter_frac = 0.0;
+        let sim = build(&cfg, Variant::Amu, Scale::Test).run(&cfg).expect("ll amu");
+        assert!(sim.stats.far_inflight.max >= 8, "MLP {}", sim.stats.far_inflight.max);
+    }
+}

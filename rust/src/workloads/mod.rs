@@ -1,0 +1,90 @@
+//! The paper's Table 3 benchmark suite: build any benchmark in any variant
+//! at test or paper scale.
+
+pub mod bfs;
+pub mod bs;
+pub mod common;
+pub mod gups;
+pub mod hj;
+pub mod hpcg;
+pub mod ht;
+pub mod is;
+pub mod ll;
+pub mod redis;
+pub mod sl;
+pub mod stream;
+
+pub use common::{Scale, Variant, WorkloadSpec};
+
+use crate::config::SimConfig;
+
+/// All Table 3 benchmark names, in the paper's order.
+pub const ALL: &[&str] =
+    &["bfs", "bs", "gups", "hj", "ht", "hpcg", "is", "ll", "redis", "sl", "stream"];
+
+/// The memory-bound subset used in Fig 2 style motivation sweeps.
+pub const MEMORY_BOUND: &[&str] = &["gups", "bs", "ll", "ht", "bfs"];
+
+/// Build benchmark `name` in `variant` at `scale`. Panics on unknown name.
+pub fn build(name: &str, cfg: &SimConfig, variant: Variant, scale: Scale) -> WorkloadSpec {
+    match name {
+        "bfs" => bfs::build(cfg, variant, scale),
+        "bs" => bs::build(cfg, variant, scale),
+        "gups" => gups::build(cfg, variant, scale),
+        "hj" => hj::build(cfg, variant, scale),
+        "hpcg" => hpcg::build(cfg, variant, scale),
+        "ht" => ht::build(cfg, variant, scale),
+        "is" => is::build(cfg, variant, scale),
+        "ll" => ll::build(cfg, variant, scale),
+        "redis" => redis::build(cfg, variant, scale),
+        "sl" => sl::build(cfg, variant, scale),
+        "stream" => stream::build(cfg, variant, scale),
+        _ => panic!("unknown benchmark '{name}' (known: {ALL:?})"),
+    }
+}
+
+/// Pick the natural variant for a configuration: AMU configs run the
+/// coroutine ports, everything else runs the synchronous code.
+pub fn variant_for(cfg: &SimConfig) -> Variant {
+    if cfg.amu.enabled {
+        Variant::Amu
+    } else {
+        Variant::Sync
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_every_benchmark_sync() {
+        let cfg = SimConfig::baseline();
+        for name in ALL {
+            let spec = build(name, &cfg, Variant::Sync, Scale::Test);
+            assert!(!spec.prog.is_empty(), "{name} produced an empty program");
+        }
+    }
+
+    #[test]
+    fn registry_builds_every_benchmark_amu() {
+        let cfg = SimConfig::amu();
+        for name in ALL {
+            let spec = build(name, &cfg, Variant::Amu, Scale::Test);
+            assert!(!spec.prog.is_empty(), "{name} produced an empty program");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown benchmark")]
+    fn unknown_name_panics() {
+        build("nope", &SimConfig::baseline(), Variant::Sync, Scale::Test);
+    }
+
+    #[test]
+    fn variant_selection() {
+        assert_eq!(variant_for(&SimConfig::amu()), Variant::Amu);
+        assert_eq!(variant_for(&SimConfig::baseline()), Variant::Sync);
+        assert_eq!(variant_for(&SimConfig::cxl_ideal()), Variant::Sync);
+    }
+}

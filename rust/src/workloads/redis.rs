@@ -1,0 +1,305 @@
+//! Redis — a chained-hash KV store served under a YCSB-B-like mix
+//! (95 % GET / 5 % SET, Zipfian keys). Matching the paper's setup: the
+//! bucket array lives in local memory, the collision-list nodes (64 B:
+//! key, value-length, next, 40 B inline value) live in far memory, and the
+//! single-threaded execution model is replaced by request-concurrent
+//! coroutines.
+//!
+//! The request stream is materialized host-side into a local request queue
+//! (as an RPC ring would be); SETs update values in place (last-writer-wins
+//! on racing SETs — keys/chains are immutable), so GET hit counts and the
+//! final key population are deterministic.
+
+use super::common::*;
+use crate::config::SimConfig;
+use crate::coro::{CoroRt, OFF_PARAM, R_CUR_TCB};
+use crate::isa::mem::SPM_BASE;
+use crate::isa::Asm;
+use crate::util::prng::Xoshiro256;
+
+pub struct RedisParams {
+    pub buckets: u64, // power of two
+    pub records: u64,
+    pub tasks: usize,
+    pub ops_per_task: u64,
+    pub zipf_theta: f64,
+}
+
+impl RedisParams {
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Test => Self {
+                buckets: 256,
+                records: 512,
+                tasks: 32,
+                ops_per_task: 4,
+                zipf_theta: 0.99,
+            },
+            Scale::Paper => Self {
+                buckets: 4096,
+                records: 8192,
+                tasks: 256,
+                ops_per_task: 8,
+                zipf_theta: 0.99,
+            },
+        }
+    }
+}
+
+const NODE_STRIDE: u64 = 64;
+
+fn rkey(i: u64) -> u64 {
+    i * 7 + 11
+}
+
+fn bucket_of(key: u64, buckets: u64) -> u64 {
+    host_hash(key.wrapping_mul(31)) & (buckets - 1)
+}
+
+/// Request: [type (0=GET,1=SET)][key] — 16 B in the local request queue.
+struct Ops {
+    stream: Vec<(u64, u64)>, // (type, key) flattened task-major
+}
+
+fn gen_ops(p: &RedisParams, seed: u64) -> Ops {
+    let mut rng = Xoshiro256::new(seed);
+    let mut stream = Vec::new();
+    for _t in 0..p.tasks as u64 {
+        for _o in 0..p.ops_per_task {
+            let is_set = rng.below(100) < 5;
+            let rec = rng.zipf(p.records, p.zipf_theta);
+            stream.push((is_set as u64, rkey(rec)));
+        }
+    }
+    Ops { stream }
+}
+
+pub fn build(cfg: &SimConfig, variant: Variant, scale: Scale) -> WorkloadSpec {
+    let mut p = RedisParams::new(scale);
+    p.tasks = default_tasks(cfg, p.tasks);
+    let ops = std::rc::Rc::new(gen_ops(&p, 0xDB));
+    let mut layout = mk_layout(cfg);
+    let bucket_base = layout.alloc_local(p.buckets * 8, 64);
+    let nodes = layout.alloc_far(p.records * NODE_STRIDE, 4096);
+    let req_q = layout.alloc_local(ops.stream.len() as u64 * 16, 64);
+    let setup = {
+        let ops = ops.clone();
+        let (bb, nodes, req_q, buckets, records) =
+            (bucket_base, nodes, req_q, p.buckets, p.records);
+        move |sim: &mut crate::sim::Simulator| {
+            // Preload records into chains.
+            let mut heads = vec![0u64; buckets as usize];
+            for i in 0..records {
+                let key = rkey(i);
+                let b = bucket_of(key, buckets) as usize;
+                let addr = nodes + i * NODE_STRIDE;
+                sim.guest.write_u64(addr, key);
+                sim.guest.write_u64(addr + 8, 40); // value length
+                sim.guest.write_u64(addr + 16, heads[b]);
+                sim.guest.write_u64(addr + 24, key.wrapping_mul(5)); // value word
+                heads[b] = addr;
+            }
+            for (b, h) in heads.iter().enumerate() {
+                sim.guest.write_u64(bb + b as u64 * 8, *h);
+            }
+            for (i, (ty, key)) in ops.stream.iter().enumerate() {
+                sim.guest.write_u64(req_q + i as u64 * 16, *ty);
+                sim.guest.write_u64(req_q + i as u64 * 16 + 8, *key);
+            }
+        }
+    };
+    // Expected per-task GET-hit count (every key exists: all GETs hit).
+    let expected: Vec<u64> = (0..p.tasks)
+        .map(|t| {
+            (0..p.ops_per_task)
+                .filter(|o| ops.stream[t * p.ops_per_task as usize + *o as usize].0 == 0)
+                .count() as u64
+        })
+        .collect();
+    match variant {
+        Variant::Amu | Variant::AmuLlvm => {
+            build_amu(cfg, &mut layout, p, bucket_base, req_q, setup, expected)
+        }
+        _ => build_sync(p, bucket_base, req_q, setup, expected),
+    }
+}
+
+fn build_sync(
+    p: RedisParams,
+    bucket_base: u64,
+    req_q: u64,
+    setup: impl Fn(&mut crate::sim::Simulator) + 'static,
+    expected: Vec<u64>,
+) -> WorkloadSpec {
+    let total_ops = p.tasks as u64 * p.ops_per_task;
+    let mut a = Asm::new("redis-sync");
+    a.li(4, 0); // GET hits
+    a.li(2, 0); // op index
+    a.li(3, total_ops as i64);
+    a.roi_begin();
+    a.label("op_loop");
+    a.slli(5, 2, 4);
+    a.li(6, req_q as i64);
+    a.add(5, 5, 6);
+    a.ld64(6, 5, 0); // type
+    a.ld64(7, 5, 8); // key
+    // bucket
+    a.li(8, 31);
+    a.mul(8, 7, 8);
+    emit_hash(&mut a, 9, 8, 10);
+    a.li(10, (p.buckets - 1) as i64);
+    a.and(9, 9, 10);
+    a.slli(9, 9, 3);
+    a.li(8, bucket_base as i64);
+    a.add(8, 8, 9);
+    a.ld64(9, 8, 0); // head
+    a.label("walk");
+    a.beq(9, 0, "op_next");
+    a.ld64(10, 9, 0);
+    a.beq(10, 7, "found");
+    a.ld64(9, 9, 16);
+    a.j("walk");
+    a.label("found");
+    a.bne(6, 0, "do_set");
+    a.ld64(11, 9, 24); // read value word
+    a.addi(4, 4, 1);
+    a.j("op_next");
+    a.label("do_set");
+    a.st64(2, 9, 24); // value = op index (far store)
+    a.label("op_next");
+    a.addi(2, 2, 1);
+    a.blt(2, 3, "op_loop");
+    a.roi_end();
+    a.li(14, crate::isa::mem::LOCAL_BASE as i64);
+    a.st64(4, 14, 0);
+    a.halt();
+    let want: u64 = expected.iter().sum();
+    WorkloadSpec {
+        name: "redis".into(),
+        prog: a.finish(),
+        setup: Box::new(setup),
+        validate: Box::new(move |sim| {
+            let got = sim.guest.read_u64(crate::isa::mem::LOCAL_BASE);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("GET hits {got} != {want}"))
+            }
+        }),
+    }
+}
+
+fn build_amu(
+    cfg: &SimConfig,
+    layout: &mut crate::isa::mem::Layout,
+    p: RedisParams,
+    bucket_base: u64,
+    req_q: u64,
+    setup: impl Fn(&mut crate::sim::Simulator) + 'static,
+    expected: Vec<u64>,
+) -> WorkloadSpec {
+    let ops = p.ops_per_task;
+    let buckets = p.buckets;
+    let (prog, rt) = AmuScaffold::build(
+        "redis-amu",
+        layout,
+        cfg,
+        p.tasks,
+        NODE_STRIDE, // whole node per aload
+        |a: &mut Asm, rt: &CoroRt| {
+            rt.emit_load_param(a, 10, 0); // tid
+            rt.emit_load_param(a, 11, 1); // spm slot
+            a.li(12, 0); // op
+            a.li(13, 0); // hits
+            a.label("rd_oloop");
+            // request = req_q[(tid*ops + op) * 16]
+            a.li(5, ops as i64);
+            a.mul(5, 10, 5);
+            a.add(5, 5, 12);
+            a.slli(5, 5, 4);
+            a.li(6, req_q as i64);
+            a.add(5, 5, 6);
+            a.ld64(30, 5, 0); // type
+            a.ld64(31, 5, 8); // key
+            // bucket
+            a.li(18, 31);
+            a.mul(18, 31, 18);
+            emit_hash(a, 19, 18, 17);
+            a.li(17, (buckets - 1) as i64);
+            a.and(19, 19, 17);
+            a.slli(19, 19, 3);
+            a.li(18, bucket_base as i64);
+            a.add(18, 18, 19);
+            a.ld64(15, 18, 0); // head
+            a.label("rd_walk");
+            a.beq(15, 0, "rd_next");
+            a.aload(16, 11, 15);
+            rt.emit_await(a, 16, &[10, 11, 12, 13, 15, 30, 31], "rd_r1");
+            a.ld64(17, 11, 0);
+            a.beq(17, 31, "rd_found");
+            a.ld64(15, 11, 16);
+            a.j("rd_walk");
+            a.label("rd_found");
+            a.bne(30, 0, "rd_set");
+            a.ld64(17, 11, 24);
+            a.addi(13, 13, 1);
+            a.j("rd_next");
+            a.label("rd_set");
+            // update value word in the SPM copy, write the node back
+            a.li(17, ops as i64);
+            a.mul(17, 10, 17);
+            a.add(17, 17, 12);
+            a.st64(17, 11, 24);
+            a.astore(19, 11, 15);
+            rt.emit_await(a, 19, &[10, 11, 12, 13], "rd_r2");
+            a.label("rd_next");
+            a.addi(12, 12, 1);
+            a.li(17, ops as i64);
+            a.blt(12, 17, "rd_oloop");
+            a.st64(13, R_CUR_TCB, OFF_PARAM + 24);
+            rt.emit_task_finish(a);
+        },
+    );
+    let rt_setup = rt.clone();
+    let rt_check = rt.clone();
+    let prog2 = prog.clone();
+    WorkloadSpec {
+        name: "redis".into(),
+        prog,
+        setup: Box::new(move |sim| {
+            setup(sim);
+            rt_setup.write_tcbs(&mut sim.guest, &prog2, "task", |tid| {
+                [tid as u64, SPM_BASE + tid as u64 * 64, 0, 0]
+            });
+        }),
+        validate: Box::new(move |sim| {
+            for (tid, want) in expected.iter().enumerate() {
+                let got =
+                    sim.guest.read_u64(rt_check.tcb_addr(tid) + OFF_PARAM as u64 + 24);
+                if got != *want {
+                    return Err(format!("task {tid}: hits {got} != {want}"));
+                }
+            }
+            Ok(())
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_redis_validates() {
+        let cfg = SimConfig::baseline().with_far_latency_ns(200.0);
+        build(&cfg, Variant::Sync, Scale::Test).run(&cfg).expect("redis sync");
+    }
+
+    #[test]
+    fn amu_redis_validates() {
+        let mut cfg = SimConfig::amu().with_far_latency_ns(1000.0);
+        cfg.far.jitter_frac = 0.0;
+        let sim = build(&cfg, Variant::Amu, Scale::Test).run(&cfg).expect("redis amu");
+        assert!(sim.stats.far_inflight.max >= 8);
+    }
+}

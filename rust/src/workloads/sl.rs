@@ -1,0 +1,301 @@
+//! SL — skip-list lookup (ASCYLIB). Nodes carry a 32 B payload
+//! (key/value/meta) plus 15 level pointers (paper Table 3); each lookup
+//! descends the towers, a serial chain of dependent far accesses whose
+//! length is ~log N. 128 coroutines (paper) provide the request-level
+//! parallelism.
+
+use super::common::*;
+use crate::config::SimConfig;
+use crate::coro::{CoroRt, OFF_PARAM, R_CUR_TCB};
+use crate::isa::mem::SPM_BASE;
+use crate::isa::Asm;
+use crate::util::prng::Xoshiro256;
+
+pub const MAX_LEVEL: usize = 15;
+const NODE_BYTES: u64 = 24 + 8 * MAX_LEVEL as u64; // key,val,meta + ptrs = 144
+const NODE_STRIDE: u64 = 192;
+const OFF_PTRS: i64 = 24;
+
+pub struct SlParams {
+    pub elems: u64,
+    pub tasks: usize,
+    pub lookups_per_task: u64,
+}
+
+impl SlParams {
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Test => Self { elems: 256, tasks: 32, lookups_per_task: 2 },
+            Scale::Paper => Self { elems: 4096, tasks: 128, lookups_per_task: 4 },
+        }
+    }
+}
+
+fn node_key(i: u64) -> u64 {
+    2 * i + 2 // even keys; head sentinel holds key 0
+}
+
+fn target_key(tid: u64, k: u64, elems: u64) -> u64 {
+    let h = host_hash(tid * 911 + k * 13 + 5);
+    ((h >> 32) * (2 * elems + 2)) >> 32
+}
+
+fn expected_task_sum(tid: u64, p: &SlParams) -> u64 {
+    let mut sum = 0u64;
+    for k in 0..p.lookups_per_task {
+        let key = target_key(tid, k, p.elems);
+        if key >= 2 && key % 2 == 0 && (key - 2) / 2 < p.elems {
+            let i = (key - 2) / 2;
+            sum = sum.wrapping_add(i.wrapping_mul(17));
+        }
+    }
+    sum
+}
+
+/// Host-side skip list construction: returns (head_addr, setup closure).
+fn build_skiplist(
+    base: u64,
+    p: &SlParams,
+    seed: u64,
+) -> (u64, impl Fn(&mut crate::sim::Simulator) + 'static) {
+    let mut rng = Xoshiro256::new(seed);
+    let n = p.elems as usize;
+    // Shuffled placement; slot n is the head sentinel.
+    let perm = rng.permutation(n);
+    let addrs: Vec<u64> = (0..n).map(|i| base + perm[i] * NODE_STRIDE).collect();
+    let head = base + n as u64 * NODE_STRIDE;
+    // Deterministic geometric levels in [1, MAX_LEVEL].
+    let levels: Vec<usize> = (0..n)
+        .map(|i| {
+            let h = host_hash(seed ^ (i as u64 + 1));
+            ((h.trailing_ones() as usize) + 1).min(MAX_LEVEL)
+        })
+        .collect();
+    let elems = p.elems;
+    let setup = move |sim: &mut crate::sim::Simulator| {
+        // Head sentinel: key 0, full height.
+        sim.guest.write_u64(head, 0);
+        sim.guest.write_u64(head + 8, 0);
+        // Link each level: nodes in key order with level > l.
+        let mut prev_at_level: Vec<u64> = vec![head; MAX_LEVEL];
+        for i in 0..elems as usize {
+            let a = addrs[i];
+            sim.guest.write_u64(a, node_key(i as u64));
+            sim.guest.write_u64(a + 8, (i as u64).wrapping_mul(17));
+            sim.guest.write_u64(a + 16, levels[i] as u64);
+            for l in 0..levels[i] {
+                let prev = prev_at_level[l];
+                sim.guest.write_u64(prev + OFF_PTRS as u64 + l as u64 * 8, a);
+                prev_at_level[l] = a;
+            }
+        }
+        // Terminate all levels.
+        for (l, prev) in prev_at_level.iter().enumerate() {
+            sim.guest
+                .write_u64(*prev + OFF_PTRS as u64 + l as u64 * 8, 0);
+        }
+    };
+    (head, setup)
+}
+
+pub fn build(cfg: &SimConfig, variant: Variant, scale: Scale) -> WorkloadSpec {
+    let mut p = SlParams::new(scale);
+    p.tasks = default_tasks(cfg, p.tasks);
+    let mut layout = mk_layout(cfg);
+    let base = layout.alloc_far((p.elems + 1) * NODE_STRIDE, 4096);
+    let (head, setup) = build_skiplist(base, &p, 1234);
+    match variant {
+        Variant::Amu | Variant::AmuLlvm => build_amu(cfg, &mut layout, p, head, setup),
+        _ => build_sync(p, head, setup),
+    }
+}
+
+/// Emit key generation into `key_reg` given tid in `tid`, k in `k`.
+fn emit_target_key(a: &mut Asm, key_reg: u8, tid: u8, k: u8, tmp: u8, elems: u64) {
+    a.li(tmp, 911);
+    a.mul(tmp, tid, tmp);
+    a.li(key_reg, 13);
+    a.mul(key_reg, k, key_reg);
+    a.add(tmp, tmp, key_reg);
+    a.addi(tmp, tmp, 5);
+    emit_hash(a, key_reg, tmp, if tmp == 28 { 29 } else { 28 });
+    a.srli(key_reg, key_reg, 32);
+    a.li(tmp, (2 * elems + 2) as i64);
+    a.mul(key_reg, key_reg, tmp);
+    a.srli(key_reg, key_reg, 32);
+}
+
+fn build_sync(
+    p: SlParams,
+    head: u64,
+    setup: impl Fn(&mut crate::sim::Simulator) + 'static,
+) -> WorkloadSpec {
+    let mut a = Asm::new("sl-sync");
+    a.li(4, 0); // sum
+    a.li(20, 0); // tid
+    a.li(21, p.tasks as i64);
+    a.roi_begin();
+    a.label("t_loop");
+    a.li(22, 0); // k
+    a.li(23, p.lookups_per_task as i64);
+    a.label("k_loop");
+    emit_target_key(&mut a, 6, 20, 22, 24, p.elems);
+    // descend: r8 = cur (far addr), r16 = level
+    a.li(8, head as i64);
+    a.li(16, (MAX_LEVEL - 1) as i64);
+    a.label("desc");
+    // nxt = cur.ptrs[level]
+    a.slli(9, 16, 3);
+    a.add(9, 9, 8);
+    a.ld64(10, 9, OFF_PTRS); // nxt
+    a.beq(10, 0, "down");
+    a.ld64(11, 10, 0); // nxt.key
+    a.beq(11, 6, "hit");
+    a.bltu(11, 6, "advance");
+    a.label("down");
+    a.addi(16, 16, -1);
+    a.bge(16, 0, "desc");
+    a.j("miss");
+    a.label("advance");
+    a.mv(8, 10);
+    a.j("desc");
+    a.label("hit");
+    a.ld64(12, 10, 8);
+    a.add(4, 4, 12);
+    a.label("miss");
+    a.addi(22, 22, 1);
+    a.blt(22, 23, "k_loop");
+    a.addi(20, 20, 1);
+    a.blt(20, 21, "t_loop");
+    a.roi_end();
+    a.li(14, crate::isa::mem::LOCAL_BASE as i64);
+    a.st64(4, 14, 0);
+    a.halt();
+    let prog = a.finish();
+    let expected: u64 = (0..p.tasks as u64)
+        .map(|t| expected_task_sum(t, &p))
+        .fold(0u64, |x, y| x.wrapping_add(y));
+    WorkloadSpec {
+        name: "sl".into(),
+        prog,
+        setup: Box::new(setup),
+        validate: Box::new(move |sim| {
+            let got = sim.guest.read_u64(crate::isa::mem::LOCAL_BASE);
+            if got == expected {
+                Ok(())
+            } else {
+                Err(format!("sum {got} != expected {expected}"))
+            }
+        }),
+    }
+}
+
+fn build_amu(
+    cfg: &SimConfig,
+    layout: &mut crate::isa::mem::Layout,
+    p: SlParams,
+    head: u64,
+    setup: impl Fn(&mut crate::sim::Simulator) + 'static,
+) -> WorkloadSpec {
+    let elems = p.elems;
+    let per_task = p.lookups_per_task;
+    // Two SPM node buffers per task (cur, nxt).
+    let slot_bytes = 2 * NODE_STRIDE;
+    let (prog, rt) = AmuScaffold::build(
+        "sl-amu",
+        layout,
+        cfg,
+        p.tasks,
+        NODE_BYTES,
+        |a: &mut Asm, rt: &CoroRt| {
+            rt.emit_load_param(a, 10, 0); // tid
+            rt.emit_load_param(a, 11, 1); // buf A (cur)
+            a.addi(21, 11, NODE_STRIDE as i64); // buf B (nxt)
+            a.li(12, 0); // k
+            a.li(13, 0); // sum
+            a.label("sl_kloop");
+            emit_target_key(a, 14, 10, 12, 15, elems);
+            // load head into buf A
+            a.li(15, head as i64);
+            a.aload(16, 11, 15);
+            rt.emit_await(a, 16, &[10, 11, 12, 13, 14, 21], "sl_r1");
+            a.li(16, (MAX_LEVEL - 1) as i64); // level
+            a.label("sl_desc");
+            a.slli(17, 16, 3);
+            a.add(17, 17, 11);
+            a.ld64(18, 17, OFF_PTRS); // nxt far addr from cur buf
+            a.beq(18, 0, "sl_down");
+            a.aload(19, 21, 18);
+            rt.emit_await(a, 19, &[10, 11, 12, 13, 14, 16, 21], "sl_r2");
+            a.ld64(20, 21, 0); // nxt.key
+            a.beq(20, 14, "sl_hit");
+            a.bltu(20, 14, "sl_advance");
+            a.label("sl_down");
+            a.addi(16, 16, -1);
+            a.bge(16, 0, "sl_desc");
+            a.j("sl_miss");
+            a.label("sl_advance");
+            // swap buf roles: cur <-> nxt
+            a.mv(22, 11);
+            a.mv(11, 21);
+            a.mv(21, 22);
+            a.j("sl_desc");
+            a.label("sl_hit");
+            a.ld64(20, 21, 8);
+            a.add(13, 13, 20);
+            a.label("sl_miss");
+            // restore canonical buffer assignment from the TCB param
+            rt.emit_load_param(a, 11, 1);
+            a.addi(21, 11, NODE_STRIDE as i64);
+            a.addi(12, 12, 1);
+            a.li(20, per_task as i64);
+            a.blt(12, 20, "sl_kloop");
+            a.st64(13, R_CUR_TCB, OFF_PARAM + 24);
+            rt.emit_task_finish(a);
+        },
+    );
+    let rt_setup = rt.clone();
+    let rt_check = rt.clone();
+    let prog2 = prog.clone();
+    let expected: Vec<u64> =
+        (0..p.tasks as u64).map(|t| expected_task_sum(t, &p)).collect();
+    WorkloadSpec {
+        name: "sl".into(),
+        prog,
+        setup: Box::new(move |sim| {
+            setup(sim);
+            rt_setup.write_tcbs(&mut sim.guest, &prog2, "task", |tid| {
+                [tid as u64, SPM_BASE + tid as u64 * slot_bytes, 0, 0]
+            });
+        }),
+        validate: Box::new(move |sim| {
+            for (tid, want) in expected.iter().enumerate() {
+                let got =
+                    sim.guest.read_u64(rt_check.tcb_addr(tid) + OFF_PARAM as u64 + 24);
+                if got != *want {
+                    return Err(format!("task {tid}: sum {got} != {want}"));
+                }
+            }
+            Ok(())
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_sl_validates() {
+        let cfg = SimConfig::baseline().with_far_latency_ns(200.0);
+        build(&cfg, Variant::Sync, Scale::Test).run(&cfg).expect("sl sync");
+    }
+
+    #[test]
+    fn amu_sl_validates() {
+        let mut cfg = SimConfig::amu().with_far_latency_ns(500.0);
+        cfg.far.jitter_frac = 0.0;
+        let sim = build(&cfg, Variant::Amu, Scale::Test).run(&cfg).expect("sl amu");
+        assert!(sim.stats.far_inflight.max >= 8);
+    }
+}

@@ -1,0 +1,253 @@
+//! STREAM triad: `a[i] = b[i] + s*c[i]` over far-memory arrays.
+//!
+//! The large-granularity showcase (paper §6.2): the AMU port moves 512 B
+//! blocks per `aload`/`astore`, while the `AmuLlvm` variant is pinned to
+//! the compiler's 8 B granularity — reproducing Table 4's STREAM row where
+//! the compiler port loses badly to the hand-tuned one.
+
+use super::common::*;
+use crate::config::SimConfig;
+use crate::coro::CoroRt;
+use crate::isa::mem::SPM_BASE;
+use crate::isa::Asm;
+
+const SCALAR: u64 = 3;
+
+pub struct StreamParams {
+    pub words: u64,
+    pub tasks: usize,
+    pub block_words: u64, // words per aload in the AMU variant
+}
+
+impl StreamParams {
+    pub fn new(scale: Scale) -> Self {
+        match scale {
+            Scale::Test => Self { words: 4096, tasks: 16, block_words: 64 },
+            Scale::Paper => Self { words: 65536, tasks: 32, block_words: 64 },
+        }
+    }
+}
+
+fn setup_arrays(b: u64, c: u64, words: u64) -> impl Fn(&mut crate::sim::Simulator) {
+    move |sim| {
+        for i in 0..words {
+            sim.guest.write_u64(b + i * 8, i * 7 + 1);
+            sim.guest.write_u64(c + i * 8, i * 3 + 2);
+        }
+    }
+}
+
+fn validate_triad(
+    a_arr: u64,
+    words: u64,
+) -> impl Fn(&mut crate::sim::Simulator) -> Result<(), String> {
+    move |sim| {
+        // Sample-check plus endpoints (full check at test scale).
+        let step = (words / 997).max(1);
+        for i in (0..words).step_by(step as usize).chain([words - 1]) {
+            let want = (i * 7 + 1) + SCALAR * (i * 3 + 2);
+            let got = sim.guest.read_u64(a_arr + i * 8);
+            if got != want {
+                return Err(format!("a[{i}] = {got}, want {want}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+pub fn build(cfg: &SimConfig, variant: Variant, scale: Scale) -> WorkloadSpec {
+    let mut p = StreamParams::new(scale);
+    p.tasks = default_tasks(cfg, p.tasks);
+    let mut layout = mk_layout(cfg);
+    let a_arr = layout.alloc_far(p.words * 8, 4096);
+    let b_arr = layout.alloc_far(p.words * 8, 4096);
+    let c_arr = layout.alloc_far(p.words * 8, 4096);
+
+    match variant {
+        Variant::Amu => build_amu(cfg, &mut layout, p, a_arr, b_arr, c_arr, false),
+        Variant::AmuLlvm => build_amu(cfg, &mut layout, p, a_arr, b_arr, c_arr, true),
+        _ => build_sync(p, a_arr, b_arr, c_arr, variant),
+    }
+}
+
+fn build_sync(
+    p: StreamParams,
+    a_arr: u64,
+    b_arr: u64,
+    c_arr: u64,
+    variant: Variant,
+) -> WorkloadSpec {
+    let pf_dist = match variant {
+        Variant::SwPrefetch { batch, .. } => batch as i64,
+        Variant::GroupPrefetch(g) => g as i64,
+        _ => 0,
+    };
+    let mut a = Asm::new("stream-sync");
+    a.li(1, a_arr as i64);
+    a.li(2, b_arr as i64);
+    a.li(3, c_arr as i64);
+    a.li(4, 0);
+    a.li(5, p.words as i64);
+    a.li(6, SCALAR as i64);
+    a.roi_begin();
+    a.label("loop");
+    a.slli(7, 4, 3);
+    a.add(8, 7, 2);
+    if pf_dist > 0 {
+        a.prefetch(8, pf_dist * 8);
+    }
+    a.ld64(9, 8, 0); // b[i]
+    a.add(8, 7, 3);
+    if pf_dist > 0 {
+        a.prefetch(8, pf_dist * 8);
+    }
+    a.ld64(10, 8, 0); // c[i]
+    a.mul(10, 10, 6);
+    a.add(9, 9, 10);
+    a.add(8, 7, 1);
+    a.st64(9, 8, 0); // a[i]
+    a.addi(4, 4, 1);
+    a.blt(4, 5, "loop");
+    a.roi_end();
+    a.halt();
+    WorkloadSpec {
+        name: "stream".into(),
+        prog: a.finish(),
+        setup: Box::new(setup_arrays(b_arr, c_arr, p.words)),
+        validate: Box::new(validate_triad(a_arr, p.words)),
+    }
+}
+
+fn build_amu(
+    cfg: &SimConfig,
+    layout: &mut crate::isa::mem::Layout,
+    p: StreamParams,
+    a_arr: u64,
+    b_arr: u64,
+    c_arr: u64,
+    llvm_8b: bool,
+) -> WorkloadSpec {
+    let block_words = if llvm_8b { 1 } else { p.block_words };
+    let gran = block_words * 8;
+    let tasks = p.tasks as u64;
+    let blocks = p.words / block_words;
+    let per_task = blocks / tasks;
+    assert!(per_task >= 1, "too few blocks for task count");
+    // Two SPM buffers per task (b-block, c-block); result overwrites b.
+    let slot_bytes = 2 * gran;
+    let (prog, rt) = AmuScaffold::build(
+        if llvm_8b { "stream-llvm" } else { "stream-amu" },
+        layout,
+        cfg,
+        p.tasks,
+        gran,
+        |a: &mut Asm, rt: &CoroRt| {
+            // params: p0 = first block idx, p1 = spm slot base
+            rt.emit_load_param(a, 10, 0); // block idx
+            rt.emit_load_param(a, 11, 1); // spm base (b buf; c buf at +gran)
+            a.li(12, per_task as i64);
+            a.label("s_loop");
+            // far offsets
+            a.li(13, (block_words * 8) as i64);
+            a.mul(13, 13, 10); // byte offset of block
+            a.li(14, b_arr as i64);
+            a.add(14, 14, 13);
+            a.aload(16, 11, 14);
+            rt.emit_await(a, 16, &[10, 11, 12, 13], "s_r1");
+            a.li(14, c_arr as i64);
+            a.add(14, 14, 13);
+            a.addi(15, 11, gran as i64);
+            a.aload(17, 15, 14);
+            rt.emit_await(a, 17, &[10, 11, 12, 13], "s_r2");
+            // compute block in SPM: b[k] += s * c[k]
+            a.li(18, 0);
+            a.li(19, block_words as i64);
+            a.li(20, SCALAR as i64);
+            a.label("s_compute");
+            a.slli(21, 18, 3);
+            a.add(22, 21, 11);
+            a.ld64(23, 22, 0); // b
+            a.addi(24, 22, gran as i64);
+            a.ld64(25, 24, 0); // c
+            a.mul(25, 25, 20);
+            a.add(23, 23, 25);
+            a.st64(23, 22, 0);
+            a.addi(18, 18, 1);
+            a.blt(18, 19, "s_compute");
+            // astore result block to a[]
+            a.li(14, a_arr as i64);
+            a.add(14, 14, 13);
+            a.astore(26, 11, 14);
+            rt.emit_await(a, 26, &[10, 11, 12], "s_r3");
+            a.addi(10, 10, 1);
+            a.addi(12, 12, -1);
+            a.bne(12, 0, "s_loop");
+            rt.emit_task_finish(a);
+        },
+    );
+    let rt2 = rt.clone();
+    let prog2 = prog.clone();
+    let setup_data = setup_arrays(b_arr, c_arr, p.words);
+    WorkloadSpec {
+        name: if llvm_8b { "stream-llvm".into() } else { "stream".into() },
+        prog,
+        setup: Box::new(move |sim| {
+            setup_data(sim);
+            rt2.write_tcbs(&mut sim.guest, &prog2, "task", |tid| {
+                [tid as u64 * per_task, SPM_BASE + tid as u64 * slot_bytes, 0, 0]
+            });
+        }),
+        validate: Box::new(validate_triad(a_arr, p.words)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_stream_validates() {
+        let cfg = SimConfig::baseline().with_far_latency_ns(200.0);
+        build(&cfg, Variant::Sync, Scale::Test).run(&cfg).expect("stream sync");
+    }
+
+    #[test]
+    fn amu_stream_validates_with_large_granularity() {
+        let mut cfg = SimConfig::amu().with_far_latency_ns(1000.0);
+        cfg.far.jitter_frac = 0.0;
+        let sim = build(&cfg, Variant::Amu, Scale::Test).run(&cfg).expect("stream amu");
+        assert!(sim.stats.amu_subrequests > 0);
+        // 512B transfers: sub-requests per aload = 8.
+        assert!(sim.asmc.granularity == 512);
+    }
+
+    #[test]
+    fn llvm_8b_stream_much_slower_than_blocked() {
+        let mut cfg = SimConfig::amu().with_far_latency_ns(500.0);
+        cfg.far.jitter_frac = 0.0;
+        let blocked = build(&cfg, Variant::Amu, Scale::Test).run(&cfg).unwrap();
+        let llvm = build(&cfg, Variant::AmuLlvm, Scale::Test).run(&cfg).unwrap();
+        assert!(
+            llvm.stats.measured_cycles > blocked.stats.measured_cycles * 3,
+            "8B granularity should lose badly: {} vs {}",
+            llvm.stats.measured_cycles,
+            blocked.stats.measured_cycles
+        );
+    }
+
+    #[test]
+    fn cxl_ideal_prefetcher_helps_stream() {
+        let mut base = SimConfig::baseline().with_far_latency_ns(500.0);
+        base.far.jitter_frac = 0.0;
+        let mut ideal = SimConfig::cxl_ideal().with_far_latency_ns(500.0);
+        ideal.far.jitter_frac = 0.0;
+        let b = build(&base, Variant::Sync, Scale::Test).run(&base).unwrap();
+        let i = build(&ideal, Variant::Sync, Scale::Test).run(&ideal).unwrap();
+        assert!(
+            i.stats.measured_cycles < b.stats.measured_cycles,
+            "BOP + 256 MSHRs must help a sequential stream: {} vs {}",
+            i.stats.measured_cycles,
+            b.stats.measured_cycles
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Figure/table regeneration smoke tests at test scale: every generator
+//! must produce plausible output (the paper-scale numbers live in
+//! EXPERIMENTS.md and are produced by `cargo bench`).
+
+use amu_sim::report;
+use amu_sim::workloads::Scale;
+
+#[test]
+fn table6_matches_paper_bands() {
+    let t = report::table6();
+    assert!(t.contains("LUT"));
+    assert!(t.contains("71510 gates") || t.contains("gates"));
+}
+
+#[test]
+fn fig3_group_size_sensitivity_renders() {
+    let s = report::fig3(Scale::Test, 1000.0);
+    assert!(s.lines().count() > 5, "{s}");
+    assert!(s.contains("group"));
+}
+
+#[test]
+fn table5_disambiguation_renders() {
+    let s = report::table5(Scale::Test);
+    assert!(s.contains("hj") && s.contains("ht"), "{s}");
+    assert!(s.contains('%'));
+}
+
+#[test]
+fn single_run_one_row_sane() {
+    let r = report::run_one(
+        "gups",
+        "amu",
+        amu_sim::workloads::Variant::Amu,
+        1000.0,
+        Scale::Test,
+    )
+    .unwrap();
+    assert!(r.mlp > 1.0, "AMU GUPS must overlap: mlp={}", r.mlp);
+    assert!(r.peak_inflight >= 16);
+}

@@ -1,0 +1,107 @@
+//! Cross-module integration tests: configs x workloads x simulator,
+//! functional-vs-timing oracle agreement, and AMU invariants end to end.
+
+use amu_sim::config::SimConfig;
+use amu_sim::workloads::{build, Scale, Variant, ALL};
+
+#[test]
+fn every_benchmark_validates_on_every_preset() {
+    for name in ALL {
+        for preset in ["baseline", "cxl-ideal", "amu", "amu-dma"] {
+            let mut cfg = SimConfig::preset(preset).unwrap().with_far_latency_ns(300.0);
+            cfg.far.jitter_frac = 0.0;
+            let variant = amu_sim::workloads::variant_for(&cfg);
+            let spec = build(name, &cfg, variant, Scale::Test);
+            let sim = spec
+                .run(&cfg)
+                .unwrap_or_else(|e| panic!("{name}/{preset}: {e}"));
+            assert!(sim.stats.insts_committed > 0, "{name}/{preset}: no progress");
+            assert!(sim.amu_ids_conserved(), "{name}/{preset}: AMU ids leaked");
+        }
+    }
+}
+
+#[test]
+fn amu_beats_baseline_at_high_latency_on_random_access() {
+    // The paper's core claim at benchmark granularity.
+    for name in ["gups", "bs", "ll", "ht"] {
+        let base_cfg = SimConfig::baseline().with_far_latency_ns(2000.0);
+        let mut amu_cfg = SimConfig::amu().with_far_latency_ns(2000.0);
+        amu_cfg.far.jitter_frac = 0.0;
+        let base = build(name, &base_cfg, Variant::Sync, Scale::Test)
+            .run(&base_cfg)
+            .unwrap();
+        let amu = build(name, &amu_cfg, Variant::Amu, Scale::Test)
+            .run(&amu_cfg)
+            .unwrap();
+        assert!(
+            amu.stats.measured_cycles < base.stats.measured_cycles,
+            "{name}: AMU {} !< baseline {}",
+            amu.stats.measured_cycles,
+            base.stats.measured_cycles
+        );
+    }
+}
+
+#[test]
+fn amu_latency_insensitivity_vs_baseline_degradation() {
+    // Fig 8 shape: between 0.2us and 2us the baseline degrades much more
+    // than AMU on GUPS.
+    let run = |preset: &str, lat: f64| {
+        let mut cfg = SimConfig::preset(preset).unwrap().with_far_latency_ns(lat);
+        cfg.far.jitter_frac = 0.0;
+        let v = amu_sim::workloads::variant_for(&cfg);
+        build("gups", &cfg, v, Scale::Test)
+            .run(&cfg)
+            .unwrap()
+            .stats
+            .measured_cycles as f64
+    };
+    let base_ratio = run("baseline", 2000.0) / run("baseline", 200.0);
+    let amu_ratio = run("amu", 2000.0) / run("amu", 200.0);
+    assert!(
+        base_ratio > 2.0 * amu_ratio,
+        "baseline degradation {base_ratio:.2}x should dwarf AMU {amu_ratio:.2}x"
+    );
+}
+
+#[test]
+fn mlp_grows_with_latency_under_amu() {
+    // Fig 9 shape: AMU MLP rises with latency; baseline MLP saturates.
+    let run = |preset: &str, lat: f64| {
+        let mut cfg = SimConfig::preset(preset).unwrap().with_far_latency_ns(lat);
+        cfg.far.jitter_frac = 0.0;
+        let v = amu_sim::workloads::variant_for(&cfg);
+        let sim = build("gups", &cfg, v, Scale::Test).run(&cfg).unwrap();
+        sim.stats.mlp()
+    };
+    let amu_low = run("amu", 200.0);
+    let amu_high = run("amu", 5000.0);
+    assert!(amu_high > amu_low * 1.1, "AMU MLP must scale: {amu_low:.1} -> {amu_high:.1}");
+}
+
+#[test]
+fn dma_mode_loses_to_amu() {
+    let mut amu = SimConfig::amu().with_far_latency_ns(1000.0);
+    amu.far.jitter_frac = 0.0;
+    let mut dma = SimConfig::amu_dma().with_far_latency_ns(1000.0);
+    dma.far.jitter_frac = 0.0;
+    let a = build("gups", &amu, Variant::Amu, Scale::Test).run(&amu).unwrap();
+    let d = build("gups", &dma, Variant::Amu, Scale::Test).run(&dma).unwrap();
+    assert!(d.stats.measured_cycles > a.stats.measured_cycles);
+}
+
+#[test]
+fn config_file_overrides_apply_end_to_end() {
+    let mut cfg = SimConfig::baseline();
+    let doc = amu_sim::util::toml_lite::parse("[core]\nrob_entries = 32\n[l1d]\nmshrs = 2\n")
+        .unwrap();
+    cfg.apply_overrides(&doc).unwrap();
+    let spec = build("gups", &cfg, Variant::Sync, Scale::Test);
+    let sim = spec.run(&cfg).unwrap();
+    // A 32-entry ROB with 2 MSHRs must be much slower than Table 2.
+    let full = build("gups", &SimConfig::baseline(), Variant::Sync, Scale::Test)
+        .run(&SimConfig::baseline())
+        .unwrap();
+    assert!(sim.stats.measured_cycles > full.stats.measured_cycles);
+}

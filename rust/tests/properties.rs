@@ -1,0 +1,215 @@
+//! Property-based tests over coordinator invariants (in-repo prop runner).
+
+use amu_sim::config::SimConfig;
+use amu_sim::isa::mem::{FAR_BASE, SPM_BASE};
+use amu_sim::isa::Asm;
+use amu_sim::sim::Simulator;
+use amu_sim::testing::{check, check_with, shrink_vec, PropConfig};
+
+/// Random AMI op sequences: every run must conserve request IDs, complete
+/// every issued request exactly once, and leave the pipeline clean.
+#[test]
+fn prop_amu_id_conservation_under_random_programs() {
+    check(
+        &PropConfig { cases: 24, seed: 0xA11CE, ..Default::default() },
+        |rng| {
+            // (n_aloads, use_branches)
+            (1 + rng.below(40) as usize, rng.below(2) == 1)
+        },
+        |&(n, branchy)| {
+            let mut a = Asm::new("prop");
+            a.li(1, SPM_BASE as i64);
+            a.li(2, FAR_BASE as i64);
+            a.li(10, 0);
+            a.li(11, n as i64);
+            for k in 0..n as i64 {
+                if branchy {
+                    // Data-dependent hiccup to provoke squashes.
+                    a.mul(5, 10, 10);
+                    a.addi(5, 5, k);
+                    a.andi(5, 5, 1);
+                    a.beq(5, 0, &format!("skip{k}"));
+                    a.nop();
+                    a.label(&format!("skip{k}"));
+                }
+                a.addi(3, 1, (k % 64) * 64);
+                a.addi(4, 2, k * 4096);
+                a.aload(6, 3, 4);
+            }
+            a.label("drain");
+            a.getfin(7);
+            a.beq(7, 0, "drain");
+            a.addi(10, 10, 1);
+            a.blt(10, 11, "drain");
+            a.halt();
+            let mut cfg = SimConfig::amu().with_far_latency_ns(500.0);
+            cfg.far.jitter_frac = 0.0;
+            let mut sim = Simulator::new(cfg, a.finish());
+            sim.run().map_err(|e| e)?;
+            if !sim.amu_ids_conserved() {
+                return Err("ids not conserved".into());
+            }
+            if sim.memsys.far_inflight() != 0 {
+                return Err("requests left in flight".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random load/store programs: the timed core's architectural memory must
+/// match the functional interpreter exactly.
+#[test]
+fn prop_core_matches_interp_on_random_memory_programs() {
+    use amu_sim::isa::interp::{CompletionOrder, Interp};
+    use amu_sim::isa::GuestMem;
+    check_with(
+        &PropConfig { cases: 16, seed: 0xBEEF, ..Default::default() },
+        |rng| {
+            let n = 4 + rng.below(40);
+            (0..n).map(|_| rng.next_u64()).collect::<Vec<u64>>()
+        },
+        |seeds| {
+            let mut a = Asm::new("prop-mem");
+            a.li(1, amu_sim::isa::LOCAL_BASE as i64);
+            for (i, s) in seeds.iter().enumerate() {
+                let r = 2 + (i % 20) as u8;
+                let off = ((s >> 8) % 512) as i64 * 8;
+                match s % 4 {
+                    0 => {
+                        a.li(r, (s >> 32) as i64);
+                        a.st64(r, 1, off);
+                    }
+                    1 => {
+                        a.ld64(r, 1, off);
+                    }
+                    2 => {
+                        a.li(r, *s as i64 & 0xFFFF);
+                        a.st(r, 1, off, 4);
+                    }
+                    _ => {
+                        a.ld64(r, 1, off);
+                        a.addi(r, r, 1);
+                        a.st64(r, 1, off);
+                    }
+                }
+            }
+            a.halt();
+            let prog = a.finish();
+            let mut sim = Simulator::new(SimConfig::baseline(), prog.clone());
+            sim.run().map_err(|e| e)?;
+            let mut mem = GuestMem::new();
+            let mut it = Interp::new(&mut mem, CompletionOrder::Fifo);
+            it.run(&prog, 1_000_000).map_err(|e| e)?;
+            let a_sum = sim.guest.checksum(amu_sim::isa::LOCAL_BASE, 512 * 8 + 64);
+            let b_sum = mem.checksum(amu_sim::isa::LOCAL_BASE, 512 * 8 + 64);
+            if a_sum != b_sum {
+                return Err("architectural memory diverged from oracle".into());
+            }
+            Ok(())
+        },
+        shrink_vec,
+    );
+}
+
+/// Cache + MSHR invariants under random access streams.
+#[test]
+fn prop_memsys_completes_every_accepted_access() {
+    use amu_sim::mem::{AccessKind, MemSys, SubmitResult};
+    check(
+        &PropConfig { cases: 20, seed: 0xCAFE, ..Default::default() },
+        |rng| {
+            let n = 1 + rng.below(200);
+            (0..n)
+                .map(|_| (rng.below(1 << 22), rng.below(3)))
+                .collect::<Vec<(u64, u64)>>()
+        },
+        |ops| {
+            let mut cfg = SimConfig::baseline().with_far_latency_ns(300.0);
+            cfg.far.jitter_frac = 0.0;
+            let mut m = MemSys::new(&cfg);
+            let mut accepted = Vec::new();
+            let mut cycle = 0u64;
+            for (i, (addr_seed, kind)) in ops.iter().enumerate() {
+                let kind = match kind {
+                    0 => AccessKind::Load,
+                    1 => AccessKind::Store,
+                    _ => AccessKind::Prefetch,
+                };
+                let addr = amu_sim::isa::FAR_BASE + (addr_seed & !7);
+                loop {
+                    m.tick(cycle, 10, 4);
+                    match m.submit(kind, addr, i as u32, cycle, 4) {
+                        SubmitResult::Accepted => break,
+                        _ => cycle += 1,
+                    }
+                }
+                if kind != AccessKind::Prefetch {
+                    accepted.push(i as u32);
+                }
+                cycle += 1;
+            }
+            for c in cycle..cycle + 2_000_000 {
+                m.tick(c, 10, 4);
+                if m.pending_events() == 0 {
+                    break;
+                }
+            }
+            let mut done: Vec<u32> = m.completions.iter().map(|c| c.token).collect();
+            done.sort_unstable();
+            done.dedup();
+            if done.len() != accepted.len() {
+                return Err(format!(
+                    "{} accepted but {} completed",
+                    accepted.len(),
+                    done.len()
+                ));
+            }
+            if m.far_inflight() != 0 {
+                return Err("link accounting leaked".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Coroutine scheduler never loses a task regardless of task count.
+#[test]
+fn prop_scheduler_finishes_all_tasks() {
+    use amu_sim::coro::CoroRt;
+    use amu_sim::isa::mem::Layout;
+    check(
+        &PropConfig { cases: 10, seed: 0x50_ED, ..Default::default() },
+        |rng| 1 + rng.below(100) as usize,
+        |&ntasks| {
+            let mut cfg = SimConfig::amu().with_far_latency_ns(200.0);
+            cfg.far.jitter_frac = 0.0;
+            let meta = cfg.amu.queue_length as u64 * 32;
+            let mut layout = Layout::new((cfg.amu.spm_bytes as u64 - meta) as usize);
+            let rt = CoroRt::new(&mut layout, ntasks, cfg.amu.queue_length);
+            let far = layout.alloc_far(ntasks as u64 * 8, 64);
+            let mut a = Asm::new("prop-coro");
+            a.li(1, 8);
+            a.cfgwr(1, amu_sim::isa::CfgReg::Granularity);
+            rt.emit_prologue(&mut a);
+            a.j("sched");
+            a.label("task");
+            rt.emit_load_param(&mut a, 10, 0);
+            rt.emit_load_param(&mut a, 11, 1);
+            a.aload(12, 11, 10);
+            rt.emit_await(&mut a, 12, &[10, 11], "t_r");
+            rt.emit_task_finish(&mut a);
+            a.label("sched");
+            rt.emit_scheduler(&mut a, "done");
+            a.label("done");
+            a.halt();
+            let prog = a.finish();
+            let mut sim = Simulator::new(cfg, prog.clone());
+            rt.write_tcbs(&mut sim.guest, &prog, "task", |tid| {
+                [far + tid as u64 * 8, SPM_BASE + (tid as u64 % 512) * 64, 0, 0]
+            });
+            sim.run().map_err(|e| format!("{ntasks} tasks: {e}"))?;
+            Ok(())
+        },
+    );
+}
