@@ -10,8 +10,19 @@
 
 use amu_sim::config::SimConfig;
 use amu_sim::runtime::{hash_mult_host, Runtime, GUPS_BATCH};
+use amu_sim::session::{RunRequest, RunResult};
 use amu_sim::util::geomean;
-use amu_sim::workloads::{build, Scale, Variant, ALL};
+use amu_sim::workloads::{Variant, ALL};
+
+fn run(bench: &str, cfg: SimConfig, variant: Variant, lat: f64) -> RunResult {
+    RunRequest::bench(bench)
+        .config(cfg)
+        .variant(variant)
+        .latency_ns(lat)
+        .no_jitter()
+        .run()
+        .unwrap_or_else(|e| panic!("{bench}: {e}"))
+}
 
 fn main() {
     // --- Layer composition: PJRT payload engine ---
@@ -37,17 +48,13 @@ fn main() {
     println!("[2/3] full benchmark suite @1us (test scale), baseline vs AMU:");
     let mut speedups = Vec::new();
     for name in ALL {
-        let mut b = SimConfig::baseline().with_far_latency_ns(1000.0);
-        b.far.jitter_frac = 0.0;
-        let mut a = SimConfig::amu().with_far_latency_ns(1000.0);
-        a.far.jitter_frac = 0.0;
-        let base = build(name, &b, Variant::Sync, Scale::Test).run(&b).unwrap();
-        let amu = build(name, &a, Variant::Amu, Scale::Test).run(&a).unwrap();
-        let s = base.stats.measured_cycles as f64 / amu.stats.measured_cycles as f64;
+        let base = run(name, SimConfig::baseline(), Variant::Sync, 1000.0);
+        let amu = run(name, SimConfig::amu(), Variant::Amu, 1000.0);
+        let s = base.measured_cycles as f64 / amu.measured_cycles as f64;
         speedups.push(s);
         println!(
             "  {:>7}: baseline {:>9}c  amu {:>9}c  speedup {:>6.2}x  (validated)",
-            name, base.stats.measured_cycles, amu.stats.measured_cycles, s
+            name, base.measured_cycles, amu.measured_cycles, s
         );
     }
     println!(
@@ -56,16 +63,12 @@ fn main() {
     );
 
     // --- Headline: GUPS at 5 us ---
-    let mut b = SimConfig::baseline().with_far_latency_ns(5000.0);
-    b.far.jitter_frac = 0.0;
-    let mut a = SimConfig::amu().with_far_latency_ns(5000.0);
-    a.far.jitter_frac = 0.0;
-    let base = build("gups", &b, Variant::Sync, Scale::Test).run(&b).unwrap();
-    let amu = build("gups", &a, Variant::Amu, Scale::Test).run(&a).unwrap();
+    let base = run("gups", SimConfig::baseline(), Variant::Sync, 5000.0);
+    let amu = run("gups", SimConfig::amu(), Variant::Amu, 5000.0);
     println!(
         "[3/3] GUPS @5us: speedup {:.2}x, avg MLP {:.1}, peak in-flight {} (paper: 26.86x, >130)",
-        base.stats.measured_cycles as f64 / amu.stats.measured_cycles as f64,
-        amu.stats.mlp(),
-        amu.stats.far_inflight.max
+        base.measured_cycles as f64 / amu.measured_cycles as f64,
+        amu.mlp,
+        amu.peak_inflight
     );
 }

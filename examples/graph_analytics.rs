@@ -7,24 +7,33 @@
 //!     cargo run --release --example graph_analytics
 
 use amu_sim::config::SimConfig;
-use amu_sim::workloads::{build, Scale, Variant};
+use amu_sim::session::RunRequest;
+use amu_sim::workloads::Variant;
 
 fn main() {
     println!("BFS (V=512, E=8192 undirected), adjacency in far memory");
     println!("{:>9} {:>12} {:>12} {:>8}", "lat(us)", "baseline", "amu", "speedup");
     for lat in [200.0, 500.0, 1000.0, 2000.0, 5000.0] {
-        let mut b = SimConfig::baseline().with_far_latency_ns(lat);
-        b.far.jitter_frac = 0.0;
-        let mut a = SimConfig::amu().with_far_latency_ns(lat);
-        a.far.jitter_frac = 0.0;
-        let base = build("bfs", &b, Variant::Sync, Scale::Test).run(&b).unwrap();
-        let amu = build("bfs", &a, Variant::Amu, Scale::Test).run(&a).unwrap();
+        let base = RunRequest::bench("bfs")
+            .config(SimConfig::baseline())
+            .variant(Variant::Sync)
+            .latency_ns(lat)
+            .no_jitter()
+            .run()
+            .unwrap();
+        let amu = RunRequest::bench("bfs")
+            .config(SimConfig::amu())
+            .variant(Variant::Amu)
+            .latency_ns(lat)
+            .no_jitter()
+            .run()
+            .unwrap();
         println!(
             "{:>9.1} {:>12} {:>12} {:>7.2}x",
             lat / 1000.0,
-            base.stats.measured_cycles,
-            amu.stats.measured_cycles,
-            base.stats.measured_cycles as f64 / amu.stats.measured_cycles as f64
+            base.measured_cycles,
+            amu.measured_cycles,
+            base.measured_cycles as f64 / amu.measured_cycles as f64
         );
     }
 }

@@ -6,7 +6,8 @@
 //!     cargo run --release --example kv_server
 
 use amu_sim::config::SimConfig;
-use amu_sim::workloads::{build, Scale, Variant};
+use amu_sim::session::RunRequest;
+use amu_sim::workloads::Variant;
 
 fn main() {
     println!("KV serving (YCSB-B-like, 95% GET / 5% SET, zipf keys)");
@@ -17,14 +18,22 @@ fn main() {
     // 32 concurrent client coroutines x 4 ops each at test scale.
     let requests = 32.0 * 4.0;
     for lat in [200.0, 1000.0, 5000.0] {
-        let mut b = SimConfig::baseline().with_far_latency_ns(lat);
-        b.far.jitter_frac = 0.0;
-        let mut a = SimConfig::amu().with_far_latency_ns(lat);
-        a.far.jitter_frac = 0.0;
-        let base = build("redis", &b, Variant::Sync, Scale::Test).run(&b).unwrap();
-        let amu = build("redis", &a, Variant::Amu, Scale::Test).run(&a).unwrap();
-        let tb = requests / (base.stats.measured_cycles as f64 / 1e6);
-        let ta = requests / (amu.stats.measured_cycles as f64 / 1e6);
+        let base = RunRequest::bench("redis")
+            .config(SimConfig::baseline())
+            .variant(Variant::Sync)
+            .latency_ns(lat)
+            .no_jitter()
+            .run()
+            .unwrap();
+        let amu = RunRequest::bench("redis")
+            .config(SimConfig::amu())
+            .variant(Variant::Amu)
+            .latency_ns(lat)
+            .no_jitter()
+            .run()
+            .unwrap();
+        let tb = requests / (base.measured_cycles as f64 / 1e6);
+        let ta = requests / (amu.measured_cycles as f64 / 1e6);
         println!("{:>9.1} {:>14.1} {:>14.1} {:>11.2}x", lat / 1000.0, tb, ta, ta / tb);
     }
 }

@@ -4,35 +4,34 @@
 //!     cargo run --release --example quickstart
 
 use amu_sim::config::SimConfig;
-use amu_sim::workloads::{build, Scale, Variant};
+use amu_sim::session::RunRequest;
+use amu_sim::workloads::Variant;
 
 fn main() {
     let latency_ns = 1000.0;
-    let base_cfg = SimConfig::baseline().with_far_latency_ns(latency_ns);
-    let amu_cfg = SimConfig::amu().with_far_latency_ns(latency_ns);
-
     println!("GUPS @ {latency_ns} ns additional far-memory latency");
-    let base = build("gups", &base_cfg, Variant::Sync, Scale::Test)
-        .run(&base_cfg)
+    let base = RunRequest::bench("gups")
+        .config(SimConfig::baseline())
+        .variant(Variant::Sync)
+        .latency_ns(latency_ns)
+        .run()
         .expect("baseline run");
     println!(
         "  baseline : {:>9} cycles  ipc={:.2}  mlp={:.1}",
-        base.stats.measured_cycles,
-        base.stats.ipc(),
-        base.stats.mlp()
+        base.measured_cycles, base.ipc, base.mlp
     );
-    let amu = build("gups", &amu_cfg, Variant::Amu, Scale::Test)
-        .run(&amu_cfg)
+    let amu = RunRequest::bench("gups")
+        .config(SimConfig::amu())
+        .variant(Variant::Amu)
+        .latency_ns(latency_ns)
+        .run()
         .expect("amu run");
     println!(
         "  AMU      : {:>9} cycles  ipc={:.2}  mlp={:.1}  peak in-flight={}",
-        amu.stats.measured_cycles,
-        amu.stats.ipc(),
-        amu.stats.mlp(),
-        amu.stats.far_inflight.max
+        amu.measured_cycles, amu.ipc, amu.mlp, amu.peak_inflight
     );
     println!(
         "  speedup  : {:.2}x",
-        base.stats.measured_cycles as f64 / amu.stats.measured_cycles as f64
+        base.measured_cycles as f64 / amu.measured_cycles as f64
     );
 }

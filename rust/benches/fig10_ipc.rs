@@ -1,5 +1,6 @@
 //! Bench harness for paper Fig 10: IPC.
 use amu_sim::report;
+use amu_sim::session::Session;
 fn bench_scale() -> amu_sim::workloads::Scale {
     match std::env::var("AMU_BENCH_SCALE").as_deref() {
         Ok("paper") => amu_sim::workloads::Scale::Paper,
@@ -7,6 +8,6 @@ fn bench_scale() -> amu_sim::workloads::Scale {
     }
 }
 fn main() {
-    let rows = report::sweep_cached(bench_scale(), false);
+    let rows = Session::new().sweep_paper(bench_scale()).expect("sweep");
     report::write_report("fig10", &report::fig10(&rows));
 }

@@ -1,6 +1,7 @@
 //! Bench harness for paper Fig 3: GUPS group-prefetch sensitivity across
 //! hardware scaling (cxl-ideal / x2 / x4).
 use amu_sim::report;
+use amu_sim::session::Session;
 fn bench_scale() -> amu_sim::workloads::Scale {
     match std::env::var("AMU_BENCH_SCALE").as_deref() {
         Ok("paper") => amu_sim::workloads::Scale::Paper,
@@ -9,6 +10,7 @@ fn bench_scale() -> amu_sim::workloads::Scale {
 }
 fn main() {
     let t0 = std::time::Instant::now();
-    report::write_report("fig3", &report::fig3(bench_scale(), 1000.0));
+    let session = Session::new();
+    report::write_report("fig3", &report::fig3(&session, bench_scale(), 1000.0));
     eprintln!("[bench fig3] wall {:?}", t0.elapsed());
 }

@@ -1,6 +1,7 @@
 //! Bench harness for paper Fig 8: normalized execution time, 11 benchmarks
 //! x 4 configs x 6 latencies.
 use amu_sim::report;
+use amu_sim::session::Session;
 fn bench_scale() -> amu_sim::workloads::Scale {
     match std::env::var("AMU_BENCH_SCALE").as_deref() {
         Ok("paper") => amu_sim::workloads::Scale::Paper,
@@ -9,7 +10,7 @@ fn bench_scale() -> amu_sim::workloads::Scale {
 }
 fn main() {
     let t0 = std::time::Instant::now();
-    let rows = report::sweep_cached(bench_scale(), false);
+    let rows = Session::new().sweep_paper(bench_scale()).expect("sweep");
     report::write_report("fig8", &report::fig8(&rows));
     eprintln!("[bench fig8] wall {:?}", t0.elapsed());
 }

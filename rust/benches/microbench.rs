@@ -2,12 +2,18 @@
 //! the §Perf measurement harness (criterion is unavailable offline; this
 //! reports wall-clock and simulated-cycle rates directly).
 use amu_sim::config::SimConfig;
-use amu_sim::report::run_one;
+use amu_sim::session::RunRequest;
 use amu_sim::workloads::{Scale, Variant};
 
 fn time_one(bench: &str, config: &str, variant: Variant, lat: f64) {
     let t0 = std::time::Instant::now();
-    let r = run_one(bench, config, variant, lat, Scale::Test).expect(bench);
+    let r = RunRequest::bench(bench)
+        .config_name(config)
+        .variant(variant)
+        .latency_ns(lat)
+        .scale(Scale::Test)
+        .run()
+        .expect(bench);
     let dt = t0.elapsed().as_secs_f64();
     println!(
         "{bench:>8} {config:>10} {:>6} @{lat:>6}ns: {:>10} cycles in {:>7.3}s = {:>6.2} Mcyc/s",

@@ -1,6 +1,7 @@
 //! Bench harness for paper Table 4: CXL vs best software prefetch vs AMU
 //! vs compiler-style AMU for GUPS/HJ/STREAM.
 use amu_sim::report;
+use amu_sim::session::Session;
 fn bench_scale() -> amu_sim::workloads::Scale {
     match std::env::var("AMU_BENCH_SCALE").as_deref() {
         Ok("paper") => amu_sim::workloads::Scale::Paper,
@@ -9,6 +10,7 @@ fn bench_scale() -> amu_sim::workloads::Scale {
 }
 fn main() {
     let t0 = std::time::Instant::now();
-    report::write_report("table4", &report::table4(bench_scale()));
+    let session = Session::new();
+    report::write_report("table4", &report::table4(&session, bench_scale()));
     eprintln!("[bench table4] wall {:?}", t0.elapsed());
 }

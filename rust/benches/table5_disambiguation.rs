@@ -1,6 +1,7 @@
 //! Bench harness for paper Table 5: software memory disambiguation
 //! overhead (HJ, HT) across latencies.
 use amu_sim::report;
+use amu_sim::session::Session;
 fn bench_scale() -> amu_sim::workloads::Scale {
     match std::env::var("AMU_BENCH_SCALE").as_deref() {
         Ok("paper") => amu_sim::workloads::Scale::Paper,
@@ -8,5 +9,6 @@ fn bench_scale() -> amu_sim::workloads::Scale {
     }
 }
 fn main() {
-    report::write_report("table5", &report::table5(bench_scale()));
+    let session = Session::new();
+    report::write_report("table5", &report::table5(&session, bench_scale()));
 }

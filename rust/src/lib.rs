@@ -6,6 +6,46 @@
 //! stack, the 11-benchmark evaluation suite, and report generators for
 //! every figure and table in the paper's evaluation. See DESIGN.md for the
 //! architecture and EXPERIMENTS.md for measured results.
+//!
+//! # Running one benchmark
+//!
+//! The typed front door is [`session::RunRequest`]: it validates the
+//! bench/config/variant/latency combination at construction and returns
+//! `Err` (naming the valid choices) instead of panicking:
+//!
+//! ```no_run
+//! use amu_sim::config::SimConfig;
+//! use amu_sim::session::RunRequest;
+//! use amu_sim::workloads::Variant;
+//!
+//! let r = RunRequest::bench("gups")
+//!     .config(SimConfig::amu())
+//!     .variant(Variant::Amu)
+//!     .latency_ns(1000.0)
+//!     .run()
+//!     .unwrap();
+//! println!("{} cycles @ mlp {:.1}", r.measured_cycles, r.mlp);
+//! ```
+//!
+//! # Running sweeps
+//!
+//! [`session::Session`] executes a [`session::SweepGrid`] — any
+//! benches × configs × latencies × variants cross product — across scoped
+//! worker threads with deterministic row ordering and a resumable,
+//! fingerprint-checked CSV cache:
+//!
+//! ```no_run
+//! use amu_sim::session::{Session, SweepGrid};
+//! use amu_sim::workloads::Scale;
+//!
+//! let grid = SweepGrid::paper(Scale::Test);
+//! let rows = Session::new().jobs(8).sweep(&grid).unwrap();
+//! assert_eq!(rows.len(), 11 * 4 * 6);
+//! ```
+//!
+//! The same executor backs `amu-sim sweep --jobs N` on the command line.
+//! The older stringly entry points `report::run_one` and
+//! `report::sweep_cached` are deprecated shims over this API.
 
 pub mod amu;
 pub mod area;
@@ -16,6 +56,7 @@ pub mod mem;
 pub mod power;
 pub mod report;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod stats;
 pub mod testing;

@@ -2,46 +2,64 @@
 //!
 //! Subcommands:
 //!   run     — simulate one benchmark under one configuration
+//!   sweep   — run a (custom or paper) scenario grid in parallel (--jobs)
 //!   report  — regenerate paper figures/tables (fig2..fig11, table4..6, all)
 //!   list    — enumerate benchmarks and configuration presets
 //!   payload — smoke-test the PJRT payload engine (artifacts/)
 
 use amu_sim::config::SimConfig;
 use amu_sim::report;
+use amu_sim::session::{RunRequest, Session, SweepGrid, VariantSel};
 use amu_sim::util::cli::{self, flag, opt, Spec};
-use amu_sim::workloads::{self, Scale, Variant};
+use amu_sim::workloads::{self, Scale};
 
 const RUN_SPECS: &[Spec] = &[
     opt("bench", "benchmark name (see `list`)"),
     opt("config", "configuration preset (baseline|cxl-ideal|amu|amu-dma|x2|x4)"),
     opt("latency-ns", "additional far-memory latency in ns"),
     opt("scale", "test|paper"),
-    opt("variant", "sync|amu|llvm|gp<N>|pf<N>"),
+    opt("variant", "auto|sync|amu|llvm|gp<N>|pf<N>[-<D>]"),
     opt("config-file", "TOML-lite overrides applied on top of the preset"),
     flag("quiet", "suppress progress output"),
 ];
 
-fn parse_scale(s: &str) -> Scale {
-    match s {
-        "paper" => Scale::Paper,
-        _ => Scale::Test,
+const SWEEP_SPECS: &[Spec] = &[
+    opt("benches", "comma-separated benchmark names (default: all 11)"),
+    opt("configs", "comma-separated presets (default: baseline,cxl-ideal,amu,amu-dma)"),
+    opt("latencies-ns", "comma-separated latencies in ns (default: paper's 6 points)"),
+    opt("variant", "auto|sync|amu|llvm|gp<N>|pf<N>[-<D>] (default: auto per config)"),
+    opt("scale", "test|paper"),
+    opt("jobs", "worker threads (default: all cores)"),
+    opt("cache-file", "explicit cache CSV path"),
+    flag("no-cache", "do not read or write the sweep cache"),
+    flag("quiet", "suppress per-run progress output"),
+];
+
+fn parse_scale(s: &str) -> Result<Scale, String> {
+    s.parse()
+}
+
+fn parse_variant_sel(s: &str) -> Result<VariantSel, String> {
+    VariantSel::parse(s).map_err(|e| e.to_string())
+}
+
+fn parse_jobs(args: &cli::Args) -> Result<Option<usize>, String> {
+    match args.get("jobs") {
+        None => Ok(None),
+        Some(s) => {
+            let n: usize = s
+                .parse()
+                .map_err(|_| format!("--jobs: bad count '{s}' (expected a positive integer)"))?;
+            if n == 0 {
+                return Err("--jobs must be >= 1".into());
+            }
+            Ok(Some(n))
+        }
     }
 }
 
-fn parse_variant(s: &str, cfg: &SimConfig) -> Variant {
-    if s == "sync" {
-        Variant::Sync
-    } else if s == "amu" {
-        Variant::Amu
-    } else if s == "llvm" {
-        Variant::AmuLlvm
-    } else if let Some(g) = s.strip_prefix("gp") {
-        Variant::GroupPrefetch(g.parse().unwrap_or(16))
-    } else if let Some(g) = s.strip_prefix("pf") {
-        Variant::SwPrefetch { batch: g.parse().unwrap_or(16), depth: 0 }
-    } else {
-        workloads::variant_for(cfg)
-    }
+fn split_list(s: &str) -> Vec<String> {
+    s.split(',').map(str::trim).filter(|p| !p.is_empty()).map(String::from).collect()
 }
 
 fn cmd_run(argv: &[String]) -> Result<(), String> {
@@ -49,7 +67,7 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     let bench = args.get_str("bench", "gups");
     let config = args.get_str("config", "baseline");
     let latency = args.get_f64("latency-ns", 1000.0).map_err(|e| e.to_string())?;
-    let scale = parse_scale(&args.get_str("scale", "test"));
+    let scale = parse_scale(&args.get_str("scale", "test"))?;
     let mut cfg = SimConfig::preset(&config)
         .ok_or_else(|| format!("unknown config '{config}'"))?
         .with_far_latency_ns(latency);
@@ -58,8 +76,15 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         let doc = amu_sim::util::toml_lite::parse(&text).map_err(|e| e.to_string())?;
         cfg.apply_overrides(&doc)?;
     }
-    let variant = parse_variant(&args.get_str("variant", "auto"), &cfg);
-    let r = report::run_one(&bench, &config, variant, latency, scale)?;
+    let mut builder = RunRequest::bench(bench).config(cfg).scale(scale);
+    match parse_variant_sel(&args.get_str("variant", "auto"))? {
+        VariantSel::Auto => {}
+        VariantSel::Fixed(v) => builder = builder.variant(v),
+    }
+    let req = builder.build().map_err(|e| e.to_string())?;
+    let t0 = std::time::Instant::now();
+    let r = req.run().map_err(|e| e.to_string())?;
+    let host_ms = t0.elapsed().as_millis();
     println!(
         "bench={} config={} variant={} latency={}ns",
         r.bench, r.config, r.variant, r.latency_ns
@@ -77,47 +102,112 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         r.dynamic_uj,
         r.static_uj,
         r.disambig_frac * 100.0,
-        r.host_ms
+        host_ms
     );
     Ok(())
 }
 
+fn cmd_sweep(argv: &[String]) -> Result<(), String> {
+    let args = cli::parse(argv, SWEEP_SPECS).map_err(|e| e.to_string())?;
+    let scale = parse_scale(&args.get_str("scale", "test"))?;
+    let mut grid = SweepGrid::paper(scale);
+    if let Some(s) = args.get("benches") {
+        grid.benches = split_list(s);
+    }
+    if let Some(s) = args.get("configs") {
+        grid.configs = split_list(s);
+    }
+    if let Some(s) = args.get("latencies-ns") {
+        let mut lats = Vec::new();
+        for item in split_list(s) {
+            lats.push(
+                item.parse::<f64>()
+                    .map_err(|_| format!("--latencies-ns: bad latency '{item}'"))?,
+            );
+        }
+        grid.latencies_ns = lats;
+    }
+    grid.variants = vec![parse_variant_sel(&args.get_str("variant", "auto"))?];
+
+    let mut session = Session::new().quiet(args.has_flag("quiet"));
+    if let Some(n) = parse_jobs(&args)? {
+        session = session.jobs(n);
+    }
+    let cache_path = if args.has_flag("no-cache") {
+        None
+    } else {
+        Some(match args.get("cache-file") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => Session::default_cache_path(&grid),
+        })
+    };
+    if let Some(p) = &cache_path {
+        session = session.cache_path(p.clone());
+    }
+
+    let t0 = std::time::Instant::now();
+    let rows = session.sweep(&grid).map_err(|e| e.to_string())?;
+    let wall = t0.elapsed();
+    println!(
+        "sweep: {} rows ({} benches x {} configs x {} latencies x {} variants) in {:.2?}",
+        rows.len(),
+        grid.benches.len(),
+        grid.configs.len(),
+        grid.latencies_ns.len(),
+        grid.variants.len(),
+        wall
+    );
+    match &cache_path {
+        Some(p) => println!("csv: {}", p.display()),
+        None => println!("csv: (not written; --no-cache)"),
+    }
+    Ok(())
+}
+
 fn cmd_report(argv: &[String]) -> Result<(), String> {
-    let specs: &[Spec] = &[opt("scale", "test|paper"), flag("quiet", "less progress")];
-    let args = cli::parse(&argv[1..], specs).map_err(|e| e.to_string())?;
+    let specs: &[Spec] = &[
+        opt("scale", "test|paper"),
+        opt("jobs", "worker threads for sweeps (default: all cores)"),
+        flag("quiet", "less progress"),
+    ];
+    let args = cli::parse(argv.get(1..).unwrap_or(&[]), specs).map_err(|e| e.to_string())?;
     let what = argv.first().map(|s| s.as_str()).unwrap_or("all");
-    let scale = parse_scale(&args.get_str("scale", "paper"));
+    let scale = parse_scale(&args.get_str("scale", "paper"))?;
     let quiet = args.has_flag("quiet");
+    let mut session = Session::new().quiet(quiet);
+    if let Some(n) = parse_jobs(&args)? {
+        session = session.jobs(n);
+    }
     let needs_sweep = matches!(
         what,
         "fig2" | "fig8" | "fig9" | "fig10" | "fig11" | "headline" | "all"
     );
     let rows = if needs_sweep {
-        report::sweep_cached(scale, quiet)
+        session.sweep_paper(scale).map_err(|e| e.to_string())?
     } else {
         Vec::new()
     };
     let emit = |name: &str, body: String| report::write_report(name, &body);
     match what {
         "fig2" => emit("fig2", report::fig2(&rows)),
-        "fig3" => emit("fig3", report::fig3(scale, 1000.0)),
+        "fig3" => emit("fig3", report::fig3(&session, scale, 1000.0)),
         "fig8" => emit("fig8", report::fig8(&rows)),
         "fig9" => emit("fig9", report::fig9(&rows)),
         "fig10" => emit("fig10", report::fig10(&rows)),
         "fig11" => emit("fig11", report::fig11(&rows)),
-        "table4" => emit("table4", report::table4(scale)),
-        "table5" => emit("table5", report::table5(scale)),
+        "table4" => emit("table4", report::table4(&session, scale)),
+        "table5" => emit("table5", report::table5(&session, scale)),
         "table6" => emit("table6", report::table6()),
         "headline" => emit("headline", report::headline(&rows)),
         "all" => {
             emit("fig2", report::fig2(&rows));
-            emit("fig3", report::fig3(scale, 1000.0));
+            emit("fig3", report::fig3(&session, scale, 1000.0));
             emit("fig8", report::fig8(&rows));
             emit("fig9", report::fig9(&rows));
             emit("fig10", report::fig10(&rows));
             emit("fig11", report::fig11(&rows));
-            emit("table4", report::table4(scale));
-            emit("table5", report::table5(scale));
+            emit("table4", report::table4(&session, scale));
+            emit("table5", report::table5(&session, scale));
             emit("table6", report::table6());
             emit("headline", report::headline(&rows));
         }
@@ -147,6 +237,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let result = match argv.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&argv[1..]),
+        Some("sweep") => cmd_sweep(&argv[1..]),
         Some("report") => cmd_report(&argv[1..]),
         Some("payload") => cmd_payload(),
         Some("list") => {
@@ -156,8 +247,9 @@ fn main() {
         }
         _ => {
             eprintln!("amu-sim {} — AMU paper reproduction", amu_sim::version());
-            eprintln!("usage: amu-sim <run|report|payload|list> [options]");
+            eprintln!("usage: amu-sim <run|sweep|report|payload|list> [options]");
             eprintln!("{}", cli::usage("amu-sim run", RUN_SPECS));
+            eprintln!("{}", cli::usage("amu-sim sweep", SWEEP_SPECS));
             eprintln!("reports: fig2 fig3 fig8 fig9 fig10 fig11 table4 table5 table6 headline all");
             Ok(())
         }

@@ -2,54 +2,27 @@
 //! evaluation (§6) from simulation. Each generator prints the same
 //! rows/series the paper reports and writes CSV into `results/`.
 //!
-//! The Fig 8/9/10/11 sweep (11 benchmarks x 4 configs x 6 latencies) is
-//! shared through an on-disk cache (`results/sweep_<scale>.csv`), so the
-//! per-figure bench harnesses do not re-simulate.
+//! All simulation goes through the typed [`crate::session`] API: the
+//! Fig 8/9/10/11 sweep (11 benchmarks x 4 configs x 6 latencies) is a
+//! [`SweepGrid`](crate::session::SweepGrid) executed by a parallel
+//! [`Session`], shared through the fingerprint-checked on-disk cache
+//! (`results/sweep_<scale>.csv`), so the per-figure bench harnesses do not
+//! re-simulate. The stringly [`run_one`] / [`sweep_cached`] entry points
+//! remain only as deprecated shims.
 
 use crate::config::SimConfig;
-use crate::power::{estimate, EnergyModel, PowerBreakdown};
+use crate::session::{RunRequest, Session, SweepGrid, VariantSel};
 use crate::util::geomean;
 use crate::workloads::{self, Scale, Variant};
 use std::fmt::Write as _;
-use std::path::PathBuf;
 
-#[derive(Debug, Clone, PartialEq)]
-pub struct RunResult {
-    pub bench: String,
-    pub config: String,
-    pub variant: String,
-    pub latency_ns: f64,
-    pub measured_cycles: u64,
-    pub total_cycles: u64,
-    pub insts: u64,
-    pub ipc: f64,
-    pub mlp: f64,
-    pub peak_inflight: u64,
-    pub dynamic_uj: f64,
-    pub static_uj: f64,
-    pub disambig_frac: f64,
-    pub host_ms: u64,
-}
+pub use crate::session::{results_dir, RunResult};
 
-impl RunResult {
-    pub fn power(&self) -> PowerBreakdown {
-        PowerBreakdown { dynamic_uj: self.dynamic_uj, static_uj: self.static_uj }
-    }
-}
-
-pub fn results_dir() -> PathBuf {
-    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
-    std::fs::create_dir_all(&d).ok();
-    d
-}
-
-fn config_by_name(name: &str, latency_ns: f64) -> SimConfig {
-    SimConfig::preset(name)
-        .unwrap_or_else(|| panic!("unknown config '{name}'"))
-        .with_far_latency_ns(latency_ns)
-}
+/// The paper's four evaluated configurations.
+pub const SWEEP_CONFIGS: &[&str] = crate::session::PAPER_CONFIGS;
 
 /// Run one benchmark under one configuration.
+#[deprecated(note = "use session::RunRequest — typed, validated, no panics")]
 pub fn run_one(
     bench: &str,
     config: &str,
@@ -57,127 +30,22 @@ pub fn run_one(
     latency_ns: f64,
     scale: Scale,
 ) -> Result<RunResult, String> {
-    let cfg = config_by_name(config, latency_ns);
-    let spec = workloads::build(bench, &cfg, variant, scale);
-    let t0 = std::time::Instant::now();
-    let sim = spec.run(&cfg)?;
-    let host_ms = t0.elapsed().as_millis() as u64;
-    let p = estimate(&cfg, &sim.stats, &EnergyModel::default());
-    Ok(RunResult {
-        bench: bench.into(),
-        config: config.into(),
-        variant: variant.tag(),
-        latency_ns,
-        measured_cycles: sim.stats.measured_cycles.max(1),
-        total_cycles: sim.cycle,
-        insts: sim.stats.insts_committed,
-        ipc: sim.stats.ipc(),
-        mlp: sim.stats.mlp(),
-        peak_inflight: sim.stats.far_inflight.max,
-        dynamic_uj: p.dynamic_uj,
-        static_uj: p.static_uj,
-        disambig_frac: sim.stats.region_fraction(crate::stats::Region::Disambig),
-        host_ms,
-    })
-}
-
-pub const SWEEP_CONFIGS: &[&str] = &["baseline", "cxl-ideal", "amu", "amu-dma"];
-
-fn scale_tag(scale: Scale) -> &'static str {
-    match scale {
-        Scale::Test => "test",
-        Scale::Paper => "paper",
-    }
-}
-
-const CSV_HEADER: &str = "bench,config,variant,latency_ns,measured_cycles,total_cycles,\
-insts,ipc,mlp,peak_inflight,dynamic_uj,static_uj,disambig_frac,host_ms";
-
-fn to_csv_row(r: &RunResult) -> String {
-    format!(
-        "{},{},{},{},{},{},{},{:.6},{:.4},{},{:.6},{:.6},{:.6},{}",
-        r.bench,
-        r.config,
-        r.variant,
-        r.latency_ns,
-        r.measured_cycles,
-        r.total_cycles,
-        r.insts,
-        r.ipc,
-        r.mlp,
-        r.peak_inflight,
-        r.dynamic_uj,
-        r.static_uj,
-        r.disambig_frac,
-        r.host_ms
-    )
-}
-
-fn parse_csv(text: &str) -> Option<Vec<RunResult>> {
-    let mut out = Vec::new();
-    for line in text.lines().skip(1) {
-        let f: Vec<&str> = line.split(',').collect();
-        if f.len() != 14 {
-            return None;
-        }
-        out.push(RunResult {
-            bench: f[0].into(),
-            config: f[1].into(),
-            variant: f[2].into(),
-            latency_ns: f[3].parse().ok()?,
-            measured_cycles: f[4].parse().ok()?,
-            total_cycles: f[5].parse().ok()?,
-            insts: f[6].parse().ok()?,
-            ipc: f[7].parse().ok()?,
-            mlp: f[8].parse().ok()?,
-            peak_inflight: f[9].parse().ok()?,
-            dynamic_uj: f[10].parse().ok()?,
-            static_uj: f[11].parse().ok()?,
-            disambig_frac: f[12].parse().ok()?,
-            host_ms: f[13].parse().ok()?,
-        });
-    }
-    Some(out)
+    RunRequest::bench(bench)
+        .config_name(config)
+        .variant(variant)
+        .latency_ns(latency_ns)
+        .scale(scale)
+        .run()
+        .map_err(|e| e.to_string())
 }
 
 /// The shared Fig 8/9/10/11 sweep, cached in `results/`.
+#[deprecated(note = "use session::Session::sweep_paper — parallel and non-panicking")]
 pub fn sweep_cached(scale: Scale, quiet: bool) -> Vec<RunResult> {
-    let path = results_dir().join(format!("sweep_{}.csv", scale_tag(scale)));
-    if let Ok(text) = std::fs::read_to_string(&path) {
-        if let Some(rows) = parse_csv(&text) {
-            let expected =
-                workloads::ALL.len() * SWEEP_CONFIGS.len() * SimConfig::paper_latencies_ns().len();
-            if rows.len() == expected {
-                if !quiet {
-                    eprintln!("[sweep] using cached {}", path.display());
-                }
-                return rows;
-            }
-        }
-    }
-    let mut rows = Vec::new();
-    for bench in workloads::ALL {
-        for config in SWEEP_CONFIGS {
-            for &lat in SimConfig::paper_latencies_ns() {
-                let cfg = config_by_name(config, lat);
-                let variant = workloads::variant_for(&cfg);
-                if !quiet {
-                    eprintln!("[sweep] {bench} {config} @{lat}ns ...");
-                }
-                let r = run_one(bench, config, variant, lat, scale)
-                    .unwrap_or_else(|e| panic!("sweep failed: {e}"));
-                rows.push(r);
-            }
-        }
-    }
-    let mut csv = String::from(CSV_HEADER);
-    csv.push('\n');
-    for r in &rows {
-        csv.push_str(&to_csv_row(r));
-        csv.push('\n');
-    }
-    std::fs::write(&path, csv).ok();
-    rows
+    Session::new()
+        .quiet(quiet)
+        .sweep_paper(scale)
+        .unwrap_or_else(|e| panic!("sweep failed: {e}"))
 }
 
 fn find<'a>(
@@ -188,6 +56,32 @@ fn find<'a>(
 ) -> Option<&'a RunResult> {
     rows.iter()
         .find(|r| r.bench == bench && r.config == config && r.latency_ns == lat)
+}
+
+/// Like [`find`], but also matching the variant tag (for grids that sweep
+/// the variant axis).
+fn find_v<'a>(
+    rows: &'a [RunResult],
+    bench: &str,
+    config: &str,
+    lat: f64,
+    variant: &str,
+) -> Option<&'a RunResult> {
+    rows.iter().find(|r| {
+        r.bench == bench && r.config == config && r.latency_ns == lat && r.variant == variant
+    })
+}
+
+/// Run a generator grid through the session with the grid's own
+/// fingerprint-keyed cache file: every distinct grid gets a distinct
+/// `results/sweep_<scale>_<fp>.csv`, so fig3/table4/table5 resume across
+/// invocations without clobbering each other or the paper sweep.
+fn sweep_grid_cached(session: &Session, grid: &SweepGrid, what: &str) -> Vec<RunResult> {
+    session
+        .clone()
+        .cache_path(Session::default_cache_path(grid))
+        .sweep(grid)
+        .unwrap_or_else(|e| panic!("{what} sweep failed: {e}"))
 }
 
 /// Baseline-at-100ns normalization denominator for one benchmark.
@@ -292,7 +186,7 @@ pub fn fig11(rows: &[RunResult]) -> String {
     writeln!(s, "{:>8} {:>10} {:>12} {:>10} {:>10} {:>10}", "bench", "config", "lat(us)", "static", "dynamic", "total").unwrap();
     for b in workloads::ALL {
         let base = find(rows, b, "baseline", 100.0)
-            .map(|r| r.dynamic_uj + r.static_uj)
+            .map(|r| r.total_uj())
             .unwrap_or(1.0);
         for c in SWEEP_CONFIGS {
             for &lat in [500.0, 1000.0].iter() {
@@ -321,9 +215,7 @@ pub fn fig11(rows: &[RunResult]) -> String {
             .filter_map(|b| {
                 let amu = find(rows, b, "amu", lat)?;
                 let base = find(rows, b, "baseline", lat)?;
-                Some(
-                    (amu.total_power()) / (base.total_power()),
-                )
+                Some(amu.total_uj() / base.total_uj())
             })
             .collect();
         if let Some(g) = geomean(&ratios) {
@@ -333,16 +225,18 @@ pub fn fig11(rows: &[RunResult]) -> String {
     s
 }
 
-impl RunResult {
-    fn total_power(&self) -> f64 {
-        self.dynamic_uj + self.static_uj
-    }
-}
-
 /// Fig 3: GUPS group-prefetch sensitivity across hardware scaling.
-pub fn fig3(scale: Scale, latency_ns: f64) -> String {
+pub fn fig3(session: &Session, scale: Scale, latency_ns: f64) -> String {
     let groups = [2usize, 4, 8, 16, 32, 64, 128];
     let configs = ["cxl-ideal", "x2", "x4"];
+    let mut variants = vec![VariantSel::Fixed(Variant::Sync)];
+    variants.extend(groups.iter().map(|&g| VariantSel::Fixed(Variant::GroupPrefetch(g))));
+    let grid = SweepGrid::new(scale)
+        .benches(["gups"])
+        .configs(configs)
+        .latencies_ns([latency_ns])
+        .variants(variants);
+    let rows = sweep_grid_cached(session, &grid, "fig3");
     let mut s = String::new();
     writeln!(
         s,
@@ -358,14 +252,15 @@ pub fn fig3(scale: Scale, latency_ns: f64) -> String {
     // Baseline bars: plain GUPS per config.
     write!(s, "{:>10}", "none").unwrap();
     for c in configs {
-        let r = run_one("gups", c, Variant::Sync, latency_ns, scale).unwrap();
+        let r = find_v(&rows, "gups", c, latency_ns, "sync").expect("sync row");
         write!(s, "{:>12}", r.measured_cycles).unwrap();
     }
     writeln!(s).unwrap();
     for g in groups {
         write!(s, "{g:>10}").unwrap();
+        let tag = Variant::GroupPrefetch(g).tag();
         for c in configs {
-            let r = run_one("gups", c, Variant::GroupPrefetch(g), latency_ns, scale).unwrap();
+            let r = find_v(&rows, "gups", c, latency_ns, &tag).expect("gp row");
             write!(s, "{:>12}", r.measured_cycles).unwrap();
         }
         writeln!(s).unwrap();
@@ -374,8 +269,10 @@ pub fn fig3(scale: Scale, latency_ns: f64) -> String {
 }
 
 /// Table 4: baseline vs best software prefetch vs AMU vs LLVM-AMU for
-/// GUPS / HJ / STREAM.
-pub fn table4(scale: Scale) -> String {
+/// GUPS / HJ / STREAM. Benchmarks without a software-prefetch port (HJ)
+/// report their sync run as `PF(best)` with `pf-cfg 0` — the previous
+/// generator ran sync four times and labeled the rows `gp2..gp128`.
+pub fn table4(session: &Session, scale: Scale) -> String {
     let benches = ["gups", "hj", "stream"];
     let pf_groups = [2usize, 8, 32, 128];
     let mut s = String::new();
@@ -387,27 +284,54 @@ pub fn table4(scale: Scale) -> String {
     )
     .unwrap();
     for b in benches {
-        let base = run_one(b, "cxl-ideal", Variant::Sync, 100.0, scale)
-            .unwrap()
+        let pf_variant = |g: usize| {
+            if b == "stream" {
+                Variant::SwPrefetch { batch: g, depth: 0 }
+            } else {
+                Variant::GroupPrefetch(g)
+            }
+        };
+        let has_pf_port = crate::session::registry::find(b)
+            .map(|w| w.supported_variants().contains(&pf_variant(2).kind()))
+            .unwrap_or(false);
+        let mut cxl_variants = vec![VariantSel::Fixed(Variant::Sync)];
+        if has_pf_port {
+            cxl_variants.extend(pf_groups.iter().map(|&g| VariantSel::Fixed(pf_variant(g))));
+        }
+        let cxl_grid = SweepGrid::new(scale)
+            .benches([b])
+            .configs(["cxl-ideal"])
+            .latencies_ns(SimConfig::paper_latencies_ns().iter().copied())
+            .variants(cxl_variants);
+        let amu_grid = SweepGrid::new(scale)
+            .benches([b])
+            .configs(["amu"])
+            .latencies_ns(SimConfig::paper_latencies_ns().iter().copied())
+            .variants([
+                VariantSel::Fixed(Variant::Amu),
+                VariantSel::Fixed(Variant::AmuLlvm),
+            ]);
+        let mut rows = sweep_grid_cached(session, &cxl_grid, "table4");
+        rows.extend(sweep_grid_cached(session, &amu_grid, "table4"));
+        let base = find_v(&rows, b, "cxl-ideal", 100.0, "sync")
+            .expect("norm row")
             .measured_cycles as f64;
         for &lat in SimConfig::paper_latencies_ns() {
-            let cxl = run_one(b, "cxl-ideal", Variant::Sync, lat, scale).unwrap();
-            let mut best_pf = f64::INFINITY;
+            let cxl = find_v(&rows, b, "cxl-ideal", lat, "sync").expect("cxl row");
+            let mut best_pf = cxl.measured_cycles as f64;
             let mut best_cfg = 0usize;
-            for &g in &pf_groups {
-                let v = if b == "stream" {
-                    Variant::SwPrefetch { batch: g, depth: 0 }
-                } else {
-                    Variant::GroupPrefetch(g)
-                };
-                let r = run_one(b, "cxl-ideal", v, lat, scale).unwrap();
-                if (r.measured_cycles as f64) < best_pf {
-                    best_pf = r.measured_cycles as f64;
-                    best_cfg = g;
+            if has_pf_port {
+                for &g in &pf_groups {
+                    let tag = pf_variant(g).tag();
+                    let r = find_v(&rows, b, "cxl-ideal", lat, &tag).expect("pf row");
+                    if (r.measured_cycles as f64) < best_pf {
+                        best_pf = r.measured_cycles as f64;
+                        best_cfg = g;
+                    }
                 }
             }
-            let amu = run_one(b, "amu", Variant::Amu, lat, scale).unwrap();
-            let llvm = run_one(b, "amu", Variant::AmuLlvm, lat, scale).unwrap();
+            let amu = find_v(&rows, b, "amu", lat, "amu").expect("amu row");
+            let llvm = find_v(&rows, b, "amu", lat, "llvm").expect("llvm row");
             writeln!(
                 s,
                 "{:>8} {:>8.1} {:>10.2} {:>10.2} {:>10} {:>10.2} {:>10.2}",
@@ -426,7 +350,13 @@ pub fn table4(scale: Scale) -> String {
 }
 
 /// Table 5: % of execution time spent on software disambiguation (HJ, HT).
-pub fn table5(scale: Scale) -> String {
+pub fn table5(session: &Session, scale: Scale) -> String {
+    let grid = SweepGrid::new(scale)
+        .benches(["hj", "ht"])
+        .configs(["amu"])
+        .latencies_ns(SimConfig::paper_latencies_ns().iter().copied())
+        .variant(Variant::Amu);
+    let rows = sweep_grid_cached(session, &grid, "table5");
     let mut s = String::new();
     writeln!(s, "# Table 5 — execution time share of software disambiguation").unwrap();
     write!(s, "{:>8}", "bench").unwrap();
@@ -437,7 +367,7 @@ pub fn table5(scale: Scale) -> String {
     for b in ["hj", "ht"] {
         write!(s, "{b:>8}").unwrap();
         for &lat in SimConfig::paper_latencies_ns() {
-            let r = run_one(b, "amu", Variant::Amu, lat, scale).unwrap();
+            let r = find_v(&rows, b, "amu", lat, "amu").expect("amu row");
             write!(s, "{:>8.2}%", r.disambig_frac * 100.0).unwrap();
         }
         writeln!(s).unwrap();
@@ -514,7 +444,8 @@ mod tests {
     use super::*;
 
     #[test]
-    fn run_one_produces_metrics() {
+    #[allow(deprecated)]
+    fn run_one_shim_still_produces_metrics() {
         let r = run_one("gups", "baseline", Variant::Sync, 200.0, Scale::Test).unwrap();
         assert!(r.measured_cycles > 0);
         assert!(r.ipc > 0.0);
@@ -522,14 +453,12 @@ mod tests {
     }
 
     #[test]
-    fn csv_roundtrip() {
-        let r = run_one("gups", "amu", Variant::Amu, 200.0, Scale::Test).unwrap();
-        let csv = format!("{CSV_HEADER}\n{}\n", to_csv_row(&r));
-        let parsed = parse_csv(&csv).expect("parse");
-        assert_eq!(parsed.len(), 1);
-        assert_eq!(parsed[0].bench, "gups");
-        assert_eq!(parsed[0].measured_cycles, r.measured_cycles);
-        assert_eq!(parsed[0].peak_inflight, r.peak_inflight);
+    #[allow(deprecated)]
+    fn run_one_shim_reports_errors_instead_of_panicking() {
+        let e = run_one("nope", "baseline", Variant::Sync, 200.0, Scale::Test).unwrap_err();
+        assert!(e.contains("unknown benchmark"), "{e}");
+        let e = run_one("gups", "warp9", Variant::Sync, 200.0, Scale::Test).unwrap_err();
+        assert!(e.contains("unknown config"), "{e}");
     }
 
     #[test]

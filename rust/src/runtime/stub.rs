@@ -1,0 +1,79 @@
+//! Payload-engine stub used when the `pjrt` feature is off (the default in
+//! the offline build image): same API as the real backend, every entry
+//! point reports the engine as unavailable. Callers already degrade
+//! gracefully — integration tests skip, drivers print a note.
+
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(RuntimeError(
+        "PJRT payload engine not compiled in: rebuild with `--features pjrt` \
+         (requires the xla and anyhow crates; see the runtime module docs)"
+            .into(),
+    ))
+}
+
+/// Unconstructible stand-in for the PJRT runtime: `load`/`load_default`
+/// always return `Err`, so the payload methods are never reachable, but
+/// they keep call sites compiling identically under both feature states.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn load(_dir: &Path) -> Result<Self> {
+        unavailable()
+    }
+
+    pub fn load_default() -> Result<Self> {
+        unavailable()
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+
+    pub fn gups_update(&self, _vals: &[i32], _idxs: &[i32]) -> Result<Vec<i32>> {
+        unavailable()
+    }
+
+    pub fn gups_step(&self, _vals: &[i32], _idxs: &[i32]) -> Result<Vec<i32>> {
+        unavailable()
+    }
+
+    pub fn stream_triad(&self, _b: &[f32], _c: &[f32]) -> Result<Vec<f32>> {
+        unavailable()
+    }
+
+    pub fn hash_mult(&self, _keys: &[i32]) -> Result<Vec<i32>> {
+        unavailable()
+    }
+
+    pub fn spmv_ell(&self, _vals: &[f32], _cols: &[i32], _x: &[f32]) -> Result<Vec<f32>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let e = Runtime::load_default().err().expect("stub must not load");
+        assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+}

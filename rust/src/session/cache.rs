@@ -1,0 +1,176 @@
+//! On-disk sweep cache: CSV with a grid-fingerprint header.
+//!
+//! Format (version 2 — version 1 had no fingerprint and trusted row count
+//! alone, which silently reused stale files):
+//!
+//! ```text
+//! # amu-sim sweep cache v2 grid=<16-hex-digit fingerprint>
+//! bench,config,variant,latency_ns,...
+//! <one row per completed run>
+//! ```
+//!
+//! Rows are keyed by `(bench, config, variant, latency)`, so a partial
+//! file (e.g. from an interrupted sweep) resumes instead of re-simulating
+//! everything. Floats are serialized with Rust's shortest-round-trip
+//! formatting, so `parse_csv(to_csv_row(r))` reproduces every field
+//! bit-exactly. Any malformed line rejects the whole file — a corrupt
+//! cache is never partially loaded.
+
+use crate::session::RunResult;
+
+pub const CSV_HEADER: &str = "bench,config,variant,latency_ns,measured_cycles,total_cycles,\
+insts,ipc,mlp,peak_inflight,dynamic_uj,static_uj,disambig_frac";
+
+const MAGIC: &str = "# amu-sim sweep cache v2 grid=";
+
+/// Serialize one result row. Floats use `{}` (shortest representation that
+/// round-trips exactly), keeping cached and freshly simulated rows
+/// byte-identical.
+pub fn to_csv_row(r: &RunResult) -> String {
+    format!(
+        "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+        r.bench,
+        r.config,
+        r.variant,
+        r.latency_ns,
+        r.measured_cycles,
+        r.total_cycles,
+        r.insts,
+        r.ipc,
+        r.mlp,
+        r.peak_inflight,
+        r.dynamic_uj,
+        r.static_uj,
+        r.disambig_frac,
+    )
+}
+
+fn parse_row(line: &str) -> Result<RunResult, String> {
+    let f: Vec<&str> = line.split(',').collect();
+    if f.len() != 13 {
+        return Err(format!("expected 13 fields, got {} in '{line}'", f.len()));
+    }
+    let num = |i: usize| -> Result<f64, String> {
+        f[i].parse().map_err(|_| format!("bad number '{}' in '{line}'", f[i]))
+    };
+    let int = |i: usize| -> Result<u64, String> {
+        f[i].parse().map_err(|_| format!("bad integer '{}' in '{line}'", f[i]))
+    };
+    Ok(RunResult {
+        bench: f[0].into(),
+        config: f[1].into(),
+        variant: f[2].into(),
+        latency_ns: num(3)?,
+        measured_cycles: int(4)?,
+        total_cycles: int(5)?,
+        insts: int(6)?,
+        ipc: num(7)?,
+        mlp: num(8)?,
+        peak_inflight: int(9)?,
+        dynamic_uj: num(10)?,
+        static_uj: num(11)?,
+        disambig_frac: num(12)?,
+    })
+}
+
+/// The fingerprint header line for a grid fingerprint.
+pub fn header(fingerprint: u64) -> String {
+    format!("{MAGIC}{fingerprint:016x}")
+}
+
+/// Serialize a complete cache file (fingerprint header + column header +
+/// rows in the given order).
+pub fn to_csv_string(fingerprint: u64, rows: &[RunResult]) -> String {
+    let mut s = header(fingerprint);
+    s.push('\n');
+    s.push_str(CSV_HEADER);
+    s.push('\n');
+    for r in rows {
+        s.push_str(&to_csv_row(r));
+        s.push('\n');
+    }
+    s
+}
+
+/// Parse a cache file: returns the stored grid fingerprint and every row.
+/// Strict: an unrecognized header, a stale (v1) format, or any corrupt /
+/// truncated row rejects the whole file.
+pub fn parse_csv(text: &str) -> Result<(u64, Vec<RunResult>), String> {
+    let mut lines = text.lines();
+    let first = lines.next().ok_or("empty cache file")?;
+    let hex = first
+        .strip_prefix(MAGIC)
+        .ok_or_else(|| format!("not a v2 sweep cache (header '{first}')"))?;
+    let fingerprint =
+        u64::from_str_radix(hex, 16).map_err(|_| format!("bad fingerprint '{hex}'"))?;
+    let cols = lines.next().ok_or("missing column header")?;
+    if cols != CSV_HEADER {
+        return Err(format!("unexpected column header '{cols}'"));
+    }
+    let mut rows = Vec::new();
+    for line in lines {
+        rows.push(parse_row(line)?);
+    }
+    Ok((fingerprint, rows))
+}
+
+/// The per-run key a row is cached under.
+pub fn key_of(r: &RunResult) -> (String, String, String, u64) {
+    (r.bench.clone(), r.config.clone(), r.variant.clone(), r.latency_ns.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunResult {
+        RunResult {
+            bench: "gups".into(),
+            config: "amu".into(),
+            variant: "amu".into(),
+            latency_ns: 1000.0,
+            measured_cycles: 123_456,
+            total_cycles: 200_000,
+            insts: 98_765,
+            ipc: 0.123_456_789_012_345,
+            mlp: 37.25,
+            peak_inflight: 142,
+            dynamic_uj: 1.0 / 3.0,
+            static_uj: 2.5e-7,
+            disambig_frac: 0.087_654_321,
+        }
+    }
+
+    #[test]
+    fn row_round_trips_bit_exactly() {
+        let r = sample();
+        let text = to_csv_string(0xDEAD_BEEF, &[r.clone()]);
+        let (fp, rows) = parse_csv(&text).unwrap();
+        assert_eq!(fp, 0xDEAD_BEEF);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0], r);
+        assert_eq!(rows[0].ipc.to_bits(), r.ipc.to_bits());
+        assert_eq!(rows[0].disambig_frac.to_bits(), r.disambig_frac.to_bits());
+    }
+
+    #[test]
+    fn truncated_or_corrupt_files_are_rejected_whole() {
+        let text = to_csv_string(7, &[sample(), sample()]);
+        // Truncate mid-row: the whole file is rejected, not partially loaded.
+        let cut = &text[..text.len() - 20];
+        assert!(parse_csv(cut).is_err());
+        // Corrupt one number.
+        let bad = text.replace("123456", "123xyz");
+        assert!(parse_csv(&bad).is_err());
+        // v1 files (no fingerprint header) are stale by definition.
+        let v1 = format!("{CSV_HEADER}\n{}\n", to_csv_row(&sample()));
+        assert!(parse_csv(&v1).is_err());
+    }
+
+    #[test]
+    fn empty_row_set_is_valid() {
+        let (fp, rows) = parse_csv(&to_csv_string(42, &[])).unwrap();
+        assert_eq!(fp, 42);
+        assert!(rows.is_empty());
+    }
+}

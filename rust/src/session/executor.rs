@@ -1,0 +1,224 @@
+//! The parallel sweep executor.
+//!
+//! A [`Session`] fans a [`SweepGrid`]'s runs out across scoped worker
+//! threads (default: all available cores), preserves the grid's canonical
+//! row order regardless of completion order, and keeps the on-disk CSV
+//! cache keyed per run — so partial sweeps resume instead of re-simulating
+//! everything, and a cache written for a different grid is invalidated by
+//! its fingerprint.
+//!
+//! Every run is an independent simulation with its own seeded PRNG, so
+//! `--jobs 1` and `--jobs N` produce byte-identical CSV output.
+
+use crate::session::cache;
+use crate::session::grid::SweepGrid;
+use crate::session::request::{RunRequest, SessionError};
+use crate::session::{results_dir, RunResult};
+use crate::workloads::Scale;
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Executes typed run requests, serially or in parallel.
+#[derive(Debug, Clone)]
+pub struct Session {
+    jobs: usize,
+    quiet: bool,
+    cache: Option<PathBuf>,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Session {
+    /// A session sized to the host's available parallelism, no cache.
+    pub fn new() -> Self {
+        let jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self { jobs, quiet: false, cache: None }
+    }
+
+    /// Set the worker count (clamped to >= 1).
+    pub fn jobs(mut self, n: usize) -> Self {
+        self.jobs = n.max(1);
+        self
+    }
+
+    pub fn quiet(mut self, q: bool) -> Self {
+        self.quiet = q;
+        self
+    }
+
+    /// Cache sweep rows at `path` (fingerprint-checked, per-run keyed).
+    pub fn cache_path(mut self, path: PathBuf) -> Self {
+        self.cache = Some(path);
+        self
+    }
+
+    /// Drop any configured cache (used by generators that run several
+    /// different grids back to back and must not clobber one file).
+    pub fn without_cache(mut self) -> Self {
+        self.cache = None;
+        self
+    }
+
+    /// Where a grid's sweep is cached by default: the paper grid keeps the
+    /// historical `results/sweep_<scale>.csv` name; any other grid gets a
+    /// fingerprint-suffixed file so grids never clobber each other.
+    pub fn default_cache_path(grid: &SweepGrid) -> PathBuf {
+        let tag = grid.scale.tag();
+        if *grid == SweepGrid::paper(grid.scale) {
+            results_dir().join(format!("sweep_{tag}.csv"))
+        } else {
+            results_dir().join(format!("sweep_{tag}_{:016x}.csv", grid.fingerprint()))
+        }
+    }
+
+    /// Execute one request (no caching).
+    pub fn run(&self, req: &RunRequest) -> Result<RunResult, SessionError> {
+        req.run()
+    }
+
+    /// The paper sweep with its default cache location.
+    pub fn sweep_paper(&self, scale: Scale) -> Result<Vec<RunResult>, SessionError> {
+        let grid = SweepGrid::paper(scale);
+        let mut s = self.clone();
+        if s.cache.is_none() {
+            s.cache = Some(Self::default_cache_path(&grid));
+        }
+        s.sweep(&grid)
+    }
+
+    /// Run every cell of `grid`, reusing cached rows where the cache's
+    /// fingerprint matches, and return results in canonical grid order.
+    pub fn sweep(&self, grid: &SweepGrid) -> Result<Vec<RunResult>, SessionError> {
+        let requests = grid.requests()?;
+        let fingerprint = grid.fingerprint();
+        let mut rows: Vec<Option<RunResult>> = vec![None; requests.len()];
+
+        // Load per-run keyed cache rows; fingerprint mismatch invalidates.
+        let mut cache_hits = 0usize;
+        if let Some(path) = &self.cache {
+            if let Ok(text) = std::fs::read_to_string(path) {
+                match cache::parse_csv(&text) {
+                    Ok((fp, cached)) if fp == fingerprint => {
+                        let by_key: HashMap<_, _> =
+                            cached.into_iter().map(|r| (cache::key_of(&r), r)).collect();
+                        for (i, req) in requests.iter().enumerate() {
+                            if let Some(r) = by_key.get(&req.key()) {
+                                rows[i] = Some(r.clone());
+                                cache_hits += 1;
+                            }
+                        }
+                    }
+                    Ok((fp, _)) => {
+                        if !self.quiet {
+                            eprintln!(
+                                "[sweep] cache {} is for a different grid \
+                                 ({fp:016x} != {fingerprint:016x}); re-simulating",
+                                path.display()
+                            );
+                        }
+                    }
+                    Err(e) => {
+                        if !self.quiet {
+                            eprintln!(
+                                "[sweep] ignoring unreadable cache {}: {e}",
+                                path.display()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        let pending: Vec<usize> =
+            (0..requests.len()).filter(|&i| rows[i].is_none()).collect();
+        if pending.is_empty() {
+            if !self.quiet {
+                if let Some(path) = &self.cache {
+                    eprintln!("[sweep] all {} rows cached in {}", rows.len(), path.display());
+                }
+            }
+            return Ok(rows.into_iter().map(|r| r.unwrap()).collect());
+        }
+        if !self.quiet && cache_hits > 0 {
+            eprintln!(
+                "[sweep] resuming: {cache_hits} rows cached, {} to simulate",
+                pending.len()
+            );
+        }
+
+        // Incremental journal: header + cache hits up front, then each
+        // completed row as it lands, so an interrupted sweep resumes.
+        let journal: Option<Mutex<std::fs::File>> = match &self.cache {
+            Some(path) => {
+                let hits: Vec<RunResult> =
+                    rows.iter().filter_map(|r| r.clone()).collect();
+                std::fs::write(path, cache::to_csv_string(fingerprint, &hits))
+                    .map_err(|e| SessionError::Run(format!("{}: {e}", path.display())))?;
+                let f = std::fs::OpenOptions::new()
+                    .append(true)
+                    .open(path)
+                    .map_err(|e| SessionError::Run(format!("{}: {e}", path.display())))?;
+                Some(Mutex::new(f))
+            }
+            None => None,
+        };
+
+        let jobs = self.jobs.min(pending.len()).max(1);
+        let quiet = self.quiet;
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<RunResult, SessionError>>>> =
+            pending.iter().map(|_| Mutex::new(None)).collect();
+
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(|| loop {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= pending.len() {
+                        break;
+                    }
+                    let req = &requests[pending[k]];
+                    if !quiet {
+                        eprintln!(
+                            "[sweep] {} {} {} @{}ns ...",
+                            req.bench_name(),
+                            req.config_name(),
+                            req.variant().tag(),
+                            req.latency_ns()
+                        );
+                    }
+                    let res = req.run();
+                    if let (Ok(r), Some(j)) = (&res, &journal) {
+                        let mut f = j.lock().unwrap();
+                        let _ = writeln!(f, "{}", cache::to_csv_row(r));
+                    }
+                    *slots[k].lock().unwrap() = Some(res);
+                });
+            }
+        });
+
+        for (k, &i) in pending.iter().enumerate() {
+            let res = slots[k]
+                .lock()
+                .unwrap()
+                .take()
+                .expect("worker finished without storing a result");
+            rows[i] = Some(res?);
+        }
+        let out: Vec<RunResult> = rows.into_iter().map(|r| r.unwrap()).collect();
+
+        // Rewrite the cache in canonical grid order: the final file is
+        // byte-identical however many workers ran.
+        if let Some(path) = &self.cache {
+            std::fs::write(path, cache::to_csv_string(fingerprint, &out))
+                .map_err(|e| SessionError::Run(format!("{}: {e}", path.display())))?;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,277 @@
+//! Sweep grids: the cross product benches × configs × latencies × variants.
+//!
+//! A [`SweepGrid`] describes *any* scenario grid — the paper's fixed
+//! 11 × 4 × 6 matrix is just [`SweepGrid::paper`]. Grids validate into a
+//! deterministic, canonically ordered list of [`RunRequest`]s and carry a
+//! stable fingerprint that keys the on-disk sweep cache, so a cache written
+//! for one grid can never be silently reused for another.
+
+use crate::config::SimConfig;
+use crate::session::request::{RunRequest, SessionError};
+use crate::workloads::{self, Scale, Variant};
+
+/// The paper's four evaluated configurations (Fig 8–11 columns).
+pub const PAPER_CONFIGS: &[&str] = &["baseline", "cxl-ideal", "amu", "amu-dma"];
+
+/// One grid axis entry for the variant dimension: either "the natural
+/// variant for each config" (AMU configs run coroutines, others sync — the
+/// paper's sweep behavior) or a fixed variant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum VariantSel {
+    Auto,
+    Fixed(Variant),
+}
+
+impl VariantSel {
+    pub fn tag(&self) -> String {
+        match self {
+            VariantSel::Auto => "auto".into(),
+            VariantSel::Fixed(v) => v.tag(),
+        }
+    }
+
+    /// Parse `auto` or any [`Variant`] spelling; errors name the choices.
+    pub fn parse(s: &str) -> Result<Self, SessionError> {
+        if s == "auto" {
+            return Ok(VariantSel::Auto);
+        }
+        s.parse::<Variant>().map(VariantSel::Fixed).map_err(SessionError::UnknownVariant)
+    }
+
+    pub fn resolve(&self, cfg: &SimConfig) -> Variant {
+        match self {
+            VariantSel::Auto => workloads::variant_for(cfg),
+            VariantSel::Fixed(v) => *v,
+        }
+    }
+}
+
+/// A sweep: every combination of the four axes, in canonical row order
+/// (bench-major, then config, then latency, then variant).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepGrid {
+    pub benches: Vec<String>,
+    pub configs: Vec<String>,
+    pub latencies_ns: Vec<f64>,
+    pub variants: Vec<VariantSel>,
+    pub scale: Scale,
+}
+
+impl SweepGrid {
+    /// An empty grid at `scale`; fill the axes with the builder methods.
+    pub fn new(scale: Scale) -> Self {
+        Self {
+            benches: Vec::new(),
+            configs: Vec::new(),
+            latencies_ns: Vec::new(),
+            variants: vec![VariantSel::Auto],
+            scale,
+        }
+    }
+
+    /// The paper's Fig 8/9/10/11 sweep: all 11 benchmarks × 4 configs ×
+    /// 6 far-memory latencies, natural variant per config.
+    pub fn paper(scale: Scale) -> Self {
+        Self::new(scale)
+            .benches(workloads::ALL.iter().copied())
+            .configs(PAPER_CONFIGS.iter().copied())
+            .latencies_ns(SimConfig::paper_latencies_ns().iter().copied())
+    }
+
+    pub fn benches<I, S>(mut self, benches: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.benches = benches.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn configs<I, S>(mut self, configs: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.configs = configs.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn latencies_ns<I: IntoIterator<Item = f64>>(mut self, ns: I) -> Self {
+        self.latencies_ns = ns.into_iter().collect();
+        self
+    }
+
+    /// Replace the variant axis (default: a single `Auto` entry).
+    pub fn variants<I: IntoIterator<Item = VariantSel>>(mut self, vs: I) -> Self {
+        self.variants = vs.into_iter().collect();
+        self
+    }
+
+    /// Fix every cell to one variant.
+    pub fn variant(self, v: Variant) -> Self {
+        self.variants(vec![VariantSel::Fixed(v)])
+    }
+
+    pub fn len(&self) -> usize {
+        self.benches.len() * self.configs.len() * self.latencies_ns.len() * self.variants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Validate every cell and return the canonical, deterministic request
+    /// list. Fails fast on unknown benches/configs, bad latencies, or
+    /// unsupported variants — before any simulation starts.
+    pub fn requests(&self) -> Result<Vec<RunRequest>, SessionError> {
+        if self.benches.is_empty() {
+            return Err(SessionError::EmptyGrid("benches"));
+        }
+        if self.configs.is_empty() {
+            return Err(SessionError::EmptyGrid("configs"));
+        }
+        if self.latencies_ns.is_empty() {
+            return Err(SessionError::EmptyGrid("latencies"));
+        }
+        if self.variants.is_empty() {
+            return Err(SessionError::EmptyGrid("variants"));
+        }
+        let mut out = Vec::with_capacity(self.len());
+        for bench in &self.benches {
+            for config in &self.configs {
+                let cfg = SimConfig::preset(config)
+                    .ok_or_else(|| SessionError::UnknownConfig(config.clone()))?;
+                for &lat in &self.latencies_ns {
+                    for sel in &self.variants {
+                        out.push(
+                            RunRequest::bench(bench.clone())
+                                .config(cfg.clone())
+                                .latency_ns(lat)
+                                .variant(sel.resolve(&cfg))
+                                .scale(self.scale)
+                                .build()?,
+                        );
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// A stable FNV-1a fingerprint over every axis (including scale and the
+    /// exact latency bit patterns). Stored in the cache header; any grid
+    /// change invalidates cached rows.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.write(self.scale.tag().as_bytes());
+        for b in &self.benches {
+            h.write(b.as_bytes());
+            h.write(&[0xFF]);
+        }
+        h.write(&[0xFE]);
+        for c in &self.configs {
+            h.write(c.as_bytes());
+            h.write(&[0xFF]);
+        }
+        h.write(&[0xFE]);
+        for &l in &self.latencies_ns {
+            h.write(&l.to_bits().to_le_bytes());
+        }
+        h.write(&[0xFE]);
+        for v in &self.variants {
+            h.write(v.tag().as_bytes());
+            h.write(&[0xFF]);
+        }
+        h.finish()
+    }
+}
+
+/// Minimal FNV-1a (no external hash crates in the offline image).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_grid_has_the_matrix_shape() {
+        let g = SweepGrid::paper(Scale::Test);
+        assert_eq!(g.len(), 11 * 4 * 6);
+        let reqs = g.requests().unwrap();
+        assert_eq!(reqs.len(), g.len());
+        // Canonical order: bench-major, config, latency.
+        assert_eq!(reqs[0].bench_name(), "bfs");
+        assert_eq!(reqs[0].config_name(), "baseline");
+        assert_eq!(reqs[0].latency_ns(), 100.0);
+        assert_eq!(reqs[1].latency_ns(), 200.0);
+        assert_eq!(reqs[6].config_name(), "cxl-ideal");
+        // Auto variant resolves per config.
+        let amu_row = reqs.iter().find(|r| r.config_name() == "amu").unwrap();
+        assert_eq!(amu_row.variant(), Variant::Amu);
+    }
+
+    #[test]
+    fn empty_axes_are_rejected() {
+        let g = SweepGrid::new(Scale::Test).configs(["baseline"]).latencies_ns([100.0]);
+        assert!(matches!(g.requests(), Err(SessionError::EmptyGrid("benches"))));
+        let g = SweepGrid::new(Scale::Test)
+            .benches(["gups"])
+            .configs(["baseline"])
+            .latencies_ns([100.0])
+            .variants([]);
+        assert!(matches!(g.requests(), Err(SessionError::EmptyGrid("variants"))));
+    }
+
+    #[test]
+    fn unknown_axis_entries_fail_fast() {
+        let g = SweepGrid::new(Scale::Test)
+            .benches(["gups", "nope"])
+            .configs(["baseline"])
+            .latencies_ns([100.0]);
+        assert!(matches!(g.requests(), Err(SessionError::UnknownBench(_))));
+        let g = SweepGrid::new(Scale::Test)
+            .benches(["gups"])
+            .configs(["warp9"])
+            .latencies_ns([100.0]);
+        assert!(matches!(g.requests(), Err(SessionError::UnknownConfig(_))));
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_axis() {
+        let g = SweepGrid::paper(Scale::Test);
+        let fp = g.fingerprint();
+        assert_eq!(fp, SweepGrid::paper(Scale::Test).fingerprint(), "stable");
+        assert_ne!(fp, SweepGrid::paper(Scale::Paper).fingerprint(), "scale");
+        let fewer = SweepGrid::paper(Scale::Test).latencies_ns([100.0]);
+        assert_ne!(fp, fewer.fingerprint(), "latencies");
+        let fixed = SweepGrid::paper(Scale::Test).variant(Variant::Sync);
+        assert_ne!(fp, fixed.fingerprint(), "variants");
+    }
+
+    #[test]
+    fn variant_sel_parses() {
+        assert_eq!(VariantSel::parse("auto").unwrap(), VariantSel::Auto);
+        assert_eq!(
+            VariantSel::parse("gp16").unwrap(),
+            VariantSel::Fixed(Variant::GroupPrefetch(16))
+        );
+        assert!(VariantSel::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! First-class session API: typed run requests, the workload registry, and
+//! the parallel sweep executor.
+//!
+//! This module is the front door for every simulation in the crate:
+//!
+//! * [`registry`] — the [`Workload`](registry::Workload) trait and the
+//!   benchmark registry (typed lookup instead of a panic-on-unknown string
+//!   `match`).
+//! * [`request`] — the [`RunRequest`] builder: bench/config/variant/latency
+//!   combinations validated at construction, every failure a
+//!   [`SessionError`] naming the valid choices.
+//! * [`grid`] — [`SweepGrid`]: any benches × configs × latencies × variants
+//!   cross product, not just the paper's fixed matrix, with a stable
+//!   fingerprint.
+//! * [`executor`] — [`Session`]: fans runs out across scoped worker threads
+//!   with deterministic row ordering and a per-run-keyed, resumable CSV
+//!   cache.
+//! * [`cache`] — the fingerprint-headed CSV format (bit-exact float round
+//!   trips, strict rejection of corrupt files).
+//!
+//! # Running one benchmark
+//!
+//! ```no_run
+//! use amu_sim::config::SimConfig;
+//! use amu_sim::session::RunRequest;
+//! use amu_sim::workloads::Variant;
+//!
+//! let result = RunRequest::bench("gups")
+//!     .config(SimConfig::amu())
+//!     .variant(Variant::Amu)
+//!     .latency_ns(1000.0)
+//!     .run()
+//!     .expect("valid request");
+//! println!("{} cycles, mlp {:.1}", result.measured_cycles, result.mlp);
+//! ```
+//!
+//! # Running sweeps
+//!
+//! ```no_run
+//! use amu_sim::session::{Session, SweepGrid};
+//! use amu_sim::workloads::Scale;
+//!
+//! // The paper's 11 x 4 x 6 grid, parallel across all cores, cached.
+//! let paper_rows = Session::new().sweep_paper(Scale::Test).unwrap();
+//! assert_eq!(paper_rows.len(), 11 * 4 * 6);
+//!
+//! // Or any custom grid with an explicit worker count.
+//! let grid = SweepGrid::new(Scale::Test)
+//!     .benches(["gups", "bfs"])
+//!     .configs(["baseline", "amu"])
+//!     .latencies_ns([500.0, 2000.0]);
+//! let rows = Session::new().jobs(4).sweep(&grid).unwrap();
+//! assert_eq!(rows.len(), 8);
+//! ```
+//!
+//! The CLI exposes the same executor as `amu-sim sweep --jobs N`.
+//! `report::run_one` and `report::sweep_cached` remain as deprecated shims
+//! over this API and will be removed once nothing links against them.
+
+pub mod cache;
+pub mod executor;
+pub mod grid;
+pub mod registry;
+pub mod request;
+
+pub use executor::Session;
+pub use grid::{SweepGrid, VariantSel, PAPER_CONFIGS};
+pub use registry::Workload;
+pub use request::{RunRequest, RunRequestBuilder, SessionError};
+
+use crate::power::PowerBreakdown;
+use std::path::PathBuf;
+
+/// Metrics from one completed, validated simulation run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunResult {
+    pub bench: String,
+    pub config: String,
+    pub variant: String,
+    pub latency_ns: f64,
+    pub measured_cycles: u64,
+    pub total_cycles: u64,
+    pub insts: u64,
+    pub ipc: f64,
+    pub mlp: f64,
+    pub peak_inflight: u64,
+    pub dynamic_uj: f64,
+    pub static_uj: f64,
+    pub disambig_frac: f64,
+}
+
+impl RunResult {
+    pub fn power(&self) -> PowerBreakdown {
+        PowerBreakdown { dynamic_uj: self.dynamic_uj, static_uj: self.static_uj }
+    }
+
+    /// Total run energy (static + dynamic), µJ.
+    pub fn total_uj(&self) -> f64 {
+        self.dynamic_uj + self.static_uj
+    }
+}
+
+/// Where reports, sweep caches, and figure CSVs land.
+pub fn results_dir() -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&d).ok();
+    d
+}

@@ -1,0 +1,321 @@
+//! Typed, validated run requests.
+//!
+//! [`RunRequest`] replaces the stringly `report::run_one(&str, &str, ...)`
+//! entry point: bench, config, variant, and latency are checked once at
+//! construction and every failure is a [`SessionError`] naming the valid
+//! choices — never a panic.
+
+use crate::config::SimConfig;
+use crate::power::{estimate, EnergyModel};
+use crate::session::registry::{self, Workload};
+use crate::session::RunResult;
+use crate::workloads::{self, Scale, Variant};
+
+/// Everything that can go wrong constructing or executing a run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SessionError {
+    UnknownBench(String),
+    UnknownConfig(String),
+    UnknownVariant(String),
+    UnsupportedVariant { bench: String, variant: String },
+    InvalidLatency(f64),
+    InvalidConfig(String),
+    EmptyGrid(&'static str),
+    Run(String),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::UnknownBench(name) => write!(
+                f,
+                "unknown benchmark '{name}' (valid: {})",
+                workloads::ALL.join(", ")
+            ),
+            SessionError::UnknownConfig(name) => write!(
+                f,
+                "unknown config '{name}' (valid: {})",
+                SimConfig::preset_names().join(", ")
+            ),
+            SessionError::UnknownVariant(msg) => write!(f, "{msg}"),
+            SessionError::UnsupportedVariant { bench, variant } => {
+                write!(f, "benchmark '{bench}' does not support variant '{variant}'")
+            }
+            SessionError::InvalidLatency(ns) => {
+                write!(f, "invalid far-memory latency {ns} ns (must be finite and >= 0)")
+            }
+            SessionError::InvalidConfig(msg) => write!(f, "invalid config: {msg}"),
+            SessionError::EmptyGrid(dim) => {
+                write!(f, "sweep grid has an empty '{dim}' dimension")
+            }
+            SessionError::Run(msg) => write!(f, "run failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+/// A fully validated single-run description: known benchmark, valid
+/// configuration, supported variant, sane latency. Construct through
+/// [`RunRequest::bench`].
+#[derive(Clone)]
+pub struct RunRequest {
+    workload: &'static dyn Workload,
+    config: SimConfig,
+    variant: Variant,
+    scale: Scale,
+}
+
+impl std::fmt::Debug for RunRequest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RunRequest")
+            .field("bench", &self.workload.name())
+            .field("config", &self.config.name)
+            .field("variant", &self.variant)
+            .field("latency_ns", &self.config.far.added_latency_ns)
+            .field("scale", &self.scale)
+            .finish()
+    }
+}
+
+impl RunRequest {
+    /// Start building a request for benchmark `name` (validated at
+    /// [`RunRequestBuilder::build`]).
+    pub fn bench(name: impl Into<String>) -> RunRequestBuilder {
+        RunRequestBuilder {
+            bench: name.into(),
+            config: None,
+            config_name: None,
+            variant: None,
+            latency_ns: None,
+            no_jitter: false,
+            scale: Scale::Test,
+        }
+    }
+
+    pub fn bench_name(&self) -> &'static str {
+        self.workload.name()
+    }
+
+    pub fn config_name(&self) -> &str {
+        &self.config.name
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.config
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    pub fn latency_ns(&self) -> f64 {
+        self.config.far.added_latency_ns
+    }
+
+    pub fn scale(&self) -> Scale {
+        self.scale
+    }
+
+    /// The cache key identifying this run's row in a sweep CSV.
+    pub fn key(&self) -> (String, String, String, u64) {
+        (
+            self.workload.name().to_string(),
+            self.config.name.clone(),
+            self.variant.tag(),
+            self.latency_ns().to_bits(),
+        )
+    }
+
+    /// Build the workload, simulate to completion, validate the
+    /// architectural result, and collect metrics.
+    pub fn run(&self) -> Result<RunResult, SessionError> {
+        let spec = self.workload.build(&self.config, self.variant, self.scale);
+        let sim = spec.run(&self.config).map_err(SessionError::Run)?;
+        let p = estimate(&self.config, &sim.stats, &EnergyModel::default());
+        Ok(RunResult {
+            bench: self.workload.name().into(),
+            config: self.config.name.clone(),
+            variant: self.variant.tag(),
+            latency_ns: self.latency_ns(),
+            measured_cycles: sim.stats.measured_cycles.max(1),
+            total_cycles: sim.cycle,
+            insts: sim.stats.insts_committed,
+            ipc: sim.stats.ipc(),
+            mlp: sim.stats.mlp(),
+            peak_inflight: sim.stats.far_inflight.max,
+            dynamic_uj: p.dynamic_uj,
+            static_uj: p.static_uj,
+            disambig_frac: sim.stats.region_fraction(crate::stats::Region::Disambig),
+        })
+    }
+}
+
+/// Builder for [`RunRequest`]; `build()` performs all validation.
+#[derive(Debug, Clone)]
+pub struct RunRequestBuilder {
+    bench: String,
+    config: Option<SimConfig>,
+    config_name: Option<String>,
+    variant: Option<Variant>,
+    latency_ns: Option<f64>,
+    no_jitter: bool,
+    scale: Scale,
+}
+
+impl RunRequestBuilder {
+    /// Use a concrete configuration (possibly customized beyond a preset).
+    pub fn config(mut self, cfg: SimConfig) -> Self {
+        self.config = Some(cfg);
+        self
+    }
+
+    /// Use a configuration preset by name (resolved and validated at
+    /// `build()`).
+    pub fn config_name(mut self, name: impl Into<String>) -> Self {
+        self.config_name = Some(name.into());
+        self
+    }
+
+    /// Force a specific variant. Without this, the natural variant for the
+    /// configuration is chosen (AMU configs run coroutines, others sync).
+    pub fn variant(mut self, v: Variant) -> Self {
+        self.variant = Some(v);
+        self
+    }
+
+    /// Override the additional far-memory latency. Without this, the
+    /// configuration's own `far.added_latency_ns` is kept.
+    pub fn latency_ns(mut self, ns: f64) -> Self {
+        self.latency_ns = Some(ns);
+        self
+    }
+
+    /// Disable far-memory latency jitter for fully deterministic timing
+    /// (examples and A/B comparisons).
+    pub fn no_jitter(mut self) -> Self {
+        self.no_jitter = true;
+        self
+    }
+
+    pub fn scale(mut self, s: Scale) -> Self {
+        self.scale = s;
+        self
+    }
+
+    /// Validate and produce the immutable request.
+    pub fn build(self) -> Result<RunRequest, SessionError> {
+        let workload = registry::find(&self.bench)
+            .ok_or_else(|| SessionError::UnknownBench(self.bench.clone()))?;
+        let mut cfg = match (self.config, self.config_name) {
+            (Some(cfg), _) => cfg,
+            (None, Some(name)) => {
+                SimConfig::preset(&name).ok_or(SessionError::UnknownConfig(name))?
+            }
+            (None, None) => SimConfig::baseline(),
+        };
+        if let Some(ns) = self.latency_ns {
+            cfg = cfg.with_far_latency_ns(ns);
+        }
+        if self.no_jitter {
+            cfg.far.jitter_frac = 0.0;
+        }
+        let latency = cfg.far.added_latency_ns;
+        if !latency.is_finite() || latency < 0.0 {
+            return Err(SessionError::InvalidLatency(latency));
+        }
+        cfg.validate().map_err(SessionError::InvalidConfig)?;
+        let variant = self.variant.unwrap_or_else(|| workloads::variant_for(&cfg));
+        if !workload.supported_variants().contains(&variant.kind()) {
+            return Err(SessionError::UnsupportedVariant {
+                bench: self.bench,
+                variant: variant.tag(),
+            });
+        }
+        Ok(RunRequest { workload, config: cfg, variant, scale: self.scale })
+    }
+
+    /// Convenience: `build()?.run()`.
+    pub fn run(self) -> Result<RunResult, SessionError> {
+        self.build()?.run()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_validates_bench_and_config() {
+        let e = RunRequest::bench("nope").build().unwrap_err();
+        assert!(matches!(e, SessionError::UnknownBench(_)));
+        assert!(e.to_string().contains("gups"), "{e}");
+        let e = RunRequest::bench("gups").config_name("warp9").build().unwrap_err();
+        assert!(matches!(e, SessionError::UnknownConfig(_)));
+        assert!(e.to_string().contains("baseline"), "{e}");
+    }
+
+    #[test]
+    fn builder_rejects_bad_latency() {
+        for ns in [-1.0, f64::NAN, f64::INFINITY] {
+            let e = RunRequest::bench("gups").latency_ns(ns).build().unwrap_err();
+            assert!(matches!(e, SessionError::InvalidLatency(_)), "{ns}");
+        }
+    }
+
+    #[test]
+    fn builder_picks_natural_variant() {
+        let r = RunRequest::bench("gups").config(SimConfig::amu()).build().unwrap();
+        assert_eq!(r.variant(), Variant::Amu);
+        let r = RunRequest::bench("gups").config_name("baseline").build().unwrap();
+        assert_eq!(r.variant(), Variant::Sync);
+    }
+
+    #[test]
+    fn request_runs_and_reports_metrics() {
+        let r = RunRequest::bench("gups")
+            .config(SimConfig::amu())
+            .variant(Variant::Amu)
+            .latency_ns(1000.0)
+            .scale(Scale::Test)
+            .run()
+            .unwrap();
+        assert_eq!(r.bench, "gups");
+        assert_eq!(r.config, "amu");
+        assert!(r.measured_cycles > 0);
+        assert!(r.mlp > 1.0, "AMU GUPS must overlap: mlp={}", r.mlp);
+    }
+
+    #[test]
+    fn unsupported_variant_is_rejected_not_degraded() {
+        // hj has no software-prefetch port; the raw build entry point used
+        // to silently run sync and label the row gp16.
+        let e = RunRequest::bench("hj")
+            .config_name("cxl-ideal")
+            .variant(Variant::GroupPrefetch(16))
+            .build()
+            .unwrap_err();
+        assert!(matches!(e, SessionError::UnsupportedVariant { .. }), "{e}");
+        assert!(e.to_string().contains("gp16"), "{e}");
+        // gups implements it.
+        assert!(RunRequest::bench("gups")
+            .config_name("cxl-ideal")
+            .variant(Variant::GroupPrefetch(16))
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn no_jitter_zeroes_the_jitter_fraction() {
+        let r = RunRequest::bench("gups").no_jitter().build().unwrap();
+        assert_eq!(r.config().far.jitter_frac, 0.0);
+    }
+
+    #[test]
+    fn invalid_config_is_reported_not_panicked() {
+        let mut cfg = SimConfig::amu();
+        cfg.amu.queue_length = 4096; // AMART metadata exceeds SPM
+        let e = RunRequest::bench("gups").config(cfg).build().unwrap_err();
+        assert!(matches!(e, SessionError::InvalidConfig(_)));
+    }
+}

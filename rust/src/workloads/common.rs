@@ -36,10 +36,31 @@ impl WorkloadSpec {
 
 /// Benchmark scale: `Test` keeps CI fast; `Paper` is used by the report
 /// and bench harnesses.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Scale {
     Test,
     Paper,
+}
+
+impl Scale {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Scale::Test => "test",
+            Scale::Paper => "paper",
+        }
+    }
+}
+
+impl std::str::FromStr for Scale {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "test" => Ok(Scale::Test),
+            "paper" => Ok(Scale::Paper),
+            other => Err(format!("unknown scale '{other}' (valid: test, paper)")),
+        }
+    }
 }
 
 /// Which implementation of a benchmark to build.
@@ -58,6 +79,27 @@ pub enum Variant {
     AmuLlvm,
 }
 
+/// The payload-free shape of a [`Variant`], used by the workload registry
+/// to declare which implementations a benchmark provides.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VariantKind {
+    Sync,
+    Amu,
+    GroupPrefetch,
+    SwPrefetch,
+    AmuLlvm,
+}
+
+/// Every variant kind, for workloads that implement (or degrade gracefully
+/// under) the full set.
+pub const ALL_VARIANT_KINDS: &[VariantKind] = &[
+    VariantKind::Sync,
+    VariantKind::Amu,
+    VariantKind::GroupPrefetch,
+    VariantKind::SwPrefetch,
+    VariantKind::AmuLlvm,
+];
+
 impl Variant {
     pub fn tag(&self) -> String {
         match self {
@@ -67,6 +109,58 @@ impl Variant {
             Variant::SwPrefetch { batch, depth } => format!("pf{batch}-{depth}"),
             Variant::AmuLlvm => "llvm".into(),
         }
+    }
+
+    pub fn kind(&self) -> VariantKind {
+        match self {
+            Variant::Sync => VariantKind::Sync,
+            Variant::Amu => VariantKind::Amu,
+            Variant::GroupPrefetch(_) => VariantKind::GroupPrefetch,
+            Variant::SwPrefetch { .. } => VariantKind::SwPrefetch,
+            Variant::AmuLlvm => VariantKind::AmuLlvm,
+        }
+    }
+}
+
+impl std::str::FromStr for Variant {
+    type Err = String;
+
+    /// Parse `sync | amu | llvm | gp<N> | pf<N>[-<D>]`. Every failure names
+    /// the valid choices instead of silently falling back.
+    fn from_str(s: &str) -> Result<Self, String> {
+        const VALID: &str = "sync, amu, llvm, gp<N> (e.g. gp16), pf<N>[-<D>] (e.g. pf16 or pf16-4)";
+        match s {
+            "sync" => return Ok(Variant::Sync),
+            "amu" => return Ok(Variant::Amu),
+            "llvm" => return Ok(Variant::AmuLlvm),
+            _ => {}
+        }
+        if let Some(g) = s.strip_prefix("gp") {
+            let g: usize = g
+                .parse()
+                .map_err(|_| format!("bad group size in '{s}' (valid variants: {VALID})"))?;
+            if g == 0 {
+                return Err(format!("group size must be >= 1 in '{s}'"));
+            }
+            return Ok(Variant::GroupPrefetch(g));
+        }
+        if let Some(body) = s.strip_prefix("pf") {
+            let (b, d) = match body.split_once('-') {
+                Some((b, d)) => (b, d),
+                None => (body, "0"),
+            };
+            let batch: usize = b
+                .parse()
+                .map_err(|_| format!("bad batch size in '{s}' (valid variants: {VALID})"))?;
+            let depth: usize = d
+                .parse()
+                .map_err(|_| format!("bad depth in '{s}' (valid variants: {VALID})"))?;
+            if batch == 0 {
+                return Err(format!("batch size must be >= 1 in '{s}'"));
+            }
+            return Ok(Variant::SwPrefetch { batch, depth });
+        }
+        Err(format!("unknown variant '{s}' (valid: {VALID})"))
     }
 }
 
@@ -176,5 +270,39 @@ mod tests {
         assert_eq!(Variant::Sync.tag(), "sync");
         assert_eq!(Variant::GroupPrefetch(32).tag(), "gp32");
         assert_eq!(Variant::SwPrefetch { batch: 8, depth: 0 }.tag(), "pf8-0");
+    }
+
+    #[test]
+    fn variant_parse_round_trips_tags() {
+        for v in [
+            Variant::Sync,
+            Variant::Amu,
+            Variant::AmuLlvm,
+            Variant::GroupPrefetch(16),
+            Variant::SwPrefetch { batch: 8, depth: 2 },
+        ] {
+            let parsed: Variant = v.tag().parse().unwrap();
+            assert_eq!(parsed, v, "tag {}", v.tag());
+        }
+    }
+
+    #[test]
+    fn variant_parse_rejects_bad_input_naming_choices() {
+        let e = "banana".parse::<Variant>().unwrap_err();
+        assert!(e.contains("sync") && e.contains("gp<N>"), "{e}");
+        let e = "gpx".parse::<Variant>().unwrap_err();
+        assert!(e.contains("bad group size"), "{e}");
+        let e = "pf".parse::<Variant>().unwrap_err();
+        assert!(e.contains("bad batch size"), "{e}");
+        assert!("gp0".parse::<Variant>().is_err());
+    }
+
+    #[test]
+    fn scale_parse_and_tag() {
+        assert_eq!("test".parse::<Scale>().unwrap(), Scale::Test);
+        assert_eq!("paper".parse::<Scale>().unwrap(), Scale::Paper);
+        assert_eq!(Scale::Paper.tag(), "paper");
+        let e = "huge".parse::<Scale>().unwrap_err();
+        assert!(e.contains("test") && e.contains("paper"), "{e}");
     }
 }

@@ -14,7 +14,7 @@ pub mod redis;
 pub mod sl;
 pub mod stream;
 
-pub use common::{Scale, Variant, WorkloadSpec};
+pub use common::{Scale, Variant, VariantKind, WorkloadSpec, ALL_VARIANT_KINDS};
 
 use crate::config::SimConfig;
 
@@ -25,22 +25,23 @@ pub const ALL: &[&str] =
 /// The memory-bound subset used in Fig 2 style motivation sweeps.
 pub const MEMORY_BOUND: &[&str] = &["gups", "bs", "ll", "ht", "bfs"];
 
-/// Build benchmark `name` in `variant` at `scale`. Panics on unknown name.
+/// Build benchmark `name` in `variant` at `scale`, by registry lookup
+/// (see [`crate::session::registry`]). Panics on unknown name — prefer
+/// [`try_build`] or [`crate::session::RunRequest`], which return errors
+/// naming the valid choices.
 pub fn build(name: &str, cfg: &SimConfig, variant: Variant, scale: Scale) -> WorkloadSpec {
-    match name {
-        "bfs" => bfs::build(cfg, variant, scale),
-        "bs" => bs::build(cfg, variant, scale),
-        "gups" => gups::build(cfg, variant, scale),
-        "hj" => hj::build(cfg, variant, scale),
-        "hpcg" => hpcg::build(cfg, variant, scale),
-        "ht" => ht::build(cfg, variant, scale),
-        "is" => is::build(cfg, variant, scale),
-        "ll" => ll::build(cfg, variant, scale),
-        "redis" => redis::build(cfg, variant, scale),
-        "sl" => sl::build(cfg, variant, scale),
-        "stream" => stream::build(cfg, variant, scale),
-        _ => panic!("unknown benchmark '{name}' (known: {ALL:?})"),
-    }
+    try_build(name, cfg, variant, scale)
+        .unwrap_or_else(|| panic!("unknown benchmark '{name}' (known: {ALL:?})"))
+}
+
+/// Build benchmark `name` if it is registered; `None` otherwise.
+pub fn try_build(
+    name: &str,
+    cfg: &SimConfig,
+    variant: Variant,
+    scale: Scale,
+) -> Option<WorkloadSpec> {
+    crate::session::registry::find(name).map(|w| w.build(cfg, variant, scale))
 }
 
 /// Pick the natural variant for a configuration: AMU configs run the
@@ -79,6 +80,12 @@ mod tests {
     #[should_panic(expected = "unknown benchmark")]
     fn unknown_name_panics() {
         build("nope", &SimConfig::baseline(), Variant::Sync, Scale::Test);
+    }
+
+    #[test]
+    fn try_build_returns_none_for_unknown() {
+        assert!(try_build("nope", &SimConfig::baseline(), Variant::Sync, Scale::Test).is_none());
+        assert!(try_build("gups", &SimConfig::baseline(), Variant::Sync, Scale::Test).is_some());
     }
 
     #[test]

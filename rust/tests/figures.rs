@@ -3,7 +3,8 @@
 //! EXPERIMENTS.md and are produced by `cargo bench`).
 
 use amu_sim::report;
-use amu_sim::workloads::Scale;
+use amu_sim::session::{RunRequest, Session};
+use amu_sim::workloads::{Scale, Variant};
 
 #[test]
 fn table6_matches_paper_bands() {
@@ -14,28 +15,27 @@ fn table6_matches_paper_bands() {
 
 #[test]
 fn fig3_group_size_sensitivity_renders() {
-    let s = report::fig3(Scale::Test, 1000.0);
+    let s = report::fig3(&Session::new(), Scale::Test, 1000.0);
     assert!(s.lines().count() > 5, "{s}");
     assert!(s.contains("group"));
 }
 
 #[test]
 fn table5_disambiguation_renders() {
-    let s = report::table5(Scale::Test);
+    let s = report::table5(&Session::new(), Scale::Test);
     assert!(s.contains("hj") && s.contains("ht"), "{s}");
     assert!(s.contains('%'));
 }
 
 #[test]
-fn single_run_one_row_sane() {
-    let r = report::run_one(
-        "gups",
-        "amu",
-        amu_sim::workloads::Variant::Amu,
-        1000.0,
-        Scale::Test,
-    )
-    .unwrap();
+fn single_run_request_row_sane() {
+    let r = RunRequest::bench("gups")
+        .config_name("amu")
+        .variant(Variant::Amu)
+        .latency_ns(1000.0)
+        .scale(Scale::Test)
+        .run()
+        .unwrap();
     assert!(r.mlp > 1.0, "AMU GUPS must overlap: mlp={}", r.mlp);
     assert!(r.peak_inflight >= 16);
 }

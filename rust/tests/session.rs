@@ -1,0 +1,219 @@
+//! Integration tests for the session API: typed requests, the parallel
+//! sweep executor, cache resume/invalidation, and the determinism
+//! guarantee (`--jobs 1` vs `--jobs N` byte-identical CSV).
+
+use amu_sim::session::{cache, RunRequest, RunResult, Session, SessionError, SweepGrid};
+use amu_sim::testing::{check, PropConfig};
+use amu_sim::workloads::Scale;
+use std::path::PathBuf;
+
+/// A small but multi-axis grid that exercises AMU and non-AMU configs.
+fn small_grid() -> SweepGrid {
+    SweepGrid::new(Scale::Test)
+        .benches(["gups", "ll"])
+        .configs(["baseline", "amu"])
+        .latencies_ns([300.0, 1500.0])
+}
+
+fn temp_cache(name: &str) -> PathBuf {
+    let file = format!("amu_sim_session_test_{name}_{}.csv", std::process::id());
+    let p = std::env::temp_dir().join(file);
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+#[test]
+fn invalid_requests_err_with_valid_choices_named() {
+    let e = RunRequest::bench("memcached").build().unwrap_err();
+    assert!(matches!(e, SessionError::UnknownBench(_)));
+    let msg = e.to_string();
+    assert!(msg.contains("gups") && msg.contains("stream"), "{msg}");
+
+    let e = RunRequest::bench("gups").config_name("turbo").build().unwrap_err();
+    let msg = e.to_string();
+    assert!(msg.contains("baseline") && msg.contains("amu-dma"), "{msg}");
+}
+
+/// The headline guard: the same grid with 1 worker and N workers must
+/// produce byte-identical CSV (row order and every value).
+#[test]
+fn sweep_is_deterministic_across_job_counts() {
+    let grid = small_grid();
+    let serial = Session::new().jobs(1).quiet(true).sweep(&grid).unwrap();
+    let parallel = Session::new().jobs(4).quiet(true).sweep(&grid).unwrap();
+    let fp = grid.fingerprint();
+    let csv1 = cache::to_csv_string(fp, &serial);
+    let csvn = cache::to_csv_string(fp, &parallel);
+    assert_eq!(csv1, csvn, "parallel sweep must be byte-identical to serial");
+    assert_eq!(serial.len(), grid.len());
+}
+
+#[test]
+fn sweep_rows_follow_canonical_grid_order() {
+    let grid = small_grid();
+    let rows = Session::new().quiet(true).sweep(&grid).unwrap();
+    let expected: Vec<(String, String, f64)> = grid
+        .requests()
+        .unwrap()
+        .iter()
+        .map(|r| (r.bench_name().to_string(), r.config_name().to_string(), r.latency_ns()))
+        .collect();
+    let got: Vec<(String, String, f64)> =
+        rows.iter().map(|r| (r.bench.clone(), r.config.clone(), r.latency_ns)).collect();
+    assert_eq!(got, expected);
+}
+
+/// Keyed cache resume: rows present in the cache are reused verbatim,
+/// missing cells are simulated.
+#[test]
+fn partial_cache_resumes_instead_of_resimulating() {
+    let path = temp_cache("resume");
+    let grid = small_grid();
+    let session = Session::new().quiet(true).cache_path(path.clone());
+    let rows = session.sweep(&grid).unwrap();
+
+    // Drop one row and plant a sentinel in another: the sentinel proves
+    // cached rows are reused, the dropped row proves missing cells rerun.
+    let mut edited: Vec<RunResult> = rows.clone();
+    edited.remove(3);
+    edited[0].ipc = 42.5;
+    std::fs::write(&path, cache::to_csv_string(grid.fingerprint(), &edited)).unwrap();
+
+    let resumed = session.sweep(&grid).unwrap();
+    assert_eq!(resumed.len(), grid.len());
+    assert_eq!(resumed[0].ipc, 42.5, "cached row must be reused, not re-simulated");
+    assert_eq!(resumed[3], rows[3], "missing cell must be re-simulated deterministically");
+
+    // The rewritten file is the full canonical grid again.
+    let (fp, reloaded) = cache::parse_csv(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(fp, grid.fingerprint());
+    assert_eq!(reloaded.len(), grid.len());
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Fingerprint staleness: a cache written for one grid is never silently
+/// reused for a different grid sharing the same path.
+#[test]
+fn stale_cache_for_a_different_grid_is_invalidated() {
+    let path = temp_cache("stale");
+    let grid_a = SweepGrid::new(Scale::Test)
+        .benches(["gups"])
+        .configs(["baseline"])
+        .latencies_ns([300.0]);
+    let grid_b = grid_a.clone().latencies_ns([900.0]);
+    let session = Session::new().quiet(true).cache_path(path.clone());
+
+    let rows_a = session.sweep(&grid_a).unwrap();
+    assert_eq!(rows_a[0].latency_ns, 300.0);
+
+    // Same path, different grid: the stale file must not leak 300ns rows.
+    let rows_b = session.sweep(&grid_b).unwrap();
+    assert_eq!(rows_b.len(), 1);
+    assert_eq!(rows_b[0].latency_ns, 900.0);
+    let (fp, _) = cache::parse_csv(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(fp, grid_b.fingerprint(), "cache must be rewritten for the new grid");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A corrupt cache file is rejected whole (and the sweep still succeeds by
+/// re-simulating).
+#[test]
+fn corrupt_cache_is_rejected_not_partially_loaded() {
+    let path = temp_cache("corrupt");
+    let grid = SweepGrid::new(Scale::Test)
+        .benches(["gups"])
+        .configs(["baseline"])
+        .latencies_ns([300.0]);
+    let session = Session::new().quiet(true).cache_path(path.clone());
+    let rows = session.sweep(&grid).unwrap();
+
+    // Corrupt the numeric payload of the row.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let bad = text.replace(&rows[0].measured_cycles.to_string(), "not-a-number");
+    assert!(cache::parse_csv(&bad).is_err(), "corrupt row must reject the file");
+    std::fs::write(&path, &bad).unwrap();
+    let recovered = session.sweep(&grid).unwrap();
+    assert_eq!(recovered, rows, "re-simulation must reproduce the original rows");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Property: CSV row serialization reproduces every `RunResult` field,
+/// including exact bit patterns of the floats (ipc, disambig_frac, ...).
+#[test]
+fn prop_csv_round_trips_every_field_bit_exactly() {
+    check(
+        &PropConfig { cases: 128, seed: 0xC5F_0001, ..Default::default() },
+        |rng| {
+            // Finite floats across magnitudes, built from random mantissas.
+            fn frac(bits: u64) -> f64 {
+                (bits >> 11) as f64 / (1u64 << 53) as f64
+            }
+            let variant = format!("gp{}", rng.below(512));
+            let latency_ns = frac(rng.next_u64()) * 10_000.0;
+            let measured_cycles = rng.next_u64() >> rng.below(40);
+            let total_cycles = rng.next_u64() >> rng.below(40);
+            let insts = rng.next_u64() >> rng.below(40);
+            let ipc = frac(rng.next_u64()) * 8.0;
+            let mlp = frac(rng.next_u64()) * 512.0;
+            let peak_inflight = rng.below(100_000);
+            let dynamic_uj = frac(rng.next_u64()) * 1e-3;
+            let static_uj = frac(rng.next_u64()) * 1e6;
+            let disambig_frac = frac(rng.next_u64());
+            RunResult {
+                bench: "gups".into(),
+                config: "cxl-ideal".into(),
+                variant,
+                latency_ns,
+                measured_cycles,
+                total_cycles,
+                insts,
+                ipc,
+                mlp,
+                peak_inflight,
+                dynamic_uj,
+                static_uj,
+                disambig_frac,
+            }
+        },
+        |r| {
+            let text = cache::to_csv_string(r.latency_ns.to_bits(), &[r.clone()]);
+            let (fp, rows) =
+                cache::parse_csv(&text).map_err(|e| format!("parse failed: {e}"))?;
+            if fp != r.latency_ns.to_bits() {
+                return Err("fingerprint mismatch".into());
+            }
+            if rows.len() != 1 {
+                return Err(format!("expected 1 row, got {}", rows.len()));
+            }
+            let p = &rows[0];
+            if p != r {
+                return Err(format!("round trip mismatch:\n  in:  {r:?}\n  out: {p:?}"));
+            }
+            for (a, b, name) in [
+                (p.ipc, r.ipc, "ipc"),
+                (p.mlp, r.mlp, "mlp"),
+                (p.latency_ns, r.latency_ns, "latency_ns"),
+                (p.dynamic_uj, r.dynamic_uj, "dynamic_uj"),
+                (p.static_uj, r.static_uj, "static_uj"),
+                (p.disambig_frac, r.disambig_frac, "disambig_frac"),
+            ] {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("{name} lost precision: {b} -> {a}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A failing cell surfaces as an error from the executor, not a panic.
+#[test]
+fn sweep_propagates_run_errors() {
+    // max_cycles too small: every run aborts. Build the request directly
+    // (grids only reference presets) and run it through Session::run.
+    let mut cfg = amu_sim::config::SimConfig::baseline();
+    cfg.max_cycles = 10;
+    let req = RunRequest::bench("gups").config(cfg).latency_ns(300.0).build().unwrap();
+    let err = Session::new().quiet(true).run(&req).unwrap_err();
+    assert!(matches!(err, SessionError::Run(_)), "{err}");
+}
