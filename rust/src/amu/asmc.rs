@@ -81,6 +81,10 @@ pub struct Asmc {
     sub_queue: VecDeque<SubReq>,
     batches: Vec<PendingBatch>,
     next_ticket: u64,
+    /// Bumped by `set_queue_length` and stamped into sub-request tokens
+    /// (bits 24..32) so a completion issued before a reconfiguration can
+    /// never be mistaken for one belonging to a recycled AMART id.
+    generation: u8,
     /// IDs handed to the ALSU in free batches but not yet in-flight:
     /// conservation invariant bookkeeping only.
     pub ids_at_alsu: usize,
@@ -105,6 +109,7 @@ impl Asmc {
             sub_queue: VecDeque::new(),
             batches: Vec::new(),
             next_ticket: 0,
+            generation: 0,
             ids_at_alsu: 0,
             requests: 0,
             subrequests: 0,
@@ -125,6 +130,25 @@ impl Asmc {
         self.finished_list.clear();
         self.amart = vec![AmartEntry::default(); ql + 1];
         self.ids_at_alsu = 0;
+        // Reconfiguration discards queued-but-unissued work too: their ids
+        // were just recycled into the fresh free list, so issuing them
+        // later would alias the ids' new owners.
+        self.req_queue.clear();
+        self.sub_queue.clear();
+        // Same for ID batches already popped from the *old* lists: deliver
+        // them empty (the ALSU treats an empty free batch as allocation
+        // failure and retries) instead of handing out ids that the fresh
+        // free list will give to someone else. Batches that have not yet
+        // arrived pop from the new lists and stay valid.
+        for b in self.batches.iter_mut() {
+            if let Some(ids) = b.ids.as_mut() {
+                ids.clear();
+            }
+        }
+        // Invalidate every in-flight sub-request token: ids are recycled
+        // immediately, so only the generation distinguishes an old
+        // completion from one belonging to the id's new owner.
+        self.generation = self.generation.wrapping_add(1);
     }
 
     pub fn queue_has_space(&self) -> bool {
@@ -276,7 +300,9 @@ impl Asmc {
             let Some(sub) = self.sub_queue.pop_front() else { break };
             self.subrequests += 1;
             stats.amu_subrequests += 1;
-            let token = (sub.id as u32) << 8 | (sub.sub_idx as u32 & 0xff);
+            let token = (self.generation as u32) << 24
+                | (sub.id as u32) << 8
+                | (sub.sub_idx as u32 & 0xff);
             mem_sys.far_direct(sub.is_store, sub.mem, sub.bytes as usize, token, now);
             if sub.is_store {
                 stats.far_writes += 1;
@@ -289,9 +315,25 @@ impl Asmc {
         // 4. Retire completed sub-requests.
         let completions: Vec<_> = mem_sys.asmc_completions.drain(..).collect();
         for c in completions {
-            let id = (c.token >> 8) as usize;
+            let id = ((c.token >> 8) & 0xFFFF) as usize;
+            // A completion can outlive its AMART entry: `set_queue_length`
+            // reinitializes the table (and may shrink it) while
+            // sub-requests are still in flight — and the freed id can be
+            // handed to a *new* request before the old completion lands.
+            // The generation stamp makes staleness exact; the entry checks
+            // are defense in depth. Dropping the stale completion is the
+            // only safe move — decrementing `remaining_subs` would wrap in
+            // release builds and corrupt an unrelated request.
+            let stale = (c.token >> 24) as u8 != self.generation
+                || match self.amart.get(id) {
+                    Some(e) => !e.active || e.remaining_subs == 0,
+                    None => true,
+                };
+            if stale {
+                stats.stale_completions += 1;
+                continue;
+            }
             let e = &mut self.amart[id];
-            debug_assert!(e.active, "completion for inactive AMART entry {id}");
             e.remaining_subs -= 1;
             if e.remaining_subs == 0 {
                 e.active = false;
@@ -415,6 +457,71 @@ mod tests {
         for i in 0..512u64 {
             assert_eq!(r.guest.read(SPM_BASE + i, 1), i & 0xff);
         }
+    }
+
+    #[test]
+    fn stale_completion_after_queue_resize_is_dropped_not_wrapped() {
+        // A completion arriving for an AMART entry that `set_queue_length`
+        // reinitialized mid-flight used to pass only a debug_assert and
+        // then wrap `remaining_subs -= 1` in release builds.
+        let mut r = rig(200.0); // 600-cycle RTT: completion lands ~cycle 600
+        r.asmc.push_request(AmiReq { id: 1, spm: SPM_BASE, mem: FAR_BASE, is_store: false });
+        run(&mut r, 0, 10); // accept + issue the sub-request
+        assert_eq!(r.asmc.inflight_amart(), 1);
+        // Reconfigure while the sub-request is in flight: the AMART (and
+        // its active bits) are reinitialized and id 1 is free again.
+        r.asmc.set_queue_length(256);
+        assert_eq!(r.asmc.inflight_amart(), 0);
+        // Worst case: the freed id is immediately recycled by a new
+        // request *before* the old completion lands. The generation stamp
+        // must keep the old completion from retiring the new request.
+        r.asmc.push_request(AmiReq { id: 1, spm: SPM_BASE + 128, mem: FAR_BASE + 64, is_store: false });
+        run(&mut r, 10, 10_000);
+        assert_eq!(r.stats.stale_completions, 1, "old-generation completion must be dropped");
+        assert_eq!(r.asmc.finished_len(), 1, "the recycled id's own request must finish");
+        assert_eq!(r.asmc.inflight_amart(), 0);
+        // The ASMC keeps working normally afterwards.
+        r.asmc.push_request(AmiReq { id: 2, spm: SPM_BASE, mem: FAR_BASE + 192, is_store: false });
+        run(&mut r, 10_000, 30_000);
+        assert_eq!(r.asmc.finished_len(), 2);
+    }
+
+    #[test]
+    fn queue_resize_discards_pending_subrequests() {
+        // n_subs > ops_per_cycle leaves sub-requests queued but unissued;
+        // a resize must drop them (their ids were just recycled), not
+        // issue them later under the new generation against new owners.
+        let mut r = rig(200.0);
+        r.asmc.set_granularity(512); // 8 sub-requests, 2 issued per cycle
+        r.asmc.push_request(AmiReq { id: 1, spm: SPM_BASE, mem: FAR_BASE, is_store: false });
+        run(&mut r, 0, 2); // accept + issue only the first few subs
+        let issued_before = r.asmc.subrequests;
+        assert!(issued_before < 8, "test needs unissued subs ({issued_before})");
+        r.asmc.set_queue_length(256);
+        r.asmc.set_granularity(8);
+        // The recycled id's new request must complete exactly once, and
+        // no leftover old sub-requests may be issued.
+        r.asmc.push_request(AmiReq { id: 1, spm: SPM_BASE + 64, mem: FAR_BASE + 64, is_store: false });
+        run(&mut r, 2, 10_000);
+        assert_eq!(r.asmc.subrequests, issued_before + 1, "pending old subs must be dropped");
+        assert_eq!(r.stats.stale_completions, issued_before, "old completions all dropped");
+        assert_eq!(r.asmc.finished_len(), 1);
+        assert_eq!(r.asmc.inflight_amart(), 0);
+    }
+
+    #[test]
+    fn queue_resize_empties_popped_id_batches() {
+        // A free batch whose ids were popped from the OLD free list must
+        // deliver empty after a resize — those ids now belong to the new
+        // free list and would otherwise be handed out twice.
+        let mut r = rig(1000.0);
+        let t = r.asmc.request_batch(BatchKind::Free, 8, 0, 0);
+        run(&mut r, 0, 20); // command arrived: 8 ids popped into the batch
+        r.asmc.set_queue_length(256);
+        run(&mut r, 20, 40);
+        let ids = r.asmc.poll_batch(t, 40).expect("delivery still happens");
+        assert!(ids.is_empty(), "stale batch must deliver empty, got {ids:?}");
+        assert!(r.asmc.id_conservation_holds());
     }
 
     #[test]

@@ -97,9 +97,100 @@ impl Default for DramConfig {
     }
 }
 
-/// Far memory: serial link (CXL-like) + remote memory controller.
-/// The paper models packet delay (size-dependent), link bandwidth, and a
-/// configurable *additional* latency — coherence internals are not modeled.
+/// Which data-plane model serves far-memory accesses (`mem::backend`).
+///
+/// The paper's evaluation uses a single CXL-like serial link, but its core
+/// premise — far latencies are "significantly longer and *more variable*
+/// than local DRAM" — spans a whole family of data planes: disaggregated
+/// pools, RDMA/swap hybrids, packetized asynchronous DRAM. Each variant
+/// here is one such scenario; `SerialLink` stays the default and preserves
+/// the paper's Figure 7 model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FarBackendKind {
+    /// CXL-like serial link with a remote memory controller (the default).
+    #[default]
+    SerialLink,
+    /// Multi-channel disaggregated memory pool: per-channel service queues
+    /// with congestion back-pressure.
+    Pooled,
+    /// Propagation latency sampled per request from a configurable
+    /// lognormal/bimodal distribution whose *mean* is the configured
+    /// latency (tail-latency scenarios).
+    Distribution,
+    /// Fast-path/slow-path split: a configurable fraction of accesses hit
+    /// a near tier (RDMA/swap hybrid data planes).
+    Hybrid,
+}
+
+impl FarBackendKind {
+    pub const ALL: &'static [FarBackendKind] = &[
+        FarBackendKind::SerialLink,
+        FarBackendKind::Pooled,
+        FarBackendKind::Distribution,
+        FarBackendKind::Hybrid,
+    ];
+
+    /// Stable spelling used in sweep axes, CSV rows, and the CLI.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FarBackendKind::SerialLink => "serial-link",
+            FarBackendKind::Pooled => "pooled",
+            FarBackendKind::Distribution => "distribution",
+            FarBackendKind::Hybrid => "hybrid",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FarBackendKind> {
+        match s {
+            "serial-link" | "serial_link" | "serial" | "link" => {
+                Some(FarBackendKind::SerialLink)
+            }
+            "pooled" | "pool" => Some(FarBackendKind::Pooled),
+            "distribution" | "dist" => Some(FarBackendKind::Distribution),
+            "hybrid" => Some(FarBackendKind::Hybrid),
+            _ => None,
+        }
+    }
+
+    pub fn names() -> &'static [&'static str] {
+        &["serial-link", "pooled", "distribution", "hybrid"]
+    }
+}
+
+/// Latency distribution family for [`FarBackendKind::Distribution`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LatencyDist {
+    /// Lognormal with shape `dist_sigma`, rescaled so the mean equals the
+    /// configured added latency.
+    #[default]
+    Lognormal,
+    /// Two modes: a `dist_tail_frac` fraction of requests take
+    /// `dist_tail_mult` × the configured latency; the rest take a fast
+    /// path chosen so the overall mean stays at the configured latency.
+    Bimodal,
+}
+
+impl LatencyDist {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            LatencyDist::Lognormal => "lognormal",
+            LatencyDist::Bimodal => "bimodal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LatencyDist> {
+        match s {
+            "lognormal" => Some(LatencyDist::Lognormal),
+            "bimodal" => Some(LatencyDist::Bimodal),
+            _ => None,
+        }
+    }
+}
+
+/// Far memory: pluggable backend (serial link by default) + remote memory
+/// controller. The paper models packet delay (size-dependent), link
+/// bandwidth, and a configurable *additional* latency — coherence
+/// internals are not modeled.
 #[derive(Debug, Clone)]
 pub struct FarMemConfig {
     /// Additional one-way-pair (request+response) latency added by the far
@@ -109,11 +200,32 @@ pub struct FarMemConfig {
     pub bandwidth_gbps: f64,
     /// Per-packet header bytes (flit/protocol overhead).
     pub header_bytes: usize,
-    /// Uniform jitter fraction of added latency (far memory latency is
-    /// "long and highly variable"); 0.0 disables.
+    /// Uniform **zero-mean** jitter amplitude as a fraction of added
+    /// latency (far memory latency is "long and highly variable"); the
+    /// empirical mean round trip stays at the configured latency.
+    /// 0.0 disables.
     pub jitter_frac: f64,
     /// Remote memory controller service config.
     pub remote_dram: DramConfig,
+    /// Which far-memory data plane serves accesses (`serial-link` default).
+    pub backend: FarBackendKind,
+    /// `pooled`: number of independent service channels.
+    pub pool_channels: usize,
+    /// `pooled`: per-channel outstanding-request depth before congestion
+    /// back-pressure delays new arrivals.
+    pub pool_queue_depth: usize,
+    /// `distribution`: latency distribution family.
+    pub dist: LatencyDist,
+    /// `distribution`/lognormal: shape parameter sigma (0 = deterministic).
+    pub dist_sigma: f64,
+    /// `distribution`/bimodal: fraction of requests on the slow mode.
+    pub dist_tail_frac: f64,
+    /// `distribution`/bimodal: slow-mode latency multiplier.
+    pub dist_tail_mult: f64,
+    /// `hybrid`: fraction of accesses served by the near tier.
+    pub near_frac: f64,
+    /// `hybrid`: near-tier round-trip latency in ns.
+    pub near_latency_ns: f64,
 }
 
 impl Default for FarMemConfig {
@@ -124,6 +236,15 @@ impl Default for FarMemConfig {
             header_bytes: 16,
             jitter_frac: 0.05,
             remote_dram: DramConfig::default(),
+            backend: FarBackendKind::SerialLink,
+            pool_channels: 4,
+            pool_queue_depth: 16,
+            dist: LatencyDist::Lognormal,
+            dist_sigma: 0.5,
+            dist_tail_frac: 0.05,
+            dist_tail_mult: 5.0,
+            near_frac: 0.5,
+            near_latency_ns: 100.0,
         }
     }
 }
@@ -311,6 +432,12 @@ impl SimConfig {
         self
     }
 
+    /// Select the far-memory backend model.
+    pub fn with_far_backend(mut self, backend: FarBackendKind) -> Self {
+        self.far.backend = backend;
+        self
+    }
+
     pub fn far_latency_cycles(&self) -> u64 {
         crate::util::ns_to_cycles(self.far.added_latency_ns, self.core.freq_ghz)
     }
@@ -383,6 +510,29 @@ impl SimConfig {
             "far.added_latency_ns" => set_f!(self.far.added_latency_ns),
             "far.bandwidth_gbps" => set_f!(self.far.bandwidth_gbps),
             "far.jitter_frac" => set_f!(self.far.jitter_frac),
+            "far.backend" => {
+                let s = doc.get_str(key).ok_or("'far.backend' must be a string")?;
+                self.far.backend = FarBackendKind::parse(s).ok_or_else(|| {
+                    format!(
+                        "unknown far.backend '{s}' (valid: {})",
+                        FarBackendKind::names().join(", ")
+                    )
+                })?;
+                true
+            }
+            "far.pool_channels" => set_u!(self.far.pool_channels),
+            "far.pool_queue_depth" => set_u!(self.far.pool_queue_depth),
+            "far.dist" => {
+                let s = doc.get_str(key).ok_or("'far.dist' must be a string")?;
+                self.far.dist = LatencyDist::parse(s)
+                    .ok_or_else(|| format!("unknown far.dist '{s}' (valid: lognormal, bimodal)"))?;
+                true
+            }
+            "far.dist_sigma" => set_f!(self.far.dist_sigma),
+            "far.dist_tail_frac" => set_f!(self.far.dist_tail_frac),
+            "far.dist_tail_mult" => set_f!(self.far.dist_tail_mult),
+            "far.near_frac" => set_f!(self.far.near_frac),
+            "far.near_latency_ns" => set_f!(self.far.near_latency_ns),
             "prefetch.l2_best_offset" => set_b!(self.prefetch.l2_best_offset),
             "prefetch.degree" => set_u!(self.prefetch.degree),
             "amu.enabled" => set_b!(self.amu.enabled),
@@ -419,6 +569,50 @@ impl SimConfig {
         }
         if self.far.added_latency_ns < 0.0 || self.far.bandwidth_gbps <= 0.0 {
             return Err("far memory latency/bandwidth out of range".into());
+        }
+        if !(0.0..=0.5).contains(&self.far.jitter_frac) {
+            // Above 0.5 the negative jitter tail would be clamped at the
+            // request departure (one-way propagation is added/2), which
+            // would re-bias the mean the zero-mean scheme guarantees.
+            return Err("far.jitter_frac must be in [0, 0.5]".into());
+        }
+        match self.far.backend {
+            FarBackendKind::Pooled => {
+                if self.far.pool_channels == 0 || self.far.pool_queue_depth == 0 {
+                    return Err("pooled backend needs >=1 channel and queue depth".into());
+                }
+            }
+            FarBackendKind::Distribution => {
+                if self.far.dist_sigma < 0.0 || !self.far.dist_sigma.is_finite() {
+                    return Err("distribution backend: dist_sigma must be finite and >= 0".into());
+                }
+                if !(0.0..1.0).contains(&self.far.dist_tail_frac)
+                    || self.far.dist_tail_mult < 1.0
+                {
+                    return Err(
+                        "distribution backend: need 0 <= dist_tail_frac < 1, dist_tail_mult >= 1"
+                            .into(),
+                    );
+                }
+                if self.far.dist == LatencyDist::Bimodal
+                    && self.far.dist_tail_frac * self.far.dist_tail_mult >= 1.0
+                {
+                    // The fast mode must keep a positive latency for the
+                    // mean to stay at the configured value.
+                    return Err(
+                        "distribution backend: dist_tail_frac * dist_tail_mult must be < 1".into(),
+                    );
+                }
+            }
+            FarBackendKind::Hybrid => {
+                if !(0.0..=1.0).contains(&self.far.near_frac) {
+                    return Err("hybrid backend: near_frac must be in [0, 1]".into());
+                }
+                if self.far.near_latency_ns < 0.0 || !self.far.near_latency_ns.is_finite() {
+                    return Err("hybrid backend: near_latency_ns out of range".into());
+                }
+            }
+            FarBackendKind::SerialLink => {}
         }
         Ok(())
     }
@@ -511,6 +705,57 @@ mod tests {
         for name in SimConfig::preset_names() {
             let c = SimConfig::preset(name).unwrap();
             c.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn backend_tags_round_trip() {
+        for &k in FarBackendKind::ALL {
+            assert_eq!(FarBackendKind::parse(k.tag()), Some(k));
+        }
+        assert_eq!(FarBackendKind::parse("dist"), Some(FarBackendKind::Distribution));
+        assert!(FarBackendKind::parse("warp9").is_none());
+        assert_eq!(FarBackendKind::default(), FarBackendKind::SerialLink);
+        assert_eq!(FarBackendKind::names().len(), FarBackendKind::ALL.len());
+    }
+
+    #[test]
+    fn backend_overrides_apply() {
+        let mut c = SimConfig::baseline();
+        let doc = crate::util::toml_lite::parse(
+            "[far]\nbackend = \"pooled\"\npool_channels = 8\n",
+        )
+        .unwrap();
+        c.apply_overrides(&doc).unwrap();
+        assert_eq!(c.far.backend, FarBackendKind::Pooled);
+        assert_eq!(c.far.pool_channels, 8);
+        let bad = crate::util::toml_lite::parse("[far]\nbackend = \"warp9\"\n").unwrap();
+        let e = c.apply_overrides(&bad).unwrap_err();
+        assert!(e.contains("serial-link"), "{e}");
+    }
+
+    #[test]
+    fn backend_validation_catches_bad_params() {
+        let mut c = SimConfig::baseline().with_far_backend(FarBackendKind::Pooled);
+        c.far.pool_channels = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = SimConfig::baseline().with_far_backend(FarBackendKind::Distribution);
+        c.far.dist = LatencyDist::Bimodal;
+        c.far.dist_tail_frac = 0.5;
+        c.far.dist_tail_mult = 3.0; // 0.5 * 3 >= 1: fast mode would go negative
+        assert!(c.validate().is_err());
+
+        let mut c = SimConfig::baseline().with_far_backend(FarBackendKind::Hybrid);
+        c.far.near_frac = 1.5;
+        assert!(c.validate().is_err());
+
+        let mut c = SimConfig::baseline();
+        c.far.jitter_frac = 0.8; // would clamp the negative tail and re-bias the mean
+        assert!(c.validate().is_err());
+
+        for &k in FarBackendKind::ALL {
+            assert!(SimConfig::baseline().with_far_backend(k).validate().is_ok(), "{k:?}");
         }
     }
 }

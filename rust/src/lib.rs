@@ -30,9 +30,9 @@
 //! # Running sweeps
 //!
 //! [`session::Session`] executes a [`session::SweepGrid`] — any
-//! benches × configs × latencies × variants cross product — across scoped
-//! worker threads with deterministic row ordering and a resumable,
-//! fingerprint-checked CSV cache:
+//! benches × configs × latencies × variants × far-memory backends cross
+//! product — across scoped worker threads with deterministic row ordering
+//! and a resumable, fingerprint-checked CSV cache:
 //!
 //! ```no_run
 //! use amu_sim::session::{Session, SweepGrid};
@@ -41,6 +41,11 @@
 //! let grid = SweepGrid::paper(Scale::Test);
 //! let rows = Session::new().jobs(8).sweep(&grid).unwrap();
 //! assert_eq!(rows.len(), 11 * 4 * 6);
+//!
+//! // The same grid under every far-memory data plane (see `mem::backend`):
+//! let grid = SweepGrid::paper(Scale::Test)
+//!     .backends(["serial-link", "pooled", "distribution", "hybrid"]);
+//! assert_eq!(grid.len(), 11 * 4 * 6 * 4);
 //! ```
 //!
 //! The same executor backs `amu-sim sweep --jobs N` on the command line.

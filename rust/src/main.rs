@@ -4,8 +4,24 @@
 //!   run     — simulate one benchmark under one configuration
 //!   sweep   — run a (custom or paper) scenario grid in parallel (--jobs)
 //!   report  — regenerate paper figures/tables (fig2..fig11, table4..6, all)
-//!   list    — enumerate benchmarks and configuration presets
+//!   list    — enumerate benchmarks, configuration presets, and backends
 //!   payload — smoke-test the PJRT payload engine (artifacts/)
+//!
+//! Far-memory backends (`--backend`): every command that simulates far
+//! memory accepts a backend selecting the data-plane model — `serial-link`
+//! (the paper's CXL-like link, default), `pooled` (multi-channel
+//! disaggregated pool with congestion back-pressure), `distribution`
+//! (lognormal/bimodal latency with the configured mean, for tail-latency
+//! scenarios), and `hybrid` (fast-path/slow-path split). Examples:
+//!
+//! ```text
+//! amu-sim run --bench gups --config amu --backend hybrid --latency-ns 2000
+//! amu-sim sweep --backend serial-link,pooled,distribution,hybrid --jobs 8
+//! amu-sim report fig8 --backend distribution --scale test
+//! ```
+//!
+//! Sweep CSVs carry the backend both as a column and in the grid
+//! fingerprint, so caches from different backends never mix.
 
 use amu_sim::config::SimConfig;
 use amu_sim::report;
@@ -17,6 +33,7 @@ const RUN_SPECS: &[Spec] = &[
     opt("bench", "benchmark name (see `list`)"),
     opt("config", "configuration preset (baseline|cxl-ideal|amu|amu-dma|x2|x4)"),
     opt("latency-ns", "additional far-memory latency in ns"),
+    opt("backend", "far-memory backend (serial-link|pooled|distribution|hybrid)"),
     opt("scale", "test|paper"),
     opt("variant", "auto|sync|amu|llvm|gp<N>|pf<N>[-<D>]"),
     opt("config-file", "TOML-lite overrides applied on top of the preset"),
@@ -28,6 +45,11 @@ const SWEEP_SPECS: &[Spec] = &[
     opt("configs", "comma-separated presets (default: baseline,cxl-ideal,amu,amu-dma)"),
     opt("latencies-ns", "comma-separated latencies in ns (default: paper's 6 points)"),
     opt("variant", "auto|sync|amu|llvm|gp<N>|pf<N>[-<D>] (default: auto per config)"),
+    opt(
+        "backend",
+        "comma-separated far-memory backends: serial-link|pooled|distribution|hybrid \
+         (default: serial-link)",
+    ),
     opt("scale", "test|paper"),
     opt("jobs", "worker threads (default: all cores)"),
     opt("cache-file", "explicit cache CSV path"),
@@ -77,6 +99,9 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         cfg.apply_overrides(&doc)?;
     }
     let mut builder = RunRequest::bench(bench).config(cfg).scale(scale);
+    if let Some(b) = args.get("backend") {
+        builder = builder.backend(b);
+    }
     match parse_variant_sel(&args.get_str("variant", "auto"))? {
         VariantSel::Auto => {}
         VariantSel::Fixed(v) => builder = builder.variant(v),
@@ -86,8 +111,8 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     let r = req.run().map_err(|e| e.to_string())?;
     let host_ms = t0.elapsed().as_millis();
     println!(
-        "bench={} config={} variant={} latency={}ns",
-        r.bench, r.config, r.variant, r.latency_ns
+        "bench={} config={} backend={} variant={} latency={}ns",
+        r.bench, r.config, r.backend, r.variant, r.latency_ns
     );
     println!(
         "  cycles(measured)={}  total={}  insts={}",
@@ -128,6 +153,11 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
         grid.latencies_ns = lats;
     }
     grid.variants = vec![parse_variant_sel(&args.get_str("variant", "auto"))?];
+    if let Some(s) = args.get("backend") {
+        // Through the builder so alias spellings canonicalize (cache
+        // fingerprints must not fork on `serial` vs `serial-link`).
+        grid = grid.backends(split_list(s));
+    }
 
     let mut session = Session::new().quiet(args.has_flag("quiet"));
     if let Some(n) = parse_jobs(&args)? {
@@ -149,12 +179,14 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     let rows = session.sweep(&grid).map_err(|e| e.to_string())?;
     let wall = t0.elapsed();
     println!(
-        "sweep: {} rows ({} benches x {} configs x {} latencies x {} variants) in {:.2?}",
+        "sweep: {} rows ({} benches x {} configs x {} latencies x {} variants x {} backends) \
+         in {:.2?}",
         rows.len(),
         grid.benches.len(),
         grid.configs.len(),
         grid.latencies_ns.len(),
         grid.variants.len(),
+        grid.backends.len(),
         wall
     );
     match &cache_path {
@@ -167,6 +199,7 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
 fn cmd_report(argv: &[String]) -> Result<(), String> {
     let specs: &[Spec] = &[
         opt("scale", "test|paper"),
+        opt("backend", "far-memory backend for the sweep (default: serial-link)"),
         opt("jobs", "worker threads for sweeps (default: all cores)"),
         flag("quiet", "less progress"),
     ];
@@ -183,7 +216,10 @@ fn cmd_report(argv: &[String]) -> Result<(), String> {
         "fig2" | "fig8" | "fig9" | "fig10" | "fig11" | "headline" | "all"
     );
     let rows = if needs_sweep {
-        session.sweep_paper(scale).map_err(|e| e.to_string())?
+        match args.get("backend") {
+            Some(b) => session.sweep_paper_backend(scale, b).map_err(|e| e.to_string())?,
+            None => session.sweep_paper(scale).map_err(|e| e.to_string())?,
+        }
     } else {
         Vec::new()
     };
@@ -243,6 +279,10 @@ fn main() {
         Some("list") => {
             println!("benchmarks: {}", workloads::ALL.join(" "));
             println!("configs:    {}", SimConfig::preset_names().join(" "));
+            println!(
+                "backends:   {}",
+                amu_sim::config::FarBackendKind::names().join(" ")
+            );
             Ok(())
         }
         _ => {

@@ -1,0 +1,660 @@
+//! Pluggable far-memory data planes behind the [`FarBackend`] trait.
+//!
+//! The paper evaluates one scenario — a CXL-like serial link — but its
+//! premise (far latency is long *and highly variable*) covers a family of
+//! data planes. Each backend here is one such scenario, selectable per run
+//! via `FarMemConfig::backend` and sweepable as a grid axis:
+//!
+//! * `serial-link` — [`FarLink`], the paper's Figure 7 model, unchanged
+//!   and the default.
+//! * `pooled` — a multi-channel disaggregated memory pool: every channel
+//!   owns an independent remote memory controller and a bounded service
+//!   queue; a full queue back-pressures new arrivals onto the oldest
+//!   outstanding request (congestion, not just bandwidth, bounds tail
+//!   latency).
+//! * `distribution` — propagation latency sampled per request from a
+//!   lognormal or bimodal distribution whose *mean* is the configured
+//!   added latency, so sweeps compare equal-mean scenarios that differ
+//!   only in variability (zero-mean by construction, like the serial
+//!   link's fixed-amplitude jitter).
+//! * `hybrid` — a fast-path/slow-path split: a configured fraction of
+//!   accesses hit a near tier at `near_latency_ns` while the rest traverse
+//!   the full serial link (RDMA/swap hybrid data planes).
+//!
+//! All randomness is drawn from per-instance [`Xoshiro256`] streams seeded
+//! from the run seed, so every backend is bit-for-bit deterministic and
+//! sweep CSVs stay byte-identical across `--jobs` counts.
+
+use super::dram::Dram;
+use super::link::{add_signed, FarLink, FarTiming};
+use crate::config::{FarBackendKind, FarMemConfig, LatencyDist};
+use crate::util::prng::Xoshiro256;
+use std::collections::VecDeque;
+
+/// One far-memory data plane: issues reads/writes with absolute-cycle
+/// completion times and tracks in-flight requests for MLP accounting.
+pub trait FarBackend: Send {
+    /// Which scenario this backend models (CSV/report tagging).
+    fn kind(&self) -> FarBackendKind;
+
+    /// Issue a read of `bytes` payload starting at `cycle`; returns the
+    /// absolute cycle the response data arrives back at the requester.
+    /// Caller must later call [`FarBackend::complete`].
+    fn read(&mut self, cycle: u64, addr: u64, bytes: usize) -> FarTiming;
+
+    /// Issue a write; returns the cycle the ack arrives back.
+    fn write(&mut self, cycle: u64, addr: u64, bytes: usize) -> FarTiming;
+
+    /// Posted write (dirty-line writeback): no ack tracked.
+    fn posted_write(&mut self, cycle: u64, addr: u64, bytes: usize);
+
+    /// Mark one tracked request complete (MLP accounting).
+    fn complete(&mut self);
+
+    /// Requests currently in flight (the Fig 9 metric).
+    fn inflight(&self) -> u64;
+
+    /// The *mean* added round-trip latency in cycles.
+    fn min_round_trip(&self) -> u64;
+}
+
+/// Construct the backend selected by `cfg.backend`.
+pub fn build(cfg: &FarMemConfig, freq_ghz: f64, seed: u64) -> Box<dyn FarBackend> {
+    match cfg.backend {
+        FarBackendKind::SerialLink => Box::new(FarLink::new(cfg, freq_ghz, seed)),
+        FarBackendKind::Pooled => Box::new(PooledBackend::new(cfg, freq_ghz, seed)),
+        FarBackendKind::Distribution => Box::new(DistributionBackend::new(cfg, freq_ghz, seed)),
+        FarBackendKind::Hybrid => Box::new(HybridBackend::new(cfg, freq_ghz, seed)),
+    }
+}
+
+impl FarBackend for FarLink {
+    fn kind(&self) -> FarBackendKind {
+        FarBackendKind::SerialLink
+    }
+
+    fn read(&mut self, cycle: u64, addr: u64, bytes: usize) -> FarTiming {
+        FarLink::read(self, cycle, addr, bytes)
+    }
+
+    fn write(&mut self, cycle: u64, addr: u64, bytes: usize) -> FarTiming {
+        FarLink::write(self, cycle, addr, bytes)
+    }
+
+    fn posted_write(&mut self, cycle: u64, addr: u64, bytes: usize) {
+        FarLink::posted_write(self, cycle, addr, bytes)
+    }
+
+    fn complete(&mut self) {
+        FarLink::complete(self)
+    }
+
+    fn inflight(&self) -> u64 {
+        self.inflight
+    }
+
+    fn min_round_trip(&self) -> u64 {
+        FarLink::min_round_trip(self)
+    }
+}
+
+/// Shared per-direction link front end (serialization + propagation), used
+/// by the pooled and distribution backends so they differ from the serial
+/// link only in the part they model differently.
+struct LinkFront {
+    req_free_at: u64,
+    resp_free_at: u64,
+    cycles_per_byte: f64,
+    req_way_cycles: u64,
+    resp_way_cycles: u64,
+    header_bytes: usize,
+}
+
+impl LinkFront {
+    fn new(cfg: &FarMemConfig, freq_ghz: f64) -> Self {
+        let added_cycles = crate::util::ns_to_cycles(cfg.added_latency_ns, freq_ghz);
+        Self {
+            req_free_at: 0,
+            resp_free_at: 0,
+            cycles_per_byte: freq_ghz / cfg.bandwidth_gbps,
+            req_way_cycles: added_cycles / 2,
+            resp_way_cycles: added_cycles - added_cycles / 2,
+            header_bytes: cfg.header_bytes,
+        }
+    }
+
+    #[inline]
+    fn ser(&self, bytes: usize) -> u64 {
+        ((bytes as f64) * self.cycles_per_byte).ceil() as u64
+    }
+
+    /// Serialize a request packet of `payload` bytes; returns when it
+    /// departs the requester.
+    fn depart_request(&mut self, cycle: u64, payload: usize) -> u64 {
+        let depart = cycle.max(self.req_free_at) + self.ser(self.header_bytes + payload);
+        self.req_free_at = depart;
+        depart
+    }
+
+    /// Serialize a response packet of `payload` bytes once the remote side
+    /// finished at `remote_done`; returns when it departs the remote end.
+    fn depart_response(&mut self, remote_done: u64, payload: usize) -> u64 {
+        let depart =
+            remote_done.max(self.resp_free_at) + self.ser(self.header_bytes + payload);
+        self.resp_free_at = depart;
+        depart
+    }
+}
+
+// (Per-request read/write/byte counters live in the global `Stats`; the
+// backends only track in-flight counts for MLP accounting.)
+
+// ------------------------------------------------------------------ pooled
+
+/// One channel of the disaggregated pool: an independent remote memory
+/// controller plus a bounded outstanding-request queue.
+struct Channel {
+    remote: Dram,
+    /// Completion cycles of requests this channel is still servicing, in
+    /// issue order (service starts are monotone, so this stays sorted
+    /// closely enough for drain-the-front bookkeeping).
+    busy: VecDeque<u64>,
+    depth: usize,
+    congested: u64,
+}
+
+impl Channel {
+    /// Service `lines` cache lines arriving at `at`. When the channel's
+    /// queue is full the request waits for the oldest outstanding one to
+    /// drain first — congestion back-pressure, the pool's signature
+    /// behaviour.
+    fn service(&mut self, at: u64, addr: u64, lines: usize, is_write: bool) -> u64 {
+        while self.busy.front().is_some_and(|&d| d <= at) {
+            self.busy.pop_front();
+        }
+        let start = if self.busy.len() >= self.depth {
+            self.congested += 1;
+            let head = self.busy.pop_front().unwrap_or(at);
+            head.max(at)
+        } else {
+            at
+        };
+        let mut done = start;
+        for l in 0..lines {
+            done = done.max(self.remote.service(start, addr + (l * 64) as u64, is_write));
+        }
+        self.busy.push_back(done);
+        done
+    }
+}
+
+/// Multi-channel disaggregated memory pool behind a serial link front end
+/// (including the link's zero-mean propagation jitter, so the pool differs
+/// from `serial-link` only in its remote side).
+pub struct PooledBackend {
+    front: LinkFront,
+    channels: Vec<Channel>,
+    jitter_cycles: u64,
+    rng: Xoshiro256,
+    inflight: u64,
+}
+
+impl PooledBackend {
+    pub fn new(cfg: &FarMemConfig, freq_ghz: f64, seed: u64) -> Self {
+        let n = cfg.pool_channels.max(1);
+        let added_cycles = crate::util::ns_to_cycles(cfg.added_latency_ns, freq_ghz);
+        Self {
+            front: LinkFront::new(cfg, freq_ghz),
+            channels: (0..n)
+                .map(|_| Channel {
+                    remote: Dram::new(&cfg.remote_dram, freq_ghz),
+                    busy: VecDeque::new(),
+                    depth: cfg.pool_queue_depth.max(1),
+                    congested: 0,
+                })
+                .collect(),
+            jitter_cycles: (added_cycles as f64 * cfg.jitter_frac) as u64,
+            rng: Xoshiro256::new(seed ^ 0x900_1ED),
+            inflight: 0,
+        }
+    }
+
+    /// Zero-mean jitter, same scheme as [`FarLink`].
+    #[inline]
+    fn jitter(&mut self) -> i64 {
+        if self.jitter_cycles == 0 {
+            0
+        } else {
+            self.rng.below(2 * self.jitter_cycles + 1) as i64 - self.jitter_cycles as i64
+        }
+    }
+
+    /// Requests delayed by a full channel queue (observability/tests).
+    pub fn congestion_events(&self) -> u64 {
+        self.channels.iter().map(|c| c.congested).sum()
+    }
+
+    #[inline]
+    fn channel_of(&self, addr: u64) -> usize {
+        // Multiplicative hash so strided access patterns spread across
+        // channels instead of aliasing onto one.
+        (((addr >> 6).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize)
+            % self.channels.len()
+    }
+
+    fn access(&mut self, cycle: u64, addr: u64, bytes: usize, is_write: bool) -> FarTiming {
+        self.inflight += 1;
+        let req_payload = if is_write { bytes } else { 0 };
+        let depart = self.front.depart_request(cycle, req_payload);
+        let jitter = self.jitter();
+        let arrive = add_signed(depart + self.front.req_way_cycles, jitter).max(depart);
+        let lines = bytes.div_ceil(64).max(1);
+        let ch = self.channel_of(addr);
+        let remote_done = self.channels[ch].service(arrive, addr, lines, is_write);
+        let resp_payload = if is_write { 0 } else { bytes };
+        let resp_depart = self.front.depart_response(remote_done, resp_payload);
+        FarTiming { done: resp_depart + self.front.resp_way_cycles }
+    }
+}
+
+impl FarBackend for PooledBackend {
+    fn kind(&self) -> FarBackendKind {
+        FarBackendKind::Pooled
+    }
+
+    fn read(&mut self, cycle: u64, addr: u64, bytes: usize) -> FarTiming {
+        self.access(cycle, addr, bytes, false)
+    }
+
+    fn write(&mut self, cycle: u64, addr: u64, bytes: usize) -> FarTiming {
+        self.access(cycle, addr, bytes, true)
+    }
+
+    fn posted_write(&mut self, cycle: u64, addr: u64, bytes: usize) {
+        let depart = self.front.depart_request(cycle, bytes);
+        let arrive = depart + self.front.req_way_cycles;
+        let ch = self.channel_of(addr);
+        self.channels[ch].service(arrive, addr, bytes.div_ceil(64).max(1), true);
+    }
+
+    fn complete(&mut self) {
+        debug_assert!(self.inflight > 0);
+        self.inflight -= 1;
+    }
+
+    fn inflight(&self) -> u64 {
+        self.inflight
+    }
+
+    fn min_round_trip(&self) -> u64 {
+        self.front.req_way_cycles + self.front.resp_way_cycles
+    }
+}
+
+// ------------------------------------------------------------ distribution
+
+/// Per-request propagation latency sampled from a configured distribution
+/// with mean equal to the configured added latency. `jitter_frac` is
+/// deliberately ignored here: the sampled distribution *is* the
+/// variability model, and layering uniform jitter on top would skew the
+/// configured shape.
+pub struct DistributionBackend {
+    front: LinkFront,
+    remote: Dram,
+    rng: Xoshiro256,
+    mean_cycles: u64,
+    dist: LatencyDist,
+    sigma: f64,
+    tail_frac: f64,
+    tail_mult: f64,
+    inflight: u64,
+}
+
+impl DistributionBackend {
+    pub fn new(cfg: &FarMemConfig, freq_ghz: f64, seed: u64) -> Self {
+        Self {
+            front: LinkFront::new(cfg, freq_ghz),
+            remote: Dram::new(&cfg.remote_dram, freq_ghz),
+            rng: Xoshiro256::new(seed ^ 0xD157_0B4C),
+            mean_cycles: crate::util::ns_to_cycles(cfg.added_latency_ns, freq_ghz),
+            dist: cfg.dist,
+            sigma: cfg.dist_sigma,
+            tail_frac: cfg.dist_tail_frac,
+            tail_mult: cfg.dist_tail_mult,
+            inflight: 0,
+        }
+    }
+
+    /// Sample one round-trip propagation latency. Both families keep the
+    /// mean at `mean_cycles` exactly (zero-mean variability), so sweeps
+    /// compare equal-mean scenarios that differ only in shape.
+    fn sample_rtt(&mut self) -> u64 {
+        let mean = self.mean_cycles.max(1) as f64;
+        let sample = match self.dist {
+            LatencyDist::Lognormal => {
+                if self.sigma == 0.0 {
+                    mean
+                } else {
+                    // E[exp(N(mu, s^2))] = exp(mu + s^2/2) = mean.
+                    let mu = mean.ln() - self.sigma * self.sigma / 2.0;
+                    let z = self.rng.next_gaussian();
+                    (mu + self.sigma * z).exp()
+                }
+            }
+            LatencyDist::Bimodal => {
+                if self.rng.next_f64() < self.tail_frac {
+                    mean * self.tail_mult
+                } else {
+                    // Fast mode chosen so the overall mean stays at `mean`:
+                    // (1-p)*fast + p*mult*mean = mean.
+                    mean * (1.0 - self.tail_frac * self.tail_mult) / (1.0 - self.tail_frac)
+                }
+            }
+        };
+        // Guard pathological samples (e.g. huge sigma) without moving the
+        // mean in any realistic configuration.
+        (sample.round() as u64).min(self.mean_cycles.saturating_mul(1000).max(1))
+    }
+
+    fn access(&mut self, cycle: u64, addr: u64, bytes: usize, is_write: bool) -> FarTiming {
+        self.inflight += 1;
+        let req_payload = if is_write { bytes } else { 0 };
+        let depart = self.front.depart_request(cycle, req_payload);
+        let rtt = self.sample_rtt();
+        let arrive = depart + rtt / 2;
+        let lines = bytes.div_ceil(64).max(1);
+        let mut remote_done = arrive;
+        for l in 0..lines {
+            remote_done =
+                remote_done.max(self.remote.service(arrive, addr + (l * 64) as u64, is_write));
+        }
+        let resp_payload = if is_write { 0 } else { bytes };
+        let resp_depart = self.front.depart_response(remote_done, resp_payload);
+        FarTiming { done: resp_depart + (rtt - rtt / 2) }
+    }
+}
+
+impl FarBackend for DistributionBackend {
+    fn kind(&self) -> FarBackendKind {
+        FarBackendKind::Distribution
+    }
+
+    fn read(&mut self, cycle: u64, addr: u64, bytes: usize) -> FarTiming {
+        self.access(cycle, addr, bytes, false)
+    }
+
+    fn write(&mut self, cycle: u64, addr: u64, bytes: usize) -> FarTiming {
+        self.access(cycle, addr, bytes, true)
+    }
+
+    fn posted_write(&mut self, cycle: u64, addr: u64, bytes: usize) {
+        let depart = self.front.depart_request(cycle, bytes);
+        let rtt = self.sample_rtt();
+        self.remote.service(depart + rtt / 2, addr, true);
+    }
+
+    fn complete(&mut self) {
+        debug_assert!(self.inflight > 0);
+        self.inflight -= 1;
+    }
+
+    fn inflight(&self) -> u64 {
+        self.inflight
+    }
+
+    fn min_round_trip(&self) -> u64 {
+        self.mean_cycles
+    }
+}
+
+// ----------------------------------------------------------------- hybrid
+
+/// Fast-path/slow-path split: a `near_frac` fraction of accesses is served
+/// by a near tier (local cache of far pages, RDMA-cached, swap-resident),
+/// the rest traverse the full serial link.
+pub struct HybridBackend {
+    far: FarLink,
+    rng: Xoshiro256,
+    near_cycles: u64,
+    near_frac: f64,
+    /// Tracked at this level for both paths; the inner link's own counter
+    /// is cancelled right after issue.
+    inflight: u64,
+    pub near_hits: u64,
+    pub far_misses: u64,
+}
+
+impl HybridBackend {
+    pub fn new(cfg: &FarMemConfig, freq_ghz: f64, seed: u64) -> Self {
+        Self {
+            far: FarLink::new(cfg, freq_ghz, seed),
+            rng: Xoshiro256::new(seed ^ 0x42B1_D000),
+            near_cycles: crate::util::ns_to_cycles(cfg.near_latency_ns, freq_ghz).max(1),
+            near_frac: cfg.near_frac,
+            inflight: 0,
+            near_hits: 0,
+            far_misses: 0,
+        }
+    }
+
+    #[inline]
+    fn near(&mut self) -> bool {
+        self.rng.next_f64() < self.near_frac
+    }
+
+    fn access(&mut self, cycle: u64, addr: u64, bytes: usize, is_write: bool) -> FarTiming {
+        self.inflight += 1;
+        if self.near() {
+            self.near_hits += 1;
+            FarTiming { done: cycle + self.near_cycles }
+        } else {
+            self.far_misses += 1;
+            let t = if is_write {
+                self.far.write(cycle, addr, bytes)
+            } else {
+                self.far.read(cycle, addr, bytes)
+            };
+            // In-flight is tracked at the hybrid level (a completion can't
+            // tell which path it took); undo the inner link's increment.
+            FarLink::complete(&mut self.far);
+            t
+        }
+    }
+}
+
+impl FarBackend for HybridBackend {
+    fn kind(&self) -> FarBackendKind {
+        FarBackendKind::Hybrid
+    }
+
+    fn read(&mut self, cycle: u64, addr: u64, bytes: usize) -> FarTiming {
+        self.access(cycle, addr, bytes, false)
+    }
+
+    fn write(&mut self, cycle: u64, addr: u64, bytes: usize) -> FarTiming {
+        self.access(cycle, addr, bytes, true)
+    }
+
+    fn posted_write(&mut self, cycle: u64, addr: u64, bytes: usize) {
+        if self.near() {
+            self.near_hits += 1;
+        } else {
+            self.far_misses += 1;
+            self.far.posted_write(cycle, addr, bytes);
+        }
+    }
+
+    fn complete(&mut self) {
+        debug_assert!(self.inflight > 0);
+        self.inflight -= 1;
+    }
+
+    fn inflight(&self) -> u64 {
+        self.inflight
+    }
+
+    fn min_round_trip(&self) -> u64 {
+        FarLink::min_round_trip(&self.far)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FarMemConfig;
+
+    fn cfg(backend: FarBackendKind) -> FarMemConfig {
+        let mut c = FarMemConfig::default();
+        c.added_latency_ns = 1000.0; // 3000-cycle mean RTT @3GHz
+        c.jitter_frac = 0.0;
+        c.backend = backend;
+        c
+    }
+
+    fn mean_read_latency(b: &mut dyn FarBackend, n: u64, spacing: u64) -> f64 {
+        let mut sum = 0u64;
+        for i in 0..n {
+            let cycle = i * spacing;
+            sum += b.read(cycle, i * 4096, 64).done - cycle;
+            b.complete();
+        }
+        sum as f64 / n as f64
+    }
+
+    #[test]
+    fn build_selects_every_kind() {
+        for &k in FarBackendKind::ALL {
+            let b = build(&cfg(k), 3.0, 7);
+            assert_eq!(b.kind(), k, "{k:?}");
+            assert!(b.min_round_trip() >= 1500, "{k:?}");
+        }
+    }
+
+    #[test]
+    fn backends_are_deterministic_per_seed() {
+        for &k in FarBackendKind::ALL {
+            let mut a = build(&cfg(k), 3.0, 11);
+            let mut b = build(&cfg(k), 3.0, 11);
+            for i in 0..200u64 {
+                let ta = a.read(i * 50, i * 64, 64).done;
+                let tb = b.read(i * 50, i * 64, 64).done;
+                assert_eq!(ta, tb, "{k:?} must be deterministic per seed");
+            }
+        }
+    }
+
+    #[test]
+    fn inflight_tracks_on_all_backends() {
+        for &k in FarBackendKind::ALL {
+            let mut b = build(&cfg(k), 3.0, 3);
+            for i in 0..10u64 {
+                b.read(0, i * 4096, 64);
+            }
+            assert_eq!(b.inflight(), 10, "{k:?}");
+            for _ in 0..10 {
+                b.complete();
+            }
+            assert_eq!(b.inflight(), 0, "{k:?}");
+        }
+    }
+
+    #[test]
+    fn distribution_mean_matches_configured_latency() {
+        for dist in [LatencyDist::Lognormal, LatencyDist::Bimodal] {
+            let mut c = cfg(FarBackendKind::Distribution);
+            c.dist = dist;
+            let mut b = DistributionBackend::new(&c, 3.0, 5);
+            let mut s = DistributionBackend::new(&c, 3.0, 5);
+            s.sigma = 0.0;
+            s.tail_frac = 0.0;
+            let mean_var = mean_read_latency(&mut b, 4000, 30_000);
+            let mean_det = mean_read_latency(&mut s, 4000, 30_000);
+            // Lognormal(sigma=0.5) around a 3000-cycle mean has std
+            // ~1600 cycles; the standard error over 4000 draws is ~25, so
+            // a 5% band (150 cycles, ~6 sigma) is comfortably beyond noise
+            // while still catching any systematic mean shift.
+            assert!(
+                (mean_var - mean_det).abs() < 0.05 * 3000.0,
+                "{dist:?}: mean {mean_var:.0} vs deterministic {mean_det:.0}"
+            );
+        }
+    }
+
+    #[test]
+    fn distribution_has_heavier_tail_than_serial_link() {
+        let mut c = cfg(FarBackendKind::Distribution);
+        c.dist = LatencyDist::Bimodal;
+        let mut b = DistributionBackend::new(&c, 3.0, 5);
+        let mut max = 0u64;
+        let mut min = u64::MAX;
+        for i in 0..2000u64 {
+            let cycle = i * 30_000;
+            let d = b.read(cycle, i * 4096, 64).done - cycle;
+            b.complete();
+            max = max.max(d);
+            min = min.min(d);
+        }
+        // Slow mode is 5x the mean: the spread must show it.
+        assert!(max > 3 * min, "bimodal spread too small: [{min}, {max}]");
+    }
+
+    #[test]
+    fn pooled_backpressures_when_channels_congest() {
+        let mut c = cfg(FarBackendKind::Pooled);
+        c.pool_channels = 1;
+        c.pool_queue_depth = 2;
+        let mut narrow = PooledBackend::new(&c, 3.0, 1);
+        // Slam one channel with simultaneous requests: beyond the queue
+        // depth, arrivals must wait for older requests to drain.
+        let mut last = 0;
+        for i in 0..64u64 {
+            last = narrow.read(0, i * 4096, 64).done;
+            narrow.complete();
+        }
+        assert!(narrow.congestion_events() > 0, "queue depth 2 must congest");
+
+        c.pool_channels = 8;
+        c.pool_queue_depth = 16;
+        let mut wide = PooledBackend::new(&c, 3.0, 1);
+        let mut last_wide = 0;
+        for i in 0..64u64 {
+            last_wide = wide.read(0, i * 4096, 64).done;
+            wide.complete();
+        }
+        assert!(
+            last_wide <= last,
+            "8 channels ({last_wide}) must not be slower than 1 congested channel ({last})"
+        );
+    }
+
+    #[test]
+    fn hybrid_near_fraction_speeds_up_mean() {
+        let mut c = cfg(FarBackendKind::Hybrid);
+        c.near_frac = 0.5;
+        c.near_latency_ns = 100.0;
+        let mut h = HybridBackend::new(&c, 3.0, 9);
+        let mean_h = mean_read_latency(&mut h, 2000, 30_000);
+        assert!(h.near_hits > 600 && h.far_misses > 600, "both paths must be taken");
+
+        let mut serial = build(&cfg(FarBackendKind::SerialLink), 3.0, 9);
+        let mean_s = mean_read_latency(serial.as_mut(), 2000, 30_000);
+        // Half the accesses complete in ~300 cycles instead of ~3000+.
+        assert!(
+            mean_h < 0.75 * mean_s,
+            "hybrid mean {mean_h:.0} must beat serial mean {mean_s:.0}"
+        );
+    }
+
+    #[test]
+    fn hybrid_extremes_degenerate_cleanly() {
+        let mut c = cfg(FarBackendKind::Hybrid);
+        c.near_frac = 1.0;
+        let mut all_near = HybridBackend::new(&c, 3.0, 2);
+        let t = all_near.read(0, 0, 64);
+        assert_eq!(t.done, 300, "pure near tier: 100ns @3GHz");
+        c.near_frac = 0.0;
+        let mut all_far = HybridBackend::new(&c, 3.0, 2);
+        let t = all_far.read(0, 0, 64);
+        assert!(t.done >= 3000, "pure far path keeps the full RTT: {}", t.done);
+    }
+}

@@ -140,6 +140,11 @@ impl Cache {
         for l in &mut self.lines[range.clone()] {
             if l.valid && l.tag == line {
                 l.dirty |= dirty;
+                // Merge the prefetch flag: the line only stays credited to
+                // the prefetcher if *both* fills were prefetches. A demand
+                // install racing a prefetch fill used to leave the stale
+                // flag set, inflating `prefetch_hits` on the next access.
+                l.prefetched &= prefetched;
                 l.last_use = clock;
                 return None;
             }
@@ -379,6 +384,18 @@ mod tests {
         assert_eq!(c.prefetch_hits, 1);
         // Second hit doesn't double count.
         c.access(0x80, false);
+        assert_eq!(c.prefetch_hits, 1);
+        // A demand fill racing a prefetch install must clear the flag: the
+        // demand brought the line, so the later hit is not a prefetch hit.
+        c.install(0x2000, false, true); // prefetch fill
+        c.install(0x2000, false, false); // racing demand install, same line
+        c.access(0x2000, false);
+        assert_eq!(c.prefetch_hits, 1, "demand-refilled line must not credit the prefetcher");
+        // The reverse race: a prefetch fill landing on a demand-present
+        // line must not mark it prefetched either.
+        c.install(0x4000, false, false); // demand fill
+        c.install(0x4000, false, true); // late prefetch fill, same line
+        c.access(0x4000, false);
         assert_eq!(c.prefetch_hits, 1);
     }
 

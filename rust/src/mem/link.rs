@@ -14,8 +14,12 @@ pub struct FarLink {
     resp_free_at: u64,
     /// Cycles per byte on each direction.
     cycles_per_byte: f64,
-    /// One-way propagation: half of the configured added latency.
-    one_way_cycles: u64,
+    /// Request/response-direction propagation. The two sum to the
+    /// configured added latency *exactly* (odd cycle counts put the spare
+    /// cycle on the response direction), so `min_round_trip()` never
+    /// under-reports the configuration.
+    req_way_cycles: u64,
+    resp_way_cycles: u64,
     jitter_cycles: u64,
     header_bytes: usize,
     remote: Dram,
@@ -40,7 +44,8 @@ impl FarLink {
             req_free_at: 0,
             resp_free_at: 0,
             cycles_per_byte: freq_ghz / cfg.bandwidth_gbps,
-            one_way_cycles: added_cycles / 2,
+            req_way_cycles: added_cycles / 2,
+            resp_way_cycles: added_cycles - added_cycles / 2,
             jitter_cycles: (added_cycles as f64 * cfg.jitter_frac) as u64,
             header_bytes: cfg.header_bytes,
             remote: Dram::new(&cfg.remote_dram, freq_ghz),
@@ -57,12 +62,16 @@ impl FarLink {
         ((bytes as f64) * self.cycles_per_byte).ceil() as u64
     }
 
+    /// Zero-mean jitter in `[-jitter_cycles, +jitter_cycles]`. The old
+    /// implementation sampled `below(2*jitter)` and *added* it, silently
+    /// raising the mean latency by `jitter_frac * added_latency`; sampling
+    /// symmetrically keeps the empirical mean at the configured RTT.
     #[inline]
-    fn jitter(&mut self) -> u64 {
+    fn jitter(&mut self) -> i64 {
         if self.jitter_cycles == 0 {
             0
         } else {
-            self.rng.below(self.jitter_cycles * 2)
+            self.rng.below(2 * self.jitter_cycles + 1) as i64 - self.jitter_cycles as i64
         }
     }
 
@@ -77,7 +86,8 @@ impl FarLink {
         let req_ser = self.ser(self.header_bytes);
         let req_depart = cycle.max(self.req_free_at) + req_ser;
         self.req_free_at = req_depart;
-        let arrive_remote = req_depart + self.one_way_cycles + self.jitter();
+        let jitter = self.jitter();
+        let arrive_remote = add_signed(req_depart + self.req_way_cycles, jitter).max(req_depart);
         // Remote MC services (possibly multiple lines).
         let mut remote_done = arrive_remote;
         let lines = bytes.div_ceil(64).max(1);
@@ -92,7 +102,7 @@ impl FarLink {
         let resp_ser = self.ser(self.header_bytes + bytes);
         let resp_depart = remote_done.max(self.resp_free_at) + resp_ser;
         self.resp_free_at = resp_depart;
-        let done = resp_depart + self.one_way_cycles;
+        let done = resp_depart + self.resp_way_cycles;
         FarTiming { done }
     }
 
@@ -106,7 +116,8 @@ impl FarLink {
         let req_ser = self.ser(self.header_bytes + bytes);
         let req_depart = cycle.max(self.req_free_at) + req_ser;
         self.req_free_at = req_depart;
-        let arrive_remote = req_depart + self.one_way_cycles + self.jitter();
+        let jitter = self.jitter();
+        let arrive_remote = add_signed(req_depart + self.req_way_cycles, jitter).max(req_depart);
         let mut remote_done = arrive_remote;
         let lines = bytes.div_ceil(64).max(1);
         for l in 0..lines {
@@ -120,7 +131,7 @@ impl FarLink {
         let resp_ser = self.ser(self.header_bytes);
         let resp_depart = remote_done.max(self.resp_free_at) + resp_ser;
         self.resp_free_at = resp_depart;
-        let done = resp_depart + self.one_way_cycles;
+        let done = resp_depart + self.resp_way_cycles;
         FarTiming { done }
     }
 
@@ -132,7 +143,7 @@ impl FarLink {
         let req_ser = self.ser(self.header_bytes + bytes);
         let req_depart = cycle.max(self.req_free_at) + req_ser;
         self.req_free_at = req_depart;
-        let arrive = req_depart + self.one_way_cycles;
+        let arrive = req_depart + self.req_way_cycles;
         self.remote.service(arrive, addr, true);
     }
 
@@ -142,8 +153,19 @@ impl FarLink {
         self.inflight -= 1;
     }
 
+    /// The configured added round-trip latency, exactly (both directions).
     pub fn min_round_trip(&self) -> u64 {
-        2 * self.one_way_cycles
+        self.req_way_cycles + self.resp_way_cycles
+    }
+}
+
+/// `base + delta` with a signed delta, saturating at zero.
+#[inline]
+pub(crate) fn add_signed(base: u64, delta: i64) -> u64 {
+    if delta >= 0 {
+        base + delta as u64
+    } else {
+        base.saturating_sub(delta.unsigned_abs())
     }
 }
 
@@ -231,6 +253,55 @@ mod tests {
             let tb = b.read(i * 100, i * 64, 64).done;
             assert_eq!(ta, tb, "same seed must give same jitter");
         }
+    }
+
+    #[test]
+    fn odd_rtt_split_sums_exactly() {
+        // 333 ns @3GHz = 999 cycles: the old `added/2` split dropped a
+        // cycle, so min_round_trip() under-reported the configuration.
+        let mut cfg = FarMemConfig::default();
+        cfg.added_latency_ns = 333.0;
+        cfg.jitter_frac = 0.0;
+        let l = FarLink::new(&cfg, 3.0, 1);
+        assert_eq!(l.min_round_trip(), 999);
+        let even = link(1000.0);
+        assert_eq!(even.min_round_trip(), 3000);
+    }
+
+    #[test]
+    fn jitter_is_zero_mean() {
+        // The empirical mean latency with jitter enabled must match the
+        // jitter-free mean: identical access patterns, spaced far enough
+        // apart that serialization and the remote MC behave identically.
+        let mk = |frac: f64| {
+            let mut cfg = FarMemConfig::default();
+            cfg.added_latency_ns = 1000.0; // 3000-cycle RTT
+            cfg.jitter_frac = frac;
+            FarLink::new(&cfg, 3.0, 99)
+        };
+        let mut with_jitter = mk(0.10);
+        let mut without = mk(0.0);
+        let n = 3000u64;
+        let mut sum_j = 0u64;
+        let mut sum_0 = 0u64;
+        for i in 0..n {
+            let cycle = i * 20_000;
+            let addr = i * 4096;
+            sum_j += with_jitter.read(cycle, addr, 64).done - cycle;
+            sum_0 += without.read(cycle, addr, 64).done - cycle;
+        }
+        let mean_j = sum_j as f64 / n as f64;
+        let mean_0 = sum_0 as f64 / n as f64;
+        // Uniform jitter in [-300, +300]: the standard error of the mean
+        // over 3000 samples is ~3.2 cycles; 30 cycles (1% of RTT) is a
+        // >9-sigma bound, so a reintroduced bias (+300 mean shift) fails
+        // loudly while honest sampling noise never does.
+        assert!(
+            (mean_j - mean_0).abs() < 30.0,
+            "jitter must be zero-mean: with={mean_j:.1} without={mean_0:.1}"
+        );
+        // And the jitter-free mean itself contains the exact configured RTT.
+        assert!(mean_0 >= 3000.0, "mean {mean_0} must include the full RTT");
     }
 
     #[test]

@@ -1,12 +1,14 @@
-//! Memory system: L1D + L2 caches with MSHRs, local DRAM, the far-memory
-//! serial link, prefetching, and the SPM carve-out — glued together with a
+//! Memory system: L1D + L2 caches with MSHRs, local DRAM, a pluggable
+//! far-memory backend (serial link by default — see [`backend`]),
+//! prefetching, and the SPM carve-out — glued together with a
 //! deterministic event queue and driven by the cycle-stepped core.
 //!
-//! Demand path: core -> L1D -> L2 -> {DRAM | far link}. AMU path: the ASMC
-//! issues far requests directly onto the link (data lands in the SPM, not
-//! the caches), which is why AMI requests consume no cache MSHRs — the
-//! paper's key resource argument.
+//! Demand path: core -> L1D -> L2 -> {DRAM | far backend}. AMU path: the
+//! ASMC issues far requests directly onto the backend (data lands in the
+//! SPM, not the caches), which is why AMI requests consume no cache MSHRs
+//! — the paper's key resource argument.
 
+pub mod backend;
 pub mod cache;
 pub mod dram;
 pub mod link;
@@ -14,9 +16,9 @@ pub mod prefetch;
 
 use crate::config::SimConfig;
 use crate::isa::mem::{region_of, MemRegion};
+use backend::FarBackend;
 use cache::{line_of, Cache, LookupResult, Target};
 use dram::Dram;
-use link::FarLink;
 use prefetch::BestOffset;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -59,7 +61,8 @@ pub struct MemSys {
     pub l1d: Cache,
     pub l2: Cache,
     pub dram: Dram,
-    pub link: FarLink,
+    /// The far-memory data plane selected by `cfg.far.backend`.
+    pub link: Box<dyn FarBackend>,
     bop: Option<BestOffset>,
     pf_quota: usize,
     events: BinaryHeap<Reverse<(u64, u64, Ev)>>,
@@ -89,7 +92,7 @@ impl MemSys {
             l1d: Cache::new(&cfg.l1d, "L1D"),
             l2: Cache::new(&cfg.l2, "L2"),
             dram: Dram::new(&cfg.dram, cfg.core.freq_ghz),
-            link: FarLink::new(&cfg.far, cfg.core.freq_ghz, cfg.seed),
+            link: backend::build(&cfg.far, cfg.core.freq_ghz, cfg.seed),
             bop,
             pf_quota,
             events: BinaryHeap::new(),
@@ -332,7 +335,7 @@ impl MemSys {
 
     /// Far requests currently in flight (demand + AMU) — the Fig 9 metric.
     pub fn far_inflight(&self) -> u64 {
-        self.link.inflight
+        self.link.inflight()
     }
 
     pub fn pending_events(&self) -> usize {
@@ -402,6 +405,22 @@ mod tests {
         let t = drain_until(&mut m, 1, 1_000_000);
         assert!(t >= 3000, "far miss must include 3000-cycle link RTT, got {t}");
         assert!(t < 4500, "far miss too slow: {t}");
+    }
+
+    #[test]
+    fn far_path_respects_selected_backend() {
+        use crate::config::FarBackendKind;
+        for &k in FarBackendKind::ALL {
+            let mut cfg =
+                SimConfig::baseline().with_far_latency_ns(1000.0).with_far_backend(k);
+            cfg.far.jitter_frac = 0.0;
+            let mut m = memsys(&cfg);
+            assert_eq!(m.link.kind(), k);
+            m.submit(AccessKind::Load, FAR_BASE, 1, 0, 4);
+            let t = drain_until(&mut m, 1, 2_000_000);
+            assert!(t > 100, "{k:?}: far miss implausibly fast: {t}");
+            assert_eq!(m.far_inflight(), 0, "{k:?}: inflight accounting leaked");
+        }
     }
 
     #[test]

@@ -91,12 +91,30 @@ fn norm_base(rows: &[RunResult], bench: &str) -> f64 {
         .unwrap_or(1.0)
 }
 
+/// Title suffix naming the far-memory backend when the rows were produced
+/// under a non-default one (the figures can be regenerated per-backend via
+/// `amu-sim report <fig> --backend <tag>`). The generators key rows by
+/// `(bench, config, latency)` and expect a single-backend row set; a mixed
+/// set is flagged in the title rather than silently rendering whichever
+/// backend sorts first.
+fn backend_note(rows: &[RunResult]) -> String {
+    let mut backends: Vec<&str> = rows.iter().map(|r| r.backend.as_str()).collect();
+    backends.sort_unstable();
+    backends.dedup();
+    match backends.as_slice() {
+        [] | ["serial-link"] => String::new(),
+        [one] => format!(" [backend={one}]"),
+        many => format!(" [WARNING: mixed backends {}; rows may be misattributed]", many.join("+")),
+    }
+}
+
 // ---------------------------------------------------------------- figures
 
 /// Fig 2: baseline slowdown vs far-memory latency (motivation).
 pub fn fig2(rows: &[RunResult]) -> String {
     let mut s = String::new();
-    writeln!(s, "# Fig 2 — baseline slowdown vs far-memory latency").unwrap();
+    writeln!(s, "# Fig 2 — baseline slowdown vs far-memory latency{}", backend_note(rows))
+        .unwrap();
     write!(s, "{:>8}", "lat(us)").unwrap();
     for b in workloads::ALL {
         write!(s, "{b:>9}").unwrap();
@@ -121,7 +139,8 @@ pub fn fig8(rows: &[RunResult]) -> String {
     let mut s = String::new();
     writeln!(
         s,
-        "# Fig 8 — normalized execution time (lower is better; norm = baseline @0.1us)"
+        "# Fig 8 — normalized execution time (lower is better; norm = baseline @0.1us){}",
+        backend_note(rows)
     )
     .unwrap();
     for b in workloads::ALL {
@@ -149,7 +168,7 @@ pub fn fig8(rows: &[RunResult]) -> String {
 /// Fig 9 (MLP) / Fig 10 (IPC) share a formatter.
 fn metric_table(rows: &[RunResult], title: &str, f: impl Fn(&RunResult) -> f64) -> String {
     let mut s = String::new();
-    writeln!(s, "# {title}").unwrap();
+    writeln!(s, "# {title}{}", backend_note(rows)).unwrap();
     for b in workloads::ALL {
         writeln!(s, "\n## {b}").unwrap();
         write!(s, "{:>10}", "lat(us)").unwrap();
@@ -182,7 +201,12 @@ pub fn fig10(rows: &[RunResult]) -> String {
 /// i.e. they are run energy with a static component proportional to time.)
 pub fn fig11(rows: &[RunResult]) -> String {
     let mut s = String::new();
-    writeln!(s, "# Fig 11 — normalized energy (static+dynamic; norm = baseline @0.1us)").unwrap();
+    writeln!(
+        s,
+        "# Fig 11 — normalized energy (static+dynamic; norm = baseline @0.1us){}",
+        backend_note(rows)
+    )
+    .unwrap();
     writeln!(s, "{:>8} {:>10} {:>12} {:>10} {:>10} {:>10}", "bench", "config", "lat(us)", "static", "dynamic", "total").unwrap();
     for b in workloads::ALL {
         let base = find(rows, b, "baseline", 100.0)
@@ -399,7 +423,7 @@ pub fn table6() -> String {
 /// Headline numbers (abstract / §6.3).
 pub fn headline(rows: &[RunResult]) -> String {
     let mut s = String::new();
-    writeln!(s, "# Headline reproduction").unwrap();
+    writeln!(s, "# Headline reproduction{}", backend_note(rows)).unwrap();
     // Mean speedup of AMU over baseline at 1us across memory-bound suite.
     let speedups: Vec<f64> = workloads::ALL
         .iter()

@@ -1,36 +1,39 @@
 //! On-disk sweep cache: CSV with a grid-fingerprint header.
 //!
-//! Format (version 2 — version 1 had no fingerprint and trusted row count
-//! alone, which silently reused stale files):
+//! Format (version 3 — version 2 predates the far-memory backend axis and
+//! the corrected unbiased/exact-RTT link timing, so its rows are stale by
+//! definition; version 1 had no fingerprint and trusted row count alone,
+//! which silently reused stale files):
 //!
 //! ```text
-//! # amu-sim sweep cache v2 grid=<16-hex-digit fingerprint>
-//! bench,config,variant,latency_ns,...
+//! # amu-sim sweep cache v3 grid=<16-hex-digit fingerprint>
+//! bench,config,backend,variant,latency_ns,...
 //! <one row per completed run>
 //! ```
 //!
-//! Rows are keyed by `(bench, config, variant, latency)`, so a partial
-//! file (e.g. from an interrupted sweep) resumes instead of re-simulating
-//! everything. Floats are serialized with Rust's shortest-round-trip
-//! formatting, so `parse_csv(to_csv_row(r))` reproduces every field
-//! bit-exactly. Any malformed line rejects the whole file — a corrupt
-//! cache is never partially loaded.
+//! Rows are keyed by `(bench, config, backend, variant, latency)`, so a
+//! partial file (e.g. from an interrupted sweep) resumes instead of
+//! re-simulating everything. Floats are serialized with Rust's
+//! shortest-round-trip formatting, so `parse_csv(to_csv_row(r))`
+//! reproduces every field bit-exactly. Any malformed line rejects the
+//! whole file — a corrupt cache is never partially loaded.
 
 use crate::session::RunResult;
 
-pub const CSV_HEADER: &str = "bench,config,variant,latency_ns,measured_cycles,total_cycles,\
-insts,ipc,mlp,peak_inflight,dynamic_uj,static_uj,disambig_frac";
+pub const CSV_HEADER: &str = "bench,config,backend,variant,latency_ns,measured_cycles,\
+total_cycles,insts,ipc,mlp,peak_inflight,dynamic_uj,static_uj,disambig_frac";
 
-const MAGIC: &str = "# amu-sim sweep cache v2 grid=";
+const MAGIC: &str = "# amu-sim sweep cache v3 grid=";
 
 /// Serialize one result row. Floats use `{}` (shortest representation that
 /// round-trips exactly), keeping cached and freshly simulated rows
 /// byte-identical.
 pub fn to_csv_row(r: &RunResult) -> String {
     format!(
-        "{},{},{},{},{},{},{},{},{},{},{},{},{}",
+        "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
         r.bench,
         r.config,
+        r.backend,
         r.variant,
         r.latency_ns,
         r.measured_cycles,
@@ -47,8 +50,8 @@ pub fn to_csv_row(r: &RunResult) -> String {
 
 fn parse_row(line: &str) -> Result<RunResult, String> {
     let f: Vec<&str> = line.split(',').collect();
-    if f.len() != 13 {
-        return Err(format!("expected 13 fields, got {} in '{line}'", f.len()));
+    if f.len() != 14 {
+        return Err(format!("expected 14 fields, got {} in '{line}'", f.len()));
     }
     let num = |i: usize| -> Result<f64, String> {
         f[i].parse().map_err(|_| format!("bad number '{}' in '{line}'", f[i]))
@@ -59,17 +62,18 @@ fn parse_row(line: &str) -> Result<RunResult, String> {
     Ok(RunResult {
         bench: f[0].into(),
         config: f[1].into(),
-        variant: f[2].into(),
-        latency_ns: num(3)?,
-        measured_cycles: int(4)?,
-        total_cycles: int(5)?,
-        insts: int(6)?,
-        ipc: num(7)?,
-        mlp: num(8)?,
-        peak_inflight: int(9)?,
-        dynamic_uj: num(10)?,
-        static_uj: num(11)?,
-        disambig_frac: num(12)?,
+        backend: f[2].into(),
+        variant: f[3].into(),
+        latency_ns: num(4)?,
+        measured_cycles: int(5)?,
+        total_cycles: int(6)?,
+        insts: int(7)?,
+        ipc: num(8)?,
+        mlp: num(9)?,
+        peak_inflight: int(10)?,
+        dynamic_uj: num(11)?,
+        static_uj: num(12)?,
+        disambig_frac: num(13)?,
     })
 }
 
@@ -115,8 +119,14 @@ pub fn parse_csv(text: &str) -> Result<(u64, Vec<RunResult>), String> {
 }
 
 /// The per-run key a row is cached under.
-pub fn key_of(r: &RunResult) -> (String, String, String, u64) {
-    (r.bench.clone(), r.config.clone(), r.variant.clone(), r.latency_ns.to_bits())
+pub fn key_of(r: &RunResult) -> (String, String, String, String, u64) {
+    (
+        r.bench.clone(),
+        r.config.clone(),
+        r.backend.clone(),
+        r.variant.clone(),
+        r.latency_ns.to_bits(),
+    )
 }
 
 #[cfg(test)]
@@ -127,6 +137,7 @@ mod tests {
         RunResult {
             bench: "gups".into(),
             config: "amu".into(),
+            backend: "serial-link".into(),
             variant: "amu".into(),
             latency_ns: 1000.0,
             measured_cycles: 123_456,
@@ -165,6 +176,9 @@ mod tests {
         // v1 files (no fingerprint header) are stale by definition.
         let v1 = format!("{CSV_HEADER}\n{}\n", to_csv_row(&sample()));
         assert!(parse_csv(&v1).is_err());
+        // v2 files (no backend column, biased link timing) are stale too.
+        let v2 = text.replace("sweep cache v3", "sweep cache v2");
+        assert!(parse_csv(&v2).is_err());
     }
 
     #[test]

@@ -85,7 +85,19 @@ impl Session {
 
     /// The paper sweep with its default cache location.
     pub fn sweep_paper(&self, scale: Scale) -> Result<Vec<RunResult>, SessionError> {
-        let grid = SweepGrid::paper(scale);
+        self.sweep_paper_backend(scale, crate::config::FarBackendKind::SerialLink.tag())
+    }
+
+    /// The paper grid under a specific far-memory backend (regenerating
+    /// every paper figure per-backend). Non-default backends get their own
+    /// fingerprint-suffixed cache file automatically; `serial-link` keeps
+    /// the historical `sweep_<scale>.csv` location.
+    pub fn sweep_paper_backend(
+        &self,
+        scale: Scale,
+        backend: &str,
+    ) -> Result<Vec<RunResult>, SessionError> {
+        let grid = SweepGrid::paper(scale).backend(backend);
         let mut s = self.clone();
         if s.cache.is_none() {
             s.cache = Some(Self::default_cache_path(&grid));
@@ -186,9 +198,10 @@ impl Session {
                     let req = &requests[pending[k]];
                     if !quiet {
                         eprintln!(
-                            "[sweep] {} {} {} @{}ns ...",
+                            "[sweep] {} {} {} {} @{}ns ...",
                             req.bench_name(),
                             req.config_name(),
+                            req.backend_tag(),
                             req.variant().tag(),
                             req.latency_ns()
                         );

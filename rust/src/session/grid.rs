@@ -1,12 +1,14 @@
-//! Sweep grids: the cross product benches × configs × latencies × variants.
+//! Sweep grids: the cross product benches × configs × latencies × variants
+//! × far-memory backends.
 //!
 //! A [`SweepGrid`] describes *any* scenario grid — the paper's fixed
-//! 11 × 4 × 6 matrix is just [`SweepGrid::paper`]. Grids validate into a
-//! deterministic, canonically ordered list of [`RunRequest`]s and carry a
-//! stable fingerprint that keys the on-disk sweep cache, so a cache written
-//! for one grid can never be silently reused for another.
+//! 11 × 4 × 6 matrix is just [`SweepGrid::paper`] (which keeps the default
+//! `serial-link` backend). Grids validate into a deterministic, canonically
+//! ordered list of [`RunRequest`]s and carry a stable fingerprint that keys
+//! the on-disk sweep cache, so a cache written for one grid can never be
+//! silently reused for another.
 
-use crate::config::SimConfig;
+use crate::config::{FarBackendKind, SimConfig};
 use crate::session::request::{RunRequest, SessionError};
 use crate::workloads::{self, Scale, Variant};
 
@@ -46,14 +48,16 @@ impl VariantSel {
     }
 }
 
-/// A sweep: every combination of the four axes, in canonical row order
-/// (bench-major, then config, then latency, then variant).
+/// A sweep: every combination of the five axes, in canonical row order
+/// (bench-major, then config, then latency, then variant, then backend).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepGrid {
     pub benches: Vec<String>,
     pub configs: Vec<String>,
     pub latencies_ns: Vec<f64>,
     pub variants: Vec<VariantSel>,
+    /// Far-memory backend tags (default: `serial-link` only).
+    pub backends: Vec<String>,
     pub scale: Scale,
 }
 
@@ -65,6 +69,7 @@ impl SweepGrid {
             configs: Vec::new(),
             latencies_ns: Vec::new(),
             variants: vec![VariantSel::Auto],
+            backends: vec![FarBackendKind::SerialLink.tag().to_string()],
             scale,
         }
     }
@@ -112,8 +117,38 @@ impl SweepGrid {
         self.variants(vec![VariantSel::Fixed(v)])
     }
 
+    /// Replace the far-memory backend axis (default: `serial-link` only).
+    /// Known alias spellings (`serial`, `pool`, `dist`, ...) are
+    /// canonicalized here so the fingerprint and the cache location never
+    /// fork on spelling; unknown tags are kept verbatim for `requests()`
+    /// to reject with a named error.
+    pub fn backends<I, S>(mut self, backends: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.backends = backends
+            .into_iter()
+            .map(Into::into)
+            .map(|b| match FarBackendKind::parse(&b) {
+                Some(k) => k.tag().to_string(),
+                None => b,
+            })
+            .collect();
+        self
+    }
+
+    /// Fix every cell to one backend.
+    pub fn backend(self, tag: impl Into<String>) -> Self {
+        self.backends(vec![tag.into()])
+    }
+
     pub fn len(&self) -> usize {
-        self.benches.len() * self.configs.len() * self.latencies_ns.len() * self.variants.len()
+        self.benches.len()
+            * self.configs.len()
+            * self.latencies_ns.len()
+            * self.variants.len()
+            * self.backends.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -136,6 +171,15 @@ impl SweepGrid {
         if self.variants.is_empty() {
             return Err(SessionError::EmptyGrid("variants"));
         }
+        if self.backends.is_empty() {
+            return Err(SessionError::EmptyGrid("backends"));
+        }
+        // Fail fast on unknown backend tags, before any simulation starts.
+        for b in &self.backends {
+            if FarBackendKind::parse(b).is_none() {
+                return Err(SessionError::UnknownBackend(b.clone()));
+            }
+        }
         let mut out = Vec::with_capacity(self.len());
         for bench in &self.benches {
             for config in &self.configs {
@@ -143,14 +187,17 @@ impl SweepGrid {
                     .ok_or_else(|| SessionError::UnknownConfig(config.clone()))?;
                 for &lat in &self.latencies_ns {
                     for sel in &self.variants {
-                        out.push(
-                            RunRequest::bench(bench.clone())
-                                .config(cfg.clone())
-                                .latency_ns(lat)
-                                .variant(sel.resolve(&cfg))
-                                .scale(self.scale)
-                                .build()?,
-                        );
+                        for backend in &self.backends {
+                            out.push(
+                                RunRequest::bench(bench.clone())
+                                    .config(cfg.clone())
+                                    .latency_ns(lat)
+                                    .variant(sel.resolve(&cfg))
+                                    .backend(backend.clone())
+                                    .scale(self.scale)
+                                    .build()?,
+                            );
+                        }
                     }
                 }
             }
@@ -158,9 +205,9 @@ impl SweepGrid {
         Ok(out)
     }
 
-    /// A stable FNV-1a fingerprint over every axis (including scale and the
-    /// exact latency bit patterns). Stored in the cache header; any grid
-    /// change invalidates cached rows.
+    /// A stable FNV-1a fingerprint over every axis (including scale, the
+    /// exact latency bit patterns, and the backend axis). Stored in the
+    /// cache header; any grid change invalidates cached rows.
     pub fn fingerprint(&self) -> u64 {
         let mut h = Fnv::new();
         h.write(self.scale.tag().as_bytes());
@@ -180,6 +227,11 @@ impl SweepGrid {
         h.write(&[0xFE]);
         for v in &self.variants {
             h.write(v.tag().as_bytes());
+            h.write(&[0xFF]);
+        }
+        h.write(&[0xFE]);
+        for b in &self.backends {
+            h.write(b.as_bytes());
             h.write(&[0xFF]);
         }
         h.finish()
@@ -263,6 +315,63 @@ mod tests {
         assert_ne!(fp, fewer.fingerprint(), "latencies");
         let fixed = SweepGrid::paper(Scale::Test).variant(Variant::Sync);
         assert_ne!(fp, fixed.fingerprint(), "variants");
+        let pooled = SweepGrid::paper(Scale::Test).backend("pooled");
+        assert_ne!(fp, pooled.fingerprint(), "backends");
+        // Every backend gets a distinct fingerprint.
+        let fps: Vec<u64> = ["serial-link", "pooled", "distribution", "hybrid"]
+            .iter()
+            .map(|b| SweepGrid::paper(Scale::Test).backend(*b).fingerprint())
+            .collect();
+        for i in 0..fps.len() {
+            for j in i + 1..fps.len() {
+                assert_ne!(fps[i], fps[j], "backends {i} and {j} must not collide");
+            }
+        }
+    }
+
+    #[test]
+    fn backend_axis_multiplies_the_grid() {
+        let g = SweepGrid::new(Scale::Test)
+            .benches(["gups"])
+            .configs(["baseline"])
+            .latencies_ns([100.0, 500.0])
+            .backends(["serial-link", "pooled", "distribution", "hybrid"]);
+        assert_eq!(g.len(), 8);
+        let reqs = g.requests().unwrap();
+        assert_eq!(reqs.len(), 8);
+        // Backend is the innermost axis.
+        assert_eq!(reqs[0].backend_tag(), "serial-link");
+        assert_eq!(reqs[1].backend_tag(), "pooled");
+        assert_eq!(reqs[4].latency_ns(), 500.0);
+    }
+
+    #[test]
+    fn backend_aliases_canonicalize_in_the_builder() {
+        // `serial` and `serial-link` must produce the same fingerprint and
+        // the same (default) grid, so the sweep cache never forks on
+        // spelling.
+        let canonical = SweepGrid::paper(Scale::Test);
+        let alias = SweepGrid::paper(Scale::Test).backends(["serial"]);
+        assert_eq!(alias, canonical);
+        assert_eq!(alias.fingerprint(), canonical.fingerprint());
+        let pool = SweepGrid::paper(Scale::Test).backend("pool");
+        assert_eq!(pool.backends, vec!["pooled".to_string()]);
+    }
+
+    #[test]
+    fn unknown_or_empty_backends_are_rejected() {
+        let g = SweepGrid::new(Scale::Test)
+            .benches(["gups"])
+            .configs(["baseline"])
+            .latencies_ns([100.0])
+            .backends(["warp9"]);
+        assert!(matches!(g.requests(), Err(SessionError::UnknownBackend(_))));
+        let g = SweepGrid::new(Scale::Test)
+            .benches(["gups"])
+            .configs(["baseline"])
+            .latencies_ns([100.0])
+            .backends(Vec::<String>::new());
+        assert!(matches!(g.requests(), Err(SessionError::EmptyGrid("backends"))));
     }
 
     #[test]

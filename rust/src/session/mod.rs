@@ -10,8 +10,8 @@
 //!   combinations validated at construction, every failure a
 //!   [`SessionError`] naming the valid choices.
 //! * [`grid`] — [`SweepGrid`]: any benches × configs × latencies × variants
-//!   cross product, not just the paper's fixed matrix, with a stable
-//!   fingerprint.
+//!   × far-memory backends cross product, not just the paper's fixed
+//!   matrix, with a stable fingerprint.
 //! * [`executor`] — [`Session`]: fans runs out across scoped worker threads
 //!   with deterministic row ordering and a per-run-keyed, resumable CSV
 //!   cache.
@@ -76,6 +76,9 @@ use std::path::PathBuf;
 pub struct RunResult {
     pub bench: String,
     pub config: String,
+    /// Far-memory backend tag (`serial-link`, `pooled`, `distribution`,
+    /// `hybrid`).
+    pub backend: String,
     pub variant: String,
     pub latency_ns: f64,
     pub measured_cycles: u64,

@@ -5,7 +5,7 @@
 //! construction and every failure is a [`SessionError`] naming the valid
 //! choices — never a panic.
 
-use crate::config::SimConfig;
+use crate::config::{FarBackendKind, SimConfig};
 use crate::power::{estimate, EnergyModel};
 use crate::session::registry::{self, Workload};
 use crate::session::RunResult;
@@ -16,6 +16,7 @@ use crate::workloads::{self, Scale, Variant};
 pub enum SessionError {
     UnknownBench(String),
     UnknownConfig(String),
+    UnknownBackend(String),
     UnknownVariant(String),
     UnsupportedVariant { bench: String, variant: String },
     InvalidLatency(f64),
@@ -36,6 +37,11 @@ impl std::fmt::Display for SessionError {
                 f,
                 "unknown config '{name}' (valid: {})",
                 SimConfig::preset_names().join(", ")
+            ),
+            SessionError::UnknownBackend(name) => write!(
+                f,
+                "unknown far-memory backend '{name}' (valid: {})",
+                FarBackendKind::names().join(", ")
             ),
             SessionError::UnknownVariant(msg) => write!(f, "{msg}"),
             SessionError::UnsupportedVariant { bench, variant } => {
@@ -71,6 +77,7 @@ impl std::fmt::Debug for RunRequest {
         f.debug_struct("RunRequest")
             .field("bench", &self.workload.name())
             .field("config", &self.config.name)
+            .field("backend", &self.backend_tag())
             .field("variant", &self.variant)
             .field("latency_ns", &self.config.far.added_latency_ns)
             .field("scale", &self.scale)
@@ -88,6 +95,7 @@ impl RunRequest {
             config_name: None,
             variant: None,
             latency_ns: None,
+            backend: None,
             no_jitter: false,
             scale: Scale::Test,
         }
@@ -113,15 +121,21 @@ impl RunRequest {
         self.config.far.added_latency_ns
     }
 
+    /// Far-memory backend tag this run simulates under.
+    pub fn backend_tag(&self) -> &'static str {
+        self.config.far.backend.tag()
+    }
+
     pub fn scale(&self) -> Scale {
         self.scale
     }
 
     /// The cache key identifying this run's row in a sweep CSV.
-    pub fn key(&self) -> (String, String, String, u64) {
+    pub fn key(&self) -> (String, String, String, String, u64) {
         (
             self.workload.name().to_string(),
             self.config.name.clone(),
+            self.backend_tag().to_string(),
             self.variant.tag(),
             self.latency_ns().to_bits(),
         )
@@ -136,6 +150,7 @@ impl RunRequest {
         Ok(RunResult {
             bench: self.workload.name().into(),
             config: self.config.name.clone(),
+            backend: self.backend_tag().into(),
             variant: self.variant.tag(),
             latency_ns: self.latency_ns(),
             measured_cycles: sim.stats.measured_cycles.max(1),
@@ -159,6 +174,7 @@ pub struct RunRequestBuilder {
     config_name: Option<String>,
     variant: Option<Variant>,
     latency_ns: Option<f64>,
+    backend: Option<String>,
     no_jitter: bool,
     scale: Scale,
 }
@@ -191,8 +207,20 @@ impl RunRequestBuilder {
         self
     }
 
-    /// Disable far-memory latency jitter for fully deterministic timing
-    /// (examples and A/B comparisons).
+    /// Select the far-memory backend by tag (`serial-link`, `pooled`,
+    /// `distribution`, `hybrid`). Without this, the configuration's own
+    /// `far.backend` is kept (serial link by default). Validated at
+    /// `build()`.
+    pub fn backend(mut self, tag: impl Into<String>) -> Self {
+        self.backend = Some(tag.into());
+        self
+    }
+
+    /// Disable far-memory latency *variability* for A/B comparisons:
+    /// zeroes the serial-link/pooled jitter fraction and the
+    /// `distribution` backend's sigma/tail fraction (its samples collapse
+    /// to the configured mean). The `hybrid` backend's near/far path
+    /// choice is seeded-random rather than jitter and is not affected.
     pub fn no_jitter(mut self) -> Self {
         self.no_jitter = true;
         self
@@ -217,8 +245,14 @@ impl RunRequestBuilder {
         if let Some(ns) = self.latency_ns {
             cfg = cfg.with_far_latency_ns(ns);
         }
+        if let Some(tag) = &self.backend {
+            cfg.far.backend = FarBackendKind::parse(tag)
+                .ok_or_else(|| SessionError::UnknownBackend(tag.clone()))?;
+        }
         if self.no_jitter {
             cfg.far.jitter_frac = 0.0;
+            cfg.far.dist_sigma = 0.0;
+            cfg.far.dist_tail_frac = 0.0;
         }
         let latency = cfg.far.added_latency_ns;
         if !latency.is_finite() || latency < 0.0 {
@@ -306,9 +340,46 @@ mod tests {
     }
 
     #[test]
+    fn builder_validates_backend() {
+        let e = RunRequest::bench("gups").backend("warp9").build().unwrap_err();
+        assert!(matches!(e, SessionError::UnknownBackend(_)), "{e}");
+        assert!(e.to_string().contains("serial-link"), "{e}");
+        for tag in ["serial-link", "pooled", "distribution", "hybrid"] {
+            let r = RunRequest::bench("gups").backend(tag).build().unwrap();
+            assert_eq!(r.backend_tag(), tag);
+        }
+        // Default: the config's own backend (serial link).
+        let r = RunRequest::bench("gups").build().unwrap();
+        assert_eq!(r.backend_tag(), "serial-link");
+    }
+
+    #[test]
+    fn backend_is_part_of_the_cache_key() {
+        let a = RunRequest::bench("gups").backend("pooled").build().unwrap();
+        let b = RunRequest::bench("gups").backend("hybrid").build().unwrap();
+        assert_ne!(a.key(), b.key());
+        assert_eq!(a.key().2, "pooled");
+    }
+
+    #[test]
+    fn run_result_carries_backend_tag() {
+        let r = RunRequest::bench("gups")
+            .backend("hybrid")
+            .latency_ns(500.0)
+            .scale(Scale::Test)
+            .run()
+            .unwrap();
+        assert_eq!(r.backend, "hybrid");
+        assert!(r.measured_cycles > 0);
+    }
+
+    #[test]
     fn no_jitter_zeroes_the_jitter_fraction() {
         let r = RunRequest::bench("gups").no_jitter().build().unwrap();
         assert_eq!(r.config().far.jitter_frac, 0.0);
+        // It silences the distribution backend's variability too.
+        assert_eq!(r.config().far.dist_sigma, 0.0);
+        assert_eq!(r.config().far.dist_tail_frac, 0.0);
     }
 
     #[test]

@@ -183,6 +183,10 @@ pub struct Stats {
     pub amu_subrequests: u64,
     pub amu_speculative_rollbacks: u64,
     pub amart_full_events: u64,
+    /// Completions for AMART entries that were reinitialized mid-flight
+    /// (e.g. `set_queue_length` during outstanding sub-requests); dropped
+    /// rather than corrupting a recycled entry.
+    pub stale_completions: u64,
 
     // Latency distributions.
     pub far_read_latency: Hist,

@@ -48,6 +48,28 @@ fn sweep_is_deterministic_across_job_counts() {
     assert_eq!(serial.len(), grid.len());
 }
 
+/// Backend determinism: the same `(grid, seed, backend)` must produce
+/// byte-identical sweep CSV across `--jobs 1` vs `--jobs N`, for each of
+/// the four far-memory backends (their internal PRNG streams are
+/// per-run-seeded, never shared across workers).
+#[test]
+fn sweep_is_deterministic_across_job_counts_for_every_backend() {
+    for backend in ["serial-link", "pooled", "distribution", "hybrid"] {
+        let grid = SweepGrid::new(Scale::Test)
+            .benches(["gups"])
+            .configs(["baseline", "amu"])
+            .latencies_ns([800.0])
+            .backends([backend]);
+        let serial = Session::new().jobs(1).quiet(true).sweep(&grid).unwrap();
+        let parallel = Session::new().jobs(4).quiet(true).sweep(&grid).unwrap();
+        let fp = grid.fingerprint();
+        let csv1 = cache::to_csv_string(fp, &serial);
+        let csvn = cache::to_csv_string(fp, &parallel);
+        assert_eq!(csv1, csvn, "{backend}: jobs=1 vs jobs=4 CSV must be byte-identical");
+        assert!(serial.iter().all(|r| r.backend == backend), "{backend}: rows must be tagged");
+    }
+}
+
 #[test]
 fn sweep_rows_follow_canonical_grid_order() {
     let grid = small_grid();
@@ -149,6 +171,8 @@ fn prop_csv_round_trips_every_field_bit_exactly() {
                 (bits >> 11) as f64 / (1u64 << 53) as f64
             }
             let variant = format!("gp{}", rng.below(512));
+            let backends = ["serial-link", "pooled", "distribution", "hybrid"];
+            let backend = backends[rng.below(backends.len() as u64) as usize].to_string();
             let latency_ns = frac(rng.next_u64()) * 10_000.0;
             let measured_cycles = rng.next_u64() >> rng.below(40);
             let total_cycles = rng.next_u64() >> rng.below(40);
@@ -162,6 +186,7 @@ fn prop_csv_round_trips_every_field_bit_exactly() {
             RunResult {
                 bench: "gups".into(),
                 config: "cxl-ideal".into(),
+                backend,
                 variant,
                 latency_ns,
                 measured_cycles,
