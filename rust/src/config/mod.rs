@@ -157,6 +157,54 @@ impl FarBackendKind {
     }
 }
 
+/// Channel-selection policy for [`FarBackendKind::Pooled`].
+///
+/// The pool's throughput under skewed address streams is dominated by how
+/// requests are spread across channels: address hashing (the historical
+/// default) keeps a line pinned to one channel but lets hot regions
+/// saturate it while the rest idle. The alternatives trade affinity for
+/// balance. Selected per run via `far.pool_policy` and sweepable as a
+/// fingerprinted grid refinement (the default keeps historical sweep
+/// fingerprints unchanged).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PoolPolicy {
+    /// Multiplicative address hash (the default; deterministic affinity).
+    #[default]
+    Hash,
+    /// Pick the channel with the smallest occupancy-weighted queue (sum of
+    /// remaining busy cycles) at issue time; ties go to the lowest index.
+    LeastLoaded,
+    /// Strict rotation over channels regardless of address or load.
+    RoundRobin,
+}
+
+impl PoolPolicy {
+    pub const ALL: &'static [PoolPolicy] =
+        &[PoolPolicy::Hash, PoolPolicy::LeastLoaded, PoolPolicy::RoundRobin];
+
+    /// Stable spelling used in config files, sweep fingerprints, and the CLI.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            PoolPolicy::Hash => "hash",
+            PoolPolicy::LeastLoaded => "least-loaded",
+            PoolPolicy::RoundRobin => "round-robin",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PoolPolicy> {
+        match s {
+            "hash" => Some(PoolPolicy::Hash),
+            "least-loaded" | "least_loaded" | "ll" => Some(PoolPolicy::LeastLoaded),
+            "round-robin" | "round_robin" | "rr" => Some(PoolPolicy::RoundRobin),
+            _ => None,
+        }
+    }
+
+    pub fn names() -> &'static [&'static str] {
+        &["hash", "least-loaded", "round-robin"]
+    }
+}
+
 /// Latency distribution family for [`FarBackendKind::Distribution`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum LatencyDist {
@@ -214,6 +262,8 @@ pub struct FarMemConfig {
     /// `pooled`: per-channel outstanding-request depth before congestion
     /// back-pressure delays new arrivals.
     pub pool_queue_depth: usize,
+    /// `pooled`: channel-selection policy (`hash` default).
+    pub pool_policy: PoolPolicy,
     /// `distribution`: latency distribution family.
     pub dist: LatencyDist,
     /// `distribution`/lognormal: shape parameter sigma (0 = deterministic).
@@ -222,10 +272,17 @@ pub struct FarMemConfig {
     pub dist_tail_frac: f64,
     /// `distribution`/bimodal: slow-mode latency multiplier.
     pub dist_tail_mult: f64,
-    /// `hybrid`: fraction of accesses served by the near tier.
+    /// `hybrid`: fraction of accesses served by the near tier. Only used
+    /// when `near_capacity_lines == 0` (the legacy coin-flip model).
     pub near_frac: f64,
     /// `hybrid`: near-tier round-trip latency in ns.
     pub near_latency_ns: f64,
+    /// `hybrid`: near-tier capacity in 64 B cache lines. `0` (the default)
+    /// keeps the legacy static `near_frac` coin-flip; any positive value
+    /// enables the LRU near-tier model, where the fast-path hit rate
+    /// emerges from the access stream's actual reuse against this capacity
+    /// (tracked in the `near_hits` / `near_evictions` stats).
+    pub near_capacity_lines: usize,
 }
 
 impl Default for FarMemConfig {
@@ -239,12 +296,14 @@ impl Default for FarMemConfig {
             backend: FarBackendKind::SerialLink,
             pool_channels: 4,
             pool_queue_depth: 16,
+            pool_policy: PoolPolicy::Hash,
             dist: LatencyDist::Lognormal,
             dist_sigma: 0.5,
             dist_tail_frac: 0.05,
             dist_tail_mult: 5.0,
             near_frac: 0.5,
             near_latency_ns: 100.0,
+            near_capacity_lines: 0,
         }
     }
 }
@@ -522,6 +581,16 @@ impl SimConfig {
             }
             "far.pool_channels" => set_u!(self.far.pool_channels),
             "far.pool_queue_depth" => set_u!(self.far.pool_queue_depth),
+            "far.pool_policy" => {
+                let s = doc.get_str(key).ok_or("'far.pool_policy' must be a string")?;
+                self.far.pool_policy = PoolPolicy::parse(s).ok_or_else(|| {
+                    format!(
+                        "unknown far.pool_policy '{s}' (valid: {})",
+                        PoolPolicy::names().join(", ")
+                    )
+                })?;
+                true
+            }
             "far.dist" => {
                 let s = doc.get_str(key).ok_or("'far.dist' must be a string")?;
                 self.far.dist = LatencyDist::parse(s)
@@ -533,6 +602,7 @@ impl SimConfig {
             "far.dist_tail_mult" => set_f!(self.far.dist_tail_mult),
             "far.near_frac" => set_f!(self.far.near_frac),
             "far.near_latency_ns" => set_f!(self.far.near_latency_ns),
+            "far.near_capacity_lines" => set_u!(self.far.near_capacity_lines),
             "prefetch.l2_best_offset" => set_b!(self.prefetch.l2_best_offset),
             "prefetch.degree" => set_u!(self.prefetch.degree),
             "amu.enabled" => set_b!(self.amu.enabled),
@@ -732,6 +802,38 @@ mod tests {
         let bad = crate::util::toml_lite::parse("[far]\nbackend = \"warp9\"\n").unwrap();
         let e = c.apply_overrides(&bad).unwrap_err();
         assert!(e.contains("serial-link"), "{e}");
+    }
+
+    #[test]
+    fn pool_policy_tags_round_trip() {
+        for &p in PoolPolicy::ALL {
+            assert_eq!(PoolPolicy::parse(p.tag()), Some(p));
+        }
+        assert_eq!(PoolPolicy::parse("ll"), Some(PoolPolicy::LeastLoaded));
+        assert_eq!(PoolPolicy::parse("rr"), Some(PoolPolicy::RoundRobin));
+        assert!(PoolPolicy::parse("warp9").is_none());
+        assert_eq!(PoolPolicy::default(), PoolPolicy::Hash);
+        assert_eq!(PoolPolicy::names().len(), PoolPolicy::ALL.len());
+    }
+
+    #[test]
+    fn pool_policy_and_near_capacity_overrides_apply() {
+        let mut c = SimConfig::baseline();
+        let doc = crate::util::toml_lite::parse(
+            "[far]\npool_policy = \"least-loaded\"\nnear_capacity_lines = 4096\n",
+        )
+        .unwrap();
+        c.apply_overrides(&doc).unwrap();
+        assert_eq!(c.far.pool_policy, PoolPolicy::LeastLoaded);
+        assert_eq!(c.far.near_capacity_lines, 4096);
+        // Unknown policy spellings are rejected naming the valid choices.
+        let bad = crate::util::toml_lite::parse("[far]\npool_policy = \"warp9\"\n").unwrap();
+        let e = c.apply_overrides(&bad).unwrap_err();
+        assert!(e.contains("least-loaded") && e.contains("round-robin"), "{e}");
+        // Defaults keep the historical models (hash pool, coin-flip hybrid).
+        let d = FarMemConfig::default();
+        assert_eq!(d.pool_policy, PoolPolicy::Hash);
+        assert_eq!(d.near_capacity_lines, 0);
     }
 
     #[test]

@@ -12,16 +12,23 @@
 //! (the paper's CXL-like link, default), `pooled` (multi-channel
 //! disaggregated pool with congestion back-pressure), `distribution`
 //! (lognormal/bimodal latency with the configured mean, for tail-latency
-//! scenarios), and `hybrid` (fast-path/slow-path split). Examples:
+//! scenarios), and `hybrid` (fast-path/slow-path split). The pooled
+//! backend's channel selection is `--pool-policy`: `hash` (default),
+//! `least-loaded`, or `round-robin`. Examples:
 //!
 //! ```text
 //! amu-sim run --bench gups --config amu --backend hybrid --latency-ns 2000
 //! amu-sim sweep --backend serial-link,pooled,distribution,hybrid --jobs 8
+//! amu-sim sweep --backend pooled --pool-policy least-loaded --jobs 8
 //! amu-sim report fig8 --backend distribution --scale test
 //! ```
 //!
 //! Sweep CSVs carry the backend both as a column and in the grid
-//! fingerprint, so caches from different backends never mix.
+//! fingerprint, so caches from different backends never mix; the pool
+//! policy refines the fingerprint when non-default and the grid sweeps
+//! `pooled`, so policy scenarios get their own cache files while existing
+//! default caches stay valid (and a policy flag on a pool-less sweep is a
+//! no-op instead of a duplicate re-simulation).
 
 use amu_sim::config::SimConfig;
 use amu_sim::report;
@@ -34,6 +41,7 @@ const RUN_SPECS: &[Spec] = &[
     opt("config", "configuration preset (baseline|cxl-ideal|amu|amu-dma|x2|x4)"),
     opt("latency-ns", "additional far-memory latency in ns"),
     opt("backend", "far-memory backend (serial-link|pooled|distribution|hybrid)"),
+    opt("pool-policy", "pooled channel selection (hash|least-loaded|round-robin)"),
     opt("scale", "test|paper"),
     opt("variant", "auto|sync|amu|llvm|gp<N>|pf<N>[-<D>]"),
     opt("config-file", "TOML-lite overrides applied on top of the preset"),
@@ -49,6 +57,10 @@ const SWEEP_SPECS: &[Spec] = &[
         "backend",
         "comma-separated far-memory backends: serial-link|pooled|distribution|hybrid \
          (default: serial-link)",
+    ),
+    opt(
+        "pool-policy",
+        "pooled channel selection: hash|least-loaded|round-robin (default: hash)",
     ),
     opt("scale", "test|paper"),
     opt("jobs", "worker threads (default: all cores)"),
@@ -101,6 +113,9 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     let mut builder = RunRequest::bench(bench).config(cfg).scale(scale);
     if let Some(b) = args.get("backend") {
         builder = builder.backend(b);
+    }
+    if let Some(p) = args.get("pool-policy") {
+        builder = builder.pool_policy(p);
     }
     match parse_variant_sel(&args.get_str("variant", "auto"))? {
         VariantSel::Auto => {}
@@ -158,6 +173,11 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
         // fingerprints must not fork on `serial` vs `serial-link`).
         grid = grid.backends(split_list(s));
     }
+    if let Some(p) = args.get("pool-policy") {
+        // Also canonicalized in the builder; non-default policies refine
+        // the fingerprint so they cache in their own file.
+        grid = grid.pool_policy(p);
+    }
 
     let mut session = Session::new().quiet(args.has_flag("quiet"));
     if let Some(n) = parse_jobs(&args)? {
@@ -178,15 +198,24 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     let t0 = std::time::Instant::now();
     let rows = session.sweep(&grid).map_err(|e| e.to_string())?;
     let wall = t0.elapsed();
+    // Only advertise the policy when it could affect a row (same condition
+    // the fingerprint refinement uses) — a flag on a pool-less sweep is a
+    // no-op and must not claim a scenario that didn't run.
+    let policy_note = if grid.pool_policy == "hash" || !grid.sweeps_pooled() {
+        String::new()
+    } else {
+        format!(" [pool-policy={}]", grid.pool_policy)
+    };
     println!(
-        "sweep: {} rows ({} benches x {} configs x {} latencies x {} variants x {} backends) \
-         in {:.2?}",
+        "sweep: {} rows ({} benches x {} configs x {} latencies x {} variants x {} backends)\
+         {} in {:.2?}",
         rows.len(),
         grid.benches.len(),
         grid.configs.len(),
         grid.latencies_ns.len(),
         grid.variants.len(),
         grid.backends.len(),
+        policy_note,
         wall
     );
     match &cache_path {
@@ -200,6 +229,7 @@ fn cmd_report(argv: &[String]) -> Result<(), String> {
     let specs: &[Spec] = &[
         opt("scale", "test|paper"),
         opt("backend", "far-memory backend for the sweep (default: serial-link)"),
+        opt("pool-policy", "pooled channel selection (default: hash)"),
         opt("jobs", "worker threads for sweeps (default: all cores)"),
         flag("quiet", "less progress"),
     ];
@@ -216,10 +246,14 @@ fn cmd_report(argv: &[String]) -> Result<(), String> {
         "fig2" | "fig8" | "fig9" | "fig10" | "fig11" | "headline" | "all"
     );
     let rows = if needs_sweep {
-        match args.get("backend") {
-            Some(b) => session.sweep_paper_backend(scale, b).map_err(|e| e.to_string())?,
-            None => session.sweep_paper(scale).map_err(|e| e.to_string())?,
+        let mut grid = SweepGrid::paper(scale);
+        if let Some(b) = args.get("backend") {
+            grid = grid.backend(b);
         }
+        if let Some(p) = args.get("pool-policy") {
+            grid = grid.pool_policy(p);
+        }
+        session.sweep_default_cached(&grid).map_err(|e| e.to_string())?
     } else {
         Vec::new()
     };
@@ -282,6 +316,10 @@ fn main() {
             println!(
                 "backends:   {}",
                 amu_sim::config::FarBackendKind::names().join(" ")
+            );
+            println!(
+                "pool-policies: {}",
+                amu_sim::config::PoolPolicy::names().join(" ")
             );
             Ok(())
         }

@@ -3,13 +3,22 @@
 //! configurable *additional* latency, and a remote memory controller
 //! modeled with the same DDR4-lite bank model as local DRAM. Coherence
 //! internals are intentionally not modeled (paper §6.1).
+//!
+//! The per-direction timing arithmetic (serialization, exact RTT split,
+//! zero-mean jitter) lives in [`LinkFront`], shared by [`FarLink`] and the
+//! pooled/distribution backends in [`crate::mem::backend`] — one
+//! implementation, so the backends can never drift apart bit-by-bit.
 
 use super::dram::Dram;
 use crate::config::FarMemConfig;
 use crate::util::prng::Xoshiro256;
 
-pub struct FarLink {
-    /// Per-direction serialization state.
+/// Shared per-direction link front end: request/response serialization
+/// state, the exact request/response split of the configured added
+/// latency, and the zero-mean jitter amplitude. Every far-memory data
+/// plane that models a serial link composes this one struct, so the
+/// RTT-split and jitter arithmetic exists in exactly one place.
+pub struct LinkFront {
     req_free_at: u64,
     resp_free_at: u64,
     /// Cycles per byte on each direction.
@@ -22,6 +31,81 @@ pub struct FarLink {
     resp_way_cycles: u64,
     jitter_cycles: u64,
     header_bytes: usize,
+}
+
+impl LinkFront {
+    pub fn new(cfg: &FarMemConfig, freq_ghz: f64) -> Self {
+        let added_cycles = crate::util::ns_to_cycles(cfg.added_latency_ns, freq_ghz);
+        Self {
+            req_free_at: 0,
+            resp_free_at: 0,
+            cycles_per_byte: freq_ghz / cfg.bandwidth_gbps,
+            req_way_cycles: added_cycles / 2,
+            resp_way_cycles: added_cycles - added_cycles / 2,
+            jitter_cycles: (added_cycles as f64 * cfg.jitter_frac) as u64,
+            header_bytes: cfg.header_bytes,
+        }
+    }
+
+    /// Serialization delay of a `bytes`-byte packet on one direction.
+    #[inline]
+    pub fn ser(&self, bytes: usize) -> u64 {
+        ((bytes as f64) * self.cycles_per_byte).ceil() as u64
+    }
+
+    /// Serialize a request packet (header + `payload` bytes); returns when
+    /// it departs the requester.
+    pub fn depart_request(&mut self, cycle: u64, payload: usize) -> u64 {
+        let depart = cycle.max(self.req_free_at) + self.ser(self.header_bytes + payload);
+        self.req_free_at = depart;
+        depart
+    }
+
+    /// Serialize a response packet (header + `payload` bytes) once the
+    /// remote side finished at `remote_done`; returns when it departs the
+    /// remote end.
+    pub fn depart_response(&mut self, remote_done: u64, payload: usize) -> u64 {
+        let depart =
+            remote_done.max(self.resp_free_at) + self.ser(self.header_bytes + payload);
+        self.resp_free_at = depart;
+        depart
+    }
+
+    /// Zero-mean jitter in `[-jitter_cycles, +jitter_cycles]`, drawn from
+    /// the caller's PRNG stream. The old implementation sampled
+    /// `below(2*jitter)` and *added* it, silently raising the mean latency
+    /// by `jitter_frac * added_latency`; sampling symmetrically keeps the
+    /// empirical mean at the configured RTT.
+    #[inline]
+    pub fn jitter(&self, rng: &mut Xoshiro256) -> i64 {
+        if self.jitter_cycles == 0 {
+            0
+        } else {
+            rng.below(2 * self.jitter_cycles + 1) as i64 - self.jitter_cycles as i64
+        }
+    }
+
+    /// Request-direction propagation cycles.
+    #[inline]
+    pub fn req_way_cycles(&self) -> u64 {
+        self.req_way_cycles
+    }
+
+    /// Response-direction propagation cycles.
+    #[inline]
+    pub fn resp_way_cycles(&self) -> u64 {
+        self.resp_way_cycles
+    }
+
+    /// The configured added round-trip latency, exactly (both directions).
+    #[inline]
+    pub fn min_round_trip(&self) -> u64 {
+        self.req_way_cycles + self.resp_way_cycles
+    }
+}
+
+pub struct FarLink {
+    front: LinkFront,
     remote: Dram,
     rng: Xoshiro256,
     pub inflight: u64,
@@ -39,39 +123,14 @@ pub struct FarTiming {
 
 impl FarLink {
     pub fn new(cfg: &FarMemConfig, freq_ghz: f64, seed: u64) -> Self {
-        let added_cycles = crate::util::ns_to_cycles(cfg.added_latency_ns, freq_ghz);
         Self {
-            req_free_at: 0,
-            resp_free_at: 0,
-            cycles_per_byte: freq_ghz / cfg.bandwidth_gbps,
-            req_way_cycles: added_cycles / 2,
-            resp_way_cycles: added_cycles - added_cycles / 2,
-            jitter_cycles: (added_cycles as f64 * cfg.jitter_frac) as u64,
-            header_bytes: cfg.header_bytes,
+            front: LinkFront::new(cfg, freq_ghz),
             remote: Dram::new(&cfg.remote_dram, freq_ghz),
             rng: Xoshiro256::new(seed ^ 0xFA12_31AB),
             inflight: 0,
             reads: 0,
             writes: 0,
             bytes: 0,
-        }
-    }
-
-    #[inline]
-    fn ser(&self, bytes: usize) -> u64 {
-        ((bytes as f64) * self.cycles_per_byte).ceil() as u64
-    }
-
-    /// Zero-mean jitter in `[-jitter_cycles, +jitter_cycles]`. The old
-    /// implementation sampled `below(2*jitter)` and *added* it, silently
-    /// raising the mean latency by `jitter_frac * added_latency`; sampling
-    /// symmetrically keeps the empirical mean at the configured RTT.
-    #[inline]
-    fn jitter(&mut self) -> i64 {
-        if self.jitter_cycles == 0 {
-            0
-        } else {
-            self.rng.below(2 * self.jitter_cycles + 1) as i64 - self.jitter_cycles as i64
         }
     }
 
@@ -83,11 +142,10 @@ impl FarLink {
         self.bytes += bytes as u64;
         self.inflight += 1;
         // Request packet: header only.
-        let req_ser = self.ser(self.header_bytes);
-        let req_depart = cycle.max(self.req_free_at) + req_ser;
-        self.req_free_at = req_depart;
-        let jitter = self.jitter();
-        let arrive_remote = add_signed(req_depart + self.req_way_cycles, jitter).max(req_depart);
+        let req_depart = self.front.depart_request(cycle, 0);
+        let jitter = self.front.jitter(&mut self.rng);
+        let arrive_remote =
+            add_signed(req_depart + self.front.req_way_cycles(), jitter).max(req_depart);
         // Remote MC services (possibly multiple lines).
         let mut remote_done = arrive_remote;
         let lines = bytes.div_ceil(64).max(1);
@@ -99,11 +157,8 @@ impl FarLink {
             ));
         }
         // Response packet: header + payload, serialized on response dir.
-        let resp_ser = self.ser(self.header_bytes + bytes);
-        let resp_depart = remote_done.max(self.resp_free_at) + resp_ser;
-        self.resp_free_at = resp_depart;
-        let done = resp_depart + self.resp_way_cycles;
-        FarTiming { done }
+        let resp_depart = self.front.depart_response(remote_done, bytes);
+        FarTiming { done: resp_depart + self.front.resp_way_cycles() }
     }
 
     /// Issue a write of `bytes` payload; returns the cycle the write ack
@@ -113,11 +168,10 @@ impl FarLink {
         self.bytes += bytes as u64;
         self.inflight += 1;
         // Request packet carries the payload.
-        let req_ser = self.ser(self.header_bytes + bytes);
-        let req_depart = cycle.max(self.req_free_at) + req_ser;
-        self.req_free_at = req_depart;
-        let jitter = self.jitter();
-        let arrive_remote = add_signed(req_depart + self.req_way_cycles, jitter).max(req_depart);
+        let req_depart = self.front.depart_request(cycle, bytes);
+        let jitter = self.front.jitter(&mut self.rng);
+        let arrive_remote =
+            add_signed(req_depart + self.front.req_way_cycles(), jitter).max(req_depart);
         let mut remote_done = arrive_remote;
         let lines = bytes.div_ceil(64).max(1);
         for l in 0..lines {
@@ -128,11 +182,8 @@ impl FarLink {
             ));
         }
         // Ack: header-sized response.
-        let resp_ser = self.ser(self.header_bytes);
-        let resp_depart = remote_done.max(self.resp_free_at) + resp_ser;
-        self.resp_free_at = resp_depart;
-        let done = resp_depart + self.resp_way_cycles;
-        FarTiming { done }
+        let resp_depart = self.front.depart_response(remote_done, 0);
+        FarTiming { done: resp_depart + self.front.resp_way_cycles() }
     }
 
     /// Posted write (dirty-line writeback): consumes request-direction
@@ -140,10 +191,8 @@ impl FarLink {
     pub fn posted_write(&mut self, cycle: u64, addr: u64, bytes: usize) {
         self.writes += 1;
         self.bytes += bytes as u64;
-        let req_ser = self.ser(self.header_bytes + bytes);
-        let req_depart = cycle.max(self.req_free_at) + req_ser;
-        self.req_free_at = req_depart;
-        let arrive = req_depart + self.req_way_cycles;
+        let req_depart = self.front.depart_request(cycle, bytes);
+        let arrive = req_depart + self.front.req_way_cycles();
         self.remote.service(arrive, addr, true);
     }
 
@@ -155,7 +204,7 @@ impl FarLink {
 
     /// The configured added round-trip latency, exactly (both directions).
     pub fn min_round_trip(&self) -> u64 {
-        self.req_way_cycles + self.resp_way_cycles
+        self.front.min_round_trip()
     }
 }
 
@@ -266,6 +315,22 @@ mod tests {
         assert_eq!(l.min_round_trip(), 999);
         let even = link(1000.0);
         assert_eq!(even.min_round_trip(), 3000);
+    }
+
+    #[test]
+    fn link_front_split_is_exact_and_jitterless_when_disabled() {
+        // The shared front end (now also composed by FarLink) preserves the
+        // exact RTT split and produces zero jitter when disabled.
+        let mut cfg = FarMemConfig::default();
+        cfg.added_latency_ns = 777.0; // 2331 cycles, odd split
+        cfg.jitter_frac = 0.0;
+        let front = LinkFront::new(&cfg, 3.0);
+        assert_eq!(front.req_way_cycles() + front.resp_way_cycles(), 2331);
+        assert_eq!(front.min_round_trip(), 2331);
+        let mut rng = Xoshiro256::new(9);
+        for _ in 0..16 {
+            assert_eq!(front.jitter(&mut rng), 0);
+        }
     }
 
     #[test]

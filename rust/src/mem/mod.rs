@@ -338,6 +338,12 @@ impl MemSys {
         self.link.inflight()
     }
 
+    /// Backend scenario counters (near-tier hits/evictions, pool channel
+    /// congestion), harvested into `Stats` at the end of a run.
+    pub fn scenario_stats(&self) -> backend::ScenarioStats {
+        self.link.scenario_stats()
+    }
+
     pub fn pending_events(&self) -> usize {
         self.events.len()
     }
@@ -421,6 +427,30 @@ mod tests {
             assert!(t > 100, "{k:?}: far miss implausibly fast: {t}");
             assert_eq!(m.far_inflight(), 0, "{k:?}: inflight accounting leaked");
         }
+    }
+
+    #[test]
+    fn scenario_stats_surface_through_memsys() {
+        use crate::config::FarBackendKind;
+        let mut cfg = SimConfig::baseline()
+            .with_far_latency_ns(1000.0)
+            .with_far_backend(FarBackendKind::Hybrid);
+        cfg.far.jitter_frac = 0.0;
+        cfg.far.near_capacity_lines = 2;
+        let mut m = memsys(&cfg);
+        // Lines 0, 1, 0 again (hit), then a third line (evicts line 1).
+        for (i, off) in [0u64, 64, 0, 128].iter().enumerate() {
+            m.far_direct(false, FAR_BASE + off, 8, i as u32, (i as u64) * 20_000);
+        }
+        for c in 0..1_000_000 {
+            m.tick(c, 10, 4);
+            if m.asmc_completions.len() == 4 {
+                break;
+            }
+        }
+        let s = m.scenario_stats();
+        assert_eq!(s.near_hits, 1, "third access re-touches line 0");
+        assert_eq!(s.near_evictions, 1, "fourth access overflows the 2-line tier");
     }
 
     #[test]

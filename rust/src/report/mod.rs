@@ -7,8 +7,11 @@
 //! [`SweepGrid`](crate::session::SweepGrid) executed by a parallel
 //! [`Session`], shared through the fingerprint-checked on-disk cache
 //! (`results/sweep_<scale>.csv`), so the per-figure bench harnesses do not
-//! re-simulate. The stringly [`run_one`] / [`sweep_cached`] entry points
-//! remain only as deprecated shims.
+//! re-simulate. Refined paper grids — a non-default `--backend` or
+//! `--pool-policy` — land in fingerprint-suffixed cache files of their
+//! own, so regenerating figures per-scenario never clobbers the default
+//! sweep. The stringly [`run_one`] / [`sweep_cached`] entry points remain
+//! only as deprecated shims.
 
 use crate::config::SimConfig;
 use crate::session::{RunRequest, Session, SweepGrid, VariantSel};

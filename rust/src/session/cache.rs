@@ -13,7 +13,11 @@
 //!
 //! Rows are keyed by `(bench, config, backend, variant, latency)`, so a
 //! partial file (e.g. from an interrupted sweep) resumes instead of
-//! re-simulating everything. Floats are serialized with Rust's
+//! re-simulating everything. Grid *refinements* (e.g. `far.pool_policy`)
+//! are deliberately not columns: a refinement is constant across a grid,
+//! so it distinguishes whole cache files via the grid fingerprint in the
+//! header — the v3 row format (and every default-policy cache already on
+//! disk) stays valid. Floats are serialized with Rust's
 //! shortest-round-trip formatting, so `parse_csv(to_csv_row(r))`
 //! reproduces every field bit-exactly. Any malformed line rejects the
 //! whole file — a corrupt cache is never partially loaded.

@@ -69,12 +69,17 @@ impl Session {
     /// Where a grid's sweep is cached by default: the paper grid keeps the
     /// historical `results/sweep_<scale>.csv` name; any other grid gets a
     /// fingerprint-suffixed file so grids never clobber each other.
+    /// Compared by fingerprint — the same identity the cache header is
+    /// validated against — so semantically equivalent grids (e.g. a pool
+    /// policy set on a grid with no pooled backend) share one file instead
+    /// of re-simulating identical rows into a duplicate.
     pub fn default_cache_path(grid: &SweepGrid) -> PathBuf {
         let tag = grid.scale.tag();
-        if *grid == SweepGrid::paper(grid.scale) {
+        let fp = grid.fingerprint();
+        if fp == SweepGrid::paper(grid.scale).fingerprint() {
             results_dir().join(format!("sweep_{tag}.csv"))
         } else {
-            results_dir().join(format!("sweep_{tag}_{:016x}.csv", grid.fingerprint()))
+            results_dir().join(format!("sweep_{tag}_{fp:016x}.csv"))
         }
     }
 
@@ -97,12 +102,19 @@ impl Session {
         scale: Scale,
         backend: &str,
     ) -> Result<Vec<RunResult>, SessionError> {
-        let grid = SweepGrid::paper(scale).backend(backend);
+        self.sweep_default_cached(&SweepGrid::paper(scale).backend(backend))
+    }
+
+    /// Run `grid` with its default cache location (unless an explicit cache
+    /// path is already configured). Refined grids — a non-default backend
+    /// or `pool_policy` — land in their own fingerprint-suffixed file, so
+    /// they never clobber the default sweep's rows.
+    pub fn sweep_default_cached(&self, grid: &SweepGrid) -> Result<Vec<RunResult>, SessionError> {
         let mut s = self.clone();
         if s.cache.is_none() {
-            s.cache = Some(Self::default_cache_path(&grid));
+            s.cache = Some(Self::default_cache_path(grid));
         }
-        s.sweep(&grid)
+        s.sweep(grid)
     }
 
     /// Run every cell of `grid`, reusing cached rows where the cache's

@@ -8,7 +8,7 @@
 //! the on-disk sweep cache, so a cache written for one grid can never be
 //! silently reused for another.
 
-use crate::config::{FarBackendKind, SimConfig};
+use crate::config::{FarBackendKind, PoolPolicy, SimConfig};
 use crate::session::request::{RunRequest, SessionError};
 use crate::workloads::{self, Scale, Variant};
 
@@ -58,6 +58,13 @@ pub struct SweepGrid {
     pub variants: Vec<VariantSel>,
     /// Far-memory backend tags (default: `serial-link` only).
     pub backends: Vec<String>,
+    /// `pooled` channel-selection policy applied to every cell — a grid
+    /// *refinement*, not an axis: it does not multiply the row count and
+    /// only enters the fingerprint when non-default *and* the grid sweeps
+    /// the `pooled` backend (the only backend it can affect), so caches
+    /// written before the policy existed (all implicitly `hash`) stay
+    /// valid and pool-less grids never fork on an ineffective flag.
+    pub pool_policy: String,
     pub scale: Scale,
 }
 
@@ -70,6 +77,7 @@ impl SweepGrid {
             latencies_ns: Vec::new(),
             variants: vec![VariantSel::Auto],
             backends: vec![FarBackendKind::SerialLink.tag().to_string()],
+            pool_policy: PoolPolicy::default().tag().to_string(),
             scale,
         }
     }
@@ -143,6 +151,19 @@ impl SweepGrid {
         self.backends(vec![tag.into()])
     }
 
+    /// Set the `pooled` channel-selection policy for every cell. Known
+    /// alias spellings (`ll`, `rr`, underscores) canonicalize here so the
+    /// fingerprint never forks on spelling; unknown tags are kept verbatim
+    /// for `requests()` to reject with a named error.
+    pub fn pool_policy(mut self, policy: impl Into<String>) -> Self {
+        let p = policy.into();
+        self.pool_policy = match PoolPolicy::parse(&p) {
+            Some(k) => k.tag().to_string(),
+            None => p,
+        };
+        self
+    }
+
     pub fn len(&self) -> usize {
         self.benches.len()
             * self.configs.len()
@@ -180,11 +201,14 @@ impl SweepGrid {
                 return Err(SessionError::UnknownBackend(b.clone()));
             }
         }
+        let pool_policy = PoolPolicy::parse(&self.pool_policy)
+            .ok_or_else(|| SessionError::UnknownPoolPolicy(self.pool_policy.clone()))?;
         let mut out = Vec::with_capacity(self.len());
         for bench in &self.benches {
             for config in &self.configs {
-                let cfg = SimConfig::preset(config)
+                let mut cfg = SimConfig::preset(config)
                     .ok_or_else(|| SessionError::UnknownConfig(config.clone()))?;
+                cfg.far.pool_policy = pool_policy;
                 for &lat in &self.latencies_ns {
                     for sel in &self.variants {
                         for backend in &self.backends {
@@ -234,7 +258,26 @@ impl SweepGrid {
             h.write(b.as_bytes());
             h.write(&[0xFF]);
         }
+        // Grid refinements enter the fingerprint only when they can change
+        // a row: non-default pool policy AND a pooled backend in the grid.
+        // Every fingerprint minted before the refinement existed stays
+        // valid (v3 caches are all implicitly `hash`), and a policy flag on
+        // a pool-less grid doesn't force a duplicate re-simulation of
+        // byte-identical rows into a new cache file.
+        if self.pool_policy != PoolPolicy::default().tag() && self.sweeps_pooled() {
+            h.write(&[0xFD]);
+            h.write(b"pool_policy=");
+            h.write(self.pool_policy.as_bytes());
+        }
         h.finish()
+    }
+
+    /// Whether any cell of this grid runs the `pooled` backend (the only
+    /// backend the pool policy can affect).
+    pub fn sweeps_pooled(&self) -> bool {
+        self.backends
+            .iter()
+            .any(|b| FarBackendKind::parse(b) == Some(FarBackendKind::Pooled))
     }
 }
 
@@ -372,6 +415,65 @@ mod tests {
             .latencies_ns([100.0])
             .backends(Vec::<String>::new());
         assert!(matches!(g.requests(), Err(SessionError::EmptyGrid("backends"))));
+    }
+
+    #[test]
+    fn pool_policy_refines_the_fingerprint_only_when_it_can_matter() {
+        // Explicit `hash` IS the default: byte-identical grid and
+        // fingerprint, so every pre-existing v3 cache stays valid.
+        let base = SweepGrid::paper(Scale::Test);
+        let hash = SweepGrid::paper(Scale::Test).pool_policy("hash");
+        assert_eq!(base, hash);
+        assert_eq!(base.fingerprint(), hash.fingerprint());
+        // On a grid without the pooled backend the policy cannot change
+        // any row, so the fingerprint must not fork (a stray flag would
+        // otherwise force a duplicate re-simulation of identical rows).
+        let ll_no_pool = SweepGrid::paper(Scale::Test).pool_policy("least-loaded");
+        assert_eq!(base.fingerprint(), ll_no_pool.fingerprint());
+        // With pooled swept, non-default policies refine the fingerprint.
+        let pooled = SweepGrid::paper(Scale::Test).backend("pooled");
+        let ll = SweepGrid::paper(Scale::Test).backend("pooled").pool_policy("least-loaded");
+        let rr = SweepGrid::paper(Scale::Test).backend("pooled").pool_policy("round-robin");
+        assert_ne!(pooled.fingerprint(), ll.fingerprint());
+        assert_ne!(pooled.fingerprint(), rr.fingerprint());
+        assert_ne!(ll.fingerprint(), rr.fingerprint());
+        // Alias spellings canonicalize in the builder, like backends do.
+        assert_eq!(SweepGrid::paper(Scale::Test).backend("pooled").pool_policy("rr"), rr);
+        assert_eq!(
+            SweepGrid::paper(Scale::Test).backend("pooled").pool_policy("ll").fingerprint(),
+            ll.fingerprint()
+        );
+    }
+
+    #[test]
+    fn pool_policy_applies_to_every_request() {
+        use crate::config::PoolPolicy;
+        let g = SweepGrid::new(Scale::Test)
+            .benches(["gups"])
+            .configs(["baseline"])
+            .latencies_ns([100.0])
+            .backends(["pooled"])
+            .pool_policy("least-loaded");
+        let reqs = g.requests().unwrap();
+        assert!(reqs
+            .iter()
+            .all(|r| r.config().far.pool_policy == PoolPolicy::LeastLoaded));
+        // Default grids keep the hash policy.
+        let reqs = SweepGrid::paper(Scale::Test).requests().unwrap();
+        assert!(reqs.iter().all(|r| r.config().far.pool_policy == PoolPolicy::Hash));
+    }
+
+    #[test]
+    fn unknown_pool_policy_fails_fast_naming_choices() {
+        let g = SweepGrid::new(Scale::Test)
+            .benches(["gups"])
+            .configs(["baseline"])
+            .latencies_ns([100.0])
+            .pool_policy("warp9");
+        let e = g.requests().unwrap_err();
+        assert!(matches!(e, SessionError::UnknownPoolPolicy(_)));
+        let msg = e.to_string();
+        assert!(msg.contains("least-loaded") && msg.contains("round-robin"), "{msg}");
     }
 
     #[test]

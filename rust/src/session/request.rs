@@ -5,7 +5,7 @@
 //! construction and every failure is a [`SessionError`] naming the valid
 //! choices — never a panic.
 
-use crate::config::{FarBackendKind, SimConfig};
+use crate::config::{FarBackendKind, PoolPolicy, SimConfig};
 use crate::power::{estimate, EnergyModel};
 use crate::session::registry::{self, Workload};
 use crate::session::RunResult;
@@ -17,6 +17,7 @@ pub enum SessionError {
     UnknownBench(String),
     UnknownConfig(String),
     UnknownBackend(String),
+    UnknownPoolPolicy(String),
     UnknownVariant(String),
     UnsupportedVariant { bench: String, variant: String },
     InvalidLatency(f64),
@@ -42,6 +43,11 @@ impl std::fmt::Display for SessionError {
                 f,
                 "unknown far-memory backend '{name}' (valid: {})",
                 FarBackendKind::names().join(", ")
+            ),
+            SessionError::UnknownPoolPolicy(name) => write!(
+                f,
+                "unknown pool policy '{name}' (valid: {})",
+                PoolPolicy::names().join(", ")
             ),
             SessionError::UnknownVariant(msg) => write!(f, "{msg}"),
             SessionError::UnsupportedVariant { bench, variant } => {
@@ -96,6 +102,7 @@ impl RunRequest {
             variant: None,
             latency_ns: None,
             backend: None,
+            pool_policy: None,
             no_jitter: false,
             scale: Scale::Test,
         }
@@ -124,6 +131,11 @@ impl RunRequest {
     /// Far-memory backend tag this run simulates under.
     pub fn backend_tag(&self) -> &'static str {
         self.config.far.backend.tag()
+    }
+
+    /// `pooled` channel-selection policy tag this run simulates under.
+    pub fn pool_policy_tag(&self) -> &'static str {
+        self.config.far.pool_policy.tag()
     }
 
     pub fn scale(&self) -> Scale {
@@ -175,6 +187,7 @@ pub struct RunRequestBuilder {
     variant: Option<Variant>,
     latency_ns: Option<f64>,
     backend: Option<String>,
+    pool_policy: Option<String>,
     no_jitter: bool,
     scale: Scale,
 }
@@ -216,6 +229,15 @@ impl RunRequestBuilder {
         self
     }
 
+    /// Select the `pooled` backend's channel-selection policy by tag
+    /// (`hash`, `least-loaded`, `round-robin`). Without this, the
+    /// configuration's own `far.pool_policy` is kept (`hash` by default).
+    /// Validated at `build()`. Harmless under non-pooled backends.
+    pub fn pool_policy(mut self, tag: impl Into<String>) -> Self {
+        self.pool_policy = Some(tag.into());
+        self
+    }
+
     /// Disable far-memory latency *variability* for A/B comparisons:
     /// zeroes the serial-link/pooled jitter fraction and the
     /// `distribution` backend's sigma/tail fraction (its samples collapse
@@ -248,6 +270,10 @@ impl RunRequestBuilder {
         if let Some(tag) = &self.backend {
             cfg.far.backend = FarBackendKind::parse(tag)
                 .ok_or_else(|| SessionError::UnknownBackend(tag.clone()))?;
+        }
+        if let Some(tag) = &self.pool_policy {
+            cfg.far.pool_policy = PoolPolicy::parse(tag)
+                .ok_or_else(|| SessionError::UnknownPoolPolicy(tag.clone()))?;
         }
         if self.no_jitter {
             cfg.far.jitter_frac = 0.0;
@@ -351,6 +377,21 @@ mod tests {
         // Default: the config's own backend (serial link).
         let r = RunRequest::bench("gups").build().unwrap();
         assert_eq!(r.backend_tag(), "serial-link");
+    }
+
+    #[test]
+    fn builder_validates_pool_policy() {
+        let e = RunRequest::bench("gups").pool_policy("warp9").build().unwrap_err();
+        assert!(matches!(e, SessionError::UnknownPoolPolicy(_)), "{e}");
+        assert!(e.to_string().contains("least-loaded"), "{e}");
+        for tag in ["hash", "least-loaded", "round-robin"] {
+            let r = RunRequest::bench("gups").backend("pooled").pool_policy(tag).build().unwrap();
+            assert_eq!(r.pool_policy_tag(), tag);
+        }
+        // Default: the config's own policy (hash).
+        let r = RunRequest::bench("gups").backend("pooled").build().unwrap();
+        assert_eq!(r.pool_policy_tag(), "hash");
+        assert_eq!(r.config().far.pool_policy, PoolPolicy::Hash);
     }
 
     #[test]

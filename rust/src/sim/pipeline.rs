@@ -1396,6 +1396,12 @@ impl Simulator {
                 return Err("pipeline drained without Halt (fell off program end)".into());
             }
         }
+        // Harvest backend scenario counters (near-tier hits/evictions,
+        // pool congestion) now that the far data plane is quiescent.
+        let scenario = self.memsys.scenario_stats();
+        self.stats.near_hits = scenario.near_hits;
+        self.stats.near_evictions = scenario.near_evictions;
+        self.stats.pool_congestion = scenario.pool_congestion;
         Ok(SimResult {
             cycles: self.cycle,
             committed_insts: self.stats.insts_committed,

@@ -169,6 +169,14 @@ pub struct Stats {
     pub far_reads: u64,
     pub far_writes: u64,
     pub far_bytes: u64,
+    // Far-memory scenario counters, harvested from the selected backend at
+    // the end of a run (zero for backends without the mechanism).
+    /// `hybrid`: accesses served by the near tier.
+    pub near_hits: u64,
+    /// `hybrid` (LRU capacity model): near-tier lines evicted.
+    pub near_evictions: u64,
+    /// `pooled`: requests delayed by a full channel queue.
+    pub pool_congestion: u64,
     pub link_stall_cycles: u64,
     pub prefetches_issued: u64,
     pub prefetches_useful: u64,

@@ -70,6 +70,60 @@ fn sweep_is_deterministic_across_job_counts_for_every_backend() {
     }
 }
 
+/// Pool-policy determinism: for each channel-selection policy, `--jobs 1`
+/// and `--jobs N` must produce byte-identical CSV (the CI determinism gate
+/// runs the same check through the real binary).
+#[test]
+fn sweep_is_deterministic_across_job_counts_for_every_pool_policy() {
+    for policy in ["hash", "least-loaded", "round-robin"] {
+        let grid = SweepGrid::new(Scale::Test)
+            .benches(["gups"])
+            .configs(["baseline"])
+            .latencies_ns([800.0])
+            .backends(["pooled"])
+            .pool_policy(policy);
+        let serial = Session::new().jobs(1).quiet(true).sweep(&grid).unwrap();
+        let parallel = Session::new().jobs(4).quiet(true).sweep(&grid).unwrap();
+        let fp = grid.fingerprint();
+        assert_eq!(
+            cache::to_csv_string(fp, &serial),
+            cache::to_csv_string(fp, &parallel),
+            "{policy}: jobs=1 vs jobs=4 CSV must be byte-identical"
+        );
+    }
+}
+
+/// The pool policy is a grid refinement: the default (`hash`) keeps the
+/// paper grid's historical fingerprint (existing v3 caches stay valid); a
+/// policy flag on a grid that never runs `pooled` is a no-op (same
+/// fingerprint, same cache file — no duplicate re-simulation); and only
+/// grids that actually sweep `pooled` under a non-default policy get
+/// distinct fingerprints and cache files.
+#[test]
+fn default_pool_policy_preserves_fingerprints_and_cache_paths() {
+    let base = SweepGrid::paper(Scale::Test);
+    let hash = SweepGrid::paper(Scale::Test).pool_policy("hash");
+    assert_eq!(base.fingerprint(), hash.fingerprint());
+    assert_eq!(
+        Session::default_cache_path(&base),
+        Session::default_cache_path(&hash),
+        "explicit hash must keep the historical sweep_<scale>.csv location"
+    );
+    // Ineffective flag (no pooled backend in the grid): complete no-op.
+    let ll_no_pool = SweepGrid::paper(Scale::Test).pool_policy("least-loaded");
+    assert_eq!(base.fingerprint(), ll_no_pool.fingerprint());
+    assert_eq!(Session::default_cache_path(&base), Session::default_cache_path(&ll_no_pool));
+    // Effective refinement: pooled swept under a non-default policy.
+    let pooled = SweepGrid::paper(Scale::Test).backend("pooled");
+    let ll = SweepGrid::paper(Scale::Test).backend("pooled").pool_policy("least-loaded");
+    assert_ne!(pooled.fingerprint(), ll.fingerprint());
+    assert_ne!(
+        Session::default_cache_path(&pooled),
+        Session::default_cache_path(&ll),
+        "refined grids must not clobber the pooled sweep cache"
+    );
+}
+
 #[test]
 fn sweep_rows_follow_canonical_grid_order() {
     let grid = small_grid();

@@ -46,6 +46,32 @@ fn gups_best_prefetch_group_competitive_with_baseline() {
 }
 
 #[test]
+fn hybrid_near_tier_stats_are_harvested_into_run_stats() {
+    // A full pipeline run under the hybrid backend's LRU capacity model
+    // must surface the near-tier counters in `Stats`: GUPS touches far
+    // more distinct far lines than a 2-line near tier holds, so evictions
+    // are guaranteed, and every access either hits near or pays the link.
+    use amu_sim::config::FarBackendKind;
+    let mut cfg = SimConfig::baseline().with_far_latency_ns(300.0);
+    cfg.far.backend = FarBackendKind::Hybrid;
+    cfg.far.jitter_frac = 0.0;
+    cfg.far.near_capacity_lines = 2;
+    let sim = build("gups", &cfg, Variant::Sync, Scale::Test).run(&cfg).unwrap();
+    assert!(
+        sim.stats.near_evictions > 0,
+        "a 2-line near tier must evict under GUPS: {:?}",
+        sim.stats.near_evictions
+    );
+    // The legacy coin-flip default reports hits but never evictions.
+    let mut cfg = SimConfig::baseline().with_far_latency_ns(300.0);
+    cfg.far.backend = FarBackendKind::Hybrid;
+    cfg.far.jitter_frac = 0.0;
+    let sim = build("gups", &cfg, Variant::Sync, Scale::Test).run(&cfg).unwrap();
+    assert!(sim.stats.near_hits > 0, "near_frac=0.5 must land some near hits");
+    assert_eq!(sim.stats.near_evictions, 0, "coin-flip model has no occupancy");
+}
+
+#[test]
 fn stream_large_granularity_beats_8b() {
     let blocked = cycles("stream", "amu", Variant::Amu, 1000.0);
     let fine = cycles("stream", "amu", Variant::AmuLlvm, 1000.0);
