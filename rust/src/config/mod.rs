@@ -176,11 +176,21 @@ pub enum PoolPolicy {
     LeastLoaded,
     /// Strict rotation over channels regardless of address or load.
     RoundRobin,
+    /// Feedback-driven: starts as `hash` (cheap, affinity-preserving) and
+    /// switches to `least-loaded` once the observed congestion fraction
+    /// over a sliding window of recent requests crosses
+    /// `far.pool_adapt_threshold`. Deterministic — the decision depends
+    /// only on the request stream, never on wall-clock time.
+    Adaptive,
 }
 
 impl PoolPolicy {
-    pub const ALL: &'static [PoolPolicy] =
-        &[PoolPolicy::Hash, PoolPolicy::LeastLoaded, PoolPolicy::RoundRobin];
+    pub const ALL: &'static [PoolPolicy] = &[
+        PoolPolicy::Hash,
+        PoolPolicy::LeastLoaded,
+        PoolPolicy::RoundRobin,
+        PoolPolicy::Adaptive,
+    ];
 
     /// Stable spelling used in config files, sweep fingerprints, and the CLI.
     pub fn tag(&self) -> &'static str {
@@ -188,6 +198,7 @@ impl PoolPolicy {
             PoolPolicy::Hash => "hash",
             PoolPolicy::LeastLoaded => "least-loaded",
             PoolPolicy::RoundRobin => "round-robin",
+            PoolPolicy::Adaptive => "adaptive",
         }
     }
 
@@ -196,12 +207,13 @@ impl PoolPolicy {
             "hash" => Some(PoolPolicy::Hash),
             "least-loaded" | "least_loaded" | "ll" => Some(PoolPolicy::LeastLoaded),
             "round-robin" | "round_robin" | "rr" => Some(PoolPolicy::RoundRobin),
+            "adaptive" | "adapt" => Some(PoolPolicy::Adaptive),
             _ => None,
         }
     }
 
     pub fn names() -> &'static [&'static str] {
-        &["hash", "least-loaded", "round-robin"]
+        &["hash", "least-loaded", "round-robin", "adaptive"]
     }
 }
 
@@ -264,6 +276,11 @@ pub struct FarMemConfig {
     pub pool_queue_depth: usize,
     /// `pooled`: channel-selection policy (`hash` default).
     pub pool_policy: PoolPolicy,
+    /// `pooled`/`adaptive`: congestion fraction over the sliding window
+    /// that triggers the hash -> least-loaded switch (in (0, 1]).
+    pub pool_adapt_threshold: f64,
+    /// `pooled`/`adaptive`: sliding window length in requests.
+    pub pool_adapt_window: usize,
     /// `distribution`: latency distribution family.
     pub dist: LatencyDist,
     /// `distribution`/lognormal: shape parameter sigma (0 = deterministic).
@@ -297,6 +314,8 @@ impl Default for FarMemConfig {
             pool_channels: 4,
             pool_queue_depth: 16,
             pool_policy: PoolPolicy::Hash,
+            pool_adapt_threshold: 0.5,
+            pool_adapt_window: 64,
             dist: LatencyDist::Lognormal,
             dist_sigma: 0.5,
             dist_tail_frac: 0.05,
@@ -591,6 +610,8 @@ impl SimConfig {
                 })?;
                 true
             }
+            "far.pool_adapt_threshold" => set_f!(self.far.pool_adapt_threshold),
+            "far.pool_adapt_window" => set_u!(self.far.pool_adapt_window),
             "far.dist" => {
                 let s = doc.get_str(key).ok_or("'far.dist' must be a string")?;
                 self.far.dist = LatencyDist::parse(s)
@@ -650,6 +671,18 @@ impl SimConfig {
             FarBackendKind::Pooled => {
                 if self.far.pool_channels == 0 || self.far.pool_queue_depth == 0 {
                     return Err("pooled backend needs >=1 channel and queue depth".into());
+                }
+                if self.far.pool_policy == PoolPolicy::Adaptive {
+                    if !(self.far.pool_adapt_threshold > 0.0
+                        && self.far.pool_adapt_threshold <= 1.0)
+                    {
+                        return Err(
+                            "adaptive pool policy: pool_adapt_threshold must be in (0, 1]".into()
+                        );
+                    }
+                    if self.far.pool_adapt_window == 0 {
+                        return Err("adaptive pool policy: pool_adapt_window must be >= 1".into());
+                    }
                 }
             }
             FarBackendKind::Distribution => {
@@ -811,6 +844,7 @@ mod tests {
         }
         assert_eq!(PoolPolicy::parse("ll"), Some(PoolPolicy::LeastLoaded));
         assert_eq!(PoolPolicy::parse("rr"), Some(PoolPolicy::RoundRobin));
+        assert_eq!(PoolPolicy::parse("adapt"), Some(PoolPolicy::Adaptive));
         assert!(PoolPolicy::parse("warp9").is_none());
         assert_eq!(PoolPolicy::default(), PoolPolicy::Hash);
         assert_eq!(PoolPolicy::names().len(), PoolPolicy::ALL.len());
@@ -834,6 +868,31 @@ mod tests {
         let d = FarMemConfig::default();
         assert_eq!(d.pool_policy, PoolPolicy::Hash);
         assert_eq!(d.near_capacity_lines, 0);
+    }
+
+    #[test]
+    fn adaptive_policy_overrides_and_validation() {
+        let mut c = SimConfig::baseline().with_far_backend(FarBackendKind::Pooled);
+        let doc = crate::util::toml_lite::parse(
+            "[far]\npool_policy = \"adaptive\"\npool_adapt_threshold = 0.25\n\
+             pool_adapt_window = 32\n",
+        )
+        .unwrap();
+        c.apply_overrides(&doc).unwrap();
+        assert_eq!(c.far.pool_policy, PoolPolicy::Adaptive);
+        assert_eq!(c.far.pool_adapt_threshold, 0.25);
+        assert_eq!(c.far.pool_adapt_window, 32);
+        assert!(c.validate().is_ok());
+        // Out-of-range adaptive parameters are rejected.
+        c.far.pool_adapt_threshold = 0.0;
+        assert!(c.validate().is_err());
+        c.far.pool_adapt_threshold = 0.5;
+        c.far.pool_adapt_window = 0;
+        assert!(c.validate().is_err());
+        // Defaults are sane, so `--pool-policy adaptive` works unconfigured.
+        let d = FarMemConfig::default();
+        assert!(d.pool_adapt_threshold > 0.0 && d.pool_adapt_threshold <= 1.0);
+        assert!(d.pool_adapt_window >= 1);
     }
 
     #[test]

@@ -3,8 +3,10 @@
 //! Subcommands:
 //!   run     — simulate one benchmark under one configuration
 //!   sweep   — run a (custom or paper) scenario grid in parallel (--jobs)
-//!   report  — regenerate paper figures/tables (fig2..fig11, table4..6, all)
-//!   list    — enumerate benchmarks, configuration presets, and backends
+//!   report  — regenerate paper figures/tables (fig2..fig11, table4..6,
+//!             sweep, all)
+//!   list    — enumerate benchmarks, configuration presets, backends,
+//!             policies, and metric columns
 //!   payload — smoke-test the PJRT payload engine (artifacts/)
 //!
 //! Far-memory backends (`--backend`): every command that simulates far
@@ -14,25 +16,39 @@
 //! (lognormal/bimodal latency with the configured mean, for tail-latency
 //! scenarios), and `hybrid` (fast-path/slow-path split). The pooled
 //! backend's channel selection is `--pool-policy`: `hash` (default),
-//! `least-loaded`, or `round-robin`. Examples:
+//! `least-loaded`, `round-robin`, or `adaptive` (hash until observed
+//! congestion crosses `far.pool_adapt_threshold`, then least-loaded). The
+//! hybrid near tier's capacity is `--near-capacity` (64 B lines; 0 keeps
+//! the legacy `near_frac` coin-flip).
+//!
+//! Metric columns (`--columns`): every CSV is emitted through the metric
+//! schema (`session::metrics`) — `core` (default; the historical row
+//! layout, byte-identical), `backend` (keys + per-backend scenario
+//! columns: `near_hits`, `near_evictions`, `pool_congestion`, ...),
+//! `all`, or an explicit comma-separated column list. Examples:
 //!
 //! ```text
 //! amu-sim run --bench gups --config amu --backend hybrid --latency-ns 2000
 //! amu-sim sweep --backend serial-link,pooled,distribution,hybrid --jobs 8
-//! amu-sim sweep --backend pooled --pool-policy least-loaded --jobs 8
+//! amu-sim sweep --backend hybrid --near-capacity 4096 --columns all --jobs 8
+//! amu-sim sweep --backend pooled --pool-policy adaptive --columns backend
 //! amu-sim report fig8 --backend distribution --scale test
+//! amu-sim report sweep --backend hybrid --columns all --scale test
 //! ```
 //!
 //! Sweep CSVs carry the backend both as a column and in the grid
 //! fingerprint, so caches from different backends never mix; the pool
-//! policy refines the fingerprint when non-default and the grid sweeps
-//! `pooled`, so policy scenarios get their own cache files while existing
-//! default caches stay valid (and a policy flag on a pool-less sweep is a
-//! no-op instead of a duplicate re-simulation).
+//! policy and the hybrid near-tier capacity refine the fingerprint when
+//! non-default and the grid sweeps the backend they affect, so those
+//! scenarios get their own cache files while existing default caches stay
+//! valid (and an ineffective flag is a no-op instead of a duplicate
+//! re-simulation). Cache files are format v4: the header pins the grid
+//! fingerprint and the metric-schema hash, and stale v3 files are
+//! rejected with a migration error naming the regeneration command.
 
 use amu_sim::config::SimConfig;
 use amu_sim::report;
-use amu_sim::session::{RunRequest, Session, SweepGrid, VariantSel};
+use amu_sim::session::{metrics, RunRequest, Selection, Session, SweepGrid, VariantSel};
 use amu_sim::util::cli::{self, flag, opt, Spec};
 use amu_sim::workloads::{self, Scale};
 
@@ -41,7 +57,12 @@ const RUN_SPECS: &[Spec] = &[
     opt("config", "configuration preset (baseline|cxl-ideal|amu|amu-dma|x2|x4)"),
     opt("latency-ns", "additional far-memory latency in ns"),
     opt("backend", "far-memory backend (serial-link|pooled|distribution|hybrid)"),
-    opt("pool-policy", "pooled channel selection (hash|least-loaded|round-robin)"),
+    opt(
+        "pool-policy",
+        "pooled channel selection (hash|least-loaded|round-robin|adaptive)",
+    ),
+    opt("near-capacity", "hybrid near-tier capacity in 64B lines (0 = near_frac coin-flip)"),
+    opt("columns", "emit CSV instead: core|backend|all|<comma-list> (see `list`)"),
     opt("scale", "test|paper"),
     opt("variant", "auto|sync|amu|llvm|gp<N>|pf<N>[-<D>]"),
     opt("config-file", "TOML-lite overrides applied on top of the preset"),
@@ -60,8 +81,11 @@ const SWEEP_SPECS: &[Spec] = &[
     ),
     opt(
         "pool-policy",
-        "pooled channel selection: hash|least-loaded|round-robin (default: hash)",
+        "pooled channel selection: hash|least-loaded|round-robin|adaptive (default: hash)",
     ),
+    opt("near-capacity", "hybrid near-tier capacity in 64B lines (default: 0)"),
+    opt("columns", "emit a column-selected CSV: core|backend|all|<comma-list>"),
+    opt("out", "write the --columns CSV to this path instead of stdout"),
     opt("scale", "test|paper"),
     opt("jobs", "worker threads (default: all cores)"),
     opt("cache-file", "explicit cache CSV path"),
@@ -96,6 +120,20 @@ fn split_list(s: &str) -> Vec<String> {
     s.split(',').map(str::trim).filter(|p| !p.is_empty()).map(String::from).collect()
 }
 
+fn parse_near_capacity(args: &cli::Args) -> Result<Option<usize>, String> {
+    match args.get("near-capacity") {
+        None => Ok(None),
+        Some(s) => s
+            .parse::<usize>()
+            .map(Some)
+            .map_err(|_| format!("--near-capacity: bad line count '{s}' (expected an integer)")),
+    }
+}
+
+fn parse_columns(args: &cli::Args) -> Result<Option<Selection>, String> {
+    args.get("columns").map(|s| Selection::parse(s)).transpose()
+}
+
 fn cmd_run(argv: &[String]) -> Result<(), String> {
     let args = cli::parse(argv, RUN_SPECS).map_err(|e| e.to_string())?;
     let bench = args.get_str("bench", "gups");
@@ -117,6 +155,10 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     if let Some(p) = args.get("pool-policy") {
         builder = builder.pool_policy(p);
     }
+    if let Some(n) = parse_near_capacity(&args)? {
+        builder = builder.near_capacity(n);
+    }
+    let columns = parse_columns(&args)?;
     match parse_variant_sel(&args.get_str("variant", "auto"))? {
         VariantSel::Auto => {}
         VariantSel::Fixed(v) => builder = builder.variant(v),
@@ -125,6 +167,12 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
     let t0 = std::time::Instant::now();
     let r = req.run().map_err(|e| e.to_string())?;
     let host_ms = t0.elapsed().as_millis();
+    if let Some(sel) = columns {
+        // Machine-readable mode: the schema-selected CSV header + row.
+        println!("{}", metrics::csv_header(&sel));
+        println!("{}", metrics::csv_row(&r, &sel));
+        return Ok(());
+    }
     println!(
         "bench={} config={} backend={} variant={} latency={}ns",
         r.bench, r.config, r.backend, r.variant, r.latency_ns
@@ -178,6 +226,17 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
         // the fingerprint so they cache in their own file.
         grid = grid.pool_policy(p);
     }
+    if let Some(n) = parse_near_capacity(&args)? {
+        // A refinement like the pool policy: non-default capacities on
+        // hybrid-sweeping grids get their own fingerprint and cache file.
+        grid = grid.near_capacity(n);
+    }
+    // Validate the emission flags up front: a typo'd column name or a
+    // stray --out must fail in milliseconds, not after a paper-scale sweep.
+    let columns = parse_columns(&args)?;
+    if columns.is_none() && args.get("out").is_some() {
+        return Err("--out requires --columns".into());
+    }
 
     let mut session = Session::new().quiet(args.has_flag("quiet"));
     if let Some(n) = parse_jobs(&args)? {
@@ -201,11 +260,14 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     // Only advertise the policy when it could affect a row (same condition
     // the fingerprint refinement uses) — a flag on a pool-less sweep is a
     // no-op and must not claim a scenario that didn't run.
-    let policy_note = if grid.pool_policy == "hash" || !grid.sweeps_pooled() {
+    let mut policy_note = if grid.pool_policy == "hash" || !grid.sweeps_pooled() {
         String::new()
     } else {
         format!(" [pool-policy={}]", grid.pool_policy)
     };
+    if grid.near_capacity_lines != 0 && grid.sweeps_hybrid() {
+        policy_note.push_str(&format!(" [near-capacity={}]", grid.near_capacity_lines));
+    }
     println!(
         "sweep: {} rows ({} benches x {} configs x {} latencies x {} variants x {} backends)\
          {} in {:.2?}",
@@ -222,6 +284,19 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
         Some(p) => println!("csv: {}", p.display()),
         None => println!("csv: (not written; --no-cache)"),
     }
+    // Schema-selected CSV emission (`--columns core|backend|all|<list>`):
+    // to --out if given, else to stdout. Distinct from the cache file,
+    // which always stores every schema column.
+    if let Some(sel) = columns {
+        let body = report::sweep_csv(&rows, &sel);
+        match args.get("out") {
+            Some(path) => {
+                std::fs::write(path, &body).map_err(|e| format!("{path}: {e}"))?;
+                println!("columns csv: {path}");
+            }
+            None => print!("{body}"),
+        }
+    }
     Ok(())
 }
 
@@ -230,6 +305,8 @@ fn cmd_report(argv: &[String]) -> Result<(), String> {
         opt("scale", "test|paper"),
         opt("backend", "far-memory backend for the sweep (default: serial-link)"),
         opt("pool-policy", "pooled channel selection (default: hash)"),
+        opt("near-capacity", "hybrid near-tier capacity in 64B lines (default: 0)"),
+        opt("columns", "column selection for `report sweep`: core|backend|all|<comma-list>"),
         opt("jobs", "worker threads for sweeps (default: all cores)"),
         flag("quiet", "less progress"),
     ];
@@ -241,9 +318,20 @@ fn cmd_report(argv: &[String]) -> Result<(), String> {
     if let Some(n) = parse_jobs(&args)? {
         session = session.jobs(n);
     }
+    // Validate the column selection before any simulation: a typo'd
+    // column name must not cost a paper-scale sweep. Only `report sweep`
+    // emits selected columns — reject the flag elsewhere rather than
+    // silently ignoring it.
+    let columns_arg = parse_columns(&args)?;
+    if columns_arg.is_some() && what != "sweep" {
+        return Err(format!(
+            "--columns only applies to `report sweep`, not `report {what}`"
+        ));
+    }
+    let sweep_sel = columns_arg.unwrap_or(Selection::Core);
     let needs_sweep = matches!(
         what,
-        "fig2" | "fig8" | "fig9" | "fig10" | "fig11" | "headline" | "all"
+        "fig2" | "fig8" | "fig9" | "fig10" | "fig11" | "headline" | "sweep" | "all"
     );
     let rows = if needs_sweep {
         let mut grid = SweepGrid::paper(scale);
@@ -253,12 +341,24 @@ fn cmd_report(argv: &[String]) -> Result<(), String> {
         if let Some(p) = args.get("pool-policy") {
             grid = grid.pool_policy(p);
         }
+        if let Some(n) = parse_near_capacity(&args)? {
+            grid = grid.near_capacity(n);
+        }
         session.sweep_default_cached(&grid).map_err(|e| e.to_string())?
     } else {
         Vec::new()
     };
     let emit = |name: &str, body: String| report::write_report(name, &body);
     match what {
+        "sweep" => {
+            // Schema-driven row dump with a column selection (default:
+            // the historical core layout).
+            let body = report::sweep_csv(&rows, &sweep_sel);
+            let path = report::results_dir().join("sweep_columns.csv");
+            std::fs::write(&path, &body).map_err(|e| format!("{}: {e}", path.display()))?;
+            print!("{body}");
+            eprintln!("[report] wrote {}", path.display());
+        }
         "fig2" => emit("fig2", report::fig2(&rows)),
         "fig3" => emit("fig3", report::fig3(&session, scale, 1000.0)),
         "fig8" => emit("fig8", report::fig8(&rows)),
@@ -321,6 +421,12 @@ fn main() {
                 "pool-policies: {}",
                 amu_sim::config::PoolPolicy::names().join(" ")
             );
+            println!("columns (schema v4, --columns core|backend|all|<comma-list>):");
+            for c in metrics::columns() {
+                let unit = if c.unit().is_empty() { "-" } else { c.unit() };
+                let group = format!("{:?}", c.group()).to_lowercase();
+                println!("  {:<16} {:<9} unit={}", c.name(), group, unit);
+            }
             Ok(())
         }
         _ => {
@@ -328,7 +434,9 @@ fn main() {
             eprintln!("usage: amu-sim <run|sweep|report|payload|list> [options]");
             eprintln!("{}", cli::usage("amu-sim run", RUN_SPECS));
             eprintln!("{}", cli::usage("amu-sim sweep", SWEEP_SPECS));
-            eprintln!("reports: fig2 fig3 fig8 fig9 fig10 fig11 table4 table5 table6 headline all");
+            eprintln!(
+                "reports: fig2 fig3 fig8 fig9 fig10 fig11 table4 table5 table6 headline sweep all"
+            );
             Ok(())
         }
     };

@@ -12,8 +12,10 @@
 //!   queue; a full queue back-pressures new arrivals onto the oldest
 //!   outstanding request (congestion, not just bandwidth, bounds tail
 //!   latency). Which channel serves a request is set by `far.pool_policy`:
-//!   address `hash` (default), occupancy-aware `least-loaded`, or
-//!   `round-robin`.
+//!   address `hash` (default), occupancy-aware `least-loaded`,
+//!   `round-robin`, or `adaptive` (starts at `hash`, switches to
+//!   `least-loaded` when observed congestion over a sliding window
+//!   crosses `far.pool_adapt_threshold`).
 //! * `distribution` — propagation latency sampled per request from a
 //!   lognormal or bimodal distribution whose *mean* is the configured
 //!   added latency, so sweeps compare equal-mean scenarios that differ
@@ -36,17 +38,10 @@ use crate::config::{FarBackendKind, FarMemConfig, LatencyDist, PoolPolicy};
 use crate::util::prng::Xoshiro256;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 
-/// Backend-specific scenario counters, harvested into [`crate::stats::Stats`]
-/// at the end of a run. Backends without a given mechanism report zero.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct ScenarioStats {
-    /// `hybrid`: accesses served by the near tier.
-    pub near_hits: u64,
-    /// `hybrid` (LRU capacity model only): lines evicted from the near tier.
-    pub near_evictions: u64,
-    /// `pooled`: requests delayed by a full channel queue.
-    pub pool_congestion: u64,
-}
+// Scenario counters are schema-driven: the column registry lives in
+// `stats::schema` (adding a metric is a table edit there plus the backend
+// that produces it); re-exported here because backends are the producers.
+pub use crate::stats::schema::{ScenarioCol, ScenarioStats};
 
 /// One far-memory data plane: issues reads/writes with absolute-cycle
 /// completion times and tracks in-flight requests for MLP accounting.
@@ -181,13 +176,28 @@ impl Channel {
 /// Multi-channel disaggregated memory pool behind a serial link front end
 /// (including the link's zero-mean propagation jitter, so the pool differs
 /// from `serial-link` only in its remote side). Which channel serves a
-/// request is decided by `cfg.pool_policy` at issue time.
+/// request is decided by `cfg.pool_policy` at issue time; the `adaptive`
+/// policy starts as `hash` and switches to `least-loaded` once the
+/// congestion fraction over a sliding window of recent requests crosses
+/// `cfg.pool_adapt_threshold` — a feedback decision driven purely by the
+/// request stream, so it is bit-for-bit deterministic per seed.
 pub struct PooledBackend {
     front: LinkFront,
     channels: Vec<Channel>,
     policy: PoolPolicy,
     /// `round-robin` rotation cursor.
     rr_next: usize,
+    /// `adaptive`: the policy currently in effect (starts at `hash`,
+    /// flips to `least-loaded` on sustained congestion; one-way).
+    adaptive_mode: PoolPolicy,
+    /// `adaptive`: per-request congestion observations, newest at the back.
+    adapt_window: VecDeque<bool>,
+    adapt_window_cap: usize,
+    /// `adaptive`: congested entries currently in the window.
+    adapt_congested: usize,
+    adapt_threshold: f64,
+    /// Times the adaptive policy switched (0 or 1; the switch is one-way).
+    switches: u64,
     rng: Xoshiro256,
     inflight: u64,
 }
@@ -208,6 +218,12 @@ impl PooledBackend {
                 .collect(),
             policy: cfg.pool_policy,
             rr_next: 0,
+            adaptive_mode: PoolPolicy::Hash,
+            adapt_window: VecDeque::new(),
+            adapt_window_cap: cfg.pool_adapt_window.max(1),
+            adapt_congested: 0,
+            adapt_threshold: cfg.pool_adapt_threshold,
+            switches: 0,
             rng: Xoshiro256::new(seed ^ 0x900_1ED),
             inflight: 0,
         }
@@ -223,11 +239,50 @@ impl PooledBackend {
         self.channels.iter().map(|c| c.served).collect()
     }
 
+    /// Times the adaptive policy switched hash -> least-loaded.
+    pub fn policy_switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// The channel-selection policy currently in effect (`adaptive`
+    /// resolves to whichever mode it is running in).
+    fn effective_policy(&self) -> PoolPolicy {
+        match self.policy {
+            PoolPolicy::Adaptive => self.adaptive_mode,
+            p => p,
+        }
+    }
+
+    /// Feed one request's congestion outcome into the adaptive window and
+    /// switch to `least-loaded` once the observed congestion fraction over
+    /// a *full* window crosses the threshold. The switch is one-way: the
+    /// affinity lost by rebalancing can't be recovered by flapping back.
+    fn observe_congestion(&mut self, congested: bool) {
+        if self.policy != PoolPolicy::Adaptive || self.adaptive_mode != PoolPolicy::Hash {
+            return;
+        }
+        self.adapt_window.push_back(congested);
+        self.adapt_congested += congested as usize;
+        if self.adapt_window.len() > self.adapt_window_cap
+            && self.adapt_window.pop_front() == Some(true)
+        {
+            self.adapt_congested -= 1;
+        }
+        if self.adapt_window.len() == self.adapt_window_cap
+            && self.adapt_congested as f64 >= self.adapt_threshold * self.adapt_window_cap as f64
+        {
+            self.adaptive_mode = PoolPolicy::LeastLoaded;
+            self.switches += 1;
+            self.adapt_window.clear();
+            self.adapt_congested = 0;
+        }
+    }
+
     /// Select the channel for a request to `addr` arriving at `at`,
-    /// according to the configured policy. Deterministic for a given
+    /// according to the policy in effect. Deterministic for a given
     /// request stream, so sweep CSVs stay byte-identical across `--jobs`.
     fn pick_channel(&mut self, at: u64, addr: u64) -> usize {
-        match self.policy {
+        match self.effective_policy() {
             PoolPolicy::Hash => {
                 // Multiplicative hash so strided access patterns spread
                 // across channels instead of aliasing onto one.
@@ -251,7 +306,20 @@ impl PooledBackend {
                 }
                 best
             }
+            // `effective_policy` never returns Adaptive.
+            PoolPolicy::Adaptive => unreachable!("adaptive resolves to a concrete mode"),
         }
+    }
+
+    /// Route one request through the pool: pick a channel, service it, and
+    /// feed the congestion outcome back into the adaptive window.
+    fn route(&mut self, arrive: u64, addr: u64, lines: usize, is_write: bool) -> u64 {
+        let ch = self.pick_channel(arrive, addr);
+        let before = self.channels[ch].congested;
+        let remote_done = self.channels[ch].service(arrive, addr, lines, is_write);
+        let congested = self.channels[ch].congested > before;
+        self.observe_congestion(congested);
+        remote_done
     }
 
     fn access(&mut self, cycle: u64, addr: u64, bytes: usize, is_write: bool) -> FarTiming {
@@ -261,8 +329,7 @@ impl PooledBackend {
         let jitter = self.front.jitter(&mut self.rng);
         let arrive = add_signed(depart + self.front.req_way_cycles(), jitter).max(depart);
         let lines = bytes.div_ceil(64).max(1);
-        let ch = self.pick_channel(arrive, addr);
-        let remote_done = self.channels[ch].service(arrive, addr, lines, is_write);
+        let remote_done = self.route(arrive, addr, lines, is_write);
         let resp_payload = if is_write { 0 } else { bytes };
         let resp_depart = self.front.depart_response(remote_done, resp_payload);
         FarTiming { done: resp_depart + self.front.resp_way_cycles() }
@@ -285,8 +352,7 @@ impl FarBackend for PooledBackend {
     fn posted_write(&mut self, cycle: u64, addr: u64, bytes: usize) {
         let depart = self.front.depart_request(cycle, bytes);
         let arrive = depart + self.front.req_way_cycles();
-        let ch = self.pick_channel(arrive, addr);
-        self.channels[ch].service(arrive, addr, bytes.div_ceil(64).max(1), true);
+        self.route(arrive, addr, bytes.div_ceil(64).max(1), true);
     }
 
     fn complete(&mut self) {
@@ -303,7 +369,9 @@ impl FarBackend for PooledBackend {
     }
 
     fn scenario_stats(&self) -> ScenarioStats {
-        ScenarioStats { pool_congestion: self.congestion_events(), ..Default::default() }
+        ScenarioStats::default()
+            .with(ScenarioCol::PoolCongestion, self.congestion_events())
+            .with(ScenarioCol::PoolSwitches, self.switches)
     }
 }
 
@@ -612,11 +680,9 @@ impl FarBackend for HybridBackend {
     }
 
     fn scenario_stats(&self) -> ScenarioStats {
-        ScenarioStats {
-            near_hits: self.near_hits,
-            near_evictions: self.near_evictions,
-            pool_congestion: 0,
-        }
+        ScenarioStats::default()
+            .with(ScenarioCol::NearHits, self.near_hits)
+            .with(ScenarioCol::NearEvictions, self.near_evictions)
     }
 }
 
@@ -873,7 +939,9 @@ mod tests {
         assert_eq!(h.far_misses, 4);
         assert_eq!(
             h.scenario_stats(),
-            ScenarioStats { near_hits: 2, near_evictions: 2, pool_congestion: 0 }
+            ScenarioStats::default()
+                .with(ScenarioCol::NearHits, 2)
+                .with(ScenarioCol::NearEvictions, 2)
         );
     }
 
@@ -952,7 +1020,73 @@ mod tests {
             p.read(0, i * 4096, 64);
             p.complete();
         }
-        assert!(p.scenario_stats().pool_congestion > 0);
+        assert!(p.scenario_stats().get(ScenarioCol::PoolCongestion) > 0);
+    }
+
+    #[test]
+    fn adaptive_policy_switches_under_sustained_congestion() {
+        // One hot line through a shallow 4-channel pool: hash pins the
+        // stream to one channel, congestion builds, and the adaptive
+        // policy must flip to least-loaded and start spreading.
+        let mut c = cfg(FarBackendKind::Pooled);
+        c.pool_channels = 4;
+        c.pool_queue_depth = 2;
+        c.pool_policy = PoolPolicy::Adaptive;
+        c.pool_adapt_threshold = 0.5;
+        c.pool_adapt_window = 8;
+        let mut p = PooledBackend::new(&c, 3.0, 1);
+        for _ in 0..64 {
+            p.read(0, 0, 64);
+            p.complete();
+        }
+        assert_eq!(p.policy_switches(), 1, "sustained congestion must trigger the switch");
+        assert_eq!(p.scenario_stats().get(ScenarioCol::PoolSwitches), 1);
+        let served = p.channel_served();
+        assert!(
+            served.iter().filter(|&&n| n > 0).count() > 1,
+            "post-switch requests must spread beyond the hash channel: {served:?}"
+        );
+
+        // An uncongested stream (deep queues, spread addresses) never
+        // switches: adaptive degenerates to hash exactly.
+        let mut c2 = cfg(FarBackendKind::Pooled);
+        c2.pool_channels = 4;
+        c2.pool_queue_depth = 64;
+        c2.pool_policy = PoolPolicy::Adaptive;
+        let mut calm = PooledBackend::new(&c2, 3.0, 1);
+        c2.pool_policy = PoolPolicy::Hash;
+        let mut hash = PooledBackend::new(&c2, 3.0, 1);
+        for i in 0..64u64 {
+            let (a, b) = (
+                calm.read(i * 20_000, i * 4096, 64).done,
+                hash.read(i * 20_000, i * 4096, 64).done,
+            );
+            calm.complete();
+            hash.complete();
+            assert_eq!(a, b, "uncongested adaptive must behave exactly like hash");
+        }
+        assert_eq!(calm.policy_switches(), 0);
+    }
+
+    #[test]
+    fn adaptive_policy_is_deterministic_per_seed() {
+        let mut c = cfg(FarBackendKind::Pooled);
+        c.jitter_frac = 0.05;
+        c.pool_channels = 4;
+        c.pool_queue_depth = 2;
+        c.pool_policy = PoolPolicy::Adaptive;
+        c.pool_adapt_window = 8;
+        let mut a = PooledBackend::new(&c, 3.0, 11);
+        let mut b = PooledBackend::new(&c, 3.0, 11);
+        for i in 0..200u64 {
+            let addr = if i % 2 == 0 { 0 } else { i * 4096 };
+            assert_eq!(
+                a.read(i * 50, addr, 64).done,
+                b.read(i * 50, addr, 64).done,
+                "adaptive must be deterministic per seed"
+            );
+        }
+        assert_eq!(a.policy_switches(), b.policy_switches());
     }
 
     #[test]

@@ -449,8 +449,13 @@ mod tests {
             }
         }
         let s = m.scenario_stats();
-        assert_eq!(s.near_hits, 1, "third access re-touches line 0");
-        assert_eq!(s.near_evictions, 1, "fourth access overflows the 2-line tier");
+        use crate::stats::schema::ScenarioCol;
+        assert_eq!(s.get(ScenarioCol::NearHits), 1, "third access re-touches line 0");
+        assert_eq!(
+            s.get(ScenarioCol::NearEvictions),
+            1,
+            "fourth access overflows the 2-line tier"
+        );
     }
 
     #[test]

@@ -14,12 +14,31 @@
 //! only as deprecated shims.
 
 use crate::config::SimConfig;
+use crate::session::metrics::{self, Selection};
 use crate::session::{RunRequest, Session, SweepGrid, VariantSel};
 use crate::util::geomean;
 use crate::workloads::{self, Scale, Variant};
 use std::fmt::Write as _;
 
 pub use crate::session::{results_dir, RunResult};
+
+/// Schema-driven sweep CSV: `rows` under a `--columns` [`Selection`].
+/// `Selection::Core` reproduces the historical (v3) row layout
+/// byte-for-byte; `Selection::Backend`/`All` add the per-backend scenario
+/// columns (`near_hits`, `near_evictions`, `pool_congestion`, ...). This
+/// is the emission path behind `amu-sim sweep --columns` and
+/// `amu-sim report sweep`.
+pub fn sweep_csv(rows: &[RunResult], sel: &Selection) -> String {
+    let cols = sel.columns();
+    let mut s = String::with_capacity(80 * (rows.len() + 1));
+    s.push_str(&metrics::csv_header(sel));
+    s.push('\n');
+    for r in rows {
+        s.push_str(&metrics::csv_row_with(&cols, r));
+        s.push('\n');
+    }
+    s
+}
 
 /// The paper's four evaluated configurations.
 pub const SWEEP_CONFIGS: &[&str] = crate::session::PAPER_CONFIGS;
@@ -486,6 +505,33 @@ mod tests {
         assert!(e.contains("unknown benchmark"), "{e}");
         let e = run_one("gups", "warp9", Variant::Sync, 200.0, Scale::Test).unwrap_err();
         assert!(e.contains("unknown config"), "{e}");
+    }
+
+    #[test]
+    fn sweep_csv_selects_columns_consistently() {
+        use crate::session::SweepGrid;
+        let grid = SweepGrid::new(Scale::Test)
+            .benches(["gups"])
+            .configs(["baseline"])
+            .latencies_ns([300.0])
+            .backends(["hybrid"])
+            .near_capacity(64);
+        let rows = Session::new().quiet(true).without_cache().sweep(&grid).unwrap();
+        let core = sweep_csv(&rows, &Selection::Core);
+        let all = sweep_csv(&rows, &Selection::All);
+        let backend = sweep_csv(&rows, &Selection::Backend);
+        // Core is the v3 layout; all extends it; shared columns agree.
+        for (c, a) in core.lines().zip(all.lines()) {
+            assert!(a.starts_with(c), "core row must prefix all row:\n{c}\n{a}");
+        }
+        assert!(all.lines().next().unwrap().contains("near_hits"));
+        assert!(backend.lines().next().unwrap().contains("pool_congestion"));
+        // The hybrid LRU run actually populates the scenario columns.
+        let data = backend.lines().nth(1).unwrap();
+        let last: Vec<&str> = data.split(',').collect();
+        let near_hits: u64 = last[5].parse().unwrap();
+        let near_evictions: u64 = last[6].parse().unwrap();
+        assert!(near_hits + near_evictions > 0, "{data}");
     }
 
     #[test]

@@ -1,118 +1,110 @@
-//! On-disk sweep cache: CSV with a grid-fingerprint header.
+//! On-disk sweep cache: CSV with a grid-fingerprint + schema-hash header.
 //!
-//! Format (version 3 — version 2 predates the far-memory backend axis and
-//! the corrected unbiased/exact-RTT link timing, so its rows are stale by
-//! definition; version 1 had no fingerprint and trusted row count alone,
-//! which silently reused stale files):
+//! Format (version 4 — the first *schema-driven* version: rows carry every
+//! [`crate::session::metrics`] column, core and per-backend scenario
+//! alike, and the header pins the schema hash so a binary with a
+//! different metric schema rejects the file with a migration error
+//! instead of misparsing it):
 //!
 //! ```text
-//! # amu-sim sweep cache v3 grid=<16-hex-digit fingerprint>
-//! bench,config,backend,variant,latency_ns,...
+//! # amu-sim sweep cache v4 grid=<16-hex fingerprint> schema=<16-hex hash>
+//! bench,config,backend,variant,latency_ns,...,near_hits,...,pool_switches
 //! <one row per completed run>
 //! ```
 //!
+//! Version 3 predates the scenario columns (its 14-field rows cannot carry
+//! `near_hits`/`pool_congestion`); v3 files are rejected whole with an
+//! error naming the regeneration command. Version 2 predates the
+//! far-memory backend axis; version 1 had no fingerprint at all.
+//!
 //! Rows are keyed by `(bench, config, backend, variant, latency)`, so a
 //! partial file (e.g. from an interrupted sweep) resumes instead of
-//! re-simulating everything. Grid *refinements* (e.g. `far.pool_policy`)
-//! are deliberately not columns: a refinement is constant across a grid,
-//! so it distinguishes whole cache files via the grid fingerprint in the
-//! header — the v3 row format (and every default-policy cache already on
-//! disk) stays valid. Floats are serialized with Rust's
+//! re-simulating everything. Grid *refinements* (`far.pool_policy`,
+//! `far.near_capacity_lines`) are deliberately not columns: a refinement
+//! is constant across a grid, so it distinguishes whole cache files via
+//! the grid fingerprint in the header. Floats are serialized with Rust's
 //! shortest-round-trip formatting, so `parse_csv(to_csv_row(r))`
 //! reproduces every field bit-exactly. Any malformed line rejects the
 //! whole file — a corrupt cache is never partially loaded.
 
+use crate::session::metrics::{self, MetricSet, Selection};
 use crate::session::RunResult;
 
-pub const CSV_HEADER: &str = "bench,config,backend,variant,latency_ns,measured_cycles,\
-total_cycles,insts,ipc,mlp,peak_inflight,dynamic_uj,static_uj,disambig_frac";
+const MAGIC_V4: &str = "# amu-sim sweep cache v4 grid=";
+const MAGIC_V3: &str = "# amu-sim sweep cache v3 grid=";
 
-const MAGIC: &str = "# amu-sim sweep cache v3 grid=";
+/// The full-schema column header line (every v4 row stores every column).
+pub fn csv_columns() -> String {
+    metrics::csv_header(&Selection::All)
+}
 
-/// Serialize one result row. Floats use `{}` (shortest representation that
-/// round-trips exactly), keeping cached and freshly simulated rows
-/// byte-identical.
+/// Serialize one result row (all schema columns). Floats use `{}` (the
+/// shortest representation that round-trips exactly), keeping cached and
+/// freshly simulated rows byte-identical.
 pub fn to_csv_row(r: &RunResult) -> String {
-    format!(
-        "{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
-        r.bench,
-        r.config,
-        r.backend,
-        r.variant,
-        r.latency_ns,
-        r.measured_cycles,
-        r.total_cycles,
-        r.insts,
-        r.ipc,
-        r.mlp,
-        r.peak_inflight,
-        r.dynamic_uj,
-        r.static_uj,
-        r.disambig_frac,
-    )
+    metrics::csv_row(r, &Selection::All)
 }
 
 fn parse_row(line: &str) -> Result<RunResult, String> {
-    let f: Vec<&str> = line.split(',').collect();
-    if f.len() != 14 {
-        return Err(format!("expected 14 fields, got {} in '{line}'", f.len()));
-    }
-    let num = |i: usize| -> Result<f64, String> {
-        f[i].parse().map_err(|_| format!("bad number '{}' in '{line}'", f[i]))
-    };
-    let int = |i: usize| -> Result<u64, String> {
-        f[i].parse().map_err(|_| format!("bad integer '{}' in '{line}'", f[i]))
-    };
-    Ok(RunResult {
-        bench: f[0].into(),
-        config: f[1].into(),
-        backend: f[2].into(),
-        variant: f[3].into(),
-        latency_ns: num(4)?,
-        measured_cycles: int(5)?,
-        total_cycles: int(6)?,
-        insts: int(7)?,
-        ipc: num(8)?,
-        mlp: num(9)?,
-        peak_inflight: int(10)?,
-        dynamic_uj: num(11)?,
-        static_uj: num(12)?,
-        disambig_frac: num(13)?,
-    })
+    Ok(MetricSet::parse_csv_row(line)?.to_run_result())
 }
 
-/// The fingerprint header line for a grid fingerprint.
+/// The v4 header line for a grid fingerprint (the schema hash is this
+/// binary's — by construction a written cache always matches).
 pub fn header(fingerprint: u64) -> String {
-    format!("{MAGIC}{fingerprint:016x}")
+    format!("{MAGIC_V4}{fingerprint:016x} schema={:016x}", metrics::schema_hash())
 }
 
-/// Serialize a complete cache file (fingerprint header + column header +
-/// rows in the given order).
+/// Serialize a complete cache file (fingerprint/schema header + column
+/// header + rows in the given order).
 pub fn to_csv_string(fingerprint: u64, rows: &[RunResult]) -> String {
+    let cols = Selection::All.columns();
     let mut s = header(fingerprint);
     s.push('\n');
-    s.push_str(CSV_HEADER);
+    s.push_str(&csv_columns());
     s.push('\n');
     for r in rows {
-        s.push_str(&to_csv_row(r));
+        s.push_str(&metrics::csv_row_with(&cols, r));
         s.push('\n');
     }
     s
 }
 
 /// Parse a cache file: returns the stored grid fingerprint and every row.
-/// Strict: an unrecognized header, a stale (v1) format, or any corrupt /
-/// truncated row rejects the whole file.
+/// Strict: an unrecognized header, a stale format version (v1–v3), a
+/// schema-hash mismatch, or any corrupt / truncated row rejects the whole
+/// file — v3 and schema-drift rejections name the regeneration command.
 pub fn parse_csv(text: &str) -> Result<(u64, Vec<RunResult>), String> {
     let mut lines = text.lines();
     let first = lines.next().ok_or("empty cache file")?;
-    let hex = first
-        .strip_prefix(MAGIC)
-        .ok_or_else(|| format!("not a v2 sweep cache (header '{first}')"))?;
+    if first.starts_with(MAGIC_V3) {
+        return Err(format!(
+            "v3 sweep cache: the v4 metric schema adds per-backend scenario \
+             columns ({}, ...) that 14-field v3 rows cannot carry; delete \
+             this file or rerun `amu-sim sweep` to regenerate it as v4",
+            crate::stats::schema::SCENARIO_COLUMNS[0].name
+        ));
+    }
+    let rest = first
+        .strip_prefix(MAGIC_V4)
+        .ok_or_else(|| format!("not a v4 sweep cache (header '{first}')"))?;
+    let (grid_hex, schema_part) = rest
+        .split_once(" schema=")
+        .ok_or_else(|| format!("v4 header missing schema hash ('{first}')"))?;
     let fingerprint =
-        u64::from_str_radix(hex, 16).map_err(|_| format!("bad fingerprint '{hex}'"))?;
+        u64::from_str_radix(grid_hex, 16).map_err(|_| format!("bad fingerprint '{grid_hex}'"))?;
+    let schema = u64::from_str_radix(schema_part, 16)
+        .map_err(|_| format!("bad schema hash '{schema_part}'"))?;
+    if schema != metrics::schema_hash() {
+        return Err(format!(
+            "sweep cache schema {schema:016x} does not match this binary's \
+             metric schema {:016x}; the column set changed — delete the file \
+             or rerun `amu-sim sweep` to regenerate it",
+            metrics::schema_hash()
+        ));
+    }
     let cols = lines.next().ok_or("missing column header")?;
-    if cols != CSV_HEADER {
+    if cols != csv_columns() {
         return Err(format!("unexpected column header '{cols}'"));
     }
     let mut rows = Vec::new();
@@ -136,6 +128,7 @@ pub fn key_of(r: &RunResult) -> (String, String, String, String, u64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::stats::schema::{ScenarioCol, ScenarioStats};
 
     fn sample() -> RunResult {
         RunResult {
@@ -153,6 +146,9 @@ mod tests {
             dynamic_uj: 1.0 / 3.0,
             static_uj: 2.5e-7,
             disambig_frac: 0.087_654_321,
+            scenario: ScenarioStats::default()
+                .with(ScenarioCol::NearHits, 31)
+                .with(ScenarioCol::PoolCongestion, 7),
         }
     }
 
@@ -166,6 +162,7 @@ mod tests {
         assert_eq!(rows[0], r);
         assert_eq!(rows[0].ipc.to_bits(), r.ipc.to_bits());
         assert_eq!(rows[0].disambig_frac.to_bits(), r.disambig_frac.to_bits());
+        assert_eq!(rows[0].scenario.get(ScenarioCol::NearHits), 31);
     }
 
     #[test]
@@ -178,11 +175,46 @@ mod tests {
         let bad = text.replace("123456", "123xyz");
         assert!(parse_csv(&bad).is_err());
         // v1 files (no fingerprint header) are stale by definition.
-        let v1 = format!("{CSV_HEADER}\n{}\n", to_csv_row(&sample()));
+        let v1 = format!("{}\n{}\n", csv_columns(), to_csv_row(&sample()));
         assert!(parse_csv(&v1).is_err());
         // v2 files (no backend column, biased link timing) are stale too.
-        let v2 = text.replace("sweep cache v3", "sweep cache v2");
+        let v2 = text.replace("sweep cache v4", "sweep cache v2");
         assert!(parse_csv(&v2).is_err());
+    }
+
+    #[test]
+    fn v3_files_are_rejected_with_the_migration_command() {
+        // A faithful v3 file: 14-field rows, no schema hash.
+        let v3 = "# amu-sim sweep cache v3 grid=00000000deadbeef\n\
+                  bench,config,backend,variant,latency_ns,measured_cycles,total_cycles,\
+                  insts,ipc,mlp,peak_inflight,dynamic_uj,static_uj,disambig_frac\n\
+                  gups,amu,serial-link,amu,1000,1,2,3,0.5,1.5,4,0.1,0.2,0.3\n";
+        let e = parse_csv(v3).unwrap_err();
+        assert!(e.contains("v3"), "{e}");
+        assert!(e.contains("amu-sim sweep"), "must name the regeneration command: {e}");
+        assert!(e.contains("near_hits"), "must say what v4 adds: {e}");
+    }
+
+    #[test]
+    fn schema_drift_is_rejected_with_a_named_hash() {
+        let text = to_csv_string(7, &[sample()]);
+        // Flip one schema-hash digit: a binary with a different column set
+        // must refuse the rows rather than misparse them.
+        let (head, tail) = text.split_once('\n').unwrap();
+        let mut bad_head = head.to_string();
+        let last = bad_head.pop().unwrap();
+        bad_head.push(if last == '0' { '1' } else { '0' });
+        let bad = format!("{bad_head}\n{tail}");
+        let e = parse_csv(&bad).unwrap_err();
+        assert!(e.contains("schema"), "{e}");
+        assert!(e.contains("amu-sim sweep"), "{e}");
+    }
+
+    #[test]
+    fn header_carries_grid_and_schema_hashes() {
+        let h = header(0xABCD);
+        assert!(h.starts_with("# amu-sim sweep cache v4 grid=000000000000abcd schema="));
+        assert!(h.ends_with(&format!("{:016x}", metrics::schema_hash())));
     }
 
     #[test]

@@ -106,9 +106,10 @@ impl Session {
     }
 
     /// Run `grid` with its default cache location (unless an explicit cache
-    /// path is already configured). Refined grids — a non-default backend
-    /// or `pool_policy` — land in their own fingerprint-suffixed file, so
-    /// they never clobber the default sweep's rows.
+    /// path is already configured). Refined grids — a non-default backend,
+    /// `pool_policy`, or `near_capacity_lines` — land in their own
+    /// fingerprint-suffixed file, so they never clobber the default
+    /// sweep's rows.
     pub fn sweep_default_cached(&self, grid: &SweepGrid) -> Result<Vec<RunResult>, SessionError> {
         let mut s = self.clone();
         if s.cache.is_none() {

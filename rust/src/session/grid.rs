@@ -10,6 +10,7 @@
 
 use crate::config::{FarBackendKind, PoolPolicy, SimConfig};
 use crate::session::request::{RunRequest, SessionError};
+use crate::util::Fnv;
 use crate::workloads::{self, Scale, Variant};
 
 /// The paper's four evaluated configurations (Fig 8–11 columns).
@@ -65,6 +66,12 @@ pub struct SweepGrid {
     /// written before the policy existed (all implicitly `hash`) stay
     /// valid and pool-less grids never fork on an ineffective flag.
     pub pool_policy: String,
+    /// `hybrid` near-tier capacity in 64 B lines applied to every cell —
+    /// like `pool_policy`, a grid *refinement*: it only enters the
+    /// fingerprint when non-default (non-zero) *and* the grid sweeps the
+    /// `hybrid` backend (the only backend it can affect), so existing
+    /// fingerprints never fork on the default.
+    pub near_capacity_lines: usize,
     pub scale: Scale,
 }
 
@@ -78,6 +85,7 @@ impl SweepGrid {
             variants: vec![VariantSel::Auto],
             backends: vec![FarBackendKind::SerialLink.tag().to_string()],
             pool_policy: PoolPolicy::default().tag().to_string(),
+            near_capacity_lines: 0,
             scale,
         }
     }
@@ -164,6 +172,13 @@ impl SweepGrid {
         self
     }
 
+    /// Set the `hybrid` near-tier capacity (64 B lines) for every cell.
+    /// `0` (the default) keeps the legacy `near_frac` coin-flip model.
+    pub fn near_capacity(mut self, lines: usize) -> Self {
+        self.near_capacity_lines = lines;
+        self
+    }
+
     pub fn len(&self) -> usize {
         self.benches.len()
             * self.configs.len()
@@ -209,6 +224,7 @@ impl SweepGrid {
                 let mut cfg = SimConfig::preset(config)
                     .ok_or_else(|| SessionError::UnknownConfig(config.clone()))?;
                 cfg.far.pool_policy = pool_policy;
+                cfg.far.near_capacity_lines = self.near_capacity_lines;
                 for &lat in &self.latencies_ns {
                     for sel in &self.variants {
                         for backend in &self.backends {
@@ -269,6 +285,15 @@ impl SweepGrid {
             h.write(b"pool_policy=");
             h.write(self.pool_policy.as_bytes());
         }
+        // Same non-default-only trick for the hybrid near-tier capacity:
+        // the default (0, the legacy coin-flip) never enters the hash, so
+        // every fingerprint minted before this refinement existed stays
+        // valid, and the flag is a no-op on hybrid-less grids.
+        if self.near_capacity_lines != 0 && self.sweeps_hybrid() {
+            h.write(&[0xFC]);
+            h.write(b"near_capacity=");
+            h.write(&(self.near_capacity_lines as u64).to_le_bytes());
+        }
         h.finish()
     }
 
@@ -279,25 +304,13 @@ impl SweepGrid {
             .iter()
             .any(|b| FarBackendKind::parse(b) == Some(FarBackendKind::Pooled))
     }
-}
 
-/// Minimal FNV-1a (no external hash crates in the offline image).
-struct Fnv(u64);
-
-impl Fnv {
-    fn new() -> Self {
-        Fnv(0xcbf2_9ce4_8422_2325)
-    }
-
-    fn write(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    }
-
-    fn finish(&self) -> u64 {
-        self.0
+    /// Whether any cell of this grid runs the `hybrid` backend (the only
+    /// backend the near-tier capacity can affect).
+    pub fn sweeps_hybrid(&self) -> bool {
+        self.backends
+            .iter()
+            .any(|b| FarBackendKind::parse(b) == Some(FarBackendKind::Hybrid))
     }
 }
 
@@ -474,6 +487,55 @@ mod tests {
         assert!(matches!(e, SessionError::UnknownPoolPolicy(_)));
         let msg = e.to_string();
         assert!(msg.contains("least-loaded") && msg.contains("round-robin"), "{msg}");
+    }
+
+    #[test]
+    fn near_capacity_refines_the_fingerprint_only_when_it_can_matter() {
+        // Explicit 0 IS the default: byte-identical grid and fingerprint,
+        // so every pre-existing v4 fingerprint stays valid.
+        let base = SweepGrid::paper(Scale::Test);
+        let zero = SweepGrid::paper(Scale::Test).near_capacity(0);
+        assert_eq!(base, zero);
+        assert_eq!(base.fingerprint(), zero.fingerprint());
+        // On a grid without the hybrid backend the capacity cannot change
+        // any row, so the fingerprint must not fork.
+        let no_hybrid = SweepGrid::paper(Scale::Test).near_capacity(4096);
+        assert_eq!(base.fingerprint(), no_hybrid.fingerprint());
+        // With hybrid swept, non-default capacities refine the fingerprint
+        // and distinct capacities get distinct fingerprints.
+        let hybrid = SweepGrid::paper(Scale::Test).backend("hybrid");
+        let cap4k = SweepGrid::paper(Scale::Test).backend("hybrid").near_capacity(4096);
+        let cap64 = SweepGrid::paper(Scale::Test).backend("hybrid").near_capacity(64);
+        assert_ne!(hybrid.fingerprint(), cap4k.fingerprint());
+        assert_ne!(cap4k.fingerprint(), cap64.fingerprint());
+    }
+
+    #[test]
+    fn near_capacity_applies_to_every_request() {
+        let g = SweepGrid::new(Scale::Test)
+            .benches(["gups"])
+            .configs(["baseline"])
+            .latencies_ns([100.0])
+            .backends(["hybrid"])
+            .near_capacity(256);
+        let reqs = g.requests().unwrap();
+        assert!(reqs.iter().all(|r| r.config().far.near_capacity_lines == 256));
+        // Default grids keep the legacy coin-flip (capacity 0).
+        let reqs = SweepGrid::paper(Scale::Test).requests().unwrap();
+        assert!(reqs.iter().all(|r| r.config().far.near_capacity_lines == 0));
+    }
+
+    #[test]
+    fn adaptive_pool_policy_is_a_valid_refinement() {
+        let pooled = SweepGrid::paper(Scale::Test).backend("pooled");
+        let adaptive = SweepGrid::paper(Scale::Test).backend("pooled").pool_policy("adaptive");
+        assert_ne!(pooled.fingerprint(), adaptive.fingerprint());
+        assert!(adaptive.requests().is_ok());
+        // Alias spelling canonicalizes like the others.
+        assert_eq!(
+            SweepGrid::paper(Scale::Test).backend("pooled").pool_policy("adapt"),
+            adaptive
+        );
     }
 
     #[test]

@@ -1,0 +1,578 @@
+//! The metric schema: one ordered, typed column table driving every CSV
+//! the crate emits.
+//!
+//! Historically `RunResult` was a fixed 14-field struct with a hand-rolled
+//! CSV: adding a metric meant coordinated edits to `session/mod.rs`,
+//! `session/cache.rs`, `report/mod.rs`, and every test fixture — so the
+//! scenario stats the backends already produced (`near_hits`,
+//! `pool_congestion`, ...) never reached reports. This module replaces
+//! that with a schema:
+//!
+//! * [`CORE_COLUMNS`] — the key + core metric columns (exactly the v3
+//!   cache row, in order), each a [`CoreDef`] with a stable name, unit,
+//!   type, and typed accessors into [`RunResult`].
+//! * Scenario columns — per-backend diagnostics, defined once in
+//!   [`crate::stats::schema::SCENARIO_COLUMNS`] and folded in here.
+//! * [`MetricSet`] — one run's record: every schema column's [`Value`] in
+//!   schema order. [`RunResult`] is the typed view over it
+//!   ([`MetricSet::of`] / [`MetricSet::to_run_result`] convert losslessly,
+//!   bit-exactly for floats).
+//! * [`Selection`] — the `--columns core|backend|all|<comma-list>` report
+//!   selector. Key columns are always included so rows stay identifiable;
+//!   `core` reproduces the v3 row layout byte-for-byte.
+//! * [`schema_hash`] — FNV-1a over [`schema_descriptor`], stored in every
+//!   v4 sweep-cache header so schema drift invalidates stale files with a
+//!   migration error instead of misparsing them.
+//!
+//! Adding a *scenario* metric is a table edit in `stats::schema` plus the
+//! backend that produces it; adding a *core* metric is a `RunResult` field
+//! plus one [`CoreDef`] row here. Everything downstream — cache format,
+//! column selection, report CSVs, the schema hash — follows from the
+//! table.
+
+use crate::session::RunResult;
+use crate::stats::schema::{ScenarioCol, SCENARIO_COLUMNS};
+use crate::util::Fnv;
+
+/// A column's value type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ColType {
+    Str = 0,
+    U64 = 1,
+    F64 = 2,
+}
+
+/// Which selection group a column belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ColGroup {
+    /// Row identity (bench/config/backend/variant/latency): always emitted.
+    Key = 0,
+    /// The paper's core metrics (the v3 row body).
+    Core = 1,
+    /// Per-backend scenario diagnostics.
+    Scenario = 2,
+}
+
+/// One typed cell. Floats serialize with `{}` (Rust's shortest
+/// representation that round-trips exactly), keeping cached and freshly
+/// simulated rows byte-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    U64(u64),
+    F64(f64),
+}
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s}"),
+            Value::U64(v) => write!(f, "{v}"),
+            Value::F64(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+impl Value {
+    pub fn ty(&self) -> ColType {
+        match self {
+            Value::Str(_) => ColType::Str,
+            Value::U64(_) => ColType::U64,
+            Value::F64(_) => ColType::F64,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::U64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F64(v) => Some(*v),
+            _ => None,
+        }
+    }
+}
+
+/// Descriptor of one key/core column: stable CSV name, unit, type, group,
+/// and the typed accessors tying it to [`RunResult`].
+pub struct CoreDef {
+    pub name: &'static str,
+    pub unit: &'static str,
+    pub ty: ColType,
+    pub group: ColGroup,
+    get: fn(&RunResult) -> Value,
+    set: fn(&mut RunResult, Value),
+}
+
+macro_rules! str_col {
+    ($name:literal, $field:ident) => {
+        CoreDef {
+            name: $name,
+            unit: "",
+            ty: ColType::Str,
+            group: ColGroup::Key,
+            get: |r| Value::Str(r.$field.clone()),
+            set: |r, v| {
+                if let Value::Str(s) = v {
+                    r.$field = s;
+                }
+            },
+        }
+    };
+}
+
+macro_rules! u64_col {
+    ($name:literal, $unit:literal, $field:ident) => {
+        CoreDef {
+            name: $name,
+            unit: $unit,
+            ty: ColType::U64,
+            group: ColGroup::Core,
+            get: |r| Value::U64(r.$field),
+            set: |r, v| {
+                if let Value::U64(x) = v {
+                    r.$field = x;
+                }
+            },
+        }
+    };
+}
+
+macro_rules! f64_col {
+    ($name:literal, $unit:literal, $group:expr, $field:ident) => {
+        CoreDef {
+            name: $name,
+            unit: $unit,
+            ty: ColType::F64,
+            group: $group,
+            get: |r| Value::F64(r.$field),
+            set: |r, v| {
+                if let Value::F64(x) = v {
+                    r.$field = x;
+                }
+            },
+        }
+    };
+}
+
+/// Key + core metric columns — exactly the v3 cache row, in order. The
+/// `core` selection emits these and nothing else, so default report rows
+/// stay byte-identical to the pre-schema format.
+pub const CORE_COLUMNS: &[CoreDef] = &[
+    str_col!("bench", bench),
+    str_col!("config", config),
+    str_col!("backend", backend),
+    str_col!("variant", variant),
+    f64_col!("latency_ns", "ns", ColGroup::Key, latency_ns),
+    u64_col!("measured_cycles", "cycles", measured_cycles),
+    u64_col!("total_cycles", "cycles", total_cycles),
+    u64_col!("insts", "insts", insts),
+    f64_col!("ipc", "insts/cycle", ColGroup::Core, ipc),
+    f64_col!("mlp", "reqs", ColGroup::Core, mlp),
+    u64_col!("peak_inflight", "reqs", peak_inflight),
+    f64_col!("dynamic_uj", "uJ", ColGroup::Core, dynamic_uj),
+    f64_col!("static_uj", "uJ", ColGroup::Core, static_uj),
+    f64_col!("disambig_frac", "frac", ColGroup::Core, disambig_frac),
+];
+
+/// Handle on one schema column (key/core or scenario).
+#[derive(Clone, Copy)]
+pub enum Column {
+    Core(&'static CoreDef),
+    Scenario(ScenarioCol),
+}
+
+impl Column {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Column::Core(d) => d.name,
+            Column::Scenario(c) => c.def().name,
+        }
+    }
+
+    pub fn unit(&self) -> &'static str {
+        match self {
+            Column::Core(d) => d.unit,
+            Column::Scenario(c) => c.def().unit,
+        }
+    }
+
+    pub fn ty(&self) -> ColType {
+        match self {
+            Column::Core(d) => d.ty,
+            Column::Scenario(_) => ColType::U64,
+        }
+    }
+
+    pub fn group(&self) -> ColGroup {
+        match self {
+            Column::Core(d) => d.group,
+            Column::Scenario(_) => ColGroup::Scenario,
+        }
+    }
+
+    /// This column's value on `r`.
+    pub fn value(&self, r: &RunResult) -> Value {
+        match self {
+            Column::Core(d) => (d.get)(r),
+            Column::Scenario(c) => Value::U64(r.scenario.get(*c)),
+        }
+    }
+
+    fn set(&self, r: &mut RunResult, v: Value) {
+        match self {
+            Column::Core(d) => (d.set)(r, v),
+            Column::Scenario(c) => {
+                if let Value::U64(x) = v {
+                    r.scenario.set(*c, x);
+                }
+            }
+        }
+    }
+}
+
+/// Every schema column, in stable order (key + core, then scenario).
+pub fn columns() -> impl Iterator<Item = Column> {
+    CORE_COLUMNS
+        .iter()
+        .map(Column::Core)
+        .chain(SCENARIO_COLUMNS.iter().map(|d| Column::Scenario(d.col)))
+}
+
+/// Total column count.
+pub fn num_columns() -> usize {
+    CORE_COLUMNS.len() + SCENARIO_COLUMNS.len()
+}
+
+/// Look a column up by its stable CSV name.
+pub fn find(name: &str) -> Option<Column> {
+    columns().find(|c| c.name() == name)
+}
+
+/// All column names, schema order (for error messages and docs).
+pub fn column_names() -> Vec<&'static str> {
+    columns().map(|c| c.name()).collect()
+}
+
+/// The canonical human-readable schema descriptor: one `name,unit,ty,group`
+/// line per column. [`schema_hash`] is FNV-1a over this text, and
+/// `rust/tests/golden/metric_schema.txt` pins it — any schema drift
+/// without a deliberate golden-file (version) bump fails the build.
+pub fn schema_descriptor() -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    for c in columns() {
+        writeln!(s, "{},{},{},{}", c.name(), c.unit(), c.ty() as u8, c.group() as u8).unwrap();
+    }
+    s
+}
+
+/// Stable hash of the schema (stored in every v4 sweep-cache header).
+pub fn schema_hash() -> u64 {
+    let mut h = Fnv::new();
+    h.write(schema_descriptor().as_bytes());
+    h.finish()
+}
+
+/// A `--columns` selection. Key columns are always included so every
+/// emitted row stays identifiable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Selection {
+    /// Key + core metrics — the v3 row layout, byte-identical.
+    Core,
+    /// Key + per-backend scenario columns.
+    Backend,
+    /// Every schema column.
+    All,
+    /// Key + the named entries (schema order, duplicates ignored). An
+    /// entry is a column name or one of the group presets — so
+    /// `core,near_hits` is the core layout plus one scenario column.
+    Custom(Vec<String>),
+}
+
+impl Selection {
+    /// Parse a `--columns` argument: `core`, `backend`, `all`, or a
+    /// comma-separated list of column names and/or those presets.
+    /// Unknown names error naming every valid column.
+    pub fn parse(s: &str) -> Result<Selection, String> {
+        match s {
+            "core" => Ok(Selection::Core),
+            "backend" => Ok(Selection::Backend),
+            "all" => Ok(Selection::All),
+            list => {
+                let names: Vec<String> = list
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|p| !p.is_empty())
+                    .map(String::from)
+                    .collect();
+                if names.is_empty() {
+                    return Err(
+                        "--columns: expected core|backend|all or a comma-separated column list"
+                            .into(),
+                    );
+                }
+                for n in &names {
+                    let is_preset = matches!(n.as_str(), "core" | "backend" | "all");
+                    if !is_preset && find(n).is_none() {
+                        return Err(format!(
+                            "--columns: unknown column '{n}' (valid: core, backend, all, {})",
+                            column_names().join(", ")
+                        ));
+                    }
+                }
+                Ok(Selection::Custom(names))
+            }
+        }
+    }
+
+    fn selects(&self, c: &Column) -> bool {
+        if c.group() == ColGroup::Key {
+            return true;
+        }
+        match self {
+            Selection::Core => c.group() == ColGroup::Core,
+            Selection::Backend => c.group() == ColGroup::Scenario,
+            Selection::All => true,
+            Selection::Custom(names) => names.iter().any(|n| match n.as_str() {
+                "core" => c.group() == ColGroup::Core,
+                "backend" => c.group() == ColGroup::Scenario,
+                "all" => true,
+                name => name == c.name(),
+            }),
+        }
+    }
+
+    /// The selected columns, in schema order.
+    pub fn columns(&self) -> Vec<Column> {
+        columns().filter(|c| self.selects(c)).collect()
+    }
+}
+
+/// CSV column header for a selection.
+pub fn csv_header(sel: &Selection) -> String {
+    sel.columns().iter().map(|c| c.name()).collect::<Vec<_>>().join(",")
+}
+
+/// One result's CSV row over a precomputed column list. When emitting
+/// many rows, hoist `sel.columns()` once per file and use this directly.
+pub fn csv_row_with(cols: &[Column], r: &RunResult) -> String {
+    cols.iter().map(|c| c.value(r).to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// One result's CSV row under a selection.
+pub fn csv_row(r: &RunResult, sel: &Selection) -> String {
+    csv_row_with(&sel.columns(), r)
+}
+
+/// One run's schema-ordered record: every column's value. [`RunResult`]
+/// is the typed view over this record; the two convert losslessly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricSet {
+    values: Vec<Value>,
+}
+
+impl MetricSet {
+    /// Snapshot `r` into a schema-ordered record.
+    pub fn of(r: &RunResult) -> Self {
+        Self { values: columns().map(|c| c.value(r)).collect() }
+    }
+
+    /// Value of the named column, if it exists.
+    pub fn value(&self, name: &str) -> Option<&Value> {
+        columns().position(|c| c.name() == name).map(|i| &self.values[i])
+    }
+
+    /// All values in schema order.
+    pub fn values(&self) -> &[Value] {
+        &self.values
+    }
+
+    /// Rebuild the typed view. Lossless: every float's exact bit pattern
+    /// and every counter survive `of` -> `to_run_result`.
+    pub fn to_run_result(&self) -> RunResult {
+        let mut r = RunResult::default();
+        for (c, v) in columns().zip(self.values.iter()) {
+            c.set(&mut r, v.clone());
+        }
+        r
+    }
+
+    /// Serialize the selected columns. `values` is already in schema
+    /// order, so this is the same filter [`Selection::columns`] applies.
+    pub fn csv_row(&self, sel: &Selection) -> String {
+        columns()
+            .zip(self.values.iter())
+            .filter(|(c, _)| sel.selects(c))
+            .map(|(_, v)| v.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Parse one full-schema CSV row (every column, schema order). Strict:
+    /// field-count or type mismatches reject the row.
+    pub fn parse_csv_row(line: &str) -> Result<MetricSet, String> {
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() != num_columns() {
+            return Err(format!(
+                "expected {} fields, got {} in '{line}'",
+                num_columns(),
+                fields.len()
+            ));
+        }
+        let mut values = Vec::with_capacity(fields.len());
+        for (c, f) in columns().zip(fields) {
+            values.push(match c.ty() {
+                ColType::Str => Value::Str(f.to_string()),
+                ColType::U64 => Value::U64(
+                    f.parse().map_err(|_| format!("bad integer '{f}' in '{line}'"))?,
+                ),
+                ColType::F64 => Value::F64(
+                    f.parse().map_err(|_| format!("bad number '{f}' in '{line}'"))?,
+                ),
+            });
+        }
+        Ok(MetricSet { values })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::schema::ScenarioStats;
+
+    fn sample() -> RunResult {
+        RunResult {
+            bench: "gups".into(),
+            config: "amu".into(),
+            backend: "hybrid".into(),
+            variant: "amu".into(),
+            latency_ns: 1000.0,
+            measured_cycles: 123_456,
+            total_cycles: 200_000,
+            insts: 98_765,
+            ipc: 0.123_456_789_012_345,
+            mlp: 37.25,
+            peak_inflight: 142,
+            dynamic_uj: 1.0 / 3.0,
+            static_uj: 2.5e-7,
+            disambig_frac: 0.087_654_321,
+            scenario: ScenarioStats::default()
+                .with(ScenarioCol::NearHits, 77)
+                .with(ScenarioCol::NearEvictions, 3)
+                .with(ScenarioCol::PoolCongestion, 9),
+        }
+    }
+
+    #[test]
+    fn schema_matches_the_golden_descriptor() {
+        // Schema drift without a deliberate version bump (updating the
+        // golden file and, for layout changes, the cache version) must
+        // fail the build. CI additionally diffs the emitted CSV header
+        // against golden/columns_all_header.txt.
+        assert_eq!(
+            schema_descriptor(),
+            include_str!("../../tests/golden/metric_schema.txt"),
+            "metric schema drifted: update rust/tests/golden/metric_schema.txt \
+             and columns_all_header.txt deliberately (and bump the cache \
+             version if the row layout changed)"
+        );
+        assert_eq!(
+            format!("{}\n", csv_header(&Selection::All)),
+            include_str!("../../tests/golden/columns_all_header.txt")
+        );
+    }
+
+    #[test]
+    fn core_selection_is_the_v3_row_layout() {
+        assert_eq!(
+            csv_header(&Selection::Core),
+            "bench,config,backend,variant,latency_ns,measured_cycles,total_cycles,\
+             insts,ipc,mlp,peak_inflight,dynamic_uj,static_uj,disambig_frac"
+        );
+        // Core columns are a prefix of the full schema, so `core` rows are
+        // prefixes of `all` rows (shared columns agree byte-for-byte).
+        let r = sample();
+        let all = csv_row(&r, &Selection::All);
+        let core = csv_row(&r, &Selection::Core);
+        assert!(all.starts_with(&core), "core must prefix all:\n{core}\n{all}");
+        assert!(csv_header(&Selection::All).starts_with(&csv_header(&Selection::Core)));
+    }
+
+    #[test]
+    fn backend_selection_keeps_keys_and_scenario_columns() {
+        let h = csv_header(&Selection::Backend);
+        assert_eq!(
+            h,
+            "bench,config,backend,variant,latency_ns,near_hits,near_evictions,\
+             pool_congestion,pool_switches"
+        );
+        let row = csv_row(&sample(), &Selection::Backend);
+        assert_eq!(row, "gups,amu,hybrid,amu,1000,77,3,9,0");
+    }
+
+    #[test]
+    fn custom_selection_validates_names_and_keeps_schema_order() {
+        let sel = Selection::parse("mlp,near_hits").unwrap();
+        assert_eq!(
+            csv_header(&sel),
+            "bench,config,backend,variant,latency_ns,mlp,near_hits"
+        );
+        let e = Selection::parse("mlp,warp9").unwrap_err();
+        assert!(e.contains("warp9") && e.contains("near_hits"), "{e}");
+        assert_eq!(Selection::parse("core").unwrap(), Selection::Core);
+        assert_eq!(Selection::parse("all").unwrap(), Selection::All);
+        assert_eq!(Selection::parse("backend").unwrap(), Selection::Backend);
+        // Group presets compose inside a list: core layout + one scenario
+        // column.
+        let sel = Selection::parse("core,near_hits").unwrap();
+        assert_eq!(
+            csv_header(&sel),
+            format!("{},near_hits", csv_header(&Selection::Core))
+        );
+    }
+
+    #[test]
+    fn metric_set_round_trips_bit_exactly() {
+        let r = sample();
+        let m = MetricSet::of(&r);
+        assert_eq!(m.to_run_result(), r);
+        let line = m.csv_row(&Selection::All);
+        assert_eq!(line, csv_row(&r, &Selection::All));
+        let back = MetricSet::parse_csv_row(&line).unwrap().to_run_result();
+        assert_eq!(back, r);
+        assert_eq!(back.ipc.to_bits(), r.ipc.to_bits());
+        assert_eq!(back.scenario.get(ScenarioCol::NearHits), 77);
+        assert_eq!(m.value("mlp"), Some(&Value::F64(37.25)));
+        assert_eq!(m.value("near_hits"), Some(&Value::U64(77)));
+        assert_eq!(m.value("warp9"), None);
+    }
+
+    #[test]
+    fn parse_rejects_wrong_arity_and_types() {
+        let r = sample();
+        let line = MetricSet::of(&r).csv_row(&Selection::All);
+        let truncated = line.rsplit_once(',').unwrap().0;
+        assert!(MetricSet::parse_csv_row(truncated).is_err());
+        let bad = line.replace("123456", "123xyz");
+        assert!(MetricSet::parse_csv_row(&bad).is_err());
+    }
+
+    #[test]
+    fn schema_hash_tracks_the_descriptor() {
+        let mut h = Fnv::new();
+        h.write(schema_descriptor().as_bytes());
+        assert_eq!(schema_hash(), h.finish());
+        // Sanity: names are unique across the whole schema.
+        let names = column_names();
+        for n in &names {
+            assert_eq!(names.iter().filter(|m| m == &n).count(), 1, "duplicate column {n}");
+        }
+    }
+}

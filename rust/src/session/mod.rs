@@ -15,8 +15,13 @@
 //! * [`executor`] — [`Session`]: fans runs out across scoped worker threads
 //!   with deterministic row ordering and a per-run-keyed, resumable CSV
 //!   cache.
-//! * [`cache`] — the fingerprint-headed CSV format (bit-exact float round
-//!   trips, strict rejection of corrupt files).
+//! * [`metrics`] — the versioned metric schema: ordered, typed column
+//!   descriptors (core + per-backend scenario columns), the [`MetricSet`]
+//!   record, and the `--columns` [`Selection`] every CSV is emitted
+//!   through.
+//! * [`cache`] — the fingerprint- and schema-hash-headed CSV format
+//!   (bit-exact float round trips, strict rejection of corrupt or
+//!   stale-schema files with a migration error).
 //!
 //! # Running one benchmark
 //!
@@ -60,19 +65,30 @@
 pub mod cache;
 pub mod executor;
 pub mod grid;
+pub mod metrics;
 pub mod registry;
 pub mod request;
 
 pub use executor::Session;
 pub use grid::{SweepGrid, VariantSel, PAPER_CONFIGS};
+pub use metrics::{MetricSet, Selection};
 pub use registry::Workload;
 pub use request::{RunRequest, RunRequestBuilder, SessionError};
 
 use crate::power::PowerBreakdown;
+use crate::stats::schema::ScenarioStats;
 use std::path::PathBuf;
 
 /// Metrics from one completed, validated simulation run.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `RunResult` is the *typed view* over the schema-ordered
+/// [`MetricSet`] record (see [`metrics`]): every field here backs a
+/// [`metrics::CORE_COLUMNS`] entry, and the per-backend [`ScenarioStats`]
+/// record backs the scenario columns. All CSV emission — the v4 sweep
+/// cache, `--columns` reports — goes through the schema, so adding a
+/// scenario metric is a schema-table edit, not a serialization change
+/// here.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunResult {
     pub bench: String,
     pub config: String,
@@ -90,6 +106,11 @@ pub struct RunResult {
     pub dynamic_uj: f64,
     pub static_uj: f64,
     pub disambig_frac: f64,
+    /// Per-backend scenario counters (near-tier hits/evictions, pool
+    /// congestion/policy switches, ...), one value per
+    /// [`crate::stats::schema::SCENARIO_COLUMNS`] entry. Zero for
+    /// backends without the mechanism.
+    pub scenario: ScenarioStats,
 }
 
 impl RunResult {
@@ -101,11 +122,24 @@ impl RunResult {
     pub fn total_uj(&self) -> f64 {
         self.dynamic_uj + self.static_uj
     }
+
+    /// This run's schema-ordered metric record (lossless snapshot).
+    pub fn metrics(&self) -> MetricSet {
+        MetricSet::of(self)
+    }
 }
 
 /// Where reports, sweep caches, and figure CSVs land.
+///
+/// Defaults to `<crate root>/results`; a non-empty `AMU_RESULTS_DIR`
+/// environment variable overrides it at *runtime* (CI artifact
+/// collection and sandboxed runs redirect output without rebuilding —
+/// the old compile-time-only `CARGO_MANIFEST_DIR` path could not).
 pub fn results_dir() -> PathBuf {
-    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    let d = match std::env::var_os("AMU_RESULTS_DIR") {
+        Some(p) if !p.is_empty() => PathBuf::from(p),
+        _ => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results"),
+    };
     std::fs::create_dir_all(&d).ok();
     d
 }

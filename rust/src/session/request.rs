@@ -103,6 +103,7 @@ impl RunRequest {
             latency_ns: None,
             backend: None,
             pool_policy: None,
+            near_capacity: None,
             no_jitter: false,
             scale: Scale::Test,
         }
@@ -174,6 +175,10 @@ impl RunRequest {
             dynamic_uj: p.dynamic_uj,
             static_uj: p.static_uj,
             disambig_frac: sim.stats.region_fraction(crate::stats::Region::Disambig),
+            // The backend's scenario record, straight into the result —
+            // one assignment regardless of how many columns the scenario
+            // schema grows.
+            scenario: sim.stats.scenario,
         })
     }
 }
@@ -188,6 +193,7 @@ pub struct RunRequestBuilder {
     latency_ns: Option<f64>,
     backend: Option<String>,
     pool_policy: Option<String>,
+    near_capacity: Option<usize>,
     no_jitter: bool,
     scale: Scale,
 }
@@ -238,6 +244,15 @@ impl RunRequestBuilder {
         self
     }
 
+    /// Override the `hybrid` backend's near-tier capacity in 64 B lines
+    /// (`0` = the legacy `near_frac` coin-flip). Without this, the
+    /// configuration's own `far.near_capacity_lines` is kept. Harmless
+    /// under non-hybrid backends.
+    pub fn near_capacity(mut self, lines: usize) -> Self {
+        self.near_capacity = Some(lines);
+        self
+    }
+
     /// Disable far-memory latency *variability* for A/B comparisons:
     /// zeroes the serial-link/pooled jitter fraction and the
     /// `distribution` backend's sigma/tail fraction (its samples collapse
@@ -274,6 +289,9 @@ impl RunRequestBuilder {
         if let Some(tag) = &self.pool_policy {
             cfg.far.pool_policy = PoolPolicy::parse(tag)
                 .ok_or_else(|| SessionError::UnknownPoolPolicy(tag.clone()))?;
+        }
+        if let Some(lines) = self.near_capacity {
+            cfg.far.near_capacity_lines = lines;
         }
         if self.no_jitter {
             cfg.far.jitter_frac = 0.0;
@@ -412,6 +430,39 @@ mod tests {
             .unwrap();
         assert_eq!(r.backend, "hybrid");
         assert!(r.measured_cycles > 0);
+    }
+
+    #[test]
+    fn near_capacity_override_applies_and_harvests_scenario_stats() {
+        use crate::stats::schema::ScenarioCol;
+        let r = RunRequest::bench("gups")
+            .backend("hybrid")
+            .near_capacity(16)
+            .latency_ns(500.0)
+            .scale(Scale::Test)
+            .build()
+            .unwrap();
+        assert_eq!(r.config().far.near_capacity_lines, 16);
+        let out = r.run().unwrap();
+        // The LRU capacity model counts hits/evictions, and the result
+        // carries them (the whole point of the schema-driven record).
+        let touched = out.scenario.get(ScenarioCol::NearHits)
+            + out.scenario.get(ScenarioCol::NearEvictions);
+        assert!(touched > 0, "hybrid LRU run must produce scenario stats: {:?}", out.scenario);
+        // Default: the config's own capacity (0 = coin-flip model).
+        let r = RunRequest::bench("gups").backend("hybrid").build().unwrap();
+        assert_eq!(r.config().far.near_capacity_lines, 0);
+    }
+
+    #[test]
+    fn serial_link_runs_report_zero_scenario_stats() {
+        use crate::stats::schema::ScenarioStats;
+        let out = RunRequest::bench("gups")
+            .latency_ns(300.0)
+            .scale(Scale::Test)
+            .run()
+            .unwrap();
+        assert_eq!(out.scenario, ScenarioStats::default());
     }
 
     #[test]

@@ -1397,11 +1397,10 @@ impl Simulator {
             }
         }
         // Harvest backend scenario counters (near-tier hits/evictions,
-        // pool congestion) now that the far data plane is quiescent.
-        let scenario = self.memsys.scenario_stats();
-        self.stats.near_hits = scenario.near_hits;
-        self.stats.near_evictions = scenario.near_evictions;
-        self.stats.pool_congestion = scenario.pool_congestion;
+        // pool congestion, policy switches) now that the far data plane is
+        // quiescent. One assignment regardless of how many columns the
+        // scenario schema grows.
+        self.stats.scenario = self.memsys.scenario_stats();
         Ok(SimResult {
             cycles: self.cycle,
             committed_insts: self.stats.insts_committed,

@@ -4,6 +4,14 @@
 //! Everything the report generators need (IPC, MLP, power inputs,
 //! disambiguation overhead) is collected here so the pipeline and memory
 //! models stay free of formatting concerns.
+//!
+//! Per-backend scenario counters are *schema-driven*: [`schema`] is the
+//! registry of scenario columns and [`schema::ScenarioStats`] the record
+//! harvested from the selected far-memory backend at the end of a run.
+
+pub mod schema;
+
+pub use schema::{ScenarioCol, ScenarioStats};
 
 /// Time-weighted average of a level signal (e.g. "requests in flight").
 /// `update` must be called with non-decreasing cycles.
@@ -169,14 +177,11 @@ pub struct Stats {
     pub far_reads: u64,
     pub far_writes: u64,
     pub far_bytes: u64,
-    // Far-memory scenario counters, harvested from the selected backend at
-    // the end of a run (zero for backends without the mechanism).
-    /// `hybrid`: accesses served by the near tier.
-    pub near_hits: u64,
-    /// `hybrid` (LRU capacity model): near-tier lines evicted.
-    pub near_evictions: u64,
-    /// `pooled`: requests delayed by a full channel queue.
-    pub pool_congestion: u64,
+    /// Far-memory scenario counters (near-tier hits/evictions, pool
+    /// congestion, policy switches, ...), harvested from the selected
+    /// backend at the end of a run. One value per [`schema::SCENARIO_COLUMNS`]
+    /// entry; backends without a mechanism report zero.
+    pub scenario: ScenarioStats,
     pub link_stall_cycles: u64,
     pub prefetches_issued: u64,
     pub prefetches_useful: u64,

@@ -1,0 +1,152 @@
+//! The scenario-metric schema: per-backend diagnostic columns.
+//!
+//! Every far-memory backend can export scenario counters (near-tier hits,
+//! pool congestion, ...) without a matching mechanism in the others. This
+//! module is the single registry of those columns: [`ScenarioCol`] names
+//! them, [`SCENARIO_COLUMNS`] carries their stable CSV name, unit, and
+//! producing backend, and [`ScenarioStats`] stores one value per column in
+//! schema order.
+//!
+//! **Adding a scenario metric is two adjacent edits in this file** — a
+//! [`ScenarioCol`] variant and its [`SCENARIO_COLUMNS`] row — plus the
+//! backend that produces it. The CSV schema, the v4 sweep cache, the
+//! `--columns` report selector, and the schema hash all derive from this
+//! table; nothing else needs to change (the cache schema hash changes
+//! automatically, invalidating stale files with a migration error).
+
+/// One per-backend scenario column, in stable schema order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioCol {
+    /// `hybrid`: accesses served by the near tier.
+    NearHits,
+    /// `hybrid` (LRU capacity model): near-tier lines evicted.
+    NearEvictions,
+    /// `pooled`: requests delayed by a full channel queue.
+    PoolCongestion,
+    /// `pooled`/`adaptive`: channel-policy switches (hash -> least-loaded)
+    /// triggered by observed congestion.
+    PoolSwitches,
+}
+
+/// Descriptor of one scenario column: stable CSV name, unit, and the
+/// backend that produces it (every other backend reports zero).
+pub struct ScenarioDef {
+    pub col: ScenarioCol,
+    pub name: &'static str,
+    pub unit: &'static str,
+    pub producer: &'static str,
+}
+
+/// The scenario column table — the single source of truth for per-backend
+/// metric columns. Order is the CSV column order.
+pub const SCENARIO_COLUMNS: &[ScenarioDef] = &[
+    ScenarioDef { col: ScenarioCol::NearHits, name: "near_hits", unit: "count", producer: "hybrid" },
+    ScenarioDef {
+        col: ScenarioCol::NearEvictions,
+        name: "near_evictions",
+        unit: "count",
+        producer: "hybrid",
+    },
+    ScenarioDef {
+        col: ScenarioCol::PoolCongestion,
+        name: "pool_congestion",
+        unit: "count",
+        producer: "pooled",
+    },
+    ScenarioDef {
+        col: ScenarioCol::PoolSwitches,
+        name: "pool_switches",
+        unit: "count",
+        producer: "pooled",
+    },
+];
+
+/// Number of scenario columns (sizes [`ScenarioStats`]).
+pub const NUM_SCENARIO_COLS: usize = SCENARIO_COLUMNS.len();
+
+impl ScenarioCol {
+    /// This column's position in schema order.
+    pub fn index(self) -> usize {
+        SCENARIO_COLUMNS
+            .iter()
+            .position(|d| d.col == self)
+            .expect("every ScenarioCol variant has a SCENARIO_COLUMNS row")
+    }
+
+    /// This column's schema descriptor.
+    pub fn def(self) -> &'static ScenarioDef {
+        &SCENARIO_COLUMNS[self.index()]
+    }
+}
+
+/// Backend scenario counters, one value per [`SCENARIO_COLUMNS`] entry in
+/// schema order. Harvested into [`crate::stats::Stats`] at the end of a
+/// run and carried on every `RunResult`; backends without a given
+/// mechanism report zero.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScenarioStats {
+    vals: [u64; NUM_SCENARIO_COLS],
+}
+
+impl ScenarioStats {
+    pub fn get(&self, c: ScenarioCol) -> u64 {
+        self.vals[c.index()]
+    }
+
+    pub fn set(&mut self, c: ScenarioCol, v: u64) {
+        self.vals[c.index()] = v;
+    }
+
+    /// Builder-style `set` for literal construction in backends and tests.
+    pub fn with(mut self, c: ScenarioCol, v: u64) -> Self {
+        self.set(c, v);
+        self
+    }
+
+    /// Values in schema order (parallel to [`SCENARIO_COLUMNS`]).
+    pub fn values(&self) -> &[u64; NUM_SCENARIO_COLS] {
+        &self.vals
+    }
+
+    /// Set by schema position (CSV parsing).
+    pub fn set_index(&mut self, i: usize, v: u64) {
+        self.vals[i] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_variant_has_a_table_row_and_stable_index() {
+        for (i, d) in SCENARIO_COLUMNS.iter().enumerate() {
+            assert_eq!(d.col.index(), i, "{}", d.name);
+            assert_eq!(d.col.def().name, d.name);
+        }
+        // Names are unique (CSV columns must not collide).
+        for a in SCENARIO_COLUMNS {
+            assert_eq!(
+                SCENARIO_COLUMNS.iter().filter(|b| b.name == a.name).count(),
+                1,
+                "duplicate scenario column '{}'",
+                a.name
+            );
+        }
+    }
+
+    #[test]
+    fn stats_get_set_round_trip() {
+        let s = ScenarioStats::default()
+            .with(ScenarioCol::NearHits, 7)
+            .with(ScenarioCol::PoolCongestion, 42);
+        assert_eq!(s.get(ScenarioCol::NearHits), 7);
+        assert_eq!(s.get(ScenarioCol::NearEvictions), 0);
+        assert_eq!(s.get(ScenarioCol::PoolCongestion), 42);
+        assert_eq!(s.values()[ScenarioCol::NearHits.index()], 7);
+        let mut t = ScenarioStats::default();
+        t.set_index(ScenarioCol::PoolCongestion.index(), 42);
+        t.set(ScenarioCol::NearHits, 7);
+        assert_eq!(s, t);
+    }
+}

@@ -5,6 +5,34 @@ pub mod cli;
 pub mod prng;
 pub mod toml_lite;
 
+/// Minimal FNV-1a 64-bit hasher (no external hash crates in the offline
+/// image). Used for sweep-grid fingerprints and the metric-schema hash —
+/// both stored in on-disk cache headers, so the function must stay stable.
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
 /// Geometric mean of positive values; `None` if empty or any non-positive.
 pub fn geomean(xs: &[f64]) -> Option<f64> {
     if xs.is_empty() || xs.iter().any(|&x| x <= 0.0) {
@@ -50,6 +78,18 @@ mod tests {
         assert_eq!(ns_to_cycles(1000.0, 3.0), 3000); // 1 us @3GHz
         assert!((cycles_to_us(3000, 3.0) - 1.0).abs() < 1e-12);
         assert_eq!(ns_to_cycles(100.0, 3.0), 300);
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(Fnv::new().finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = Fnv::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h = Fnv::new();
+        h.write(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //! sweep executor, cache resume/invalidation, and the determinism
 //! guarantee (`--jobs 1` vs `--jobs N` byte-identical CSV).
 
-use amu_sim::session::{cache, RunRequest, RunResult, Session, SessionError, SweepGrid};
+use amu_sim::session::{cache, RunRequest, RunResult, Selection, Session, SessionError, SweepGrid};
+use amu_sim::stats::schema::{ScenarioStats, SCENARIO_COLUMNS};
 use amu_sim::testing::{check, PropConfig};
 use amu_sim::workloads::Scale;
 use std::path::PathBuf;
@@ -75,7 +76,7 @@ fn sweep_is_deterministic_across_job_counts_for_every_backend() {
 /// runs the same check through the real binary).
 #[test]
 fn sweep_is_deterministic_across_job_counts_for_every_pool_policy() {
-    for policy in ["hash", "least-loaded", "round-robin"] {
+    for policy in ["hash", "least-loaded", "round-robin", "adaptive"] {
         let grid = SweepGrid::new(Scale::Test)
             .benches(["gups"])
             .configs(["baseline"])
@@ -237,6 +238,12 @@ fn prop_csv_round_trips_every_field_bit_exactly() {
             let dynamic_uj = frac(rng.next_u64()) * 1e-3;
             let static_uj = frac(rng.next_u64()) * 1e6;
             let disambig_frac = frac(rng.next_u64());
+            // Every scenario (u64) column gets a random value too, so the
+            // round trip covers the schema's full column set.
+            let mut scenario = ScenarioStats::default();
+            for d in SCENARIO_COLUMNS {
+                scenario.set(d.col, rng.next_u64() >> rng.below(40));
+            }
             RunResult {
                 bench: "gups".into(),
                 config: "cxl-ideal".into(),
@@ -252,6 +259,7 @@ fn prop_csv_round_trips_every_field_bit_exactly() {
                 dynamic_uj,
                 static_uj,
                 disambig_frac,
+                scenario,
             }
         },
         |r| {
@@ -283,6 +291,105 @@ fn prop_csv_round_trips_every_field_bit_exactly() {
             Ok(())
         },
     );
+}
+
+/// A v3-era cache file (pre-schema, 14-field rows) is rejected with a
+/// migration error naming the regeneration command, and the sweep
+/// recovers by re-simulating and rewriting the file as v4.
+#[test]
+fn v3_cache_is_rejected_with_migration_error_and_regenerated_as_v4() {
+    let v3 = "# amu-sim sweep cache v3 grid=0123456789abcdef\n\
+              bench,config,backend,variant,latency_ns,measured_cycles,total_cycles,\
+              insts,ipc,mlp,peak_inflight,dynamic_uj,static_uj,disambig_frac\n\
+              gups,baseline,serial-link,sync,300,10,20,30,0.5,1.5,4,0.1,0.2,0.3\n";
+    let e = cache::parse_csv(v3).unwrap_err();
+    assert!(e.contains("v3"), "{e}");
+    assert!(e.contains("amu-sim sweep"), "must name the regeneration command: {e}");
+
+    let path = temp_cache("v3_migrate");
+    std::fs::write(&path, v3).unwrap();
+    let grid = SweepGrid::new(Scale::Test)
+        .benches(["gups"])
+        .configs(["baseline"])
+        .latencies_ns([300.0]);
+    let rows = Session::new().quiet(true).cache_path(path.clone()).sweep(&grid).unwrap();
+    assert_eq!(rows.len(), 1, "sweep must recover by re-simulating");
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(
+        text.starts_with("# amu-sim sweep cache v4 grid="),
+        "stale v3 file must be rewritten as v4: {}",
+        text.lines().next().unwrap()
+    );
+    let (fp, reloaded) = cache::parse_csv(&text).unwrap();
+    assert_eq!(fp, grid.fingerprint());
+    assert_eq!(reloaded, rows);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// End-to-end through the real binary: `AMU_RESULTS_DIR` redirects the
+/// default sweep-cache location at runtime, and `--columns all --out`
+/// emits the schema-selected CSV whose header matches the golden file.
+#[test]
+fn binary_honors_results_dir_override_and_emits_selected_columns() {
+    let dir = std::env::temp_dir()
+        .join(format!("amu_sim_results_override_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let cols_path = dir.join("cols.csv");
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_amu-sim"))
+        .env("AMU_RESULTS_DIR", &dir)
+        .args([
+            "sweep",
+            "--benches",
+            "gups",
+            "--configs",
+            "baseline",
+            "--latencies-ns",
+            "300",
+            "--scale",
+            "test",
+            "--jobs",
+            "1",
+            "--quiet",
+            "--columns",
+            "all",
+            "--out",
+            cols_path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn amu-sim");
+    assert!(
+        out.status.success(),
+        "sweep failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // The default cache landed under the override, not under results/.
+    let grid = SweepGrid::new(Scale::Test)
+        .benches(["gups"])
+        .configs(["baseline"])
+        .latencies_ns([300.0]);
+    let cache_file = dir.join(format!("sweep_test_{:016x}.csv", grid.fingerprint()));
+    assert!(
+        cache_file.exists(),
+        "default cache must honor AMU_RESULTS_DIR (expected {})",
+        cache_file.display()
+    );
+    let (fp, rows) = cache::parse_csv(&std::fs::read_to_string(&cache_file).unwrap()).unwrap();
+    assert_eq!(fp, grid.fingerprint());
+    assert_eq!(rows.len(), 1);
+    // The --columns all CSV has the golden header and one data row whose
+    // core prefix matches the `core` selection of the cached row.
+    let cols = std::fs::read_to_string(&cols_path).unwrap();
+    let mut lines = cols.lines();
+    assert_eq!(
+        format!("{}\n", lines.next().unwrap()),
+        include_str!("golden/columns_all_header.txt")
+    );
+    let all_row = lines.next().unwrap();
+    let core_row = amu_sim::session::metrics::csv_row(&rows[0], &Selection::Core);
+    assert!(all_row.starts_with(&core_row), "core must prefix all:\n{core_row}\n{all_row}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// A failing cell surfaces as an error from the executor, not a panic.

@@ -56,19 +56,27 @@ fn hybrid_near_tier_stats_are_harvested_into_run_stats() {
     cfg.far.backend = FarBackendKind::Hybrid;
     cfg.far.jitter_frac = 0.0;
     cfg.far.near_capacity_lines = 2;
+    use amu_sim::stats::ScenarioCol;
     let sim = build("gups", &cfg, Variant::Sync, Scale::Test).run(&cfg).unwrap();
     assert!(
-        sim.stats.near_evictions > 0,
+        sim.stats.scenario.get(ScenarioCol::NearEvictions) > 0,
         "a 2-line near tier must evict under GUPS: {:?}",
-        sim.stats.near_evictions
+        sim.stats.scenario
     );
     // The legacy coin-flip default reports hits but never evictions.
     let mut cfg = SimConfig::baseline().with_far_latency_ns(300.0);
     cfg.far.backend = FarBackendKind::Hybrid;
     cfg.far.jitter_frac = 0.0;
     let sim = build("gups", &cfg, Variant::Sync, Scale::Test).run(&cfg).unwrap();
-    assert!(sim.stats.near_hits > 0, "near_frac=0.5 must land some near hits");
-    assert_eq!(sim.stats.near_evictions, 0, "coin-flip model has no occupancy");
+    assert!(
+        sim.stats.scenario.get(ScenarioCol::NearHits) > 0,
+        "near_frac=0.5 must land some near hits"
+    );
+    assert_eq!(
+        sim.stats.scenario.get(ScenarioCol::NearEvictions),
+        0,
+        "coin-flip model has no occupancy"
+    );
 }
 
 #[test]
