@@ -217,6 +217,69 @@ impl PoolPolicy {
     }
 }
 
+/// Per-tenant QoS arbitration policy for a *shared* far-memory backend.
+///
+/// Multi-tenant runs (`amu-sim mtrun`) point every tenant's simulator at
+/// one shared `pooled`/`hybrid` data plane; this policy decides how the
+/// shared arbitration point admits competing request streams. Selected
+/// per run via `far.qos_policy` and sweepable as a fingerprinted grid
+/// refinement exactly like `far.pool_policy` (the default keeps
+/// historical sweep fingerprints unchanged). In single-tenant runs the
+/// policy still applies — with one tenant `fair-share`/`priority` degrade
+/// to pure pass-through pacing, while `throttle` can rate-limit a solo
+/// stream that congests its own backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QosPolicyKind {
+    /// No arbitration: requests reach the shared backend unmodified.
+    #[default]
+    None,
+    /// Weighted fair sharing: each tenant's admissions are paced so its
+    /// long-run bandwidth share converges to `weight / total_weight`.
+    FairShare,
+    /// Strict admission classes (high > normal > low): a request waits
+    /// until every higher class's outstanding service window has drained.
+    Priority,
+    /// Adaptive per-tenant rate limiting generalizing the pooled
+    /// `adaptive` policy: a tenant whose requests keep observing backend
+    /// congestion (over a `far.pool_adapt_window` sliding window, trigger
+    /// fraction `far.pool_adapt_threshold`) gets a minimum inter-request
+    /// gap imposed. Deterministic — driven only by the request stream.
+    Throttle,
+}
+
+impl QosPolicyKind {
+    pub const ALL: &'static [QosPolicyKind] = &[
+        QosPolicyKind::None,
+        QosPolicyKind::FairShare,
+        QosPolicyKind::Priority,
+        QosPolicyKind::Throttle,
+    ];
+
+    /// Stable spelling used in config files, sweep fingerprints, and the CLI.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            QosPolicyKind::None => "none",
+            QosPolicyKind::FairShare => "fair-share",
+            QosPolicyKind::Priority => "priority",
+            QosPolicyKind::Throttle => "throttle",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QosPolicyKind> {
+        match s {
+            "none" | "off" => Some(QosPolicyKind::None),
+            "fair-share" | "fair_share" | "fair" | "fs" => Some(QosPolicyKind::FairShare),
+            "priority" | "prio" | "strict" => Some(QosPolicyKind::Priority),
+            "throttle" | "rate-limit" | "rate_limit" | "limit" => Some(QosPolicyKind::Throttle),
+            _ => None,
+        }
+    }
+
+    pub fn names() -> &'static [&'static str] {
+        &["none", "fair-share", "priority", "throttle"]
+    }
+}
+
 /// Latency distribution family for [`FarBackendKind::Distribution`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum LatencyDist {
@@ -281,6 +344,11 @@ pub struct FarMemConfig {
     pub pool_adapt_threshold: f64,
     /// `pooled`/`adaptive`: sliding window length in requests.
     pub pool_adapt_window: usize,
+    /// Shared-backend QoS arbitration policy (`none` default). Only
+    /// meaningful for `pooled`/`hybrid` backends (the ones `mtrun` can
+    /// share between tenants); `throttle` reuses the adaptive knobs
+    /// (`pool_adapt_threshold`/`pool_adapt_window`) per tenant.
+    pub qos_policy: QosPolicyKind,
     /// `distribution`: latency distribution family.
     pub dist: LatencyDist,
     /// `distribution`/lognormal: shape parameter sigma (0 = deterministic).
@@ -316,6 +384,7 @@ impl Default for FarMemConfig {
             pool_policy: PoolPolicy::Hash,
             pool_adapt_threshold: 0.5,
             pool_adapt_window: 64,
+            qos_policy: QosPolicyKind::None,
             dist: LatencyDist::Lognormal,
             dist_sigma: 0.5,
             dist_tail_frac: 0.05,
@@ -610,8 +679,40 @@ impl SimConfig {
                 })?;
                 true
             }
-            "far.pool_adapt_threshold" => set_f!(self.far.pool_adapt_threshold),
-            "far.pool_adapt_window" => set_u!(self.far.pool_adapt_window),
+            "far.pool_adapt_threshold" => {
+                let v = doc
+                    .get_f64(key)
+                    .ok_or_else(|| format!("'{key}' must be a number"))?;
+                if !(0.0..=1.0).contains(&v) || !v.is_finite() {
+                    return Err(format!(
+                        "far.pool_adapt_threshold {v} out of range: must be in [0, 1]"
+                    ));
+                }
+                self.far.pool_adapt_threshold = v;
+                true
+            }
+            "far.pool_adapt_window" => {
+                let v = doc
+                    .get_u64(key)
+                    .ok_or_else(|| format!("'{key}' must be an integer"))?;
+                if v == 0 {
+                    return Err(
+                        "far.pool_adapt_window 0 out of range: must be >= 1 request".into()
+                    );
+                }
+                self.far.pool_adapt_window = v as usize;
+                true
+            }
+            "far.qos_policy" => {
+                let s = doc.get_str(key).ok_or("'far.qos_policy' must be a string")?;
+                self.far.qos_policy = QosPolicyKind::parse(s).ok_or_else(|| {
+                    format!(
+                        "unknown far.qos_policy '{s}' (valid: {})",
+                        QosPolicyKind::names().join(", ")
+                    )
+                })?;
+                true
+            }
             "far.dist" => {
                 let s = doc.get_str(key).ok_or("'far.dist' must be a string")?;
                 self.far.dist = LatencyDist::parse(s)
@@ -666,6 +767,16 @@ impl SimConfig {
             // request departure (one-way propagation is added/2), which
             // would re-bias the mean the zero-mean scheme guarantees.
             return Err("far.jitter_frac must be in [0, 0.5]".into());
+        }
+        if self.far.qos_policy == QosPolicyKind::Throttle {
+            // Throttle reuses the adaptive knobs per tenant, regardless of
+            // which shareable backend is underneath.
+            if !(self.far.pool_adapt_threshold > 0.0 && self.far.pool_adapt_threshold <= 1.0) {
+                return Err("throttle qos policy: pool_adapt_threshold must be in (0, 1]".into());
+            }
+            if self.far.pool_adapt_window == 0 {
+                return Err("throttle qos policy: pool_adapt_window must be >= 1".into());
+            }
         }
         match self.far.backend {
             FarBackendKind::Pooled => {
@@ -893,6 +1004,73 @@ mod tests {
         let d = FarMemConfig::default();
         assert!(d.pool_adapt_threshold > 0.0 && d.pool_adapt_threshold <= 1.0);
         assert!(d.pool_adapt_window >= 1);
+    }
+
+    #[test]
+    fn qos_policy_tags_round_trip() {
+        for &p in QosPolicyKind::ALL {
+            assert_eq!(QosPolicyKind::parse(p.tag()), Some(p));
+        }
+        assert_eq!(QosPolicyKind::parse("fair"), Some(QosPolicyKind::FairShare));
+        assert_eq!(QosPolicyKind::parse("fs"), Some(QosPolicyKind::FairShare));
+        assert_eq!(QosPolicyKind::parse("prio"), Some(QosPolicyKind::Priority));
+        assert_eq!(QosPolicyKind::parse("rate-limit"), Some(QosPolicyKind::Throttle));
+        assert_eq!(QosPolicyKind::parse("off"), Some(QosPolicyKind::None));
+        assert!(QosPolicyKind::parse("warp9").is_none());
+        assert_eq!(QosPolicyKind::default(), QosPolicyKind::None);
+        assert_eq!(QosPolicyKind::names().len(), QosPolicyKind::ALL.len());
+    }
+
+    #[test]
+    fn qos_policy_overrides_apply_and_reject_unknown() {
+        let mut c = SimConfig::baseline();
+        let doc = crate::util::toml_lite::parse("[far]\nqos_policy = \"fair-share\"\n").unwrap();
+        c.apply_overrides(&doc).unwrap();
+        assert_eq!(c.far.qos_policy, QosPolicyKind::FairShare);
+        let bad = crate::util::toml_lite::parse("[far]\nqos_policy = \"warp9\"\n").unwrap();
+        let e = c.apply_overrides(&bad).unwrap_err();
+        assert!(e.contains("fair-share") && e.contains("throttle"), "{e}");
+        // Default keeps single-tenant runs arbitration-free.
+        assert_eq!(FarMemConfig::default().qos_policy, QosPolicyKind::None);
+    }
+
+    #[test]
+    fn adaptive_knobs_are_bounds_checked_at_parse_time() {
+        // In-range values apply.
+        let mut c = SimConfig::baseline();
+        let ok = crate::util::toml_lite::parse(
+            "[far]\npool_adapt_threshold = 0.75\npool_adapt_window = 16\n",
+        )
+        .unwrap();
+        c.apply_overrides(&ok).unwrap();
+        assert_eq!(c.far.pool_adapt_threshold, 0.75);
+        assert_eq!(c.far.pool_adapt_window, 16);
+        // Out-of-range threshold is rejected at parse time, naming [0, 1].
+        let bad = crate::util::toml_lite::parse("[far]\npool_adapt_threshold = 1.5\n").unwrap();
+        let e = c.apply_overrides(&bad).unwrap_err();
+        assert!(e.contains("[0, 1]"), "{e}");
+        let bad = crate::util::toml_lite::parse("[far]\npool_adapt_threshold = -0.1\n").unwrap();
+        let e = c.apply_overrides(&bad).unwrap_err();
+        assert!(e.contains("[0, 1]"), "{e}");
+        // Zero-length window is rejected at parse time, naming the bound.
+        let bad = crate::util::toml_lite::parse("[far]\npool_adapt_window = 0\n").unwrap();
+        let e = c.apply_overrides(&bad).unwrap_err();
+        assert!(e.contains(">= 1"), "{e}");
+        // The rejected overrides did not clobber the applied values.
+        assert_eq!(c.far.pool_adapt_threshold, 0.75);
+        assert_eq!(c.far.pool_adapt_window, 16);
+    }
+
+    #[test]
+    fn throttle_qos_reuses_and_validates_adaptive_knobs() {
+        let mut c = SimConfig::baseline().with_far_backend(FarBackendKind::Pooled);
+        c.far.qos_policy = QosPolicyKind::Throttle;
+        assert!(c.validate().is_ok());
+        c.far.pool_adapt_window = 0;
+        assert!(c.validate().is_err());
+        c.far.pool_adapt_window = 64;
+        c.far.pool_adapt_threshold = 0.0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -3,8 +3,12 @@
 //! Subcommands:
 //!   run     — simulate one benchmark under one configuration
 //!   sweep   — run a (custom or paper) scenario grid in parallel (--jobs)
+//!   mtrun   — co-schedule N tenants on one shared far-memory pool under a
+//!             QoS policy (fair-share|priority|throttle) and emit
+//!             per-tenant slowdown rows
 //!   report  — regenerate paper figures/tables (fig2..fig11, table4..6,
-//!             sweep, all)
+//!             sweep, mt, all)
+//!   bench   — quick simulator-throughput benchmark (writes BENCH_PR6.json)
 //!   list    — enumerate benchmarks, configuration presets, backends,
 //!             policies, and metric columns
 //!   payload — smoke-test the PJRT payload engine (artifacts/)
@@ -32,9 +36,20 @@
 //! amu-sim sweep --backend serial-link,pooled,distribution,hybrid --jobs 8
 //! amu-sim sweep --backend hybrid --near-capacity 4096 --columns all --jobs 8
 //! amu-sim sweep --backend pooled --pool-policy adaptive --columns backend
+//! amu-sim mtrun --tenants redis:2,bfs:1 --qos-policy fair-share,throttle
+//! amu-sim report mt --tenants redis:1@1/high,bfs:3 --qos-policy priority
 //! amu-sim report fig8 --backend distribution --scale test
 //! amu-sim report sweep --backend hybrid --columns all --scale test
 //! ```
+//!
+//! Multi-tenancy (`mtrun`): tenant specs are
+//! `bench[:count][@weight][/priority]` — e.g. `redis:2@3/high,bfs:1` runs
+//! two high-priority redis tenants at weight 3 alongside one bfs tenant.
+//! All tenants share ONE far-memory backend instance through the
+//! shared-backend arbitration point; `--qos-policy` picks how contended
+//! capacity is divided (`fair-share` weighted pacing, `priority` strict
+//! admission classes, `throttle` adaptive per-tenant rate limiting). Each
+//! row reports the tenant's slowdown vs a solo run of the same benchmark.
 //!
 //! Sweep CSVs carry the backend both as a column and in the grid
 //! fingerprint, so caches from different backends never mix; the pool
@@ -42,8 +57,8 @@
 //! non-default and the grid sweeps the backend they affect, so those
 //! scenarios get their own cache files while existing default caches stay
 //! valid (and an ineffective flag is a no-op instead of a duplicate
-//! re-simulation). Cache files are format v4: the header pins the grid
-//! fingerprint and the metric-schema hash, and stale v3 files are
+//! re-simulation). Cache files are format v5: the header pins the grid
+//! fingerprint and the metric-schema hash, and stale v3/v4 files are
 //! rejected with a migration error naming the regeneration command.
 
 use amu_sim::config::SimConfig;
@@ -91,6 +106,30 @@ const SWEEP_SPECS: &[Spec] = &[
     opt("cache-file", "explicit cache CSV path"),
     flag("no-cache", "do not read or write the sweep cache"),
     flag("quiet", "suppress per-run progress output"),
+];
+
+const MTRUN_SPECS: &[Spec] = &[
+    opt(
+        "tenants",
+        "tenant specs: bench[:count][@weight][/priority],... (e.g. redis:2@3/high,bfs:1)",
+    ),
+    opt(
+        "qos-policy",
+        "comma-separated QoS policies: fair-share|priority|throttle (default: fair-share)",
+    ),
+    opt("config", "configuration preset applied to every tenant (default: amu)"),
+    opt("backend", "shared far-memory backend (default: pooled)"),
+    opt("latency-ns", "far-memory latency in ns (default: 1000)"),
+    opt("config-file", "TOML-lite overrides applied on top of the preset"),
+    opt("scale", "test|paper"),
+    opt("jobs", "worker threads across QoS cells and solo baselines (default: all cores)"),
+    opt("out", "write the per-tenant CSV to this path instead of stdout"),
+    flag("quiet", "suppress progress output"),
+];
+
+const BENCH_SPECS: &[Spec] = &[
+    opt("out", "output JSON path (default: <crate root>/BENCH_PR6.json)"),
+    flag("quiet", "suppress progress output"),
 ];
 
 fn parse_scale(s: &str) -> Result<Scale, String> {
@@ -300,6 +339,104 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// Shared between `mtrun` and `report mt`: tenant specs + base config +
+/// policy list from the CLI flags, validated before any simulation.
+fn build_mt_request(args: &cli::Args) -> Result<amu_sim::session::MtRequest, String> {
+    use amu_sim::session::tenancy;
+    let spec = args
+        .get("tenants")
+        .ok_or("--tenants is required (e.g. --tenants redis:2,bfs:1)")?;
+    let tenants = tenancy::parse_tenants(spec).map_err(|e| e.to_string())?;
+    let config = args.get_str("config", "amu");
+    let latency = args.get_f64("latency-ns", 1000.0).map_err(|e| e.to_string())?;
+    let mut cfg = SimConfig::preset(&config)
+        .ok_or_else(|| format!("unknown config '{config}'"))?
+        .with_far_latency_ns(latency);
+    let backend = args.get_str("backend", "pooled");
+    cfg.far.backend = amu_sim::config::FarBackendKind::parse(&backend)
+        .ok_or_else(|| format!("unknown backend '{backend}'"))?;
+    if let Some(path) = args.get("config-file") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let doc = amu_sim::util::toml_lite::parse(&text).map_err(|e| e.to_string())?;
+        cfg.apply_overrides(&doc)?;
+    }
+    let mut req = amu_sim::session::MtRequest::new(tenants, cfg);
+    if let Some(s) = args.get("qos-policy") {
+        req.policies = tenancy::parse_policies(s).map_err(|e| e.to_string())?;
+    }
+    req.scale = parse_scale(&args.get_str("scale", "test"))?;
+    req.jobs = match parse_jobs(args)? {
+        Some(n) => n,
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    };
+    req.quiet = args.has_flag("quiet");
+    Ok(req)
+}
+
+fn cmd_mtrun(argv: &[String]) -> Result<(), String> {
+    let args = cli::parse(argv, MTRUN_SPECS).map_err(|e| e.to_string())?;
+    let req = build_mt_request(&args)?;
+    let t0 = std::time::Instant::now();
+    let outcomes = req.run().map_err(|e| e.to_string())?;
+    let wall = t0.elapsed();
+    let body = amu_sim::session::tenancy::mt_csv(&req.tenants, req.scale, &outcomes);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &body).map_err(|e| format!("{path}: {e}"))?;
+            let rows: usize = outcomes.iter().map(|o| o.rows.len()).sum();
+            println!(
+                "mtrun: {rows} tenant rows across {} QoS policies in {wall:.2?}",
+                outcomes.len()
+            );
+            println!("csv: {path}");
+        }
+        None => print!("{body}"),
+    }
+    Ok(())
+}
+
+/// Simulator-throughput smoke benchmark: GUPS + BFS at the small test
+/// scale, reporting simulated cycles per host-second and wall time.
+fn cmd_bench(argv: &[String]) -> Result<(), String> {
+    let args = cli::parse(argv, BENCH_SPECS).map_err(|e| e.to_string())?;
+    let quiet = args.has_flag("quiet");
+    let mut entries = Vec::new();
+    for b in ["gups", "bfs"] {
+        if !quiet {
+            eprintln!("[bench] {b} (amu, test scale, 1000ns) ...");
+        }
+        let t0 = std::time::Instant::now();
+        let r = RunRequest::bench(b)
+            .config(SimConfig::amu())
+            .latency_ns(1000.0)
+            .scale(Scale::Test)
+            .run()
+            .map_err(|e| e.to_string())?;
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        entries.push(format!(
+            "    {{\"bench\": \"{b}\", \"total_cycles\": {}, \"insts\": {}, \
+             \"wall_ms\": {:.3}, \"sim_cycles_per_host_s\": {:.0}}}",
+            r.total_cycles,
+            r.insts,
+            wall_s * 1e3,
+            r.total_cycles as f64 / wall_s
+        ));
+    }
+    let json = format!(
+        "{{\n  \"config\": \"amu\",\n  \"scale\": \"test\",\n  \"latency_ns\": 1000.0,\n  \
+         \"workloads\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    let out = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_PR6.json"),
+    };
+    std::fs::write(&out, &json).map_err(|e| format!("{}: {e}", out.display()))?;
+    print!("{json}");
+    eprintln!("[bench] wrote {}", out.display());
+    Ok(())
+}
+
 fn cmd_report(argv: &[String]) -> Result<(), String> {
     let specs: &[Spec] = &[
         opt("scale", "test|paper"),
@@ -307,6 +444,11 @@ fn cmd_report(argv: &[String]) -> Result<(), String> {
         opt("pool-policy", "pooled channel selection (default: hash)"),
         opt("near-capacity", "hybrid near-tier capacity in 64B lines (default: 0)"),
         opt("columns", "column selection for `report sweep`: core|backend|all|<comma-list>"),
+        opt("tenants", "`report mt` tenant specs: bench[:count][@weight][/priority],..."),
+        opt("qos-policy", "`report mt` QoS policies (default: fair-share)"),
+        opt("config", "`report mt` configuration preset (default: amu)"),
+        opt("latency-ns", "`report mt` far-memory latency in ns (default: 1000)"),
+        opt("config-file", "`report mt` TOML-lite overrides"),
         opt("jobs", "worker threads for sweeps (default: all cores)"),
         flag("quiet", "less progress"),
     ];
@@ -329,6 +471,17 @@ fn cmd_report(argv: &[String]) -> Result<(), String> {
         ));
     }
     let sweep_sel = columns_arg.unwrap_or(Selection::Core);
+    // `report mt` is the multi-tenant fairness table — it simulates its
+    // own tenant cells (no paper sweep) and reads the mtrun flags
+    // (`--tenants`, `--qos-policy`, ...; scale defaults to `test` inside
+    // `build_mt_request`, since a tenant cell is one shared pool, not the
+    // 264-row paper grid).
+    if what == "mt" {
+        let req = build_mt_request(&args)?;
+        let outcomes = req.run().map_err(|e| e.to_string())?;
+        report::write_report("mt", &report::mt_table(&outcomes));
+        return Ok(());
+    }
     let needs_sweep = matches!(
         what,
         "fig2" | "fig8" | "fig9" | "fig10" | "fig11" | "headline" | "sweep" | "all"
@@ -408,6 +561,8 @@ fn main() {
     let result = match argv.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&argv[1..]),
         Some("sweep") => cmd_sweep(&argv[1..]),
+        Some("mtrun") => cmd_mtrun(&argv[1..]),
+        Some("bench") => cmd_bench(&argv[1..]),
         Some("report") => cmd_report(&argv[1..]),
         Some("payload") => cmd_payload(),
         Some("list") => {
@@ -421,7 +576,11 @@ fn main() {
                 "pool-policies: {}",
                 amu_sim::config::PoolPolicy::names().join(" ")
             );
-            println!("columns (schema v4, --columns core|backend|all|<comma-list>):");
+            println!(
+                "qos-policies: {}",
+                amu_sim::config::QosPolicyKind::names().join(" ")
+            );
+            println!("columns (schema v5, --columns core|backend|all|<comma-list>):");
             for c in metrics::columns() {
                 let unit = if c.unit().is_empty() { "-" } else { c.unit() };
                 let group = format!("{:?}", c.group()).to_lowercase();
@@ -431,11 +590,13 @@ fn main() {
         }
         _ => {
             eprintln!("amu-sim {} — AMU paper reproduction", amu_sim::version());
-            eprintln!("usage: amu-sim <run|sweep|report|payload|list> [options]");
+            eprintln!("usage: amu-sim <run|sweep|mtrun|bench|report|payload|list> [options]");
             eprintln!("{}", cli::usage("amu-sim run", RUN_SPECS));
             eprintln!("{}", cli::usage("amu-sim sweep", SWEEP_SPECS));
+            eprintln!("{}", cli::usage("amu-sim mtrun", MTRUN_SPECS));
             eprintln!(
-                "reports: fig2 fig3 fig8 fig9 fig10 fig11 table4 table5 table6 headline sweep all"
+                "reports: fig2 fig3 fig8 fig9 fig10 fig11 table4 table5 table6 headline sweep \
+                 mt all"
             );
             Ok(())
         }

@@ -28,15 +28,27 @@
 //!   from the access stream; at the default `0` it is the legacy static
 //!   `near_frac` coin-flip.
 //!
+//! On top of the data planes sits the *shared-backend* layer
+//! ([`SharedFar`] / [`SharedFarHandle`]): the interior arbitration point
+//! that lets N tenant simulators (`amu-sim mtrun`, `session::tenancy`)
+//! drive **one** pooled/hybrid data plane concurrently. Each tenant holds
+//! a handle tagged with its tenant index; every request passes through a
+//! [`crate::config::QosPolicyKind`] admission decision (`fair-share`
+//! weighted pacing, `priority` strict classes, `throttle` adaptive
+//! per-tenant rate limiting) before reaching the inner backend, and the
+//! arbitration counters surface as the `qos_throttle_events` /
+//! `pool_steal_cycles` scenario columns.
+//!
 //! All randomness is drawn from per-instance [`Xoshiro256`] streams seeded
 //! from the run seed, so every backend is bit-for-bit deterministic and
 //! sweep CSVs stay byte-identical across `--jobs` counts.
 
 use super::dram::Dram;
 use super::link::{add_signed, FarLink, FarTiming, LinkFront};
-use crate::config::{FarBackendKind, FarMemConfig, LatencyDist, PoolPolicy};
+use crate::config::{FarBackendKind, FarMemConfig, LatencyDist, PoolPolicy, QosPolicyKind};
 use crate::util::prng::Xoshiro256;
 use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
 
 // Scenario counters are schema-driven: the column registry lives in
 // `stats::schema` (adding a metric is a table edit there plus the backend
@@ -76,8 +88,23 @@ pub trait FarBackend: Send {
     }
 }
 
-/// Construct the backend selected by `cfg.backend`.
+/// Construct the backend selected by `cfg.backend`. When `cfg.qos_policy`
+/// is not `none` the data plane is wrapped in a single-tenant [`SharedFar`]
+/// arbitration point, so the QoS policies are exercisable (and sweepable as
+/// a fingerprinted refinement) even outside `mtrun`: `fair-share` paces the
+/// stream at its 100% bandwidth share and `throttle` can rate-limit a solo
+/// stream that congests its own backend.
 pub fn build(cfg: &FarMemConfig, freq_ghz: f64, seed: u64) -> Box<dyn FarBackend> {
+    if cfg.qos_policy != QosPolicyKind::None {
+        let shared = SharedFar::new(cfg, freq_ghz, seed, vec![TenantShare::default()]);
+        return Box::new(SharedFar::handle(&shared, 0));
+    }
+    build_raw(cfg, freq_ghz, seed)
+}
+
+/// Construct the bare data plane selected by `cfg.backend`, with no QoS
+/// arbitration layer ([`SharedFar`] composes this for its inner backend).
+pub fn build_raw(cfg: &FarMemConfig, freq_ghz: f64, seed: u64) -> Box<dyn FarBackend> {
     match cfg.backend {
         FarBackendKind::SerialLink => Box::new(FarLink::new(cfg, freq_ghz, seed)),
         FarBackendKind::Pooled => Box::new(PooledBackend::new(cfg, freq_ghz, seed)),
@@ -686,6 +713,350 @@ impl FarBackend for HybridBackend {
     }
 }
 
+// ------------------------------------------------------------ shared / QoS
+
+/// Strict admission class for the `priority` QoS policy. Lower rank is
+/// served first: a request admits only after every higher class's busy
+/// horizon has drained.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum QosClass {
+    High,
+    Normal,
+    Low,
+}
+
+impl QosClass {
+    pub const ALL: &'static [QosClass] = &[QosClass::High, QosClass::Normal, QosClass::Low];
+
+    /// Admission rank: 0 admits ahead of 1 ahead of 2.
+    pub fn rank(self) -> usize {
+        match self {
+            QosClass::High => 0,
+            QosClass::Normal => 1,
+            QosClass::Low => 2,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            QosClass::High => "high",
+            QosClass::Normal => "normal",
+            QosClass::Low => "low",
+        }
+    }
+
+    /// Parse a tenant-spec priority name (the `/high` part of
+    /// `redis:2@3/high`).
+    pub fn parse(s: &str) -> Option<QosClass> {
+        match s {
+            "high" | "hi" => Some(QosClass::High),
+            "normal" | "norm" | "mid" => Some(QosClass::Normal),
+            "low" | "lo" => Some(QosClass::Low),
+            _ => None,
+        }
+    }
+}
+
+/// One tenant's share of the pool under QoS arbitration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantShare {
+    /// Relative bandwidth weight under `fair-share` (floored to 1).
+    pub weight: u64,
+    /// Admission class under `priority`.
+    pub class: QosClass,
+}
+
+impl Default for TenantShare {
+    fn default() -> Self {
+        Self { weight: 1, class: QosClass::Normal }
+    }
+}
+
+/// Sum of the counters a congesting inner backend exposes — the feedback
+/// signal the `throttle` policy watches (pool queue back-pressure, near-tier
+/// capacity thrash).
+fn congestion_signal(s: &ScenarioStats) -> u64 {
+    s.get(ScenarioCol::PoolCongestion) + s.get(ScenarioCol::NearEvictions)
+}
+
+/// The shared-backend arbitration point: **one** inner data plane (built
+/// via [`build_raw`]) serving N tenants, each holding a [`SharedFarHandle`]
+/// tagged with its tenant index. Every request passes an admission decision
+/// before reaching the inner backend:
+///
+/// * `none` — pure passthrough (requests admit at their issue cycle).
+/// * `fair-share` — weighted pacing: each admitted request charges its
+///   tenant `cost x total_weight / weight` cycles of virtual busy time, so
+///   a weight-3 tenant sustains 3x the admission rate of a weight-1 tenant
+///   sharing the same pool.
+/// * `priority` — strict classes: a request admits only after every higher
+///   class's busy horizon has drained, and each request extends its own
+///   class's horizon by its service cost (low classes can starve behind a
+///   high-class flood — that is the policy's contract).
+/// * `throttle` — adaptive per-tenant rate limiting, generalizing the
+///   pooled backend's `adaptive` policy: each tenant's requests feed a
+///   sliding window of congestion observations (`pool_adapt_window` wide);
+///   once the congested fraction crosses `pool_adapt_threshold` the tenant
+///   is throttled (one-way, like the adaptive pool switch) and its
+///   subsequent requests are spaced at least `2 x cost` apart.
+///
+/// The per-request service cost is `lines x unit_cost`, where `unit_cost`
+/// (= mean RTT / 64, floored to 1) models the shared entry point's
+/// aggregate line bandwidth. Admission delay accumulates into
+/// `pool_steal_cycles`; throttle activations and enforced gaps into
+/// `qos_throttle_events`. Everything is driven by the request stream alone,
+/// so arbitration is bit-for-bit deterministic per seed.
+///
+/// In-flight counts are tracked **per tenant** at this level (the inner
+/// backend's increment is cancelled right after issue, the hybrid's trick),
+/// so one tenant's MLP accounting never pollutes another's.
+pub struct SharedFar {
+    inner: Box<dyn FarBackend>,
+    policy: QosPolicyKind,
+    shares: Vec<TenantShare>,
+    total_weight: u64,
+    /// Cycles one 64 B line occupies the shared entry point.
+    unit_cost: u64,
+    /// `fair-share`: per-tenant virtual busy-until cycle.
+    busy_until: Vec<u64>,
+    /// `priority`: per-class busy horizon, indexed by [`QosClass::rank`].
+    class_busy: [u64; 3],
+    /// `throttle`: per-tenant congestion observations, newest at the back.
+    window: Vec<VecDeque<bool>>,
+    window_congested: Vec<usize>,
+    window_cap: usize,
+    threshold: f64,
+    /// `throttle`: per-tenant throttled flag (one-way).
+    throttled: Vec<bool>,
+    /// `throttle`: per-tenant earliest next admission while throttled.
+    next_allowed: Vec<u64>,
+    /// Last observed inner congestion signal (delta detection).
+    last_signal: u64,
+    steal_cycles: u64,
+    throttle_events: u64,
+    per_tenant_inflight: Vec<u64>,
+}
+
+impl SharedFar {
+    /// Build the shared arbitration point over a freshly constructed inner
+    /// data plane, with one slot per entry in `shares`.
+    pub fn new(
+        cfg: &FarMemConfig,
+        freq_ghz: f64,
+        seed: u64,
+        shares: Vec<TenantShare>,
+    ) -> Arc<Mutex<SharedFar>> {
+        assert!(!shares.is_empty(), "shared backend needs at least one tenant");
+        let inner = build_raw(cfg, freq_ghz, seed);
+        let n = shares.len();
+        let total_weight = shares.iter().map(|s| s.weight.max(1)).sum();
+        let unit_cost = (inner.min_round_trip() / 64).max(1);
+        Arc::new(Mutex::new(SharedFar {
+            inner,
+            policy: cfg.qos_policy,
+            shares,
+            total_weight,
+            unit_cost,
+            busy_until: vec![0; n],
+            class_busy: [0; 3],
+            window: vec![VecDeque::new(); n],
+            window_congested: vec![0; n],
+            window_cap: cfg.pool_adapt_window.max(1),
+            threshold: cfg.pool_adapt_threshold,
+            throttled: vec![false; n],
+            next_allowed: vec![0; n],
+            last_signal: 0,
+            steal_cycles: 0,
+            throttle_events: 0,
+            per_tenant_inflight: vec![0; n],
+        }))
+    }
+
+    /// A tenant's handle onto the shared backend (panics on an index with
+    /// no share slot — handles and shares are created together).
+    pub fn handle(shared: &Arc<Mutex<SharedFar>>, tenant: usize) -> SharedFarHandle {
+        let n = shared.lock().expect("shared far-memory lock poisoned").shares.len();
+        assert!(tenant < n, "tenant {tenant} out of range ({n} share slots)");
+        SharedFarHandle { shared: Arc::clone(shared), tenant }
+    }
+
+    /// Total cycles requests spent waiting in QoS admission (the
+    /// `pool_steal_cycles` column).
+    pub fn steal_cycles(&self) -> u64 {
+        self.steal_cycles
+    }
+
+    /// Throttle activations plus enforced admission gaps (the
+    /// `qos_throttle_events` column).
+    pub fn throttle_events(&self) -> u64 {
+        self.throttle_events
+    }
+
+    /// Whether `tenant` has tripped the (one-way) throttle.
+    pub fn is_throttled(&self, tenant: usize) -> bool {
+        self.throttled[tenant]
+    }
+
+    /// Inner scenario counters plus the shared arbitration columns — what
+    /// every tenant's handle reports (the columns are pool-wide by design;
+    /// their producer is "shared").
+    pub fn scenario_snapshot(&self) -> ScenarioStats {
+        self.inner
+            .scenario_stats()
+            .with(ScenarioCol::QosThrottleEvents, self.throttle_events)
+            .with(ScenarioCol::PoolStealCycles, self.steal_cycles)
+    }
+
+    /// Decide the admission cycle for `tenant`'s request of `lines` cache
+    /// lines issued at `cycle`, updating the policy state. Never earlier
+    /// than `cycle`.
+    fn admit(&mut self, tenant: usize, cycle: u64, lines: u64) -> u64 {
+        let cost = lines * self.unit_cost;
+        match self.policy {
+            QosPolicyKind::None => cycle,
+            QosPolicyKind::FairShare => {
+                let admit = cycle.max(self.busy_until[tenant]);
+                let w = self.shares[tenant].weight.max(1);
+                self.busy_until[tenant] = admit + cost * self.total_weight / w;
+                admit
+            }
+            QosPolicyKind::Priority => {
+                let rank = self.shares[tenant].class.rank();
+                let mut admit = cycle;
+                for c in 0..rank {
+                    admit = admit.max(self.class_busy[c]);
+                }
+                self.class_busy[rank] = self.class_busy[rank].max(admit) + cost;
+                admit
+            }
+            QosPolicyKind::Throttle => {
+                if !self.throttled[tenant] {
+                    return cycle;
+                }
+                let admit = cycle.max(self.next_allowed[tenant]);
+                if admit > cycle {
+                    self.throttle_events += 1;
+                }
+                self.next_allowed[tenant] = admit + 2 * cost;
+                admit
+            }
+        }
+    }
+
+    /// Feed one request's congestion outcome into `tenant`'s sliding window
+    /// and trip its throttle once the congested fraction over a *full*
+    /// window crosses the threshold (same full-window, one-way contract as
+    /// the pooled backend's adaptive switch).
+    fn observe(&mut self, tenant: usize) {
+        let sig = congestion_signal(&self.inner.scenario_stats());
+        let congested = sig > self.last_signal;
+        self.last_signal = sig;
+        if self.policy != QosPolicyKind::Throttle || self.throttled[tenant] {
+            return;
+        }
+        self.window[tenant].push_back(congested);
+        self.window_congested[tenant] += congested as usize;
+        if self.window[tenant].len() > self.window_cap
+            && self.window[tenant].pop_front() == Some(true)
+        {
+            self.window_congested[tenant] -= 1;
+        }
+        if self.window[tenant].len() == self.window_cap
+            && self.window_congested[tenant] as f64 >= self.threshold * self.window_cap as f64
+        {
+            self.throttled[tenant] = true;
+            self.throttle_events += 1;
+            self.window[tenant].clear();
+            self.window_congested[tenant] = 0;
+        }
+    }
+
+    fn access(&mut self, tenant: usize, cycle: u64, addr: u64, bytes: usize, is_write: bool) -> FarTiming {
+        self.per_tenant_inflight[tenant] += 1;
+        let lines = bytes.div_ceil(64).max(1) as u64;
+        let admit = self.admit(tenant, cycle, lines);
+        self.steal_cycles += admit - cycle;
+        let t = if is_write {
+            self.inner.write(admit, addr, bytes)
+        } else {
+            self.inner.read(admit, addr, bytes)
+        };
+        // In-flight is tracked per tenant at this level; cancel the inner
+        // backend's increment right after issue (the hybrid's trick).
+        self.inner.complete();
+        self.observe(tenant);
+        t
+    }
+
+    fn posted(&mut self, tenant: usize, cycle: u64, addr: u64, bytes: usize) {
+        let lines = bytes.div_ceil(64).max(1) as u64;
+        let admit = self.admit(tenant, cycle, lines);
+        self.steal_cycles += admit - cycle;
+        self.inner.posted_write(admit, addr, bytes);
+        self.observe(tenant);
+    }
+}
+
+/// One tenant's view of a [`SharedFar`]: implements [`FarBackend`], so a
+/// per-tenant `Simulator` drives the shared pool through its ordinary
+/// `MemSys.link` slot without knowing other tenants exist. Cloning yields
+/// another handle onto the *same* shared state.
+#[derive(Clone)]
+pub struct SharedFarHandle {
+    shared: Arc<Mutex<SharedFar>>,
+    tenant: usize,
+}
+
+impl SharedFarHandle {
+    fn lock(&self) -> std::sync::MutexGuard<'_, SharedFar> {
+        self.shared.lock().expect("shared far-memory lock poisoned")
+    }
+
+    /// The tenant index this handle routes as.
+    pub fn tenant(&self) -> usize {
+        self.tenant
+    }
+}
+
+impl FarBackend for SharedFarHandle {
+    fn kind(&self) -> FarBackendKind {
+        self.lock().inner.kind()
+    }
+
+    fn read(&mut self, cycle: u64, addr: u64, bytes: usize) -> FarTiming {
+        let tenant = self.tenant;
+        self.lock().access(tenant, cycle, addr, bytes, false)
+    }
+
+    fn write(&mut self, cycle: u64, addr: u64, bytes: usize) -> FarTiming {
+        let tenant = self.tenant;
+        self.lock().access(tenant, cycle, addr, bytes, true)
+    }
+
+    fn posted_write(&mut self, cycle: u64, addr: u64, bytes: usize) {
+        let tenant = self.tenant;
+        self.lock().posted(tenant, cycle, addr, bytes)
+    }
+
+    fn complete(&mut self) {
+        let mut s = self.lock();
+        debug_assert!(s.per_tenant_inflight[self.tenant] > 0);
+        s.per_tenant_inflight[self.tenant] -= 1;
+    }
+
+    fn inflight(&self) -> u64 {
+        self.lock().per_tenant_inflight[self.tenant]
+    }
+
+    fn min_round_trip(&self) -> u64 {
+        self.lock().inner.min_round_trip()
+    }
+
+    fn scenario_stats(&self) -> ScenarioStats {
+        self.lock().scenario_snapshot()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1118,5 +1489,213 @@ mod tests {
         let mut all_far = HybridBackend::new(&c, 3.0, 2);
         let t = all_far.read(0, 0, 64);
         assert!(t.done >= 3000, "pure far path keeps the full RTT: {}", t.done);
+    }
+
+    // ------------------------------------------------------ shared / QoS
+
+    fn qos_cfg(policy: QosPolicyKind) -> FarMemConfig {
+        let mut c = cfg(FarBackendKind::Pooled);
+        c.qos_policy = policy;
+        c
+    }
+
+    fn shares(n: usize) -> Vec<TenantShare> {
+        vec![TenantShare::default(); n]
+    }
+
+    #[test]
+    fn qos_class_tags_and_ranks_are_ordered() {
+        for (i, &c) in QosClass::ALL.iter().enumerate() {
+            assert_eq!(c.rank(), i);
+            assert_eq!(QosClass::parse(c.tag()), Some(c));
+        }
+        assert_eq!(QosClass::parse("hi"), Some(QosClass::High));
+        assert_eq!(QosClass::parse("urgent"), None);
+    }
+
+    #[test]
+    fn shared_handle_with_no_policy_is_a_pure_passthrough() {
+        let c = cfg(FarBackendKind::Pooled);
+        let mut raw = build_raw(&c, 3.0, 11);
+        let shared = SharedFar::new(&c, 3.0, 11, shares(1));
+        let mut h = SharedFar::handle(&shared, 0);
+        for i in 0..100u64 {
+            let a = raw.read(i * 50, i * 64, 64).done;
+            raw.complete();
+            let b = h.read(i * 50, i * 64, 64).done;
+            h.complete();
+            assert_eq!(a, b, "qos=none must not perturb timing");
+        }
+        assert_eq!(shared.lock().unwrap().steal_cycles(), 0);
+    }
+
+    #[test]
+    fn build_wraps_in_a_shared_arbiter_when_qos_is_set() {
+        let c = qos_cfg(QosPolicyKind::FairShare);
+        let mut b = build(&c, 3.0, 7);
+        // The wrapper is transparent to kind/RTT introspection.
+        assert_eq!(b.kind(), FarBackendKind::Pooled);
+        assert_eq!(b.min_round_trip(), build_raw(&c, 3.0, 7).min_round_trip());
+        // A same-cycle flood gets paced at the stream's 100% bandwidth
+        // share; the admission delay surfaces as pool_steal_cycles.
+        for i in 0..32u64 {
+            b.read(0, i * 4096, 64);
+            b.complete();
+        }
+        assert!(b.scenario_stats().get(ScenarioCol::PoolStealCycles) > 0);
+        assert_eq!(b.scenario_stats().get(ScenarioCol::TenantSlowdownMax), 0);
+    }
+
+    #[test]
+    fn fair_share_favors_the_heavier_weight() {
+        let c = qos_cfg(QosPolicyKind::FairShare);
+        let mut sh = shares(2);
+        sh[0].weight = 3;
+        let shared = SharedFar::new(&c, 3.0, 5, sh);
+        let mut heavy = SharedFar::handle(&shared, 0);
+        let mut light = SharedFar::handle(&shared, 1);
+        let (mut last_heavy, mut last_light) = (0, 0);
+        for i in 0..64u64 {
+            last_heavy = heavy.read(0, i * 4096, 64).done;
+            heavy.complete();
+            last_light = light.read(0, (i + 1000) * 4096, 64).done;
+            light.complete();
+        }
+        assert!(
+            last_heavy < last_light,
+            "weight 3 ({last_heavy}) must outrun weight 1 ({last_light})"
+        );
+        assert!(shared.lock().unwrap().steal_cycles() > 0, "a flood must be paced");
+    }
+
+    #[test]
+    fn priority_gates_low_class_behind_the_high_class_backlog() {
+        let c = qos_cfg(QosPolicyKind::Priority);
+        let mut sh = shares(2);
+        sh[0].class = QosClass::High;
+        sh[1].class = QosClass::Low;
+        let shared = SharedFar::new(&c, 3.0, 5, sh.clone());
+        let mut high = SharedFar::handle(&shared, 0);
+        let mut low = SharedFar::handle(&shared, 1);
+        for i in 0..32u64 {
+            high.read(0, i * 4096, 64);
+            high.complete();
+        }
+        assert_eq!(shared.lock().unwrap().steal_cycles(), 0, "high class is never gated");
+        low.read(0, 1_000_000, 64);
+        low.complete();
+        assert!(
+            shared.lock().unwrap().steal_cycles() > 0,
+            "low class must wait out the high backlog"
+        );
+
+        // Symmetric check: a low-class flood never gates high admission.
+        let shared2 = SharedFar::new(&c, 3.0, 5, sh);
+        let mut high2 = SharedFar::handle(&shared2, 0);
+        let mut low2 = SharedFar::handle(&shared2, 1);
+        for i in 0..32u64 {
+            low2.read(0, i * 4096, 64);
+            low2.complete();
+        }
+        high2.read(0, 1_000_000, 64);
+        high2.complete();
+        assert_eq!(shared2.lock().unwrap().steal_cycles(), 0, "low traffic cannot gate high");
+    }
+
+    #[test]
+    fn throttle_rate_limits_a_congesting_tenant() {
+        let mut c = qos_cfg(QosPolicyKind::Throttle);
+        c.pool_channels = 1;
+        c.pool_queue_depth = 1;
+        c.pool_adapt_threshold = 0.5;
+        c.pool_adapt_window = 8;
+        let shared = SharedFar::new(&c, 3.0, 1, shares(1));
+        let mut h = SharedFar::handle(&shared, 0);
+        for _ in 0..64 {
+            h.read(0, 0, 64);
+            h.complete();
+        }
+        assert!(shared.lock().unwrap().is_throttled(0));
+        let s = h.scenario_stats();
+        assert!(
+            s.get(ScenarioCol::QosThrottleEvents) > 0,
+            "sustained congestion must trip the throttle"
+        );
+        assert!(s.get(ScenarioCol::PoolStealCycles) > 0, "throttled requests must be spaced");
+        assert!(s.get(ScenarioCol::PoolCongestion) > 0, "the inner counters still flow through");
+
+        // An uncongested stream is never throttled: timing identical to
+        // the bare pool (throttle degenerates to a passthrough).
+        let c2 = qos_cfg(QosPolicyKind::Throttle);
+        let shared2 = SharedFar::new(&c2, 3.0, 1, shares(1));
+        let mut calm = SharedFar::handle(&shared2, 0);
+        let mut raw = build_raw(&c2, 3.0, 1);
+        for i in 0..64u64 {
+            let a = calm.read(i * 20_000, i * 4096, 64).done;
+            calm.complete();
+            let b = raw.read(i * 20_000, i * 4096, 64).done;
+            raw.complete();
+            assert_eq!(a, b, "uncongested throttle must be a passthrough");
+        }
+        assert_eq!(shared2.lock().unwrap().throttle_events(), 0);
+    }
+
+    #[test]
+    fn shared_handles_track_inflight_per_tenant() {
+        let c = qos_cfg(QosPolicyKind::FairShare);
+        let shared = SharedFar::new(&c, 3.0, 3, shares(2));
+        let mut a = SharedFar::handle(&shared, 0);
+        let mut b = SharedFar::handle(&shared, 1);
+        for i in 0..3u64 {
+            a.read(0, i * 4096, 64);
+        }
+        b.read(0, 0, 64);
+        assert_eq!(a.inflight(), 3);
+        assert_eq!(b.inflight(), 1, "tenant MLP accounting must not leak across handles");
+        a.complete();
+        a.complete();
+        assert_eq!(a.inflight(), 1);
+        assert_eq!(b.inflight(), 1);
+    }
+
+    #[test]
+    fn shared_backend_is_deterministic_for_identical_streams() {
+        for &policy in QosPolicyKind::ALL {
+            let mut c = qos_cfg(policy);
+            c.jitter_frac = 0.05;
+            c.pool_queue_depth = 2;
+            let mk = || {
+                let mut sh = shares(2);
+                sh[0].weight = 2;
+                sh[1].class = QosClass::Low;
+                SharedFar::new(&c, 3.0, 11, sh)
+            };
+            let s1 = mk();
+            let s2 = mk();
+            let (mut a0, mut a1) = (SharedFar::handle(&s1, 0), SharedFar::handle(&s1, 1));
+            let (mut b0, mut b1) = (SharedFar::handle(&s2, 0), SharedFar::handle(&s2, 1));
+            for i in 0..200u64 {
+                let addr = if i % 2 == 0 { 0 } else { i * 4096 };
+                assert_eq!(
+                    a0.read(i * 50, addr, 64).done,
+                    b0.read(i * 50, addr, 64).done,
+                    "{policy:?} tenant 0"
+                );
+                a0.complete();
+                b0.complete();
+                assert_eq!(
+                    a1.read(i * 50 + 7, addr ^ 64, 64).done,
+                    b1.read(i * 50 + 7, addr ^ 64, 64).done,
+                    "{policy:?} tenant 1"
+                );
+                a1.complete();
+                b1.complete();
+            }
+            assert_eq!(
+                s1.lock().unwrap().scenario_snapshot(),
+                s2.lock().unwrap().scenario_snapshot(),
+                "{policy:?} counters"
+            );
+        }
     }
 }

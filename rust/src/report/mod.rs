@@ -478,6 +478,59 @@ pub fn headline(rows: &[RunResult]) -> String {
     s
 }
 
+/// `report mt` — the multi-tenant fairness table. One block per QoS
+/// policy: per-tenant throughput (committed instructions per kilocycle of
+/// shared-pool time), slowdown vs a solo run of the same benchmark on a
+/// private backend, and the noisy-neighbor delta (how much of the run the
+/// tenant lost to co-scheduling). The pool-wide arbitration counters
+/// (`qos_throttle_events`, `pool_steal_cycles`) close each block.
+pub fn mt_table(outcomes: &[crate::session::MtOutcome]) -> String {
+    use crate::stats::schema::ScenarioCol;
+    let mut s = String::new();
+    writeln!(s, "# Multi-tenant fairness — slowdown vs solo run on a private backend").unwrap();
+    for o in outcomes {
+        writeln!(s, "\n## qos={}", o.policy.tag()).unwrap();
+        writeln!(
+            s,
+            "{:>10} {:>7} {:>6} {:>8} {:>12} {:>12} {:>10} {:>10} {:>12}",
+            "tenant", "weight", "class", "cycles", "solo_cycles", "slowdown", "neighbor", "ipc", "insts/kcyc"
+        )
+        .unwrap();
+        for r in &o.rows {
+            let slowdown = r.slowdown_permille as f64 / 1000.0;
+            // Noisy-neighbor delta: the share of the co-scheduled run the
+            // tenant spent beyond its solo time.
+            let neighbor = (slowdown - 1.0).max(0.0) * 100.0;
+            let kcyc = (r.result.measured_cycles as f64 / 1000.0).max(f64::MIN_POSITIVE);
+            writeln!(
+                s,
+                "{:>10} {:>7} {:>6} {:>8} {:>12} {:>11.2}x {:>9.1}% {:>10.3} {:>12.1}",
+                r.label,
+                r.weight,
+                r.class.tag(),
+                r.result.measured_cycles,
+                r.solo_cycles,
+                slowdown,
+                neighbor,
+                r.result.ipc,
+                r.result.insts as f64 / kcyc,
+            )
+            .unwrap();
+        }
+        if let Some(r) = o.rows.first() {
+            writeln!(
+                s,
+                "pool: slowdown_max {:.2}x, throttle_events {}, steal_cycles {}",
+                r.result.scenario.get(ScenarioCol::TenantSlowdownMax) as f64 / 1000.0,
+                r.result.scenario.get(ScenarioCol::QosThrottleEvents),
+                r.result.scenario.get(ScenarioCol::PoolStealCycles),
+            )
+            .unwrap();
+        }
+    }
+    s
+}
+
 pub fn write_report(name: &str, body: &str) {
     let path = results_dir().join(format!("{name}.txt"));
     std::fs::write(&path, body).ok();
@@ -532,6 +585,43 @@ mod tests {
         let near_hits: u64 = last[5].parse().unwrap();
         let near_evictions: u64 = last[6].parse().unwrap();
         assert!(near_hits + near_evictions > 0, "{data}");
+    }
+
+    #[test]
+    fn mt_table_renders_per_tenant_rows_and_pool_counters() {
+        use crate::config::QosPolicyKind;
+        use crate::mem::backend::QosClass;
+        use crate::session::{MtOutcome, MtRow};
+        use crate::stats::schema::{ScenarioCol, ScenarioStats};
+        let result = RunResult {
+            bench: "gups#0".into(),
+            measured_cycles: 3000,
+            insts: 1500,
+            ipc: 0.5,
+            scenario: ScenarioStats::default()
+                .with(ScenarioCol::TenantSlowdownMax, 1500)
+                .with(ScenarioCol::PoolStealCycles, 42),
+            ..Default::default()
+        };
+        let o = MtOutcome {
+            policy: QosPolicyKind::FairShare,
+            rows: vec![MtRow {
+                policy: QosPolicyKind::FairShare,
+                label: "gups#0".into(),
+                bench: "gups".into(),
+                weight: 2,
+                class: QosClass::Normal,
+                solo_cycles: 2000,
+                slowdown_permille: 1500,
+                result,
+            }],
+        };
+        let t = mt_table(&[o]);
+        assert!(t.contains("qos=fair-share"), "{t}");
+        assert!(t.contains("gups#0"), "{t}");
+        assert!(t.contains("1.50x"), "{t}");
+        assert!(t.contains("slowdown_max 1.50x"), "{t}");
+        assert!(t.contains("steal_cycles 42"), "{t}");
     }
 
     #[test]

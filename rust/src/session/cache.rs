@@ -1,39 +1,45 @@
 //! On-disk sweep cache: CSV with a grid-fingerprint + schema-hash header.
 //!
-//! Format (version 4 — the first *schema-driven* version: rows carry every
+//! Format (version 5 — adds the shared-tenancy scenario columns
+//! `tenant_slowdown_max` / `qos_throttle_events` / `pool_steal_cycles` to
+//! every row; like v4 it is *schema-driven*: rows carry every
 //! [`crate::session::metrics`] column, core and per-backend scenario
 //! alike, and the header pins the schema hash so a binary with a
 //! different metric schema rejects the file with a migration error
 //! instead of misparsing it):
 //!
 //! ```text
-//! # amu-sim sweep cache v4 grid=<16-hex fingerprint> schema=<16-hex hash>
-//! bench,config,backend,variant,latency_ns,...,near_hits,...,pool_switches
+//! # amu-sim sweep cache v5 grid=<16-hex fingerprint> schema=<16-hex hash>
+//! bench,config,backend,variant,latency_ns,...,near_hits,...,pool_steal_cycles
 //! <one row per completed run>
 //! ```
 //!
-//! Version 3 predates the scenario columns (its 14-field rows cannot carry
-//! `near_hits`/`pool_congestion`); v3 files are rejected whole with an
-//! error naming the regeneration command. Version 2 predates the
-//! far-memory backend axis; version 1 had no fingerprint at all.
+//! Version 4 predates the tenancy columns (its 18-field rows cannot carry
+//! `tenant_slowdown_max`/`qos_throttle_events`/`pool_steal_cycles`);
+//! version 3 predates the scenario columns entirely. Both are rejected
+//! whole with an error naming the regeneration command. Version 2
+//! predates the far-memory backend axis; version 1 had no fingerprint at
+//! all.
 //!
 //! Rows are keyed by `(bench, config, backend, variant, latency)`, so a
 //! partial file (e.g. from an interrupted sweep) resumes instead of
 //! re-simulating everything. Grid *refinements* (`far.pool_policy`,
-//! `far.near_capacity_lines`) are deliberately not columns: a refinement
-//! is constant across a grid, so it distinguishes whole cache files via
-//! the grid fingerprint in the header. Floats are serialized with Rust's
-//! shortest-round-trip formatting, so `parse_csv(to_csv_row(r))`
-//! reproduces every field bit-exactly. Any malformed line rejects the
-//! whole file — a corrupt cache is never partially loaded.
+//! `far.near_capacity_lines`, `far.qos_policy`) are deliberately not
+//! columns: a refinement is constant across a grid, so it distinguishes
+//! whole cache files via the grid fingerprint in the header. Floats are
+//! serialized with Rust's shortest-round-trip formatting, so
+//! `parse_csv(to_csv_row(r))` reproduces every field bit-exactly. Any
+//! malformed line rejects the whole file — a corrupt cache is never
+//! partially loaded.
 
 use crate::session::metrics::{self, MetricSet, Selection};
 use crate::session::RunResult;
 
+const MAGIC_V5: &str = "# amu-sim sweep cache v5 grid=";
 const MAGIC_V4: &str = "# amu-sim sweep cache v4 grid=";
 const MAGIC_V3: &str = "# amu-sim sweep cache v3 grid=";
 
-/// The full-schema column header line (every v4 row stores every column).
+/// The full-schema column header line (every v5 row stores every column).
 pub fn csv_columns() -> String {
     metrics::csv_header(&Selection::All)
 }
@@ -49,10 +55,10 @@ fn parse_row(line: &str) -> Result<RunResult, String> {
     Ok(MetricSet::parse_csv_row(line)?.to_run_result())
 }
 
-/// The v4 header line for a grid fingerprint (the schema hash is this
+/// The v5 header line for a grid fingerprint (the schema hash is this
 /// binary's — by construction a written cache always matches).
 pub fn header(fingerprint: u64) -> String {
-    format!("{MAGIC_V4}{fingerprint:016x} schema={:016x}", metrics::schema_hash())
+    format!("{MAGIC_V5}{fingerprint:016x} schema={:016x}", metrics::schema_hash())
 }
 
 /// Serialize a complete cache file (fingerprint/schema header + column
@@ -71,26 +77,35 @@ pub fn to_csv_string(fingerprint: u64, rows: &[RunResult]) -> String {
 }
 
 /// Parse a cache file: returns the stored grid fingerprint and every row.
-/// Strict: an unrecognized header, a stale format version (v1–v3), a
+/// Strict: an unrecognized header, a stale format version (v1–v4), a
 /// schema-hash mismatch, or any corrupt / truncated row rejects the whole
-/// file — v3 and schema-drift rejections name the regeneration command.
+/// file — v3/v4 and schema-drift rejections name the regeneration command.
 pub fn parse_csv(text: &str) -> Result<(u64, Vec<RunResult>), String> {
     let mut lines = text.lines();
     let first = lines.next().ok_or("empty cache file")?;
     if first.starts_with(MAGIC_V3) {
         return Err(format!(
-            "v3 sweep cache: the v4 metric schema adds per-backend scenario \
-             columns ({}, ...) that 14-field v3 rows cannot carry; delete \
-             this file or rerun `amu-sim sweep` to regenerate it as v4",
+            "v3 sweep cache: the schema-driven format adds per-backend \
+             scenario columns ({}, ...) that 14-field v3 rows cannot carry; \
+             delete this file or rerun `amu-sim sweep` to regenerate it as v5",
             crate::stats::schema::SCENARIO_COLUMNS[0].name
         ));
     }
+    if first.starts_with(MAGIC_V4) {
+        return Err(
+            "v4 sweep cache: the v5 metric schema adds the shared-tenancy \
+             columns (tenant_slowdown_max, qos_throttle_events, \
+             pool_steal_cycles) that 18-field v4 rows cannot carry; delete \
+             this file or rerun `amu-sim sweep` to regenerate it as v5"
+                .into(),
+        );
+    }
     let rest = first
-        .strip_prefix(MAGIC_V4)
-        .ok_or_else(|| format!("not a v4 sweep cache (header '{first}')"))?;
+        .strip_prefix(MAGIC_V5)
+        .ok_or_else(|| format!("not a v5 sweep cache (header '{first}')"))?;
     let (grid_hex, schema_part) = rest
         .split_once(" schema=")
-        .ok_or_else(|| format!("v4 header missing schema hash ('{first}')"))?;
+        .ok_or_else(|| format!("v5 header missing schema hash ('{first}')"))?;
     let fingerprint =
         u64::from_str_radix(grid_hex, 16).map_err(|_| format!("bad fingerprint '{grid_hex}'"))?;
     let schema = u64::from_str_radix(schema_part, 16)
@@ -148,7 +163,8 @@ mod tests {
             disambig_frac: 0.087_654_321,
             scenario: ScenarioStats::default()
                 .with(ScenarioCol::NearHits, 31)
-                .with(ScenarioCol::PoolCongestion, 7),
+                .with(ScenarioCol::PoolCongestion, 7)
+                .with(ScenarioCol::TenantSlowdownMax, 1375),
         }
     }
 
@@ -163,6 +179,7 @@ mod tests {
         assert_eq!(rows[0].ipc.to_bits(), r.ipc.to_bits());
         assert_eq!(rows[0].disambig_frac.to_bits(), r.disambig_frac.to_bits());
         assert_eq!(rows[0].scenario.get(ScenarioCol::NearHits), 31);
+        assert_eq!(rows[0].scenario.get(ScenarioCol::TenantSlowdownMax), 1375);
     }
 
     #[test]
@@ -178,7 +195,7 @@ mod tests {
         let v1 = format!("{}\n{}\n", csv_columns(), to_csv_row(&sample()));
         assert!(parse_csv(&v1).is_err());
         // v2 files (no backend column, biased link timing) are stale too.
-        let v2 = text.replace("sweep cache v4", "sweep cache v2");
+        let v2 = text.replace("sweep cache v5", "sweep cache v2");
         assert!(parse_csv(&v2).is_err());
     }
 
@@ -192,7 +209,22 @@ mod tests {
         let e = parse_csv(v3).unwrap_err();
         assert!(e.contains("v3"), "{e}");
         assert!(e.contains("amu-sim sweep"), "must name the regeneration command: {e}");
-        assert!(e.contains("near_hits"), "must say what v4 adds: {e}");
+        assert!(e.contains("near_hits"), "must say what the schema adds: {e}");
+    }
+
+    #[test]
+    fn v4_files_are_rejected_with_the_migration_command() {
+        // A faithful v4 header: 18-field rows (no tenancy columns), with a
+        // schema hash that obviously cannot match this binary's.
+        let v4 = "# amu-sim sweep cache v4 grid=00000000deadbeef schema=0123456789abcdef\n\
+                  bench,config,backend,variant,latency_ns,measured_cycles,total_cycles,\
+                  insts,ipc,mlp,peak_inflight,dynamic_uj,static_uj,disambig_frac,\
+                  near_hits,near_evictions,pool_congestion,pool_switches\n\
+                  gups,amu,serial-link,amu,1000,1,2,3,0.5,1.5,4,0.1,0.2,0.3,0,0,0,0\n";
+        let e = parse_csv(v4).unwrap_err();
+        assert!(e.contains("v4"), "{e}");
+        assert!(e.contains("amu-sim sweep"), "must name the regeneration command: {e}");
+        assert!(e.contains("tenant_slowdown_max"), "must say what v5 adds: {e}");
     }
 
     #[test]
@@ -213,7 +245,7 @@ mod tests {
     #[test]
     fn header_carries_grid_and_schema_hashes() {
         let h = header(0xABCD);
-        assert!(h.starts_with("# amu-sim sweep cache v4 grid=000000000000abcd schema="));
+        assert!(h.starts_with("# amu-sim sweep cache v5 grid=000000000000abcd schema="));
         assert!(h.ends_with(&format!("{:016x}", metrics::schema_hash())));
     }
 

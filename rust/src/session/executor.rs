@@ -21,6 +21,38 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Deterministic parallel map over `0..n`: runs `f(i)` on up to `jobs`
+/// scoped worker threads (the sweep executor's work-claiming pattern) and
+/// returns the results in index order regardless of completion order.
+/// Callers that must be byte-identical across worker counts (`sweep`,
+/// `mtrun`) get that for free: output order never depends on scheduling.
+pub fn parallel_map<T, F>(jobs: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let jobs = jobs.min(n).max(1);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= n {
+                    break;
+                }
+                *slots[k].lock().unwrap() = Some(f(k));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| {
+            s.into_inner().unwrap().expect("worker finished without storing a result")
+        })
+        .collect()
+}
+
 /// Executes typed run requests, serially or in parallel.
 #[derive(Debug, Clone)]
 pub struct Session {
@@ -246,5 +278,19 @@ impl Session {
                 .map_err(|e| SessionError::Run(format!("{}: {e}", path.display())))?;
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_index_order_across_job_counts() {
+        let serial = parallel_map(1, 17, |i| i * i);
+        let threaded = parallel_map(4, 17, |i| i * i);
+        assert_eq!(serial, threaded, "order must not depend on scheduling");
+        assert_eq!(serial[16], 256);
+        assert!(parallel_map(4, 0, |i: usize| i).is_empty());
     }
 }

@@ -8,7 +8,7 @@
 //! the on-disk sweep cache, so a cache written for one grid can never be
 //! silently reused for another.
 
-use crate::config::{FarBackendKind, PoolPolicy, SimConfig};
+use crate::config::{FarBackendKind, PoolPolicy, QosPolicyKind, SimConfig};
 use crate::session::request::{RunRequest, SessionError};
 use crate::util::Fnv;
 use crate::workloads::{self, Scale, Variant};
@@ -72,6 +72,15 @@ pub struct SweepGrid {
     /// `hybrid` backend (the only backend it can affect), so existing
     /// fingerprints never fork on the default.
     pub near_capacity_lines: usize,
+    /// Shared-backend QoS policy applied to every cell — the third grid
+    /// *refinement*: it wraps the far backend in the [`SharedFar`]
+    /// arbiter (see [`crate::mem::backend`]), so it only enters the
+    /// fingerprint when non-default (`none`) *and* the grid sweeps a
+    /// shared-capable backend (`pooled` or `hybrid`); fingerprints minted
+    /// before the policy existed (all implicitly `none`) stay valid.
+    ///
+    /// [`SharedFar`]: crate::mem::backend::SharedFar
+    pub qos_policy: String,
     pub scale: Scale,
 }
 
@@ -86,6 +95,7 @@ impl SweepGrid {
             backends: vec![FarBackendKind::SerialLink.tag().to_string()],
             pool_policy: PoolPolicy::default().tag().to_string(),
             near_capacity_lines: 0,
+            qos_policy: QosPolicyKind::default().tag().to_string(),
             scale,
         }
     }
@@ -179,6 +189,19 @@ impl SweepGrid {
         self
     }
 
+    /// Set the shared-backend QoS policy for every cell. Known alias
+    /// spellings (`fair`, `prio`, `rate-limit`, underscores) canonicalize
+    /// here so the fingerprint never forks on spelling; unknown tags are
+    /// kept verbatim for `requests()` to reject with a named error.
+    pub fn qos_policy(mut self, policy: impl Into<String>) -> Self {
+        let p = policy.into();
+        self.qos_policy = match QosPolicyKind::parse(&p) {
+            Some(k) => k.tag().to_string(),
+            None => p,
+        };
+        self
+    }
+
     pub fn len(&self) -> usize {
         self.benches.len()
             * self.configs.len()
@@ -218,6 +241,8 @@ impl SweepGrid {
         }
         let pool_policy = PoolPolicy::parse(&self.pool_policy)
             .ok_or_else(|| SessionError::UnknownPoolPolicy(self.pool_policy.clone()))?;
+        let qos_policy = QosPolicyKind::parse(&self.qos_policy)
+            .ok_or_else(|| SessionError::UnknownQosPolicy(self.qos_policy.clone()))?;
         let mut out = Vec::with_capacity(self.len());
         for bench in &self.benches {
             for config in &self.configs {
@@ -225,6 +250,7 @@ impl SweepGrid {
                     .ok_or_else(|| SessionError::UnknownConfig(config.clone()))?;
                 cfg.far.pool_policy = pool_policy;
                 cfg.far.near_capacity_lines = self.near_capacity_lines;
+                cfg.far.qos_policy = qos_policy;
                 for &lat in &self.latencies_ns {
                     for sel in &self.variants {
                         for backend in &self.backends {
@@ -293,6 +319,16 @@ impl SweepGrid {
             h.write(&[0xFC]);
             h.write(b"near_capacity=");
             h.write(&(self.near_capacity_lines as u64).to_le_bytes());
+        }
+        // And for the QoS policy: `none` (the unwrapped backend) never
+        // enters the hash, and the flag is a no-op on grids that sweep
+        // neither shared-capable backend (`pooled` / `hybrid`).
+        if self.qos_policy != QosPolicyKind::default().tag()
+            && (self.sweeps_pooled() || self.sweeps_hybrid())
+        {
+            h.write(&[0xFB]);
+            h.write(b"qos_policy=");
+            h.write(self.qos_policy.as_bytes());
         }
         h.finish()
     }
@@ -536,6 +572,71 @@ mod tests {
             SweepGrid::paper(Scale::Test).backend("pooled").pool_policy("adapt"),
             adaptive
         );
+    }
+
+    #[test]
+    fn qos_policy_refines_the_fingerprint_only_when_it_can_matter() {
+        // Explicit `none` IS the default: byte-identical grid and
+        // fingerprint, so every pre-existing v5 fingerprint stays valid.
+        let base = SweepGrid::paper(Scale::Test);
+        let none = SweepGrid::paper(Scale::Test).qos_policy("none");
+        assert_eq!(base, none);
+        assert_eq!(base.fingerprint(), none.fingerprint());
+        // On a grid sweeping neither pooled nor hybrid the policy wraps
+        // nothing shared, so the fingerprint must not fork.
+        let fs_no_pool = SweepGrid::paper(Scale::Test).qos_policy("fair-share");
+        assert_eq!(base.fingerprint(), fs_no_pool.fingerprint());
+        // With a shared-capable backend swept, non-default policies refine
+        // the fingerprint and distinct policies get distinct fingerprints.
+        let pooled = SweepGrid::paper(Scale::Test).backend("pooled");
+        let fs = SweepGrid::paper(Scale::Test).backend("pooled").qos_policy("fair-share");
+        let prio = SweepGrid::paper(Scale::Test).backend("pooled").qos_policy("priority");
+        let thr = SweepGrid::paper(Scale::Test).backend("pooled").qos_policy("throttle");
+        assert_ne!(pooled.fingerprint(), fs.fingerprint());
+        assert_ne!(fs.fingerprint(), prio.fingerprint());
+        assert_ne!(prio.fingerprint(), thr.fingerprint());
+        // Hybrid counts as shared-capable too.
+        let hybrid = SweepGrid::paper(Scale::Test).backend("hybrid");
+        let hybrid_fs = SweepGrid::paper(Scale::Test).backend("hybrid").qos_policy("fair-share");
+        assert_ne!(hybrid.fingerprint(), hybrid_fs.fingerprint());
+        // Alias spellings canonicalize in the builder, like the others.
+        assert_eq!(
+            SweepGrid::paper(Scale::Test).backend("pooled").qos_policy("fair_share"),
+            fs
+        );
+        assert_eq!(
+            SweepGrid::paper(Scale::Test).backend("pooled").qos_policy("prio").fingerprint(),
+            prio.fingerprint()
+        );
+    }
+
+    #[test]
+    fn qos_policy_applies_to_every_request() {
+        use crate::config::QosPolicyKind;
+        let g = SweepGrid::new(Scale::Test)
+            .benches(["gups"])
+            .configs(["baseline"])
+            .latencies_ns([100.0])
+            .backends(["pooled"])
+            .qos_policy("throttle");
+        let reqs = g.requests().unwrap();
+        assert!(reqs.iter().all(|r| r.config().far.qos_policy == QosPolicyKind::Throttle));
+        // Default grids keep the unwrapped backend.
+        let reqs = SweepGrid::paper(Scale::Test).requests().unwrap();
+        assert!(reqs.iter().all(|r| r.config().far.qos_policy == QosPolicyKind::None));
+    }
+
+    #[test]
+    fn unknown_qos_policy_fails_fast_naming_choices() {
+        let g = SweepGrid::new(Scale::Test)
+            .benches(["gups"])
+            .configs(["baseline"])
+            .latencies_ns([100.0])
+            .qos_policy("warp9");
+        let e = g.requests().unwrap_err();
+        assert!(matches!(e, SessionError::UnknownQosPolicy(_)));
+        let msg = e.to_string();
+        assert!(msg.contains("fair-share") && msg.contains("throttle"), "{msg}");
     }
 
     #[test]

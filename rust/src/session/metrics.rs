@@ -21,7 +21,7 @@
 //!   selector. Key columns are always included so rows stay identifiable;
 //!   `core` reproduces the v3 row layout byte-for-byte.
 //! * [`schema_hash`] — FNV-1a over [`schema_descriptor`], stored in every
-//!   v4 sweep-cache header so schema drift invalidates stale files with a
+//!   v5 sweep-cache header so schema drift invalidates stale files with a
 //!   migration error instead of misparsing them.
 //!
 //! Adding a *scenario* metric is a table edit in `stats::schema` plus the
@@ -273,7 +273,7 @@ pub fn schema_descriptor() -> String {
     s
 }
 
-/// Stable hash of the schema (stored in every v4 sweep-cache header).
+/// Stable hash of the schema (stored in every v5 sweep-cache header).
 pub fn schema_hash() -> u64 {
     let mut h = Fnv::new();
     h.write(schema_descriptor().as_bytes());
@@ -511,10 +511,11 @@ mod tests {
         assert_eq!(
             h,
             "bench,config,backend,variant,latency_ns,near_hits,near_evictions,\
-             pool_congestion,pool_switches"
+             pool_congestion,pool_switches,tenant_slowdown_max,\
+             qos_throttle_events,pool_steal_cycles"
         );
         let row = csv_row(&sample(), &Selection::Backend);
-        assert_eq!(row, "gups,amu,hybrid,amu,1000,77,3,9,0");
+        assert_eq!(row, "gups,amu,hybrid,amu,1000,77,3,9,0,0,0,0");
     }
 
     #[test]

@@ -22,6 +22,10 @@
 //! * [`cache`] — the fingerprint- and schema-hash-headed CSV format
 //!   (bit-exact float round trips, strict rejection of corrupt or
 //!   stale-schema files with a migration error).
+//! * [`tenancy`] — the multi-tenant driver behind `amu-sim mtrun`: N
+//!   tenant simulators sharing one far-memory pool through the
+//!   shared-backend arbitration point, interleaved deterministically,
+//!   with QoS policies and per-tenant slowdown metrics.
 //!
 //! # Running one benchmark
 //!
@@ -68,12 +72,14 @@ pub mod grid;
 pub mod metrics;
 pub mod registry;
 pub mod request;
+pub mod tenancy;
 
 pub use executor::Session;
 pub use grid::{SweepGrid, VariantSel, PAPER_CONFIGS};
 pub use metrics::{MetricSet, Selection};
 pub use registry::Workload;
 pub use request::{RunRequest, RunRequestBuilder, SessionError};
+pub use tenancy::{MtOutcome, MtRequest, MtRow, TenantSpec};
 
 use crate::power::PowerBreakdown;
 use crate::stats::schema::ScenarioStats;
@@ -84,7 +90,7 @@ use std::path::PathBuf;
 /// `RunResult` is the *typed view* over the schema-ordered
 /// [`MetricSet`] record (see [`metrics`]): every field here backs a
 /// [`metrics::CORE_COLUMNS`] entry, and the per-backend [`ScenarioStats`]
-/// record backs the scenario columns. All CSV emission — the v4 sweep
+/// record backs the scenario columns. All CSV emission — the v5 sweep
 /// cache, `--columns` reports — goes through the schema, so adding a
 /// scenario metric is a schema-table edit, not a serialization change
 /// here.

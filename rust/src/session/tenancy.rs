@@ -1,0 +1,516 @@
+//! Multi-tenant simulation: N per-tenant simulators sharing **one**
+//! far-memory data plane, with QoS policies and per-tenant metrics.
+//!
+//! The driver behind `amu-sim mtrun`. Each tenant is an independent
+//! [`crate::sim::Simulator`] instance (its own pipeline, caches, guest
+//! memory) whose `MemSys.link` is replaced by a
+//! [`SharedFarHandle`](crate::mem::backend::SharedFarHandle) onto a single
+//! [`SharedFar`] arbitration point, so every far request from every tenant
+//! contends in the same pooled/hybrid backend under the cell's
+//! [`QosPolicyKind`]. A deterministic round-based interleaver steps the
+//! tenants [`ROUND_CYCLES`] at a time in fixed order, so co-scheduled
+//! tenants perceive each other's congestion while each pipeline stays
+//! single-threaded — `--jobs 1` and `--jobs N` produce byte-identical
+//! output because parallelism is only across *cells* (QoS policies) and
+//! solo baselines, never within one.
+//!
+//! A run proceeds in two phases:
+//!
+//! 1. **Solo baselines** — each unique benchmark runs alone (same config,
+//!    `qos_policy = none`) to establish its uncontended `measured_cycles`.
+//! 2. **Shared cells** — for each requested QoS policy, all tenants run
+//!    co-scheduled against one shared backend; each tenant's slowdown is
+//!    `measured_cycles / solo`, reported in permille, and the cell maximum
+//!    is stamped into every row's `tenant_slowdown_max` column.
+//!
+//! All tenants keep the base config's seed unchanged: a tenant's request
+//! stream is exactly what its solo run issues, so the slowdown isolates
+//! contention + arbitration rather than seed drift.
+
+use crate::config::{QosPolicyKind, SimConfig};
+use crate::mem::backend::{QosClass, SharedFar, TenantShare};
+use crate::power::{estimate, EnergyModel};
+use crate::session::executor::parallel_map;
+use crate::session::metrics::{self, Selection};
+use crate::session::registry::{self, Workload as _};
+use crate::session::request::{RunRequest, SessionError};
+use crate::session::RunResult;
+use crate::stats::schema::ScenarioCol;
+use crate::workloads::{self, Scale};
+use std::collections::HashMap;
+
+/// Cycles each tenant advances per interleaver round. Small enough that
+/// tenants observe each other's congestion at far-memory timescales (a
+/// round is well under one mean RTT), large enough that stepping overhead
+/// stays negligible.
+pub const ROUND_CYCLES: u64 = 1024;
+
+/// One parsed `bench[:count][@weight][/priority]` item of a `--tenants`
+/// spec: `count` instances of `bench`, each with the given `fair-share`
+/// weight and `priority` class.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSpec {
+    pub bench: String,
+    pub count: usize,
+    pub weight: u64,
+    pub class: QosClass,
+}
+
+impl TenantSpec {
+    /// Parse one item, e.g. `redis`, `bfs:3`, `redis:2@3/high`.
+    pub fn parse(item: &str) -> Result<TenantSpec, SessionError> {
+        let bad = |msg: String| SessionError::BadTenantSpec(msg);
+        let (body, class) = match item.split_once('/') {
+            Some((b, p)) => (
+                b,
+                QosClass::parse(p).ok_or_else(|| {
+                    bad(format!("unknown priority '{p}' in '{item}' (valid: high, normal, low)"))
+                })?,
+            ),
+            None => (item, QosClass::Normal),
+        };
+        let (body, weight) = match body.split_once('@') {
+            Some((b, w)) => (
+                b,
+                w.parse::<u64>()
+                    .ok()
+                    .filter(|&w| w >= 1)
+                    .ok_or_else(|| bad(format!("weight '{w}' in '{item}' must be >= 1")))?,
+            ),
+            None => (body, 1),
+        };
+        let (bench, count) = match body.split_once(':') {
+            Some((b, n)) => (
+                b,
+                n.parse::<usize>()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .ok_or_else(|| bad(format!("count '{n}' in '{item}' must be >= 1")))?,
+            ),
+            None => (body, 1),
+        };
+        if bench.is_empty() {
+            return Err(bad(format!("empty benchmark name in '{item}'")));
+        }
+        if registry::find(bench).is_none() {
+            return Err(SessionError::UnknownBench(bench.to_string()));
+        }
+        Ok(TenantSpec { bench: bench.to_string(), count, weight, class })
+    }
+
+    /// Canonical spec form (round-trips through [`TenantSpec::parse`]).
+    pub fn spec_string(&self) -> String {
+        format!("{}:{}@{}/{}", self.bench, self.count, self.weight, self.class.tag())
+    }
+}
+
+/// Parse a comma-separated `--tenants` spec, e.g. `redis:2@3/high,bfs:1`.
+pub fn parse_tenants(s: &str) -> Result<Vec<TenantSpec>, SessionError> {
+    let specs: Vec<TenantSpec> = s
+        .split(',')
+        .filter(|i| !i.is_empty())
+        .map(TenantSpec::parse)
+        .collect::<Result<_, _>>()?;
+    if specs.is_empty() {
+        return Err(SessionError::BadTenantSpec(format!("no tenants in '{s}'")));
+    }
+    Ok(specs)
+}
+
+/// Canonical comma-joined form of a tenant list (the `mtrun` CSV header
+/// records this, so a file is self-describing).
+pub fn spec_string(specs: &[TenantSpec]) -> String {
+    specs.iter().map(TenantSpec::spec_string).collect::<Vec<_>>().join(",")
+}
+
+/// Parse a comma-separated QoS policy list (aliases canonicalized, order
+/// preserved, duplicates dropped), e.g. `fair-share,throttle`.
+pub fn parse_policies(s: &str) -> Result<Vec<QosPolicyKind>, SessionError> {
+    let mut out = Vec::new();
+    for item in s.split(',').filter(|i| !i.is_empty()) {
+        let p = QosPolicyKind::parse(item)
+            .ok_or_else(|| SessionError::UnknownQosPolicy(item.to_string()))?;
+        if !out.contains(&p) {
+            out.push(p);
+        }
+    }
+    if out.is_empty() {
+        return Err(SessionError::UnknownQosPolicy(s.to_string()));
+    }
+    Ok(out)
+}
+
+/// One instantiated tenant slot: a label unique within the run
+/// (`bench#<index>`), the benchmark it runs, and its QoS share.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    pub label: String,
+    pub bench: String,
+    pub share: TenantShare,
+}
+
+/// Expand specs into concrete tenant slots, labeled `bench#<index>` by
+/// global tenant index (the index is also the tenant's [`SharedFar`] slot).
+pub fn expand(specs: &[TenantSpec]) -> Vec<Tenant> {
+    let mut out = Vec::new();
+    for spec in specs {
+        for _ in 0..spec.count {
+            out.push(Tenant {
+                label: format!("{}#{}", spec.bench, out.len()),
+                bench: spec.bench.clone(),
+                share: TenantShare { weight: spec.weight, class: spec.class },
+            });
+        }
+    }
+    out
+}
+
+/// One tenant's outcome within one QoS cell.
+#[derive(Debug, Clone)]
+pub struct MtRow {
+    pub policy: QosPolicyKind,
+    pub label: String,
+    pub bench: String,
+    pub weight: u64,
+    pub class: QosClass,
+    /// The benchmark's uncontended `measured_cycles` (phase-1 baseline).
+    pub solo_cycles: u64,
+    /// `measured_cycles * 1000 / solo_cycles`, rounded to nearest.
+    pub slowdown_permille: u64,
+    /// Full schema record for this tenant; `bench` carries the tenant
+    /// label and `tenant_slowdown_max` the cell-wide maximum.
+    pub result: RunResult,
+}
+
+/// One QoS policy cell: every tenant's row, in tenant order.
+#[derive(Debug, Clone)]
+pub struct MtOutcome {
+    pub policy: QosPolicyKind,
+    pub rows: Vec<MtRow>,
+}
+
+/// A validated multi-tenant run description: tenant specs, a base config
+/// (its backend/latency/seed shared by every tenant), the QoS policies to
+/// sweep, and execution knobs.
+#[derive(Debug, Clone)]
+pub struct MtRequest {
+    pub tenants: Vec<TenantSpec>,
+    pub config: SimConfig,
+    pub policies: Vec<QosPolicyKind>,
+    pub scale: Scale,
+    pub jobs: usize,
+    pub quiet: bool,
+}
+
+impl MtRequest {
+    pub fn new(tenants: Vec<TenantSpec>, config: SimConfig) -> Self {
+        Self {
+            tenants,
+            config,
+            policies: vec![QosPolicyKind::FairShare],
+            scale: Scale::Test,
+            jobs: 1,
+            quiet: false,
+        }
+    }
+
+    /// Run both phases and return one outcome per policy, in policy order.
+    pub fn run(&self) -> Result<Vec<MtOutcome>, SessionError> {
+        if self.tenants.is_empty() {
+            return Err(SessionError::EmptyGrid("tenants"));
+        }
+        if self.policies.is_empty() {
+            return Err(SessionError::EmptyGrid("qos policies"));
+        }
+        let tenants = expand(&self.tenants);
+
+        // Phase 1: solo baselines, one per unique benchmark, in parallel.
+        let mut benches: Vec<String> = self.tenants.iter().map(|t| t.bench.clone()).collect();
+        benches.sort();
+        benches.dedup();
+        let quiet = self.quiet;
+        let solo_results = parallel_map(self.jobs, benches.len(), |i| {
+            if !quiet {
+                eprintln!("[mtrun] solo baseline: {} ...", benches[i]);
+            }
+            solo_cycles(&self.config, &benches[i], self.scale)
+        });
+        let mut solo: HashMap<String, u64> = HashMap::new();
+        for (b, r) in benches.iter().zip(solo_results) {
+            solo.insert(b.clone(), r?);
+        }
+
+        // Phase 2: one shared cell per QoS policy, cells in parallel,
+        // tenants within a cell strictly interleaved single-threaded.
+        let cells = parallel_map(self.jobs, self.policies.len(), |i| {
+            if !quiet {
+                eprintln!(
+                    "[mtrun] qos={}: co-scheduling {} tenants ...",
+                    self.policies[i].tag(),
+                    tenants.len()
+                );
+            }
+            run_cell(&self.config, &tenants, self.policies[i], self.scale)
+        });
+
+        let mut out = Vec::new();
+        for (&policy, cell) in self.policies.iter().zip(cells) {
+            let raw = cell?;
+            let slowdowns: Vec<u64> = tenants
+                .iter()
+                .zip(&raw)
+                .map(|(t, r)| {
+                    let s = solo[&t.bench].max(1);
+                    (r.measured_cycles * 1000 + s / 2) / s
+                })
+                .collect();
+            let cell_max = slowdowns.iter().copied().max().unwrap_or(0);
+            let rows = tenants
+                .iter()
+                .zip(raw)
+                .zip(slowdowns)
+                .map(|((t, mut r), sd)| {
+                    r.scenario = r.scenario.with(ScenarioCol::TenantSlowdownMax, cell_max);
+                    MtRow {
+                        policy,
+                        label: t.label.clone(),
+                        bench: t.bench.clone(),
+                        weight: t.share.weight,
+                        class: t.share.class,
+                        solo_cycles: solo[&t.bench],
+                        slowdown_permille: sd,
+                        result: r,
+                    }
+                })
+                .collect();
+            out.push(MtOutcome { policy, rows });
+        }
+        Ok(out)
+    }
+}
+
+/// Phase-1 baseline: the benchmark alone on the same config with QoS off.
+fn solo_cycles(base: &SimConfig, bench: &str, scale: Scale) -> Result<u64, SessionError> {
+    let mut cfg = base.clone();
+    cfg.far.qos_policy = QosPolicyKind::None;
+    RunRequest::bench(bench).config(cfg).scale(scale).run().map(|r| r.measured_cycles)
+}
+
+/// Run one shared cell: every tenant against one [`SharedFar`] under
+/// `policy`, stepped round-robin until all halt, then validated and
+/// harvested. Rows come back in tenant order with the *final* pool-wide
+/// scenario snapshot (uniform across the cell's rows by construction).
+fn run_cell(
+    base: &SimConfig,
+    tenants: &[Tenant],
+    policy: QosPolicyKind,
+    scale: Scale,
+) -> Result<Vec<RunResult>, SessionError> {
+    let mut cfg = base.clone();
+    cfg.far.qos_policy = policy;
+    cfg.validate().map_err(SessionError::InvalidConfig)?;
+    let shares: Vec<TenantShare> = tenants.iter().map(|t| t.share).collect();
+    let shared = SharedFar::new(&cfg.far, cfg.core.freq_ghz, cfg.seed, shares);
+    let variant = workloads::variant_for(&cfg);
+
+    let mut specs = Vec::new();
+    let mut sims = Vec::new();
+    for (i, t) in tenants.iter().enumerate() {
+        let w = registry::find(&t.bench)
+            .ok_or_else(|| SessionError::UnknownBench(t.bench.clone()))?;
+        let spec = w.build(&cfg, variant, scale);
+        let mut sim = spec.instantiate(&cfg);
+        // Swap the per-sim backend for this tenant's handle onto the one
+        // shared data plane — the whole point of the exercise.
+        sim.memsys.link = Box::new(SharedFar::handle(&shared, i));
+        specs.push(spec);
+        sims.push(sim);
+    }
+
+    // Deterministic round-based interleaver: fixed tenant order, fixed
+    // budget, no dependence on wall-clock or thread scheduling.
+    let mut done = vec![false; sims.len()];
+    let mut remaining = sims.len();
+    while remaining > 0 {
+        for i in 0..sims.len() {
+            if done[i] {
+                continue;
+            }
+            let finished = sims[i]
+                .run_for(ROUND_CYCLES)
+                .map_err(|e| SessionError::Run(format!("{}: {e}", tenants[i].label)))?;
+            if finished {
+                done[i] = true;
+                remaining -= 1;
+            }
+        }
+    }
+
+    let snapshot = shared.lock().expect("shared far-memory lock poisoned").scenario_snapshot();
+    let mut rows = Vec::new();
+    for ((sim, spec), t) in sims.iter_mut().zip(&specs).zip(tenants) {
+        (spec.validate)(sim)
+            .map_err(|e| SessionError::Run(format!("{}: validation: {e}", t.label)))?;
+        let p = estimate(&cfg, &sim.stats, &EnergyModel::default());
+        rows.push(RunResult {
+            bench: t.label.clone(),
+            config: cfg.name.clone(),
+            backend: cfg.far.backend.tag().into(),
+            variant: variant.tag(),
+            latency_ns: cfg.far.added_latency_ns,
+            measured_cycles: sim.stats.measured_cycles.max(1),
+            total_cycles: sim.cycle,
+            insts: sim.stats.insts_committed,
+            ipc: sim.stats.ipc(),
+            mlp: sim.stats.mlp(),
+            peak_inflight: sim.stats.far_inflight.max,
+            dynamic_uj: p.dynamic_uj,
+            static_uj: p.static_uj,
+            disambig_frac: sim.stats.region_fraction(crate::stats::Region::Disambig),
+            scenario: snapshot,
+        });
+    }
+    Ok(rows)
+}
+
+/// Serialize outcomes as the `mtrun` CSV: a self-describing comment line,
+/// then per-tenant prefix columns followed by the full metric schema (the
+/// same `Selection::All` columns the sweep cache stores; `bench` carries
+/// the tenant label). Row order is (policy, tenant) — canonical, so the
+/// file is byte-identical across `--jobs` counts.
+pub fn mt_csv(specs: &[TenantSpec], scale: Scale, outcomes: &[MtOutcome]) -> String {
+    let cols = Selection::All.columns();
+    let mut s = format!(
+        "# amu-sim mtrun tenants={} scale={} schema={:016x}\n",
+        spec_string(specs),
+        scale.tag(),
+        metrics::schema_hash()
+    );
+    s.push_str("qos,tenant,weight,priority,solo_cycles,slowdown_permille,");
+    s.push_str(&metrics::csv_header(&Selection::All));
+    s.push('\n');
+    for o in outcomes {
+        for r in &o.rows {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},",
+                o.policy.tag(),
+                r.label,
+                r.weight,
+                r.class.tag(),
+                r.solo_cycles,
+                r.slowdown_permille
+            ));
+            s.push_str(&metrics::csv_row_with(&cols, &r.result));
+            s.push('\n');
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenant_specs_parse_the_full_grammar() {
+        let t = TenantSpec::parse("redis").unwrap();
+        assert_eq!(
+            t,
+            TenantSpec { bench: "redis".into(), count: 1, weight: 1, class: QosClass::Normal }
+        );
+        let t = TenantSpec::parse("redis:2@3/high").unwrap();
+        assert_eq!(
+            t,
+            TenantSpec { bench: "redis".into(), count: 2, weight: 3, class: QosClass::High }
+        );
+        assert_eq!(t.spec_string(), "redis:2@3/high");
+        let t2 = TenantSpec::parse(&t.spec_string()).unwrap();
+        assert_eq!(t, t2, "spec_string must round-trip");
+        // Partial forms.
+        assert_eq!(TenantSpec::parse("bfs:3").unwrap().count, 3);
+        assert_eq!(TenantSpec::parse("bfs@5").unwrap().weight, 5);
+        assert_eq!(TenantSpec::parse("bfs/low").unwrap().class, QosClass::Low);
+    }
+
+    #[test]
+    fn tenant_spec_errors_name_the_problem() {
+        let e = TenantSpec::parse("warp9").unwrap_err();
+        assert!(matches!(e, SessionError::UnknownBench(_)), "{e}");
+        let e = TenantSpec::parse("redis:0").unwrap_err();
+        assert!(e.to_string().contains(">= 1"), "{e}");
+        let e = TenantSpec::parse("redis@0").unwrap_err();
+        assert!(e.to_string().contains(">= 1"), "{e}");
+        let e = TenantSpec::parse("redis/urgent").unwrap_err();
+        assert!(e.to_string().contains("high, normal, low"), "{e}");
+        let e = TenantSpec::parse("redis:x").unwrap_err();
+        assert!(e.to_string().contains("bench[:count][@weight][/priority]"), "{e}");
+        assert!(parse_tenants("").is_err());
+    }
+
+    #[test]
+    fn tenant_lists_expand_with_global_labels() {
+        let specs = parse_tenants("redis:2@3/high,bfs").unwrap();
+        let tenants = expand(&specs);
+        assert_eq!(tenants.len(), 3);
+        assert_eq!(tenants[0].label, "redis#0");
+        assert_eq!(tenants[1].label, "redis#1");
+        assert_eq!(tenants[2].label, "bfs#2");
+        assert_eq!(tenants[0].share, TenantShare { weight: 3, class: QosClass::High });
+        assert_eq!(tenants[2].share, TenantShare { weight: 1, class: QosClass::Normal });
+        assert_eq!(spec_string(&specs), "redis:2@3/high,bfs:1@1/normal");
+    }
+
+    #[test]
+    fn policy_lists_canonicalize_and_dedup() {
+        assert_eq!(
+            parse_policies("fair_share,prio,fair-share,throttle").unwrap(),
+            vec![QosPolicyKind::FairShare, QosPolicyKind::Priority, QosPolicyKind::Throttle]
+        );
+        let e = parse_policies("fair-share,warp9").unwrap_err();
+        assert!(matches!(e, SessionError::UnknownQosPolicy(_)), "{e}");
+        assert!(parse_policies("").is_err());
+    }
+
+    #[test]
+    fn two_gups_tenants_share_one_pool_and_slow_each_other_down() {
+        let mut req = MtRequest::new(
+            parse_tenants("gups:2").unwrap(),
+            SimConfig::amu().with_far_latency_ns(500.0),
+        );
+        req.config.far.backend = crate::config::FarBackendKind::Pooled;
+        req.policies = vec![QosPolicyKind::FairShare];
+        req.quiet = true;
+        let out = req.run().unwrap();
+        assert_eq!(out.len(), 1);
+        let rows = &out[0].rows;
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].label, "gups#0");
+        assert_eq!(rows[1].label, "gups#1");
+        for r in rows {
+            assert_eq!(r.result.bench, r.label);
+            assert!(
+                r.slowdown_permille > 1000,
+                "{}: sharing one pool must cost something: {}",
+                r.label,
+                r.slowdown_permille
+            );
+            assert_eq!(
+                r.result.scenario.get(ScenarioCol::TenantSlowdownMax),
+                rows.iter().map(|x| x.slowdown_permille).max().unwrap(),
+                "cell max must be stamped on every row"
+            );
+        }
+        // Fair-share pacing of two contending floods must register steals.
+        assert!(rows[0].result.scenario.get(ScenarioCol::PoolStealCycles) > 0);
+
+        let csv = mt_csv(&req.tenants, req.scale, &out);
+        let mut lines = csv.lines();
+        assert!(lines.next().unwrap().starts_with("# amu-sim mtrun tenants=gups:2@1/normal"));
+        let header = lines.next().unwrap();
+        assert!(header.starts_with("qos,tenant,weight,priority,solo_cycles,slowdown_permille,"));
+        assert!(header.ends_with("pool_steal_cycles"));
+        let first = lines.next().unwrap();
+        assert!(first.starts_with("fair-share,gups#0,1,normal,"), "{first}");
+        assert_eq!(csv.lines().count(), 2 + 2);
+    }
+}

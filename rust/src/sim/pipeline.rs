@@ -1406,6 +1406,44 @@ impl Simulator {
             committed_insts: self.stats.insts_committed,
         })
     }
+
+    /// Run at most `budget` further cycles: `Ok(true)` once the program
+    /// halts (scenario counters harvested, exactly like [`Simulator::run`]),
+    /// `Ok(false)` when the budget is exhausted first. The multi-tenant
+    /// driver (`session::tenancy`) steps co-scheduled simulators round-robin
+    /// through this, so tenants sharing one far-memory pool perceive each
+    /// other's congestion while each pipeline stays single-threaded. The
+    /// same `max_cycles` ceiling and drained-pipeline deadlock detector as
+    /// `run` apply across calls.
+    pub fn run_for(&mut self, budget: u64) -> Result<bool, String> {
+        let max = self.cfg.max_cycles;
+        let stop_at = self.cycle.saturating_add(budget);
+        while !self.done && self.cycle < stop_at {
+            if self.cycle >= max {
+                return Err(format!(
+                    "simulation exceeded {max} cycles at pc={} (rob={}, iq={}, fetch_q={})",
+                    self.rob.front().map(|e| e.pc).unwrap_or(self.pc),
+                    self.rob.len(),
+                    self.iq.len(),
+                    self.fetch_q.len()
+                ));
+            }
+            self.tick();
+            if self.rob.is_empty()
+                && self.fetch_q.is_empty()
+                && self.fetch_halted
+                && self.fetch_blocked_on.is_none()
+                && !self.done
+                && self.sb.is_empty()
+            {
+                return Err("pipeline drained without Halt (fell off program end)".into());
+            }
+        }
+        if self.done {
+            self.stats.scenario = self.memsys.scenario_stats();
+        }
+        Ok(self.done)
+    }
 }
 
 enum IdUopOutcome {
@@ -1455,6 +1493,40 @@ mod tests {
         let mut it = Interp::new(&mut mem, CompletionOrder::Fifo);
         it.run(&prog, 100_000).unwrap();
         assert_eq!(it.regs[2], sim.arch_reg(2));
+    }
+
+    #[test]
+    fn run_for_chunked_stepping_matches_run_exactly() {
+        // The multi-tenant interleaver depends on this: stepping a pipeline
+        // in bounded rounds must be invisible to the simulated machine.
+        let mk = || {
+            let mut a = Asm::new("chunked");
+            a.li(1, FAR_BASE as i64);
+            a.li(2, 0).li(3, 0).li(4, 200);
+            a.label("loop");
+            a.ld64(5, 1, 0);
+            a.add(3, 3, 5);
+            a.addi(2, 2, 1);
+            a.blt(2, 4, "loop");
+            a.halt();
+            Simulator::new(SimConfig::baseline(), a.finish())
+        };
+        let mut whole = mk();
+        let res = whole.run().expect("run");
+        let mut chunked = mk();
+        let mut rounds = 0u64;
+        while !chunked.run_for(64).expect("run_for") {
+            rounds += 1;
+            assert!(rounds < 1_000_000, "chunked run must terminate");
+        }
+        assert!(rounds > 1, "budget 64 must take multiple rounds");
+        assert_eq!(chunked.cycle, res.cycles, "round boundaries must not change timing");
+        assert_eq!(chunked.arch_reg(3), whole.arch_reg(3));
+        assert_eq!(chunked.stats.insts_committed, whole.stats.insts_committed);
+        assert_eq!(chunked.stats.scenario, whole.stats.scenario, "scenario harvest on done");
+        // Once done, further budget is a no-op.
+        assert!(chunked.run_for(64).expect("idempotent"));
+        assert_eq!(chunked.cycle, res.cycles);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //!
 //! **Adding a scenario metric is two adjacent edits in this file** — a
 //! [`ScenarioCol`] variant and its [`SCENARIO_COLUMNS`] row — plus the
-//! backend that produces it. The CSV schema, the v4 sweep cache, the
+//! backend that produces it. The CSV schema, the v5 sweep cache, the
 //! `--columns` report selector, and the schema hash all derive from this
 //! table; nothing else needs to change (the cache schema hash changes
 //! automatically, invalidating stale files with a migration error).
@@ -26,38 +26,89 @@ pub enum ScenarioCol {
     /// `pooled`/`adaptive`: channel-policy switches (hash -> least-loaded)
     /// triggered by observed congestion.
     PoolSwitches,
+    /// Shared backend (`mtrun`): worst per-tenant slowdown vs the tenant's
+    /// solo run, in permille (1000 = no slowdown). Stamped on every row of
+    /// a multi-tenant cell; zero in single-tenant runs.
+    TenantSlowdownMax,
+    /// Shared backend: QoS `throttle` activations plus enforced delays.
+    QosThrottleEvents,
+    /// Shared backend: total cycles tenants spent stalled in QoS
+    /// arbitration (bandwidth "stolen" by co-tenants).
+    PoolStealCycles,
 }
 
-/// Descriptor of one scenario column: stable CSV name, unit, and the
-/// backend that produces it (every other backend reports zero).
+/// How a scenario column combines when rows are merged (multi-tenant cells
+/// re-stamp one shared snapshot; accumulation folds per-shard snapshots).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Merge {
+    /// Additive counter: merged value is the sum.
+    Sum,
+    /// High-water mark: merged value is the max.
+    Max,
+}
+
+/// Descriptor of one scenario column: stable CSV name, unit, the backend
+/// that produces it (every other backend reports zero), and its merge
+/// semantics.
 pub struct ScenarioDef {
     pub col: ScenarioCol,
     pub name: &'static str,
     pub unit: &'static str,
     pub producer: &'static str,
+    pub merge: Merge,
 }
 
 /// The scenario column table — the single source of truth for per-backend
 /// metric columns. Order is the CSV column order.
 pub const SCENARIO_COLUMNS: &[ScenarioDef] = &[
-    ScenarioDef { col: ScenarioCol::NearHits, name: "near_hits", unit: "count", producer: "hybrid" },
+    ScenarioDef {
+        col: ScenarioCol::NearHits,
+        name: "near_hits",
+        unit: "count",
+        producer: "hybrid",
+        merge: Merge::Sum,
+    },
     ScenarioDef {
         col: ScenarioCol::NearEvictions,
         name: "near_evictions",
         unit: "count",
         producer: "hybrid",
+        merge: Merge::Sum,
     },
     ScenarioDef {
         col: ScenarioCol::PoolCongestion,
         name: "pool_congestion",
         unit: "count",
         producer: "pooled",
+        merge: Merge::Sum,
     },
     ScenarioDef {
         col: ScenarioCol::PoolSwitches,
         name: "pool_switches",
         unit: "count",
         producer: "pooled",
+        merge: Merge::Sum,
+    },
+    ScenarioDef {
+        col: ScenarioCol::TenantSlowdownMax,
+        name: "tenant_slowdown_max",
+        unit: "permille",
+        producer: "shared",
+        merge: Merge::Max,
+    },
+    ScenarioDef {
+        col: ScenarioCol::QosThrottleEvents,
+        name: "qos_throttle_events",
+        unit: "count",
+        producer: "shared",
+        merge: Merge::Sum,
+    },
+    ScenarioDef {
+        col: ScenarioCol::PoolStealCycles,
+        name: "pool_steal_cycles",
+        unit: "cycles",
+        producer: "shared",
+        merge: Merge::Sum,
     },
 ];
 
@@ -112,6 +163,27 @@ impl ScenarioStats {
     pub fn set_index(&mut self, i: usize, v: u64) {
         self.vals[i] = v;
     }
+
+    /// Fold another snapshot into this one, column by column, under each
+    /// column's declared [`Merge`] semantics: additive counters sum,
+    /// high-water marks take the max.
+    pub fn accumulate(&mut self, other: &ScenarioStats) {
+        for (i, d) in SCENARIO_COLUMNS.iter().enumerate() {
+            self.vals[i] = match d.merge {
+                Merge::Sum => self.vals[i].wrapping_add(other.vals[i]),
+                Merge::Max => self.vals[i].max(other.vals[i]),
+            };
+        }
+    }
+
+    /// [`accumulate`](Self::accumulate) over any number of snapshots.
+    pub fn merged<'a>(snapshots: impl IntoIterator<Item = &'a ScenarioStats>) -> ScenarioStats {
+        let mut out = ScenarioStats::default();
+        for s in snapshots {
+            out.accumulate(s);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -148,5 +220,38 @@ mod tests {
         t.set_index(ScenarioCol::PoolCongestion.index(), 42);
         t.set(ScenarioCol::NearHits, 7);
         assert_eq!(s, t);
+    }
+
+    #[test]
+    fn accumulate_respects_declared_merge_semantics() {
+        let a = ScenarioStats::default()
+            .with(ScenarioCol::NearHits, 10)
+            .with(ScenarioCol::TenantSlowdownMax, 1500)
+            .with(ScenarioCol::PoolStealCycles, 100);
+        let b = ScenarioStats::default()
+            .with(ScenarioCol::NearHits, 5)
+            .with(ScenarioCol::TenantSlowdownMax, 1200)
+            .with(ScenarioCol::PoolStealCycles, 50);
+        let mut m = a;
+        m.accumulate(&b);
+        // Sum columns add.
+        assert_eq!(m.get(ScenarioCol::NearHits), 15);
+        assert_eq!(m.get(ScenarioCol::PoolStealCycles), 150);
+        // Max columns keep the high-water mark.
+        assert_eq!(m.get(ScenarioCol::TenantSlowdownMax), 1500);
+        // merged() over a slice matches pairwise accumulate.
+        assert_eq!(ScenarioStats::merged([&a, &b]), m);
+    }
+
+    #[test]
+    fn tenant_columns_are_registered_after_the_backend_columns() {
+        // Cache/golden compatibility: the PR 5 columns keep their indices;
+        // the shared-tenancy columns append.
+        assert_eq!(ScenarioCol::NearHits.index(), 0);
+        assert_eq!(ScenarioCol::PoolSwitches.index(), 3);
+        assert_eq!(ScenarioCol::TenantSlowdownMax.index(), 4);
+        assert_eq!(ScenarioCol::QosThrottleEvents.index(), 5);
+        assert_eq!(ScenarioCol::PoolStealCycles.index(), 6);
+        assert_eq!(ScenarioCol::TenantSlowdownMax.def().merge, Merge::Max);
     }
 }

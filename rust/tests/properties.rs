@@ -173,6 +173,86 @@ fn prop_memsys_completes_every_accepted_access() {
     );
 }
 
+/// Schema invariant: [`ScenarioStats`] values round-trip losslessly
+/// through the schema-ordered `MetricSet` record and a full-schema CSV row
+/// for EVERY `ScenarioCol` variant (including the multi-tenant columns
+/// `tenant_slowdown_max` / `qos_throttle_events` / `pool_steal_cycles`),
+/// and `accumulate` / `merged` obey each column's declared merge
+/// semantics.
+#[test]
+fn prop_scenario_stats_round_trip_through_metric_set_and_merge() {
+    use amu_sim::session::metrics::{MetricSet, Selection};
+    use amu_sim::session::RunResult;
+    use amu_sim::stats::schema::{Merge, ScenarioCol, ScenarioStats, NUM_SCENARIO_COLS, SCENARIO_COLUMNS};
+    // The tenant columns must be in the table, with the slowdown cell a
+    // high-water mark (multi-tenant cells re-stamp one shared snapshot).
+    for name in ["tenant_slowdown_max", "qos_throttle_events", "pool_steal_cycles"] {
+        assert!(
+            SCENARIO_COLUMNS.iter().any(|d| d.name == name),
+            "schema table lost the {name} column"
+        );
+    }
+    assert_eq!(ScenarioCol::TenantSlowdownMax.def().merge, Merge::Max);
+    check(
+        &PropConfig { cases: 32, seed: 0x7E4A47, ..Default::default() },
+        |rng| (0..2 * NUM_SCENARIO_COLS).map(|_| rng.next_u64() >> 12).collect::<Vec<u64>>(),
+        |vals| {
+            let (a_vals, b_vals) = vals.split_at(NUM_SCENARIO_COLS);
+            let mut a = ScenarioStats::default();
+            let mut b = ScenarioStats::default();
+            for (i, d) in SCENARIO_COLUMNS.iter().enumerate() {
+                a.set(d.col, a_vals[i]);
+                b.set(d.col, b_vals[i]);
+            }
+            // Every variant reads back exactly what was written.
+            for (i, d) in SCENARIO_COLUMNS.iter().enumerate() {
+                if a.get(d.col) != a_vals[i] {
+                    return Err(format!("{} did not read back", d.name));
+                }
+            }
+            // Round trip through the schema-ordered MetricSet record...
+            let r = RunResult {
+                bench: "gups".into(),
+                config: "amu".into(),
+                backend: "pooled".into(),
+                variant: "amu".into(),
+                scenario: a,
+                ..Default::default()
+            };
+            let back = MetricSet::of(&r).to_run_result();
+            if back != r {
+                return Err("MetricSet::of -> to_run_result was lossy".into());
+            }
+            // ... and through one full-schema CSV row.
+            let row = MetricSet::of(&r).csv_row(&Selection::All);
+            let parsed = MetricSet::parse_csv_row(&row)?.to_run_result();
+            if parsed.scenario != a {
+                return Err(format!("CSV round trip lost scenario values in '{row}'"));
+            }
+            // accumulate obeys the per-column Merge declaration.
+            let mut acc = a;
+            acc.accumulate(&b);
+            for (i, d) in SCENARIO_COLUMNS.iter().enumerate() {
+                let want = match d.merge {
+                    Merge::Sum => a_vals[i].wrapping_add(b_vals[i]),
+                    Merge::Max => a_vals[i].max(b_vals[i]),
+                };
+                if acc.get(d.col) != want {
+                    return Err(format!("{} merged as {:?} incorrectly", d.name, d.merge));
+                }
+            }
+            // merged == a left fold of accumulate; the empty merge is zero.
+            if ScenarioStats::merged([&a, &b]) != acc {
+                return Err("merged != accumulate fold".into());
+            }
+            if ScenarioStats::merged(std::iter::empty::<&ScenarioStats>()) != ScenarioStats::default() {
+                return Err("empty merge must be the zero snapshot".into());
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Coroutine scheduler never loses a task regardless of task count.
 #[test]
 fn prop_scheduler_finishes_all_tasks() {

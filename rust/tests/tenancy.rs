@@ -1,0 +1,80 @@
+//! End-to-end multi-tenant (`mtrun`) invariants: byte-identical output
+//! across worker counts, slowdown sanity vs solo baselines, and the
+//! per-tenant scenario columns riding the full metric schema.
+
+use amu_sim::config::{FarBackendKind, QosPolicyKind, SimConfig};
+use amu_sim::session::metrics::{self, Selection};
+use amu_sim::session::tenancy::{self, MtRequest};
+use amu_sim::stats::schema::ScenarioCol;
+use amu_sim::workloads::Scale;
+
+/// The acceptance cell: 3 tenants (two gups, one bfs) on one shared pool
+/// under two QoS policies, test scale.
+fn request(jobs: usize) -> MtRequest {
+    let mut cfg = SimConfig::amu().with_far_latency_ns(300.0);
+    cfg.far.backend = FarBackendKind::Pooled;
+    let tenants = tenancy::parse_tenants("gups:2,bfs:1").unwrap();
+    let mut req = MtRequest::new(tenants, cfg);
+    req.policies = vec![QosPolicyKind::FairShare, QosPolicyKind::Throttle];
+    req.scale = Scale::Test;
+    req.jobs = jobs;
+    req.quiet = true;
+    req
+}
+
+#[test]
+fn mtrun_is_byte_identical_across_worker_counts() {
+    let r1 = request(1);
+    let r4 = request(4);
+    let o1 = r1.run().unwrap();
+    let o4 = r4.run().unwrap();
+    let csv1 = tenancy::mt_csv(&r1.tenants, r1.scale, &o1);
+    let csv4 = tenancy::mt_csv(&r4.tenants, r4.scale, &o4);
+    assert_eq!(csv1, csv4, "--jobs must not change a byte of mtrun output");
+    // Comment + header + 2 policies x 3 tenants.
+    assert_eq!(csv1.lines().count(), 2 + 2 * 3, "{csv1}");
+    assert!(csv1.starts_with("# amu-sim mtrun tenants=gups:2@1/normal,bfs:1@1/normal "), "{csv1}");
+}
+
+#[test]
+fn co_scheduled_tenants_report_slowdown_in_the_full_schema() {
+    let req = request(2);
+    let outcomes = req.run().unwrap();
+    assert_eq!(outcomes.len(), 2);
+    assert_eq!(outcomes[0].policy, QosPolicyKind::FairShare);
+    for o in &outcomes {
+        let labels: Vec<&str> = o.rows.iter().map(|r| r.label.as_str()).collect();
+        assert_eq!(labels, ["gups#0", "gups#1", "bfs#2"]);
+        let cell_max = o.rows.iter().map(|r| r.slowdown_permille).max().unwrap();
+        assert!(
+            cell_max >= 1000,
+            "qos={}: a co-scheduled cell can not beat every solo run ({cell_max})",
+            o.policy.tag()
+        );
+        for r in &o.rows {
+            assert!(r.solo_cycles > 0, "{}: missing solo baseline", r.label);
+            // Every row of a cell carries the same pool-wide snapshot,
+            // with the cell's worst slowdown stamped as the high-water
+            // mark.
+            assert_eq!(r.result.scenario.get(ScenarioCol::TenantSlowdownMax), cell_max);
+            assert_eq!(r.result.scenario, o.rows[0].result.scenario, "{}", r.label);
+        }
+    }
+    // Fair-share pacing on a contended pool must charge someone.
+    let fair = &outcomes[0];
+    assert!(fair.rows[0].result.scenario.get(ScenarioCol::PoolStealCycles) > 0);
+
+    // The per-tenant columns ride `--columns all`: present in the header,
+    // and the emitted row carries the stamped slowdown value.
+    let header = metrics::csv_header(&Selection::All);
+    for name in ["tenant_slowdown_max", "qos_throttle_events", "pool_steal_cycles"] {
+        assert!(header.contains(name), "{header}");
+    }
+    let cols = Selection::All.columns();
+    let row = metrics::csv_row_with(&cols, &fair.rows[0].result);
+    let fields: Vec<&str> = row.split(',').collect();
+    assert_eq!(fields.len(), header.split(',').count());
+    let n = fields.len();
+    let cell_max = fair.rows.iter().map(|r| r.slowdown_permille).max().unwrap();
+    assert_eq!(fields[n - 3].parse::<u64>().unwrap(), cell_max, "{row}");
+}
