@@ -4,11 +4,39 @@
 use super::inst::{CfgReg, Inst, Opcode, Program, LINK};
 use std::collections::HashMap;
 
+/// Assemble-time error, naming the offending label. Surfaced by
+/// `try_finish`; `finish` panics with the same message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AsmError {
+    /// The same label was defined at two instruction indices.
+    DuplicateLabel { label: String, first: usize, second: usize },
+    /// A branch/jump/`li_label` referenced a label that was never defined.
+    UndefinedLabel { label: String, at: usize },
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AsmError::DuplicateLabel { label, first, second } => write!(
+                f,
+                "duplicate label '{label}' (defined at inst {first} and again at inst {second})"
+            ),
+            AsmError::UndefinedLabel { label, at } => {
+                write!(f, "undefined label '{label}' (at inst {at})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AsmError {}
+
 #[derive(Default)]
 pub struct Asm {
     insts: Vec<Inst>,
     labels: HashMap<String, usize>,
     fixups: Vec<(usize, String)>,
+    /// Duplicate definitions recorded by `label()`, reported at finish time.
+    duplicates: Vec<AsmError>,
     region: u8,
     name: String,
 }
@@ -31,8 +59,13 @@ impl Asm {
 
     pub fn label(&mut self, name: &str) -> &mut Self {
         let at = self.here();
-        let prev = self.labels.insert(name.to_string(), at);
-        assert!(prev.is_none(), "duplicate label '{name}'");
+        if let Some(first) = self.labels.insert(name.to_string(), at) {
+            self.duplicates.push(AsmError::DuplicateLabel {
+                label: name.to_string(),
+                first,
+                second: at,
+            });
+        }
         self
     }
 
@@ -214,18 +247,32 @@ impl Asm {
         self
     }
 
-    /// Resolve labels and produce the program.
-    pub fn finish(mut self) -> Program {
+    /// Resolve labels and produce the program, reporting duplicate label
+    /// definitions and unresolved references as typed errors.
+    pub fn try_finish(mut self) -> Result<Program, AsmError> {
+        if let Some(err) = self.duplicates.into_iter().next() {
+            return Err(err);
+        }
         for (at, name) in &self.fixups {
-            let target = *self
-                .labels
-                .get(name)
-                .unwrap_or_else(|| panic!("undefined label '{name}' (at inst {at})"));
+            let target = *self.labels.get(name).ok_or_else(|| AsmError::UndefinedLabel {
+                label: name.clone(),
+                at: *at,
+            })?;
             self.insts[*at].imm = target as i64;
         }
         let mut labels: Vec<(String, usize)> = self.labels.into_iter().collect();
         labels.sort_by_key(|(_, at)| *at);
-        Program { name: self.name, insts: self.insts, labels }
+        Ok(Program { name: self.name, insts: self.insts, labels })
+    }
+
+    /// Resolve labels and produce the program; panics on assembly errors
+    /// (the hand-written built-in benchmarks use this — a bad label there
+    /// is a build bug, not a runtime condition).
+    pub fn finish(self) -> Program {
+        match self.try_finish() {
+            Ok(p) => p,
+            Err(e) => panic!("{e}"),
+        }
     }
 }
 
@@ -264,6 +311,31 @@ mod tests {
         a.nop();
         a.label("x");
         a.finish();
+    }
+
+    #[test]
+    fn try_finish_reports_duplicate_label() {
+        let mut a = Asm::new("t");
+        a.label("x");
+        a.nop();
+        a.label("x");
+        a.halt();
+        let err = a.try_finish().unwrap_err();
+        assert_eq!(
+            err,
+            AsmError::DuplicateLabel { label: "x".into(), first: 0, second: 1 }
+        );
+        assert!(err.to_string().contains("duplicate label 'x'"));
+    }
+
+    #[test]
+    fn try_finish_reports_undefined_label() {
+        let mut a = Asm::new("t");
+        a.j("nowhere");
+        a.halt();
+        let err = a.try_finish().unwrap_err();
+        assert_eq!(err, AsmError::UndefinedLabel { label: "nowhere".into(), at: 0 });
+        assert!(err.to_string().contains("undefined label 'nowhere'"));
     }
 
     #[test]

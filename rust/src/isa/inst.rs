@@ -22,11 +22,15 @@ pub enum CfgReg {
 }
 
 impl CfgReg {
-    pub fn from_imm(v: i64) -> CfgReg {
+    /// Decode a `cfgwr`/`cfgrd` immediate. Unknown indices are a program
+    /// bug (they used to silently alias `Granularity`): the interpreter
+    /// faults on them and the verifier reports `AMI006`.
+    pub fn from_imm(v: i64) -> Option<CfgReg> {
         match v {
-            1 => CfgReg::QueueBase,
-            2 => CfgReg::QueueLength,
-            _ => CfgReg::Granularity,
+            0 => Some(CfgReg::Granularity),
+            1 => Some(CfgReg::QueueBase),
+            2 => Some(CfgReg::QueueLength),
+            _ => None,
         }
     }
 }
@@ -229,8 +233,10 @@ mod tests {
 
     #[test]
     fn cfg_reg_roundtrip() {
-        assert_eq!(CfgReg::from_imm(0), CfgReg::Granularity);
-        assert_eq!(CfgReg::from_imm(1), CfgReg::QueueBase);
-        assert_eq!(CfgReg::from_imm(2), CfgReg::QueueLength);
+        assert_eq!(CfgReg::from_imm(0), Some(CfgReg::Granularity));
+        assert_eq!(CfgReg::from_imm(1), Some(CfgReg::QueueBase));
+        assert_eq!(CfgReg::from_imm(2), Some(CfgReg::QueueLength));
+        assert_eq!(CfgReg::from_imm(3), None);
+        assert_eq!(CfgReg::from_imm(-1), None);
     }
 }

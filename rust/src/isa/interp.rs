@@ -229,18 +229,30 @@ impl<'a> Interp<'a> {
                 wr(&mut self.regs, i.rd, id);
             }
             CfgWr => match CfgReg::from_imm(i.imm) {
-                CfgReg::Granularity => self.granularity = rs1.max(1),
-                CfgReg::QueueBase => {} // metadata base; functional no-op
-                CfgReg::QueueLength => {
+                Some(CfgReg::Granularity) => self.granularity = rs1.max(1),
+                Some(CfgReg::QueueBase) => {} // metadata base; functional no-op
+                Some(CfgReg::QueueLength) => {
                     self.queue_length = rs1.clamp(1, 4096);
                     self.reset_ids();
+                }
+                None => {
+                    return Err(format!(
+                        "cfgwr fault at pc={}: immediate {} names no configuration register",
+                        self.pc, i.imm
+                    ))
                 }
             },
             CfgRd => {
                 let v = match CfgReg::from_imm(i.imm) {
-                    CfgReg::Granularity => self.granularity,
-                    CfgReg::QueueBase => 0,
-                    CfgReg::QueueLength => self.queue_length,
+                    Some(CfgReg::Granularity) => self.granularity,
+                    Some(CfgReg::QueueBase) => 0,
+                    Some(CfgReg::QueueLength) => self.queue_length,
+                    None => {
+                        return Err(format!(
+                            "cfgrd fault at pc={}: immediate {} names no configuration register",
+                            self.pc, i.imm
+                        ))
+                    }
                 };
                 wr(&mut self.regs, i.rd, v);
             }
@@ -454,6 +466,23 @@ mod tests {
         let mut it = Interp::new(&mut mem, CompletionOrder::Fifo);
         let r = it.run(&a.finish(), 1000).unwrap();
         assert_eq!(r.roi_steps, 3); // nop, nop, roi_end
+    }
+
+    #[test]
+    fn invalid_cfg_index_faults() {
+        use crate::isa::inst::Inst;
+        let prog = Program {
+            name: "badcfg".into(),
+            insts: vec![
+                Inst { op: Opcode::CfgWr, imm: 7, ..Inst::nop() },
+                Inst { op: Opcode::Halt, ..Inst::nop() },
+            ],
+            labels: vec![],
+        };
+        let mut mem = GuestMem::new();
+        let mut it = Interp::new(&mut mem, CompletionOrder::Fifo);
+        let err = it.run(&prog, 1000).unwrap_err();
+        assert!(err.contains("names no configuration register"), "{err}");
     }
 
     #[test]

@@ -5,8 +5,10 @@ pub mod asm;
 pub mod inst;
 pub mod interp;
 pub mod mem;
+pub mod verify;
 
-pub use asm::Asm;
+pub use asm::{Asm, AsmError};
 pub use inst::{CfgReg, Inst, Opcode, Program};
 pub use interp::{CompletionOrder, Interp};
 pub use mem::{region_of, GuestMem, Layout, MemRegion, FAR_BASE, LOCAL_BASE, SPM_BASE};
+pub use verify::{verify, Code as VerifyCode, Diagnostic, Report as VerifyReport, Severity};

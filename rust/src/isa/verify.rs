@@ -1,0 +1,1032 @@
+//! Static analysis over assembled guest programs (`amu-sim check`).
+//!
+//! AMI decouples request issue (`aload`/`astore`) from response handling
+//! (`getfin`), with request state parked in SPM — so a guest program can be
+//! silently wrong in ways synchronous load/store code cannot: requests
+//! issued before the AMART queue is configured, SPM operands that alias the
+//! configured queue region, issue/drain imbalance that leaks request IDs,
+//! or unbalanced ROI markers that corrupt the measurement window. This
+//! module machine-checks every program before it reaches the
+//! cycle-accurate pipeline.
+//!
+//! The pass builds a CFG over instruction indices (branch/`jal`/`jalr`/
+//! `halt` terminators; indirect jumps over-approximated by the set of
+//! labels and call-return sites) and runs four analysis families:
+//!
+//! 1. **structural** — out-of-bounds jump targets, fall-through off the
+//!    program end, unreachable instructions, dead writes to hardwired `r0`;
+//! 2. **register dataflow** — use-before-def via a forward
+//!    may-be-uninitialized analysis (info-level: registers reset to zero);
+//! 3. **AMI protocol** — queue configuration dominating every issue,
+//!    constant-propagated SPM operands inside the scratchpad and outside
+//!    the configured queue region, issue/drain balance, valid `CfgReg`
+//!    indices, no queue reconfiguration with requests in flight;
+//! 4. **measurement hygiene** — `roi` begin/end paired on all paths,
+//!    `flush` between constant-address sync far accesses and async issue.
+//!
+//! The CFG over-approximates indirect control flow (a `jalr` may target any
+//! label or call-return site), so path-sensitive checks are conservative:
+//! they never miss a violation on a real path, but exotic external programs
+//! may need restructuring to verify cleanly. Every built-in benchmark
+//! passes with zero deny- and warn-level findings (enforced in CI by
+//! `amu-sim check --all --deny-warnings`).
+
+use super::inst::{CfgReg, Inst, Opcode, Program, NUM_ARCH_REGS};
+use super::mem::{region_of, MemRegion};
+
+/// Diagnostic severity. `Deny` findings make `run`/`sweep`/`mtrun` refuse
+/// the program; `Warn` findings fail `amu-sim check --deny-warnings`;
+/// `Info` findings never gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Deny,
+}
+
+impl Severity {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// Typed diagnostic codes. Stable identifiers: tests, CI and the README
+/// table key off these strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Code {
+    /// AMI001: branch/jump target outside the program.
+    BadTarget,
+    /// AMI002: execution can fall through past the last instruction.
+    FallsOffEnd,
+    /// AMI003: instruction unreachable from entry.
+    Unreachable,
+    /// AMI004: ALU/load result written to hardwired `r0` (discarded).
+    DeadWrite,
+    /// AMI005: register may be read before its first write.
+    MaybeUninit,
+    /// AMI006: `cfgwr`/`cfgrd` immediate names no configuration register.
+    BadCfgIndex,
+    /// AMI007: issue on a path where the queue configuration (`cfgwr`
+    /// `QueueBase`/`QueueLength`) has not executed, in a program that does
+    /// configure the queue elsewhere.
+    QueueCfgNotDominating,
+    /// AMI008: queue reconfigured while requests may be in flight.
+    QueueReconfigInFlight,
+    /// AMI009: constant SPM operand outside the scratchpad (or inside the
+    /// configured AMART queue region).
+    SpmOperandOutOfRange,
+    /// AMI010: constant memory operand inside the scratchpad.
+    MemOperandInSpm,
+    /// AMI011: async requests issued but the program contains no
+    /// reachable `getfin` drain.
+    IssueWithoutDrain,
+    /// AMI012: request ID written to `r0` — the request can never be
+    /// awaited individually.
+    DiscardedRequestId,
+    /// AMI013: `getfin` polling in a program that never issues a request.
+    DrainWithoutIssue,
+    /// AMI014: unbalanced `roi` markers: a begin with the window already
+    /// open on every path, an end with it open on no path, or a halt with
+    /// it open on every path. (Must-style conditions: the indirect-jump
+    /// over-approximation makes may-style ROI checks fire spuriously on
+    /// the coroutine scheduler.)
+    RoiImbalance,
+    /// AMI015: constant-address sync far access followed by an async
+    /// issue with no intervening `flush` (sync->async region transition).
+    MissingFlush,
+}
+
+/// Every diagnostic code, in ascending `AMIxxx` order (the README table
+/// and the negative-corpus test iterate this).
+pub const ALL_CODES: &[Code] = &[
+    Code::BadTarget,
+    Code::FallsOffEnd,
+    Code::Unreachable,
+    Code::DeadWrite,
+    Code::MaybeUninit,
+    Code::BadCfgIndex,
+    Code::QueueCfgNotDominating,
+    Code::QueueReconfigInFlight,
+    Code::SpmOperandOutOfRange,
+    Code::MemOperandInSpm,
+    Code::IssueWithoutDrain,
+    Code::DiscardedRequestId,
+    Code::DrainWithoutIssue,
+    Code::RoiImbalance,
+    Code::MissingFlush,
+];
+
+impl Code {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Code::BadTarget => "AMI001",
+            Code::FallsOffEnd => "AMI002",
+            Code::Unreachable => "AMI003",
+            Code::DeadWrite => "AMI004",
+            Code::MaybeUninit => "AMI005",
+            Code::BadCfgIndex => "AMI006",
+            Code::QueueCfgNotDominating => "AMI007",
+            Code::QueueReconfigInFlight => "AMI008",
+            Code::SpmOperandOutOfRange => "AMI009",
+            Code::MemOperandInSpm => "AMI010",
+            Code::IssueWithoutDrain => "AMI011",
+            Code::DiscardedRequestId => "AMI012",
+            Code::DrainWithoutIssue => "AMI013",
+            Code::RoiImbalance => "AMI014",
+            Code::MissingFlush => "AMI015",
+        }
+    }
+
+    pub fn severity(&self) -> Severity {
+        match self {
+            Code::BadTarget
+            | Code::FallsOffEnd
+            | Code::BadCfgIndex
+            | Code::QueueCfgNotDominating
+            | Code::QueueReconfigInFlight
+            | Code::SpmOperandOutOfRange
+            | Code::MemOperandInSpm
+            | Code::IssueWithoutDrain
+            | Code::RoiImbalance => Severity::Deny,
+            Code::DeadWrite
+            | Code::DiscardedRequestId
+            | Code::DrainWithoutIssue => Severity::Warn,
+            // Unreachable defensive padding after indirect jumps is a
+            // deliberate idiom in the coroutine scheduler, registers
+            // architecturally reset to zero, and the far-dirty bit is a
+            // may-fact over an over-approximated CFG — notes, not gates.
+            Code::Unreachable | Code::MaybeUninit | Code::MissingFlush => Severity::Info,
+        }
+    }
+
+    /// One-line meaning for the README table and `check` summaries.
+    pub fn meaning(&self) -> &'static str {
+        match self {
+            Code::BadTarget => "branch/jump target outside the program",
+            Code::FallsOffEnd => "execution can fall through past the last instruction",
+            Code::Unreachable => "instruction unreachable from entry",
+            Code::DeadWrite => "result written to hardwired r0 and discarded",
+            Code::MaybeUninit => "register may be read before its first write",
+            Code::BadCfgIndex => "cfgwr/cfgrd immediate names no configuration register",
+            Code::QueueCfgNotDominating => {
+                "issue on a path where the AMART queue configuration has not executed"
+            }
+            Code::QueueReconfigInFlight => {
+                "queue reconfigured while async requests may be in flight"
+            }
+            Code::SpmOperandOutOfRange => {
+                "SPM operand outside the scratchpad or inside the configured queue region"
+            }
+            Code::MemOperandInSpm => "memory operand of an async request inside the scratchpad",
+            Code::IssueWithoutDrain => "async requests issued but no getfin drain is reachable",
+            Code::DiscardedRequestId => "request id written to r0; request cannot be awaited",
+            Code::DrainWithoutIssue => "getfin polling but the program never issues a request",
+            Code::RoiImbalance => "roi begin/end unbalanced on some path",
+            Code::MissingFlush => "sync far access reaches an async issue without a flush",
+        }
+    }
+}
+
+/// One finding: code, location (instruction index), enclosing label
+/// context, and a concrete message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub code: Code,
+    /// Instruction index the finding anchors to.
+    pub at: usize,
+    /// Nearest label at or before `at` (empty if none).
+    pub label: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn severity(&self) -> Severity {
+        self.code.severity()
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let ctx = if self.label.is_empty() { "-".to_string() } else { self.label.clone() };
+        write!(
+            f,
+            "{} {} @{} ({}): {}",
+            self.code.tag(),
+            self.severity().tag(),
+            self.at,
+            ctx,
+            self.message
+        )
+    }
+}
+
+/// The verifier's result for one program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Report {
+    /// `Program::name` of the verified program.
+    pub program: String,
+    /// Program length in instructions.
+    pub insts: usize,
+    /// All findings, sorted by instruction index then code.
+    pub diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn count(&self, sev: Severity) -> usize {
+        self.diags.iter().filter(|d| d.severity() == sev).count()
+    }
+
+    pub fn deny_count(&self) -> usize {
+        self.count(Severity::Deny)
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    /// Does this report gate execution? With `deny_warnings`, warn-level
+    /// findings gate too (the CI configuration).
+    pub fn is_clean(&self, deny_warnings: bool) -> bool {
+        self.deny_count() == 0 && (!deny_warnings || self.warn_count() == 0)
+    }
+
+    /// Render findings at or above `min` as a fixed-width diagnostics
+    /// table (golden-pinned; `amu-sim check` output).
+    pub fn render_table(&self, min: Severity) -> String {
+        let mut s = String::new();
+        for d in self.diags.iter().filter(|d| d.severity() >= min) {
+            let ctx = if d.label.is_empty() { "-" } else { &d.label };
+            s.push_str(&format!(
+                "  {} {:<4} @{:<5} {:<14} {}\n",
+                d.code.tag(),
+                d.severity().tag(),
+                d.at,
+                ctx,
+                d.message
+            ));
+        }
+        s
+    }
+
+    /// Compact one-line summary of the deny-level findings, for errors
+    /// raised by the fail-fast hook in the workload registry.
+    pub fn deny_summary(&self) -> String {
+        let denies: Vec<String> = self
+            .diags
+            .iter()
+            .filter(|d| d.severity() == Severity::Deny)
+            .take(3)
+            .map(|d| d.to_string())
+            .collect();
+        let extra = self.deny_count().saturating_sub(denies.len());
+        let mut s = denies.join("; ");
+        if extra > 0 {
+            s.push_str(&format!("; +{extra} more"));
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Constant lattice
+// ---------------------------------------------------------------------------
+
+/// Forward constant-propagation value: a register either holds one known
+/// constant on every path reaching a point, or is `Top`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Cv {
+    Const(u64),
+    Top,
+}
+
+impl Cv {
+    fn join(self, other: Cv) -> Cv {
+        match (self, other) {
+            (Cv::Const(a), Cv::Const(b)) if a == b => Cv::Const(a),
+            _ => Cv::Top,
+        }
+    }
+
+    fn get(self) -> Option<u64> {
+        match self {
+            Cv::Const(v) => Some(v),
+            Cv::Top => None,
+        }
+    }
+}
+
+/// Joined forward dataflow state at a program point. All components are
+/// may-facts (join = union), so one fixpoint serves every check; the
+/// "queue configuration dominates" must-fact is encoded as its dual
+/// (`queue_unconfig`: the configuration *may not* have executed yet).
+#[derive(Clone, PartialEq)]
+struct State {
+    /// Bit r set: register r may not have been written yet.
+    uninit: u64,
+    /// Queue configuration (`cfgwr QueueBase/QueueLength`) may not have
+    /// executed on some path to this point.
+    queue_unconfig: bool,
+    /// An async request may have been issued.
+    issued: bool,
+    /// The ROI window may be open / may be closed here.
+    roi_in: bool,
+    roi_out: bool,
+    /// A constant-address sync far access may have happened since the
+    /// last `flush`.
+    far_dirty: bool,
+    regs: [Cv; NUM_ARCH_REGS],
+    /// Constant values of the three AMI configuration registers.
+    cfg: [Cv; 3],
+}
+
+impl State {
+    fn entry() -> State {
+        State {
+            uninit: !1u64, // every register but hardwired r0
+            queue_unconfig: true,
+            issued: false,
+            roi_in: false,
+            roi_out: true,
+            far_dirty: false,
+            // Architectural reset state: all registers read as zero.
+            regs: [Cv::Const(0); NUM_ARCH_REGS],
+            cfg: [Cv::Top; 3],
+        }
+    }
+
+    fn join(&mut self, other: &State) -> bool {
+        let before = self.clone();
+        self.uninit |= other.uninit;
+        self.queue_unconfig |= other.queue_unconfig;
+        self.issued |= other.issued;
+        self.roi_in |= other.roi_in;
+        self.roi_out |= other.roi_out;
+        self.far_dirty |= other.far_dirty;
+        for (a, b) in self.regs.iter_mut().zip(other.regs.iter()) {
+            *a = a.join(*b);
+        }
+        for (a, b) in self.cfg.iter_mut().zip(other.cfg.iter()) {
+            *a = a.join(*b);
+        }
+        *self != before
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CFG
+// ---------------------------------------------------------------------------
+
+struct Cfg {
+    /// Basic blocks as `[start, end)` instruction ranges, in index order.
+    blocks: Vec<(usize, usize)>,
+    /// Instruction index -> block id.
+    block_of: Vec<usize>,
+    /// Block id -> successor block ids.
+    succs: Vec<Vec<usize>>,
+    /// Block reachability from entry.
+    reachable: Vec<bool>,
+}
+
+fn valid_target(imm: i64, len: usize) -> Option<usize> {
+    if imm >= 0 && (imm as usize) < len {
+        Some(imm as usize)
+    } else {
+        None
+    }
+}
+
+fn is_terminator(op: Opcode) -> bool {
+    matches!(op, Opcode::Halt | Opcode::Jal | Opcode::Jalr)
+}
+
+impl Cfg {
+    /// Build the CFG. Indirect jumps (`jalr`) are over-approximated as
+    /// possibly targeting any label (continuations are loaded by label)
+    /// or any call-return site (the instruction after a `jal` with a live
+    /// link register — `ret` jumps there).
+    fn build(prog: &Program) -> Cfg {
+        let len = prog.len();
+        let insts = &prog.insts;
+        // Indirect target set: labels + return sites.
+        let mut indirect: Vec<usize> = prog
+            .labels
+            .iter()
+            .map(|(_, at)| *at)
+            .filter(|at| *at < len)
+            .collect();
+        for (i, inst) in insts.iter().enumerate() {
+            if inst.op == Opcode::Jal && inst.rd != 0 && i + 1 < len {
+                indirect.push(i + 1);
+            }
+        }
+        indirect.sort_unstable();
+        indirect.dedup();
+
+        // Leaders.
+        let mut leader = vec![false; len];
+        if len > 0 {
+            leader[0] = true;
+        }
+        for &at in &indirect {
+            leader[at] = true;
+        }
+        for (i, inst) in insts.iter().enumerate() {
+            if inst.is_branch() || is_terminator(inst.op) {
+                if i + 1 < len {
+                    leader[i + 1] = true;
+                }
+                if inst.op != Opcode::Jalr {
+                    if let Some(t) = valid_target(inst.imm, len) {
+                        leader[t] = true;
+                    }
+                }
+            }
+        }
+
+        let mut blocks = Vec::new();
+        let mut block_of = vec![0usize; len];
+        let mut start = 0;
+        for i in 0..len {
+            if i > 0 && leader[i] {
+                blocks.push((start, i));
+                start = i;
+            }
+        }
+        if len > 0 {
+            blocks.push((start, len));
+        }
+        for (b, &(s, e)) in blocks.iter().enumerate() {
+            for i in s..e {
+                block_of[i] = b;
+            }
+        }
+
+        let indirect_blocks: Vec<usize> = indirect.iter().map(|&at| block_of[at]).collect();
+        let mut succs = vec![Vec::new(); blocks.len()];
+        for (b, &(_, e)) in blocks.iter().enumerate() {
+            let last = e - 1;
+            let inst = &insts[last];
+            let mut out: Vec<usize> = Vec::new();
+            match inst.op {
+                Opcode::Halt => {}
+                Opcode::Jal => {
+                    if let Some(t) = valid_target(inst.imm, len) {
+                        out.push(block_of[t]);
+                    }
+                }
+                Opcode::Jalr => out.extend_from_slice(&indirect_blocks),
+                Opcode::Beq | Opcode::Bne | Opcode::Blt | Opcode::Bge | Opcode::BltU => {
+                    if let Some(t) = valid_target(inst.imm, len) {
+                        out.push(block_of[t]);
+                    }
+                    if last + 1 < len {
+                        out.push(block_of[last + 1]);
+                    }
+                }
+                _ => {
+                    if last + 1 < len {
+                        out.push(block_of[last + 1]);
+                    }
+                }
+            }
+            out.sort_unstable();
+            out.dedup();
+            succs[b] = out;
+        }
+
+        // Reachability from entry.
+        let mut reachable = vec![false; blocks.len()];
+        if !blocks.is_empty() {
+            let mut stack = vec![0usize];
+            reachable[0] = true;
+            while let Some(b) = stack.pop() {
+                for &s in &succs[b] {
+                    if !reachable[s] {
+                        reachable[s] = true;
+                        stack.push(s);
+                    }
+                }
+            }
+        }
+        Cfg { blocks, block_of, succs, reachable }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The verifier
+// ---------------------------------------------------------------------------
+
+struct Verifier<'p> {
+    prog: &'p Program,
+    cfg: Cfg,
+    /// Does any reachable instruction configure the queue? (If none does,
+    /// the hardware reset defaults apply and AMI007 stays silent.)
+    has_queue_cfg: bool,
+    diags: Vec<Diagnostic>,
+}
+
+/// Run the full static-analysis pass over an assembled program.
+pub fn verify(prog: &Program) -> Report {
+    let cfg = Cfg::build(prog);
+    let mut v = Verifier { prog, cfg, has_queue_cfg: false, diags: Vec::new() };
+    v.run();
+    let mut diags = v.diags;
+    diags.sort_by(|a, b| (a.at, a.code).cmp(&(b.at, b.code)));
+    diags.dedup();
+    Report { program: prog.name.clone(), insts: prog.len(), diags }
+}
+
+impl<'p> Verifier<'p> {
+    fn label_at(&self, at: usize) -> String {
+        self.prog
+            .labels
+            .iter()
+            .filter(|(_, l)| *l <= at)
+            .max_by_key(|(_, l)| *l)
+            .map(|(n, _)| n.clone())
+            .unwrap_or_default()
+    }
+
+    fn emit(&mut self, code: Code, at: usize, message: String) {
+        let label = self.label_at(at);
+        self.diags.push(Diagnostic { code, at, label, message });
+    }
+
+    fn inst_reachable(&self, at: usize) -> bool {
+        self.cfg.reachable[self.cfg.block_of[at]]
+    }
+
+    fn run(&mut self) {
+        let len = self.prog.len();
+        if len == 0 {
+            self.diags.push(Diagnostic {
+                code: Code::FallsOffEnd,
+                at: 0,
+                label: String::new(),
+                message: "program is empty".into(),
+            });
+            return;
+        }
+        self.structural();
+        self.has_queue_cfg = self.prog.insts.iter().enumerate().any(|(i, inst)| {
+            inst.op == Opcode::CfgWr
+                && matches!(
+                    CfgReg::from_imm(inst.imm),
+                    Some(CfgReg::QueueBase) | Some(CfgReg::QueueLength)
+                )
+                && self.inst_reachable(i)
+        });
+        self.dataflow();
+        self.issue_drain_balance();
+    }
+
+    /// Structural checks: bad targets, fall-through off the end,
+    /// unreachable instruction runs.
+    fn structural(&mut self) {
+        let len = self.prog.len();
+        for (i, inst) in self.prog.insts.iter().enumerate() {
+            let targets = inst.is_branch() && inst.op != Opcode::Jalr;
+            if targets && valid_target(inst.imm, len).is_none() {
+                self.emit(
+                    Code::BadTarget,
+                    i,
+                    format!(
+                        "{:?} target {} outside the program (length {len})",
+                        inst.op, inst.imm
+                    ),
+                );
+            }
+        }
+        // Fall-through off the end: the last instruction is reachable and
+        // is not an unconditional control transfer.
+        let last = &self.prog.insts[len - 1];
+        if !is_terminator(last.op) && self.inst_reachable(len - 1) {
+            self.emit(
+                Code::FallsOffEnd,
+                len - 1,
+                format!("{:?} at the program end can fall through past it", last.op),
+            );
+        }
+        // Unreachable instructions, reported once per contiguous run.
+        let mut i = 0;
+        while i < len {
+            if self.inst_reachable(i) {
+                i += 1;
+                continue;
+            }
+            let start = i;
+            while i < len && !self.inst_reachable(i) {
+                i += 1;
+            }
+            self.emit(
+                Code::Unreachable,
+                start,
+                format!("{} unreachable instruction(s)", i - start),
+            );
+        }
+    }
+
+    /// Whole-program issue/drain balance over reachable instructions.
+    fn issue_drain_balance(&mut self) {
+        let first_reachable = |pred: &dyn Fn(&Inst) -> bool| -> Option<usize> {
+            self.prog
+                .insts
+                .iter()
+                .enumerate()
+                .position(|(i, inst)| pred(inst) && self.inst_reachable(i))
+        };
+        let first_issue =
+            first_reachable(&|i| matches!(i.op, Opcode::ALoad | Opcode::AStore));
+        let first_drain = first_reachable(&|i| i.op == Opcode::GetFin);
+        match (first_issue, first_drain) {
+            (Some(at), None) => self.emit(
+                Code::IssueWithoutDrain,
+                at,
+                "async requests are issued but no getfin is reachable: completions leak".into(),
+            ),
+            (None, Some(at)) => self.emit(
+                Code::DrainWithoutIssue,
+                at,
+                "getfin polls for completions but the program never issues a request".into(),
+            ),
+            _ => {}
+        }
+    }
+
+    /// The fused forward dataflow fixpoint plus a final collection pass.
+    fn dataflow(&mut self) {
+        let nblocks = self.cfg.blocks.len();
+        let mut in_states: Vec<Option<State>> = vec![None; nblocks];
+        in_states[0] = Some(State::entry());
+        let mut work: Vec<usize> = vec![0];
+        while let Some(b) = work.pop() {
+            let mut st = in_states[b].clone().expect("worklist block has a state");
+            let (s, e) = self.cfg.blocks[b];
+            for i in s..e {
+                self.transfer(&mut st, i, false);
+            }
+            for &succ in &self.cfg.succs[b].clone() {
+                let changed = match &mut in_states[succ] {
+                    Some(cur) => cur.join(&st),
+                    slot @ None => {
+                        *slot = Some(st.clone());
+                        true
+                    }
+                };
+                if changed && !work.contains(&succ) {
+                    work.push(succ);
+                }
+            }
+        }
+        // Collection pass over the converged states.
+        for b in 0..nblocks {
+            let Some(mut st) = in_states[b].clone() else { continue };
+            let (s, e) = self.cfg.blocks[b];
+            for i in s..e {
+                self.transfer(&mut st, i, true);
+            }
+        }
+    }
+
+    /// One-instruction transfer function; with `collect`, findings are
+    /// emitted against the (converged) incoming state.
+    fn transfer(&mut self, st: &mut State, at: usize, collect: bool) {
+        let i = self.prog.insts[at];
+        use Opcode::*;
+
+        // Use-before-def on the registers this instruction actually reads.
+        if collect {
+            let (a, b) = i.sources();
+            for r in [a, b].into_iter().flatten() {
+                if r != 0 && st.uninit & (1u64 << r) != 0 {
+                    self.emit(
+                        Code::MaybeUninit,
+                        at,
+                        format!("r{r} may be read before its first write (reads as zero)"),
+                    );
+                }
+            }
+        }
+
+        let rv = |st: &State, r: u8| st.regs[r as usize].get();
+        let rs1 = st.regs[i.rs1 as usize];
+        let rs2 = st.regs[i.rs2 as usize];
+
+        // Dead writes to hardwired r0. `j`/`jr` (Jal/Jalr rd=0) and
+        // drain-and-discard `getfin r0` are idioms, not bugs.
+        if collect && i.rd == 0 {
+            match i.op {
+                Add | Sub | Xor | And | Or | Sll | Srl | Mul | SltU | Addi | Xori | Andi
+                | Ori | Slli | Srli | Li | Ld | CfgRd => self.emit(
+                    Code::DeadWrite,
+                    at,
+                    format!("{:?} writes hardwired r0; the result is discarded", i.op),
+                ),
+                ALoad | AStore => self.emit(
+                    Code::DiscardedRequestId,
+                    at,
+                    format!("{:?} writes its request id to r0: it cannot be awaited", i.op),
+                ),
+                _ => {}
+            }
+        }
+
+        // Per-opcode protocol checks and constant evaluation.
+        let mut wrote: Option<(u8, Cv)> = None;
+        match i.op {
+            Add => wrote = Some((i.rd, bin(rs1, rs2, u64::wrapping_add))),
+            Sub => wrote = Some((i.rd, bin(rs1, rs2, u64::wrapping_sub))),
+            Xor => wrote = Some((i.rd, bin(rs1, rs2, |a, b| a ^ b))),
+            And => wrote = Some((i.rd, bin(rs1, rs2, |a, b| a & b))),
+            Or => wrote = Some((i.rd, bin(rs1, rs2, |a, b| a | b))),
+            Sll => wrote = Some((i.rd, bin(rs1, rs2, |a, b| a.wrapping_shl(b as u32 & 63)))),
+            Srl => wrote = Some((i.rd, bin(rs1, rs2, |a, b| a.wrapping_shr(b as u32 & 63)))),
+            Mul => wrote = Some((i.rd, bin(rs1, rs2, u64::wrapping_mul))),
+            SltU => wrote = Some((i.rd, bin(rs1, rs2, |a, b| (a < b) as u64))),
+            Addi => wrote = Some((i.rd, unary(rs1, |a| a.wrapping_add(i.imm as u64)))),
+            Xori => wrote = Some((i.rd, unary(rs1, |a| a ^ i.imm as u64))),
+            Andi => wrote = Some((i.rd, unary(rs1, |a| a & i.imm as u64))),
+            Ori => wrote = Some((i.rd, unary(rs1, |a| a | i.imm as u64))),
+            Slli => wrote = Some((i.rd, unary(rs1, |a| a.wrapping_shl(i.imm as u32 & 63)))),
+            Srli => wrote = Some((i.rd, unary(rs1, |a| a.wrapping_shr(i.imm as u32 & 63)))),
+            Li => wrote = Some((i.rd, Cv::Const(i.imm as u64))),
+            Ld => {
+                if let Some(base) = rv(st, i.rs1) {
+                    self.note_sync_far(st, base.wrapping_add(i.imm as u64));
+                }
+                wrote = Some((i.rd, Cv::Top));
+            }
+            St => {
+                if let Some(base) = rv(st, i.rs1) {
+                    self.note_sync_far(st, base.wrapping_add(i.imm as u64));
+                }
+            }
+            Prefetch => {}
+            Flush => st.far_dirty = false,
+            Beq | Bne | Blt | Bge | BltU | Nop | Roi | Halt => {}
+            Jal | Jalr => wrote = Some((i.rd, Cv::Const(at as u64 + 1))),
+            ALoad | AStore => {
+                self.check_issue(st, at, &i, collect);
+                st.issued = true;
+                st.far_dirty = false;
+                wrote = Some((i.rd, Cv::Top));
+            }
+            GetFin => wrote = Some((i.rd, Cv::Top)),
+            CfgWr => match CfgReg::from_imm(i.imm) {
+                Some(CfgReg::Granularity) => st.cfg[CfgReg::Granularity as usize] = rs1,
+                Some(reg) => {
+                    if collect && st.issued {
+                        self.emit(
+                            Code::QueueReconfigInFlight,
+                            at,
+                            format!(
+                                "cfgwr {reg:?} is reachable after an async issue: \
+                                 reconfiguration resets request ids that may be in flight"
+                            ),
+                        );
+                    }
+                    st.queue_unconfig = false;
+                    st.cfg[reg as usize] = rs1;
+                }
+                None => {
+                    if collect {
+                        self.emit(
+                            Code::BadCfgIndex,
+                            at,
+                            format!("cfgwr immediate {} names no configuration register", i.imm),
+                        );
+                    }
+                }
+            },
+            CfgRd => match CfgReg::from_imm(i.imm) {
+                Some(reg) => wrote = Some((i.rd, st.cfg[reg as usize])),
+                None => {
+                    if collect {
+                        self.emit(
+                            Code::BadCfgIndex,
+                            at,
+                            format!("cfgrd immediate {} names no configuration register", i.imm),
+                        );
+                    }
+                    wrote = Some((i.rd, Cv::Top));
+                }
+            },
+        }
+
+        // ROI window hygiene. Must-style conditions (`!roi_out` = the
+        // window is open on *every* path in): the jalr over-approximation
+        // would make may-style conditions fire on the coroutine scheduler.
+        if i.op == Roi {
+            let begin = i.imm == 1;
+            if collect {
+                if begin && !st.roi_out {
+                    self.emit(
+                        Code::RoiImbalance,
+                        at,
+                        "roi begin with the ROI window already open on every path here".into(),
+                    );
+                } else if !begin && !st.roi_in {
+                    self.emit(
+                        Code::RoiImbalance,
+                        at,
+                        "roi end with no ROI window open on any path here".into(),
+                    );
+                }
+            }
+            st.roi_in = begin;
+            st.roi_out = !begin;
+        }
+        if i.op == Halt && collect && !st.roi_out {
+            self.emit(
+                Code::RoiImbalance,
+                at,
+                "program halts with the ROI window still open".into(),
+            );
+        }
+
+        if let Some((rd, v)) = wrote {
+            if rd != 0 {
+                st.regs[rd as usize] = v;
+                st.uninit &= !(1u64 << rd);
+            }
+        }
+    }
+
+    /// A constant-address sync access touching the far region marks the
+    /// sync->async transition state (cleared by `flush`).
+    fn note_sync_far(&self, st: &mut State, addr: u64) {
+        if region_of(addr) == MemRegion::Far {
+            st.far_dirty = true;
+        }
+    }
+
+    /// Protocol checks at an `aload`/`astore` issue point.
+    fn check_issue(&mut self, st: &State, at: usize, i: &Inst, collect: bool) {
+        if !collect {
+            return;
+        }
+        let op = i.op;
+        if self.has_queue_cfg && st.queue_unconfig {
+            self.emit(
+                Code::QueueCfgNotDominating,
+                at,
+                format!(
+                    "{op:?} issued on a path where cfgwr QueueBase/QueueLength has not executed"
+                ),
+            );
+        }
+        if st.far_dirty {
+            self.emit(
+                Code::MissingFlush,
+                at,
+                format!(
+                    "{op:?} issued after a sync far-region access with no intervening flush \
+                     (sync->async transition)"
+                ),
+            );
+        }
+        if let Some(spm) = st.regs[i.rs1 as usize].get() {
+            if region_of(spm) != MemRegion::Spm {
+                self.emit(
+                    Code::SpmOperandOutOfRange,
+                    at,
+                    format!(
+                        "{op:?} SPM operand resolves to {spm:#x}, outside the scratchpad"
+                    ),
+                );
+            } else if let (Some(qb), Some(ql)) = (
+                st.cfg[CfgReg::QueueBase as usize].get(),
+                st.cfg[CfgReg::QueueLength as usize].get(),
+            ) {
+                // AMART metadata: 32 B per queue entry (paper Table 2).
+                let qend = qb.saturating_add(ql.saturating_mul(32));
+                if spm >= qb && spm < qend {
+                    self.emit(
+                        Code::SpmOperandOutOfRange,
+                        at,
+                        format!(
+                            "{op:?} SPM operand {spm:#x} lies inside the configured queue \
+                             region [{qb:#x}, {qend:#x})"
+                        ),
+                    );
+                }
+            }
+        }
+        if let Some(mem) = st.regs[i.rs2 as usize].get() {
+            if region_of(mem) == MemRegion::Spm {
+                self.emit(
+                    Code::MemOperandInSpm,
+                    at,
+                    format!(
+                        "{op:?} memory operand resolves to {mem:#x}, inside the scratchpad"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+fn bin(a: Cv, b: Cv, f: impl Fn(u64, u64) -> u64) -> Cv {
+    match (a, b) {
+        (Cv::Const(x), Cv::Const(y)) => Cv::Const(f(x, y)),
+        _ => Cv::Top,
+    }
+}
+
+fn unary(a: Cv, f: impl Fn(u64) -> u64) -> Cv {
+    match a {
+        Cv::Const(x) => Cv::Const(f(x)),
+        Cv::Top => Cv::Top,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::mem::{FAR_BASE, SPM_BASE};
+    use crate::isa::Asm;
+
+    fn codes(r: &Report) -> Vec<Code> {
+        r.diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn clean_minimal_program() {
+        let mut a = Asm::new("ok");
+        a.li(1, 5).addi(1, 1, 1).halt();
+        let r = verify(&a.finish());
+        assert!(r.diags.is_empty(), "{:?}", r.diags);
+        assert!(r.is_clean(true));
+    }
+
+    #[test]
+    fn clean_ami_roundtrip() {
+        let mut a = Asm::new("ami-ok");
+        a.li(1, SPM_BASE as i64);
+        a.li(2, FAR_BASE as i64);
+        a.aload(3, 1, 2);
+        a.label("poll");
+        a.getfin(4);
+        a.beq(4, 0, "poll");
+        a.halt();
+        let r = verify(&a.finish());
+        assert!(r.is_clean(true), "{:?}", r.diags);
+    }
+
+    #[test]
+    fn empty_program_flagged() {
+        let r = verify(&Program { name: "empty".into(), ..Default::default() });
+        assert_eq!(codes(&r), vec![Code::FallsOffEnd]);
+    }
+
+    #[test]
+    fn falls_off_end() {
+        let mut a = Asm::new("fall");
+        a.li(1, 1);
+        let r = verify(&a.finish());
+        assert_eq!(codes(&r), vec![Code::FallsOffEnd]);
+        assert_eq!(r.diags[0].at, 0);
+    }
+
+    #[test]
+    fn label_context_attached() {
+        let mut a = Asm::new("ctx");
+        a.halt();
+        a.label("dead_code");
+        a.nop();
+        a.halt();
+        let r = verify(&a.finish());
+        assert_eq!(r.diags.len(), 1);
+        assert_eq!(r.diags[0].code, Code::Unreachable);
+        assert_eq!(r.diags[0].label, "dead_code");
+    }
+
+    #[test]
+    fn severity_order() {
+        assert!(Severity::Deny > Severity::Warn && Severity::Warn > Severity::Info);
+    }
+
+    #[test]
+    fn all_codes_unique_and_ordered() {
+        let tags: Vec<&str> = ALL_CODES.iter().map(|c| c.tag()).collect();
+        let mut sorted = tags.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(tags.len(), sorted.len());
+        assert_eq!(tags, sorted, "ALL_CODES must be in ascending AMIxxx order");
+    }
+
+    #[test]
+    fn report_counts_and_gating() {
+        let mut a = Asm::new("mix");
+        a.li(0, 1); // AMI004 warn
+        a.halt();
+        let r = verify(&a.finish());
+        assert_eq!((r.deny_count(), r.warn_count()), (0, 1));
+        assert!(r.is_clean(false) && !r.is_clean(true));
+    }
+}

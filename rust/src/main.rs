@@ -9,6 +9,8 @@
 //!   report  — regenerate paper figures/tables (fig2..fig11, table4..6,
 //!             sweep, mt, all)
 //!   bench   — quick simulator-throughput benchmark (writes BENCH_PR6.json)
+//!   check   — static-verify guest programs (isa::verify) without
+//!             simulating; prints the AMIxxx diagnostics table
 //!   list    — enumerate benchmarks, configuration presets, backends,
 //!             policies, and metric columns
 //!   payload — smoke-test the PJRT payload engine (artifacts/)
@@ -130,6 +132,15 @@ const MTRUN_SPECS: &[Spec] = &[
 const BENCH_SPECS: &[Spec] = &[
     opt("out", "output JSON path (default: <crate root>/BENCH_PR6.json)"),
     flag("quiet", "suppress progress output"),
+];
+
+const CHECK_SPECS: &[Spec] = &[
+    opt("bench", "benchmark to check (default with --all: every registered benchmark)"),
+    opt("variant", "restrict to one variant: sync|amu|llvm|gp<N>|pf<N>[-<D>]"),
+    opt("scale", "test|paper (default: test)"),
+    flag("all", "check every registered benchmark"),
+    flag("deny-warnings", "exit nonzero on warn-level findings too (the CI gate)"),
+    flag("verbose", "also print info-level diagnostics"),
 ];
 
 fn parse_scale(s: &str) -> Result<Scale, String> {
@@ -437,6 +448,79 @@ fn cmd_bench(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `amu-sim check`: run the static verifier (`isa::verify`) over built-in
+/// benchmark programs without simulating them, print the diagnostics
+/// table, and exit nonzero on deny-level findings (warn-level too under
+/// `--deny-warnings`).
+fn cmd_check(argv: &[String]) -> Result<(), String> {
+    use amu_sim::isa::Severity;
+    use amu_sim::session::registry::{self, Workload};
+    use amu_sim::workloads::{Variant, VariantKind};
+    let args = cli::parse(argv, CHECK_SPECS).map_err(|e| e.to_string())?;
+    let scale = parse_scale(&args.get_str("scale", "test"))?;
+    let deny_warnings = args.has_flag("deny-warnings");
+    let min = if args.has_flag("verbose") { Severity::Info } else { Severity::Warn };
+    let benches: Vec<&'static dyn Workload> = match args.get("bench") {
+        Some(name) => vec![registry::find(&name).ok_or_else(|| {
+            format!("unknown benchmark '{name}' (valid: {})", workloads::ALL.join(", "))
+        })?],
+        None if args.has_flag("all") => registry::REGISTRY.to_vec(),
+        None => return Err("pass --bench <name> or --all".into()),
+    };
+    let variant_filter = match args.get("variant") {
+        Some(s) => Some(s.parse::<Variant>()?),
+        None => None,
+    };
+    // A representative variant per supported kind: verification depends on
+    // program structure, which the payload parameters don't change.
+    let representative = |kind: VariantKind| match kind {
+        VariantKind::Sync => Variant::Sync,
+        VariantKind::Amu => Variant::Amu,
+        VariantKind::AmuLlvm => Variant::AmuLlvm,
+        VariantKind::GroupPrefetch => Variant::GroupPrefetch(16),
+        VariantKind::SwPrefetch => Variant::SwPrefetch { batch: 16, depth: 2 },
+    };
+    let mut outcomes = Vec::new();
+    for w in &benches {
+        let variants: Vec<Variant> = match variant_filter {
+            Some(v) => {
+                if !w.supported_variants().contains(&v.kind()) {
+                    if benches.len() == 1 {
+                        return Err(format!(
+                            "benchmark '{}' does not support variant '{}'",
+                            w.name(),
+                            v.tag()
+                        ));
+                    }
+                    continue; // --all with a filter: skip non-implementers
+                }
+                vec![v]
+            }
+            None => w.supported_variants().iter().map(|k| representative(*k)).collect(),
+        };
+        for v in variants {
+            // AMU programs are built against the AMU preset (queue sizing,
+            // SPM budget); everything else against the baseline.
+            let cfg = match v.kind() {
+                VariantKind::Amu | VariantKind::AmuLlvm => SimConfig::amu(),
+                _ => SimConfig::baseline(),
+            };
+            let spec = w.build(&cfg, v, scale);
+            outcomes.push((format!("{}/{}", w.name(), v.tag()), spec.verify()));
+        }
+    }
+    print!("{}", report::check_table(&outcomes, min));
+    let deny: usize = outcomes.iter().map(|(_, r)| r.deny_count()).sum();
+    let warn: usize = outcomes.iter().map(|(_, r)| r.warn_count()).sum();
+    if deny > 0 || (deny_warnings && warn > 0) {
+        return Err(format!(
+            "check failed: {deny} deny-level and {warn} warn-level finding(s){}",
+            if deny_warnings { " (--deny-warnings)" } else { "" }
+        ));
+    }
+    Ok(())
+}
+
 fn cmd_report(argv: &[String]) -> Result<(), String> {
     let specs: &[Spec] = &[
         opt("scale", "test|paper"),
@@ -563,6 +647,7 @@ fn main() {
         Some("sweep") => cmd_sweep(&argv[1..]),
         Some("mtrun") => cmd_mtrun(&argv[1..]),
         Some("bench") => cmd_bench(&argv[1..]),
+        Some("check") => cmd_check(&argv[1..]),
         Some("report") => cmd_report(&argv[1..]),
         Some("payload") => cmd_payload(),
         Some("list") => {
@@ -590,10 +675,11 @@ fn main() {
         }
         _ => {
             eprintln!("amu-sim {} — AMU paper reproduction", amu_sim::version());
-            eprintln!("usage: amu-sim <run|sweep|mtrun|bench|report|payload|list> [options]");
+            eprintln!("usage: amu-sim <run|sweep|mtrun|bench|check|report|payload|list> [options]");
             eprintln!("{}", cli::usage("amu-sim run", RUN_SPECS));
             eprintln!("{}", cli::usage("amu-sim sweep", SWEEP_SPECS));
             eprintln!("{}", cli::usage("amu-sim mtrun", MTRUN_SPECS));
+            eprintln!("{}", cli::usage("amu-sim check", CHECK_SPECS));
             eprintln!(
                 "reports: fig2 fig3 fig8 fig9 fig10 fig11 table4 table5 table6 headline sweep \
                  mt all"

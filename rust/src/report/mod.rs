@@ -531,6 +531,47 @@ pub fn mt_table(outcomes: &[crate::session::MtOutcome]) -> String {
     s
 }
 
+/// `amu-sim check` diagnostics table: one section per checked program
+/// showing findings at or above `min` severity, then a one-line summary.
+/// The row format is golden-pinned in `rust/tests/verify.rs`.
+pub fn check_table(
+    outcomes: &[(String, crate::isa::VerifyReport)],
+    min: crate::isa::Severity,
+) -> String {
+    use crate::isa::Severity;
+    let mut s = String::new();
+    let (mut deny, mut warn, mut info) = (0usize, 0usize, 0usize);
+    for (label, rep) in outcomes {
+        deny += rep.deny_count();
+        warn += rep.warn_count();
+        info += rep.count(Severity::Info);
+        let shown = rep.diags.iter().filter(|d| d.severity() >= min).count();
+        if shown == 0 {
+            let hidden = rep.diags.len();
+            if hidden == 0 {
+                writeln!(s, "{label}: {} insts, clean", rep.insts).unwrap();
+            } else {
+                writeln!(
+                    s,
+                    "{label}: {} insts, clean ({hidden} info note(s); --verbose to show)",
+                    rep.insts
+                )
+                .unwrap();
+            }
+        } else {
+            writeln!(s, "{label}: {} insts, {shown} finding(s)", rep.insts).unwrap();
+            s.push_str(&rep.render_table(min));
+        }
+    }
+    writeln!(
+        s,
+        "checked {} program(s): {deny} deny, {warn} warn, {info} info",
+        outcomes.len()
+    )
+    .unwrap();
+    s
+}
+
 pub fn write_report(name: &str, body: &str) {
     let path = results_dir().join(format!("{name}.txt"));
     std::fs::write(&path, body).ok();

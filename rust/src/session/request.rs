@@ -25,6 +25,9 @@ pub enum SessionError {
     InvalidLatency(f64),
     InvalidConfig(String),
     EmptyGrid(&'static str),
+    /// The program failed static verification (`isa::verify`) — refused
+    /// before simulation.
+    Verify(String),
     Run(String),
 }
 
@@ -72,6 +75,7 @@ impl std::fmt::Display for SessionError {
             SessionError::EmptyGrid(dim) => {
                 write!(f, "sweep grid has an empty '{dim}' dimension")
             }
+            SessionError::Verify(msg) => write!(f, "verification failed: {msg}"),
             SessionError::Run(msg) => write!(f, "run failed: {msg}"),
         }
     }
@@ -177,6 +181,7 @@ impl RunRequest {
     /// architectural result, and collect metrics.
     pub fn run(&self) -> Result<RunResult, SessionError> {
         let spec = self.workload.build(&self.config, self.variant, self.scale);
+        spec.verify_ok().map_err(SessionError::Verify)?;
         let sim = spec.run(&self.config).map_err(SessionError::Run)?;
         let p = estimate(&self.config, &sim.stats, &EnergyModel::default());
         Ok(RunResult {

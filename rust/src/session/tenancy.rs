@@ -319,6 +319,9 @@ fn run_cell(
         let w = registry::find(&t.bench)
             .ok_or_else(|| SessionError::UnknownBench(t.bench.clone()))?;
         let spec = w.build(&cfg, variant, scale);
+        // This path wires simulators by hand (shared backend swap below),
+        // bypassing `WorkloadSpec::run` — so it gates on the verifier here.
+        spec.verify_ok().map_err(SessionError::Verify)?;
         let mut sim = spec.instantiate(&cfg);
         // Swap the per-sim backend for this tenant's handle onto the one
         // shared data plane — the whole point of the exercise.

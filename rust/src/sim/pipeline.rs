@@ -691,10 +691,12 @@ impl Simulator {
                 }
                 UopKind::CfgRd => {
                     req_unit_left -= 1;
+                    // Invalid cfg indices read as zero in the timing model;
+                    // the verifier (AMI006) refuses such programs up front.
                     result = match CfgReg::from_imm(inst.imm) {
-                        CfgReg::Granularity => self.asmc.granularity,
-                        CfgReg::QueueBase => 0,
-                        CfgReg::QueueLength => self.asmc.queue_length as u64,
+                        Some(CfgReg::Granularity) => self.asmc.granularity,
+                        Some(CfgReg::QueueBase) | None => 0,
+                        Some(CfgReg::QueueLength) => self.asmc.queue_length as u64,
                     };
                 }
                 UopKind::AIdAlloc => {
@@ -1230,10 +1232,12 @@ impl Simulator {
                 }
                 UopKind::CfgWr => {
                     let v = e.ami_vals.map(|x| x.0).unwrap_or(0);
+                    // Invalid cfg indices are a commit-time no-op here; the
+                    // verifier (AMI006) refuses such programs up front.
                     match CfgReg::from_imm(e.inst.imm) {
-                        CfgReg::Granularity => self.asmc.set_granularity(v),
-                        CfgReg::QueueBase => {}
-                        CfgReg::QueueLength => self.asmc.set_queue_length(v),
+                        Some(CfgReg::Granularity) => self.asmc.set_granularity(v),
+                        Some(CfgReg::QueueBase) | None => {}
+                        Some(CfgReg::QueueLength) => self.asmc.set_queue_length(v),
                     }
                 }
                 UopKind::Flush => {

@@ -25,8 +25,32 @@ impl WorkloadSpec {
         sim
     }
 
+    /// Run the static verifier over this spec's program (`isa::verify`).
+    pub fn verify(&self) -> crate::isa::VerifyReport {
+        crate::isa::verify(&self.prog)
+    }
+
+    /// Like [`verify`](Self::verify), but collapsed to a gate: `Err` with a
+    /// one-line summary when the program has deny-level findings.
+    pub fn verify_ok(&self) -> Result<(), String> {
+        let report = self.verify();
+        if report.deny_count() > 0 {
+            return Err(format!(
+                "{}: program rejected by the verifier ({} deny finding(s)): {} \
+                 — run `amu-sim check` for the full diagnostics table",
+                self.name,
+                report.deny_count(),
+                report.deny_summary()
+            ));
+        }
+        Ok(())
+    }
+
     /// Run to completion and validate; returns the simulator for metrics.
+    /// Programs that fail static verification are refused before a single
+    /// cycle is simulated.
     pub fn run(&self, cfg: &SimConfig) -> Result<Simulator, String> {
+        self.verify_ok()?;
         let mut sim = self.instantiate(cfg);
         sim.run().map_err(|e| format!("{}: {e}", self.name))?;
         (self.validate)(&mut sim).map_err(|e| format!("{}: validation: {e}", self.name))?;

@@ -1,0 +1,402 @@
+//! Integration tests for the static program verifier (`isa::verify`).
+//!
+//! Three layers:
+//! 1. a negative corpus — one deliberately broken program per diagnostic
+//!    code, asserting the code fires at the expected instruction index;
+//! 2. a registry sweep — every built-in benchmark x supported variant must
+//!    verify with zero deny- AND zero warn-level findings (the CI gate is
+//!    `amu-sim check --all --deny-warnings`);
+//! 3. golden output — the diagnostics table rendering is byte-pinned.
+
+use amu_sim::config::SimConfig;
+use amu_sim::isa::{
+    verify, Asm, CfgReg, Inst, Opcode, Program, Severity, VerifyCode as Code, VerifyReport,
+    FAR_BASE, LOCAL_BASE, SPM_BASE,
+};
+use amu_sim::session::registry::REGISTRY;
+use amu_sim::workloads::{Scale, Variant, VariantKind, WorkloadSpec};
+
+/// Does the report contain `code` anchored at instruction `at`?
+fn has(r: &VerifyReport, code: Code, at: usize) -> bool {
+    r.diags.iter().any(|d| d.code == code && d.at == at)
+}
+
+fn assert_only_code_at(r: &VerifyReport, code: Code, at: usize) {
+    assert!(has(r, code, at), "expected {code:?} at {at}, got: {:?}", r.diags);
+}
+
+// ---------------------------------------------------------------------------
+// Negative corpus: every code fires, at the right index.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ami001_bad_target() {
+    // The assembler cannot emit an unresolved target, so build raw.
+    let p = Program {
+        name: "bad-target".into(),
+        insts: vec![
+            Inst { op: Opcode::Beq, imm: 99, ..Inst::nop() },
+            Inst { op: Opcode::Halt, ..Inst::nop() },
+        ],
+        labels: vec![],
+    };
+    let r = verify(&p);
+    assert_only_code_at(&r, Code::BadTarget, 0);
+    assert_eq!(Code::BadTarget.severity(), Severity::Deny);
+}
+
+#[test]
+fn ami002_falls_off_end() {
+    let mut a = Asm::new("fall");
+    a.li(1, 1);
+    let r = verify(&a.finish());
+    assert_only_code_at(&r, Code::FallsOffEnd, 0);
+    assert!(!r.is_clean(false));
+}
+
+#[test]
+fn ami003_unreachable() {
+    let mut a = Asm::new("dead");
+    a.halt();
+    a.label("dead");
+    a.nop();
+    a.halt();
+    let r = verify(&a.finish());
+    assert_only_code_at(&r, Code::Unreachable, 1);
+    assert_eq!(Code::Unreachable.severity(), Severity::Info);
+    // Info findings never gate, even under --deny-warnings.
+    assert!(r.is_clean(true));
+}
+
+#[test]
+fn ami004_dead_write() {
+    let mut a = Asm::new("r0");
+    a.li(0, 5);
+    a.halt();
+    let r = verify(&a.finish());
+    assert_only_code_at(&r, Code::DeadWrite, 0);
+    assert_eq!(Code::DeadWrite.severity(), Severity::Warn);
+    assert!(r.is_clean(false) && !r.is_clean(true));
+}
+
+#[test]
+fn ami005_maybe_uninit() {
+    let mut a = Asm::new("uninit");
+    a.add(1, 2, 3); // r2, r3 never written
+    a.halt();
+    let r = verify(&a.finish());
+    assert!(has(&r, Code::MaybeUninit, 0), "{:?}", r.diags);
+    assert_eq!(Code::MaybeUninit.severity(), Severity::Info);
+}
+
+#[test]
+fn ami006_bad_cfg_index() {
+    let p = Program {
+        name: "bad-cfg".into(),
+        insts: vec![
+            Inst { op: Opcode::CfgWr, imm: 7, ..Inst::nop() },
+            Inst { op: Opcode::Halt, ..Inst::nop() },
+        ],
+        labels: vec![],
+    };
+    let r = verify(&p);
+    assert_only_code_at(&r, Code::BadCfgIndex, 0);
+    assert_eq!(Code::BadCfgIndex.severity(), Severity::Deny);
+}
+
+#[test]
+fn ami007_queue_cfg_not_dominating() {
+    let mut a = Asm::new("no-dom");
+    a.li(1, 256);
+    a.beq(2, 0, "issue"); // may skip the queue configuration
+    a.cfgwr(1, CfgReg::QueueLength);
+    a.label("issue");
+    a.li(3, SPM_BASE as i64);
+    a.li(4, FAR_BASE as i64);
+    a.aload(5, 3, 4);
+    a.label("poll");
+    a.getfin(6);
+    a.beq(6, 0, "poll");
+    a.halt();
+    let r = verify(&a.finish());
+    assert!(has(&r, Code::QueueCfgNotDominating, 5), "{:?}", r.diags);
+}
+
+#[test]
+fn ami007_silent_when_program_relies_on_reset_defaults() {
+    // No cfgwr QueueBase/QueueLength anywhere: hardware reset defaults
+    // apply and AMI007 must not fire (this is every built-in benchmark).
+    let mut a = Asm::new("reset-defaults");
+    a.li(1, SPM_BASE as i64);
+    a.li(2, FAR_BASE as i64);
+    a.aload(3, 1, 2);
+    a.label("poll");
+    a.getfin(4);
+    a.beq(4, 0, "poll");
+    a.halt();
+    let r = verify(&a.finish());
+    assert!(r.is_clean(true), "{:?}", r.diags);
+}
+
+#[test]
+fn ami008_queue_reconfig_in_flight() {
+    let mut a = Asm::new("reconfig");
+    a.li(1, 64);
+    a.cfgwr(1, CfgReg::QueueLength);
+    a.li(2, SPM_BASE as i64);
+    a.li(3, FAR_BASE as i64);
+    a.aload(4, 2, 3);
+    a.label("poll");
+    a.getfin(5);
+    a.beq(5, 0, "poll");
+    a.cfgwr(1, CfgReg::QueueLength); // requests may still be in flight
+    a.halt();
+    let r = verify(&a.finish());
+    assert!(has(&r, Code::QueueReconfigInFlight, 7), "{:?}", r.diags);
+}
+
+#[test]
+fn ami009_spm_operand_out_of_range() {
+    let mut a = Asm::new("bad-spm");
+    a.li(1, LOCAL_BASE as i64); // not an SPM address
+    a.li(2, FAR_BASE as i64);
+    a.aload(3, 1, 2);
+    a.getfin(4);
+    a.halt();
+    let r = verify(&a.finish());
+    assert!(has(&r, Code::SpmOperandOutOfRange, 2), "{:?}", r.diags);
+}
+
+#[test]
+fn ami009_spm_operand_inside_queue_region() {
+    // QueueBase = SPM_BASE, QueueLength = 4 entries x 32 B = 128 B; an
+    // SPM operand at SPM_BASE+32 aliases the AMART metadata.
+    let mut a = Asm::new("queue-alias");
+    a.li(1, SPM_BASE as i64);
+    a.cfgwr(1, CfgReg::QueueBase);
+    a.li(2, 4);
+    a.cfgwr(2, CfgReg::QueueLength);
+    a.li(3, (SPM_BASE + 32) as i64);
+    a.li(4, FAR_BASE as i64);
+    a.aload(5, 3, 4);
+    a.getfin(6);
+    a.halt();
+    let r = verify(&a.finish());
+    assert!(has(&r, Code::SpmOperandOutOfRange, 6), "{:?}", r.diags);
+}
+
+#[test]
+fn ami010_mem_operand_in_spm() {
+    let mut a = Asm::new("mem-in-spm");
+    a.li(1, SPM_BASE as i64);
+    a.li(2, (SPM_BASE + 64) as i64); // memory operand inside the scratchpad
+    a.aload(3, 1, 2);
+    a.getfin(4);
+    a.halt();
+    let r = verify(&a.finish());
+    assert!(has(&r, Code::MemOperandInSpm, 2), "{:?}", r.diags);
+}
+
+#[test]
+fn ami011_issue_without_drain() {
+    let mut a = Asm::new("no-drain");
+    a.li(1, SPM_BASE as i64);
+    a.li(2, FAR_BASE as i64);
+    a.aload(3, 1, 2);
+    a.halt();
+    let r = verify(&a.finish());
+    assert!(has(&r, Code::IssueWithoutDrain, 2), "{:?}", r.diags);
+}
+
+#[test]
+fn ami012_discarded_request_id() {
+    let mut a = Asm::new("discard-id");
+    a.li(1, SPM_BASE as i64);
+    a.li(2, FAR_BASE as i64);
+    a.aload(0, 1, 2); // id into r0: can never be awaited
+    a.getfin(3);
+    a.halt();
+    let r = verify(&a.finish());
+    assert!(has(&r, Code::DiscardedRequestId, 2), "{:?}", r.diags);
+    assert_eq!(Code::DiscardedRequestId.severity(), Severity::Warn);
+}
+
+#[test]
+fn ami013_drain_without_issue() {
+    let mut a = Asm::new("no-issue");
+    a.getfin(1);
+    a.halt();
+    let r = verify(&a.finish());
+    assert_only_code_at(&r, Code::DrainWithoutIssue, 0);
+    assert_eq!(Code::DrainWithoutIssue.severity(), Severity::Warn);
+}
+
+#[test]
+fn ami014_roi_double_begin() {
+    let mut a = Asm::new("roi-double");
+    a.roi_begin();
+    a.roi_begin();
+    a.roi_end();
+    a.halt();
+    let r = verify(&a.finish());
+    assert_only_code_at(&r, Code::RoiImbalance, 1);
+}
+
+#[test]
+fn ami014_roi_end_without_begin() {
+    let mut a = Asm::new("roi-end");
+    a.roi_end();
+    a.halt();
+    let r = verify(&a.finish());
+    assert_only_code_at(&r, Code::RoiImbalance, 0);
+}
+
+#[test]
+fn ami014_halt_inside_roi() {
+    let mut a = Asm::new("roi-halt");
+    a.roi_begin();
+    a.halt();
+    let r = verify(&a.finish());
+    assert_only_code_at(&r, Code::RoiImbalance, 1);
+}
+
+#[test]
+fn ami015_missing_flush() {
+    let mut a = Asm::new("no-flush");
+    a.li(1, FAR_BASE as i64);
+    a.ld64(2, 1, 0); // sync far access at a constant address
+    a.li(3, SPM_BASE as i64);
+    a.aload(4, 3, 1); // async issue without an intervening flush
+    a.getfin(5);
+    a.halt();
+    let r = verify(&a.finish());
+    assert!(has(&r, Code::MissingFlush, 3), "{:?}", r.diags);
+    assert_eq!(Code::MissingFlush.severity(), Severity::Info);
+}
+
+#[test]
+fn ami015_flush_clears_the_transition() {
+    let mut a = Asm::new("flushed");
+    a.li(1, FAR_BASE as i64);
+    a.ld64(2, 1, 0);
+    a.flush(1, 0); // paper §5.3.2: flush at the sync->async transition
+    a.li(3, SPM_BASE as i64);
+    a.aload(4, 3, 1);
+    a.getfin(5);
+    a.halt();
+    let r = verify(&a.finish());
+    assert!(
+        !r.diags.iter().any(|d| d.code == Code::MissingFlush),
+        "{:?}",
+        r.diags
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Registry sweep: every built-in benchmark verifies clean.
+// ---------------------------------------------------------------------------
+
+/// The representative payload for each variant kind (mirrors `amu-sim
+/// check`).
+fn representative(kind: VariantKind) -> Variant {
+    match kind {
+        VariantKind::Sync => Variant::Sync,
+        VariantKind::Amu => Variant::Amu,
+        VariantKind::GroupPrefetch => Variant::GroupPrefetch(16),
+        VariantKind::SwPrefetch => Variant::SwPrefetch { batch: 16, depth: 2 },
+        VariantKind::AmuLlvm => Variant::AmuLlvm,
+    }
+}
+
+#[test]
+fn every_builtin_benchmark_verifies_clean() {
+    for w in REGISTRY {
+        for &kind in w.supported_variants() {
+            let variant = representative(kind);
+            let cfg = match kind {
+                VariantKind::Amu | VariantKind::AmuLlvm => SimConfig::amu(),
+                _ => SimConfig::baseline(),
+            };
+            let spec = w.build(&cfg, variant, Scale::Test);
+            let report = spec.verify();
+            assert_eq!(
+                (report.deny_count(), report.warn_count()),
+                (0, 0),
+                "{}/{} must verify clean:\n{}",
+                w.name(),
+                variant.tag(),
+                report.render_table(Severity::Info)
+            );
+            spec.verify_ok().unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+}
+
+#[test]
+fn verifier_is_deterministic() {
+    let cfg = SimConfig::amu();
+    let w = REGISTRY.iter().find(|w| w.name() == "gups").unwrap();
+    let spec = w.build(&cfg, Variant::Amu, Scale::Test);
+    assert_eq!(spec.verify(), spec.verify());
+}
+
+// ---------------------------------------------------------------------------
+// The fail-fast hook: invalid programs are refused before simulation.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn run_refuses_programs_with_deny_findings() {
+    let mut a = Asm::new("broken");
+    a.li(1, 1); // falls off the end: AMI002
+    let spec = WorkloadSpec {
+        name: "broken".into(),
+        prog: a.finish(),
+        setup: Box::new(|_| {}),
+        validate: Box::new(|_| Ok(())),
+    };
+    let err = spec.run(&SimConfig::baseline()).unwrap_err();
+    assert!(err.contains("rejected by the verifier"), "{err}");
+    assert!(err.contains("AMI002"), "{err}");
+}
+
+#[test]
+fn warn_level_findings_do_not_block_run() {
+    // A dead write is a warn: `run` must still simulate the program.
+    let mut a = Asm::new("warn-only");
+    a.li(0, 7);
+    a.halt();
+    let spec = WorkloadSpec {
+        name: "warn-only".into(),
+        prog: a.finish(),
+        setup: Box::new(|_| {}),
+        validate: Box::new(|_| Ok(())),
+    };
+    assert!(spec.verify_ok().is_ok());
+    spec.run(&SimConfig::baseline()).expect("warn-level program must run");
+}
+
+// ---------------------------------------------------------------------------
+// Golden diagnostics table.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn diagnostics_table_matches_golden() {
+    let mut a = Asm::new("kitchen-sink");
+    a.li(0, 7); // 0: AMI004
+    a.roi_begin(); // 1
+    a.li(1, LOCAL_BASE as i64); // 2
+    a.li(2, FAR_BASE as i64); // 3
+    a.aload(3, 1, 2); // 4: AMI009 + AMI011
+    a.roi_end(); // 5
+    a.halt(); // 6
+    a.label("dead");
+    a.nop(); // 7: AMI003
+    let r = verify(&a.finish());
+    let expected = include_str!("golden/verify_diagnostics.txt");
+    assert_eq!(
+        r.render_table(Severity::Info),
+        expected,
+        "diagnostics table drifted from rust/tests/golden/verify_diagnostics.txt"
+    );
+    assert_eq!((r.deny_count(), r.warn_count(), r.count(Severity::Info)), (2, 1, 1));
+}
