@@ -35,6 +35,12 @@ pub struct Asm {
     insts: Vec<Inst>,
     labels: HashMap<String, usize>,
     fixups: Vec<(usize, String)>,
+    /// Labels whose instruction address escapes into a register
+    /// (`li_label` continuations, explicit `mark_addr_taken`): recorded as
+    /// `(reference site, label)` so an undefined name reports a location.
+    /// Resolved into `Program::addr_taken` — the verifier's `jalr`
+    /// indirect-target set.
+    taken: Vec<(usize, String)>,
     /// Duplicate definitions recorded by `label()`, reported at finish time.
     duplicates: Vec<AsmError>,
     region: u8,
@@ -134,7 +140,16 @@ impl Asm {
     pub fn li_label(&mut self, rd: u8, target: &str) -> &mut Self {
         let at = self.here();
         self.fixups.push((at, target.to_string()));
+        self.taken.push((at, target.to_string()));
         self.emit(Opcode::Li, rd, 0, 0, 0, 0)
+    }
+
+    /// Declare that `label`'s address escapes into a register outside the
+    /// assembled code (e.g. a host-written TCB resume pointer). The
+    /// verifier then treats the label as a possible `jalr` target.
+    pub fn mark_addr_taken(&mut self, label: &str) -> &mut Self {
+        self.taken.push((self.here(), label.to_string()));
+        self
     }
     pub fn mv(&mut self, rd: u8, rs: u8) -> &mut Self {
         self.addi(rd, rs, 0)
@@ -260,9 +275,19 @@ impl Asm {
             })?;
             self.insts[*at].imm = target as i64;
         }
+        let mut addr_taken = Vec::with_capacity(self.taken.len());
+        for (at, name) in &self.taken {
+            let target = *self.labels.get(name).ok_or_else(|| AsmError::UndefinedLabel {
+                label: name.clone(),
+                at: *at,
+            })?;
+            addr_taken.push(target);
+        }
+        addr_taken.sort_unstable();
+        addr_taken.dedup();
         let mut labels: Vec<(String, usize)> = self.labels.into_iter().collect();
         labels.sort_by_key(|(_, at)| *at);
-        Ok(Program { name: self.name, insts: self.insts, labels })
+        Ok(Program { name: self.name, insts: self.insts, labels, addr_taken })
     }
 
     /// Resolve labels and produce the program; panics on assembly errors

@@ -171,6 +171,12 @@ pub struct Program {
     pub insts: Vec<Inst>,
     /// Label name -> instruction index (kept for disassembly/debugging).
     pub labels: Vec<(String, usize)>,
+    /// Instruction indices whose address is materialized into a register
+    /// (`li_label` continuations, explicit `Asm::mark_addr_taken`). The
+    /// verifier narrows `jalr` successors to this set plus call-return
+    /// sites; when empty, it falls back to treating every label as a
+    /// potential indirect target (hand-built raw programs).
+    pub addr_taken: Vec<usize>,
 }
 
 impl Program {

@@ -477,7 +477,7 @@ mod tests {
                 Inst { op: Opcode::CfgWr, imm: 7, ..Inst::nop() },
                 Inst { op: Opcode::Halt, ..Inst::nop() },
             ],
-            labels: vec![],
+            ..Default::default()
         };
         let mut mem = GuestMem::new();
         let mut it = Interp::new(&mut mem, CompletionOrder::Fifo);

@@ -1,0 +1,186 @@
+//! Control-flow graph over instruction indices, with typed edges so the
+//! dataflow can refine branch conditions per successor, and a backward
+//! "can a `getfin` still run" reachability used by the id-leak check.
+
+use crate::isa::inst::{Opcode, Program};
+
+/// How a successor edge is taken — drives interval refinement of the
+/// branch operands along that edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum EdgeKind {
+    /// The branch at the end of the source block was taken.
+    Taken,
+    /// The branch fell through.
+    Fall,
+    /// Unconditional flow (plain fallthrough, `jal`, `jalr`).
+    Other,
+}
+
+pub(super) struct Cfg {
+    /// Basic blocks as `[start, end)` instruction ranges, in index order.
+    pub blocks: Vec<(usize, usize)>,
+    /// Instruction index -> block id.
+    pub block_of: Vec<usize>,
+    /// Block id -> successor (block id, edge kind) pairs.
+    pub succs: Vec<Vec<(usize, EdgeKind)>>,
+    /// Block reachability from entry.
+    pub reachable: Vec<bool>,
+    /// Block contains a `getfin` or can reach a block that does.
+    getfin_ahead: Vec<bool>,
+}
+
+pub(super) fn valid_target(imm: i64, len: usize) -> Option<usize> {
+    if imm >= 0 && (imm as usize) < len {
+        Some(imm as usize)
+    } else {
+        None
+    }
+}
+
+pub(super) fn is_terminator(op: Opcode) -> bool {
+    matches!(op, Opcode::Halt | Opcode::Jal | Opcode::Jalr)
+}
+
+impl Cfg {
+    /// Build the CFG. Indirect jumps (`jalr`) target the program's
+    /// address-taken set: labels whose index was materialized into a
+    /// register (`li_label` continuations, `Asm::mark_addr_taken` for
+    /// host-injected resume pointers) plus call-return sites (the
+    /// instruction after a `jal` with a live link register — `ret` jumps
+    /// there). Programs with no address-taken info (hand-built raw
+    /// `Program`s) fall back to the legacy over-approximation: every
+    /// label is a potential indirect target.
+    pub fn build(prog: &Program) -> Cfg {
+        let len = prog.len();
+        let insts = &prog.insts;
+        let mut indirect: Vec<usize> =
+            prog.addr_taken.iter().copied().filter(|&at| at < len).collect();
+        if indirect.is_empty() {
+            indirect = prog.labels.iter().map(|(_, at)| *at).filter(|at| *at < len).collect();
+        }
+        for (i, inst) in insts.iter().enumerate() {
+            if inst.op == Opcode::Jal && inst.rd != 0 && i + 1 < len {
+                indirect.push(i + 1);
+            }
+        }
+        indirect.sort_unstable();
+        indirect.dedup();
+
+        // Leaders.
+        let mut leader = vec![false; len];
+        if len > 0 {
+            leader[0] = true;
+        }
+        for &at in &indirect {
+            leader[at] = true;
+        }
+        for (i, inst) in insts.iter().enumerate() {
+            if inst.is_branch() || is_terminator(inst.op) {
+                if i + 1 < len {
+                    leader[i + 1] = true;
+                }
+                if inst.op != Opcode::Jalr {
+                    if let Some(t) = valid_target(inst.imm, len) {
+                        leader[t] = true;
+                    }
+                }
+            }
+        }
+
+        let mut blocks = Vec::new();
+        let mut block_of = vec![0usize; len];
+        let mut start = 0;
+        for i in 0..len {
+            if i > 0 && leader[i] {
+                blocks.push((start, i));
+                start = i;
+            }
+        }
+        if len > 0 {
+            blocks.push((start, len));
+        }
+        for (b, &(s, e)) in blocks.iter().enumerate() {
+            for i in s..e {
+                block_of[i] = b;
+            }
+        }
+
+        let indirect_blocks: Vec<usize> = indirect.iter().map(|&at| block_of[at]).collect();
+        let mut succs: Vec<Vec<(usize, EdgeKind)>> = vec![Vec::new(); blocks.len()];
+        for (b, &(_, e)) in blocks.iter().enumerate() {
+            let last = e - 1;
+            let inst = &insts[last];
+            let mut out: Vec<(usize, EdgeKind)> = Vec::new();
+            match inst.op {
+                Opcode::Halt => {}
+                Opcode::Jal => {
+                    if let Some(t) = valid_target(inst.imm, len) {
+                        out.push((block_of[t], EdgeKind::Other));
+                    }
+                }
+                Opcode::Jalr => {
+                    out.extend(indirect_blocks.iter().map(|&t| (t, EdgeKind::Other)));
+                }
+                Opcode::Beq | Opcode::Bne | Opcode::Blt | Opcode::Bge | Opcode::BltU => {
+                    if let Some(t) = valid_target(inst.imm, len) {
+                        out.push((block_of[t], EdgeKind::Taken));
+                    }
+                    if last + 1 < len {
+                        out.push((block_of[last + 1], EdgeKind::Fall));
+                    }
+                }
+                _ => {
+                    if last + 1 < len {
+                        out.push((block_of[last + 1], EdgeKind::Other));
+                    }
+                }
+            }
+            out.sort_unstable_by_key(|&(t, k)| (t, k as u8));
+            out.dedup();
+            succs[b] = out;
+        }
+
+        // Reachability from entry.
+        let mut reachable = vec![false; blocks.len()];
+        if !blocks.is_empty() {
+            let mut stack = vec![0usize];
+            reachable[0] = true;
+            while let Some(b) = stack.pop() {
+                for &(s, _) in &succs[b] {
+                    if !reachable[s] {
+                        reachable[s] = true;
+                        stack.push(s);
+                    }
+                }
+            }
+        }
+
+        // Backward: can a getfin still execute at-or-after each block?
+        let mut getfin_ahead: Vec<bool> = blocks
+            .iter()
+            .map(|&(s, e)| insts[s..e].iter().any(|i| i.op == Opcode::GetFin))
+            .collect();
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for b in 0..blocks.len() {
+                if !getfin_ahead[b] && succs[b].iter().any(|&(s, _)| getfin_ahead[s]) {
+                    getfin_ahead[b] = true;
+                    changed = true;
+                }
+            }
+        }
+
+        Cfg { blocks, block_of, succs, reachable, getfin_ahead }
+    }
+
+    /// Can any `getfin` execute strictly after instruction `at`?
+    pub fn getfin_reachable_after(&self, prog: &Program, at: usize) -> bool {
+        let b = self.block_of[at];
+        let (_, e) = self.blocks[b];
+        if prog.insts[at + 1..e].iter().any(|i| i.op == Opcode::GetFin) {
+            return true;
+        }
+        self.succs[b].iter().any(|&(s, _)| self.getfin_ahead[s])
+    }
+}

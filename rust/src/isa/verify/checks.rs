@@ -1,0 +1,806 @@
+//! The verifier proper: structural checks, the fused forward dataflow
+//! fixpoint (intervals + protocol bits + request lifetimes), branch-edge
+//! interval refinement, and the collection pass that emits diagnostics.
+
+use super::cfg::{is_terminator, valid_target, Cfg, EdgeKind};
+use super::diag::{Code, Diagnostic, Report};
+use super::domain::{Ival, State};
+use super::lifetime::{target_region, within_spm, HandleState, Tri};
+use crate::isa::inst::{CfgReg, Inst, Opcode, Program};
+use crate::isa::mem::{region_of, MemRegion};
+
+/// Changed joins tolerated at a block before its moving interval bounds
+/// are widened to the domain extremes. Large enough that short counted
+/// loops (in-flight windows, queue sizing) converge to exact bounds
+/// first; small enough to bound the fixpoint on adversarial programs.
+const WIDEN_AFTER: usize = 12;
+
+pub(super) struct Verifier<'p> {
+    prog: &'p Program,
+    cfg: Cfg,
+    /// Does any reachable instruction configure the queue? (If none does,
+    /// the hardware reset defaults apply and AMI007 stays silent.)
+    has_queue_cfg: bool,
+    /// Instruction index of each static issue site; `State::handles` is
+    /// indexed in parallel.
+    issue_sites: Vec<usize>,
+    /// Instruction index -> issue-site index.
+    site_index: Vec<Option<usize>>,
+    fixpoint_iters: usize,
+    diags: Vec<Diagnostic>,
+}
+
+/// Run the full static-analysis pass over an assembled program.
+pub(super) fn analyze(prog: &Program) -> Report {
+    let cfg = Cfg::build(prog);
+    let mut issue_sites = Vec::new();
+    let mut site_index = vec![None; prog.len()];
+    for (i, inst) in prog.insts.iter().enumerate() {
+        if matches!(inst.op, Opcode::ALoad | Opcode::AStore) {
+            site_index[i] = Some(issue_sites.len());
+            issue_sites.push(i);
+        }
+    }
+    let mut v = Verifier {
+        prog,
+        cfg,
+        has_queue_cfg: false,
+        issue_sites,
+        site_index,
+        fixpoint_iters: 0,
+        diags: Vec::new(),
+    };
+    v.run();
+    let mut diags = v.diags;
+    diags.sort_by(|a, b| (a.at, a.code).cmp(&(b.at, b.code)));
+    diags.dedup();
+    Report {
+        program: prog.name.clone(),
+        insts: prog.len(),
+        diags,
+        fixpoint_iters: v.fixpoint_iters,
+    }
+}
+
+impl<'p> Verifier<'p> {
+    fn label_at(&self, at: usize) -> String {
+        self.prog
+            .labels
+            .iter()
+            .filter(|(_, l)| *l <= at)
+            .max_by_key(|(_, l)| *l)
+            .map(|(n, _)| n.clone())
+            .unwrap_or_default()
+    }
+
+    fn emit(&mut self, code: Code, at: usize, message: String) {
+        let label = self.label_at(at);
+        self.diags.push(Diagnostic { code, at, label, message });
+    }
+
+    fn inst_reachable(&self, at: usize) -> bool {
+        self.cfg.reachable[self.cfg.block_of[at]]
+    }
+
+    fn run(&mut self) {
+        let len = self.prog.len();
+        if len == 0 {
+            self.diags.push(Diagnostic {
+                code: Code::FallsOffEnd,
+                at: 0,
+                label: String::new(),
+                message: "program is empty".into(),
+            });
+            return;
+        }
+        self.structural();
+        self.has_queue_cfg = self.prog.insts.iter().enumerate().any(|(i, inst)| {
+            inst.op == Opcode::CfgWr
+                && matches!(
+                    CfgReg::from_imm(inst.imm),
+                    Some(CfgReg::QueueBase) | Some(CfgReg::QueueLength)
+                )
+                && self.inst_reachable(i)
+        });
+        self.dataflow();
+        self.issue_drain_balance();
+    }
+
+    /// Structural checks: bad targets, fall-through off the end,
+    /// unreachable instruction runs.
+    fn structural(&mut self) {
+        let len = self.prog.len();
+        for (i, inst) in self.prog.insts.iter().enumerate() {
+            let targets = inst.is_branch() && inst.op != Opcode::Jalr;
+            if targets && valid_target(inst.imm, len).is_none() {
+                self.emit(
+                    Code::BadTarget,
+                    i,
+                    format!(
+                        "{:?} target {} outside the program (length {len})",
+                        inst.op, inst.imm
+                    ),
+                );
+            }
+        }
+        // Fall-through off the end: the last instruction is reachable and
+        // is not an unconditional control transfer.
+        let last = &self.prog.insts[len - 1];
+        if !is_terminator(last.op) && self.inst_reachable(len - 1) {
+            self.emit(
+                Code::FallsOffEnd,
+                len - 1,
+                format!("{:?} at the program end can fall through past it", last.op),
+            );
+        }
+        // Unreachable instructions, reported once per contiguous run.
+        let mut i = 0;
+        while i < len {
+            if self.inst_reachable(i) {
+                i += 1;
+                continue;
+            }
+            let start = i;
+            while i < len && !self.inst_reachable(i) {
+                i += 1;
+            }
+            self.emit(
+                Code::Unreachable,
+                start,
+                format!("{} unreachable instruction(s)", i - start),
+            );
+        }
+    }
+
+    /// Whole-program issue/drain balance over reachable instructions.
+    fn issue_drain_balance(&mut self) {
+        let first_reachable = |pred: &dyn Fn(&Inst) -> bool| -> Option<usize> {
+            self.prog
+                .insts
+                .iter()
+                .enumerate()
+                .position(|(i, inst)| pred(inst) && self.inst_reachable(i))
+        };
+        let first_issue =
+            first_reachable(&|i| matches!(i.op, Opcode::ALoad | Opcode::AStore));
+        let first_drain = first_reachable(&|i| i.op == Opcode::GetFin);
+        match (first_issue, first_drain) {
+            (Some(at), None) => self.emit(
+                Code::IssueWithoutDrain,
+                at,
+                "async requests are issued but no getfin is reachable: completions leak".into(),
+            ),
+            (None, Some(at)) => self.emit(
+                Code::DrainWithoutIssue,
+                at,
+                "getfin polls for completions but the program never issues a request".into(),
+            ),
+            _ => {}
+        }
+    }
+
+    /// The fused forward dataflow fixpoint plus a final collection pass.
+    fn dataflow(&mut self) {
+        let nblocks = self.cfg.blocks.len();
+        let nhandles = self.issue_sites.len();
+        let mut in_states: Vec<Option<State>> = vec![None; nblocks];
+        in_states[0] = Some(State::entry(nhandles));
+        let mut joins = vec![0usize; nblocks];
+        let mut work: Vec<usize> = vec![0];
+        while let Some(b) = work.pop() {
+            self.fixpoint_iters += 1;
+            let mut st = in_states[b].clone().expect("worklist block has a state");
+            let (s, e) = self.cfg.blocks[b];
+            for i in s..e {
+                self.transfer(&mut st, i, false);
+            }
+            let last = e - 1;
+            for &(succ, kind) in &self.cfg.succs[b].clone() {
+                let mut out = st.clone();
+                refine_edge(&mut out, &self.prog.insts[last], kind);
+                let changed = match &mut in_states[succ] {
+                    Some(cur) => {
+                        let prev = cur.clone();
+                        let ch = cur.join(&out);
+                        if ch {
+                            joins[succ] += 1;
+                            if joins[succ] > WIDEN_AFTER {
+                                cur.widen(&prev);
+                            }
+                        }
+                        ch
+                    }
+                    slot @ None => {
+                        *slot = Some(out);
+                        true
+                    }
+                };
+                if changed && !work.contains(&succ) {
+                    work.push(succ);
+                }
+            }
+        }
+        // Collection pass over the converged states.
+        for b in 0..nblocks {
+            let Some(mut st) = in_states[b].clone() else { continue };
+            let (s, e) = self.cfg.blocks[b];
+            for i in s..e {
+                self.transfer(&mut st, i, true);
+            }
+        }
+    }
+
+    /// One-instruction transfer function; with `collect`, findings are
+    /// emitted against the (converged) incoming state.
+    fn transfer(&mut self, st: &mut State, at: usize, collect: bool) {
+        let i = self.prog.insts[at];
+        use Opcode::*;
+
+        // Use-before-def on the registers this instruction actually reads.
+        if collect {
+            let (a, b) = i.sources();
+            for r in [a, b].into_iter().flatten() {
+                if r != 0 && st.uninit & (1u64 << r) != 0 {
+                    self.emit(
+                        Code::MaybeUninit,
+                        at,
+                        format!("r{r} may be read before its first write (reads as zero)"),
+                    );
+                }
+            }
+        }
+
+        let rs1 = st.regs[i.rs1 as usize];
+        let rs2 = st.regs[i.rs2 as usize];
+
+        // Dead writes to hardwired r0. `j`/`jr` (Jal/Jalr rd=0) and
+        // drain-and-discard `getfin r0` are idioms, not bugs.
+        if collect && i.rd == 0 {
+            match i.op {
+                Add | Sub | Xor | And | Or | Sll | Srl | Mul | SltU | Addi | Xori | Andi
+                | Ori | Slli | Srli | Li | Ld | CfgRd => self.emit(
+                    Code::DeadWrite,
+                    at,
+                    format!("{:?} writes hardwired r0; the result is discarded", i.op),
+                ),
+                ALoad | AStore => self.emit(
+                    Code::DiscardedRequestId,
+                    at,
+                    format!("{:?} writes its request id to r0: it cannot be awaited", i.op),
+                ),
+                _ => {}
+            }
+        }
+
+        // Per-opcode protocol checks and interval evaluation.
+        let mut wrote: Option<(u8, Ival)> = None;
+        let mut issued_handle: Option<usize> = None;
+        match i.op {
+            Add => wrote = Some((i.rd, rs1.add(rs2))),
+            Sub => wrote = Some((i.rd, rs1.sub(rs2))),
+            Xor => wrote = Some((i.rd, rs1.bin_exact(rs2, |a, b| a ^ b))),
+            And => wrote = Some((i.rd, rs1.and(rs2))),
+            Or => wrote = Some((i.rd, rs1.bin_exact(rs2, |a, b| a | b))),
+            Sll => wrote = Some((i.rd, rs1.shl_dyn(rs2))),
+            Srl => wrote = Some((i.rd, rs1.shr_dyn(rs2))),
+            Mul => wrote = Some((i.rd, rs1.mul(rs2))),
+            SltU => wrote = Some((i.rd, rs1.sltu(rs2))),
+            Addi => wrote = Some((i.rd, rs1.add_imm(i.imm))),
+            Xori => wrote = Some((i.rd, rs1.bin_exact(Ival::singleton(i.imm as u64), |a, b| a ^ b))),
+            Andi => wrote = Some((i.rd, rs1.and_mask(i.imm as u64))),
+            Ori => wrote = Some((i.rd, rs1.bin_exact(Ival::singleton(i.imm as u64), |a, b| a | b))),
+            Slli => wrote = Some((i.rd, rs1.shl_const(i.imm as u32 & 63))),
+            Srli => wrote = Some((i.rd, rs1.shr_const(i.imm as u32 & 63))),
+            Li => wrote = Some((i.rd, Ival::singleton(i.imm as u64))),
+            Ld => {
+                let addr = rs1.add_imm(i.imm);
+                if let Some(a) = addr.as_const() {
+                    self.note_sync_far(st, a);
+                }
+                if collect {
+                    self.check_spm_access(st, at, &i, addr, true);
+                }
+                wrote = Some((i.rd, Ival::TOP));
+            }
+            St => {
+                let addr = rs1.add_imm(i.imm);
+                if let Some(a) = addr.as_const() {
+                    self.note_sync_far(st, a);
+                }
+                if collect {
+                    self.check_spm_access(st, at, &i, addr, false);
+                }
+            }
+            Prefetch => {}
+            Flush => {
+                if collect {
+                    let addr = rs1.add_imm(i.imm);
+                    let width = i.size.max(1) as u64;
+                    let acc = Ival { lo: addr.lo, hi: addr.hi.saturating_add(width - 1) };
+                    if within_spm(acc) {
+                        for k in 0..st.handles.len() {
+                            let h = st.handles[k];
+                            if h.st == Tri::Must && within_spm(h.region) && acc.overlaps(h.region)
+                            {
+                                let site = self.issue_sites[k];
+                                self.emit(
+                                    Code::FlushInFlightTarget,
+                                    at,
+                                    format!(
+                                        "flush of SPM [{:#x}, {:#x}] targets the region of the \
+                                         in-flight request issued at inst {site}",
+                                        acc.lo, acc.hi
+                                    ),
+                                );
+                            }
+                        }
+                    }
+                }
+                st.far_dirty = false;
+            }
+            Beq | Bne | Blt | Bge | BltU | Nop | Roi | Halt => {}
+            Jal | Jalr => wrote = Some((i.rd, Ival::singleton(at as u64 + 1))),
+            ALoad | AStore => {
+                self.check_issue(st, at, &i, collect);
+                if let Some(k) = self.site_index[at] {
+                    let g = st.cfg[CfgReg::Granularity as usize].as_const().unwrap_or(1);
+                    let region = target_region(rs1, g);
+                    if collect {
+                        self.check_overlap_and_depth(st, at, k, region);
+                    }
+                    // Strong update: re-issuing through the same site
+                    // replaces the handle wholesale.
+                    st.handles[k] = HandleState {
+                        st: Tri::Must,
+                        ids: if i.rd != 0 { 1u64 << i.rd } else { 0 },
+                        region,
+                    };
+                    issued_handle = Some(k);
+                }
+                st.issued = true;
+                st.far_dirty = false;
+                wrote = Some((i.rd, Ival::TOP));
+            }
+            GetFin => {
+                // One drain poll may complete *any* in-flight request:
+                // every must-in-flight handle decays to maybe.
+                for h in st.handles.iter_mut() {
+                    if h.st == Tri::Must {
+                        h.st = Tri::Maybe;
+                    }
+                }
+                wrote = Some((i.rd, Ival::TOP));
+            }
+            CfgWr => match CfgReg::from_imm(i.imm) {
+                Some(CfgReg::Granularity) => st.cfg[CfgReg::Granularity as usize] = rs1,
+                Some(reg) => {
+                    if collect && st.issued {
+                        self.emit(
+                            Code::QueueReconfigInFlight,
+                            at,
+                            format!(
+                                "cfgwr {reg:?} is reachable after an async issue: \
+                                 reconfiguration resets request ids that may be in flight"
+                            ),
+                        );
+                    }
+                    st.queue_unconfig = false;
+                    st.cfg[reg as usize] = rs1;
+                }
+                None => {
+                    if collect {
+                        self.emit(
+                            Code::BadCfgIndex,
+                            at,
+                            format!("cfgwr immediate {} names no configuration register", i.imm),
+                        );
+                    }
+                }
+            },
+            CfgRd => match CfgReg::from_imm(i.imm) {
+                Some(reg) => wrote = Some((i.rd, st.cfg[reg as usize])),
+                None => {
+                    if collect {
+                        self.emit(
+                            Code::BadCfgIndex,
+                            at,
+                            format!("cfgrd immediate {} names no configuration register", i.imm),
+                        );
+                    }
+                    wrote = Some((i.rd, Ival::TOP));
+                }
+            },
+        }
+
+        // ROI window hygiene. Must-style conditions (`!roi_out` = the
+        // window is open on *every* path in): the jalr over-approximation
+        // would make may-style conditions fire on the coroutine scheduler.
+        if i.op == Roi {
+            let begin = i.imm == 1;
+            if collect {
+                if begin && !st.roi_out {
+                    self.emit(
+                        Code::RoiImbalance,
+                        at,
+                        "roi begin with the ROI window already open on every path here".into(),
+                    );
+                } else if !begin && !st.roi_in {
+                    self.emit(
+                        Code::RoiImbalance,
+                        at,
+                        "roi end with no ROI window open on any path here".into(),
+                    );
+                }
+            }
+            st.roi_in = begin;
+            st.roi_out = !begin;
+        }
+        if i.op == Halt && collect && !st.roi_out {
+            self.emit(
+                Code::RoiImbalance,
+                at,
+                "program halts with the ROI window still open".into(),
+            );
+        }
+
+        // Register write-back, tracking request-id copies: `mv rd, rs`
+        // keeps an id alive in rd; any other write to a register holding
+        // the *last* live copy of a must-in-flight id, at a point with no
+        // getfin ahead, leaks the request (AMI019).
+        let copy_src: Option<u8> = match i.op {
+            Addi if i.imm == 0 => Some(i.rs1),
+            Add | Or if i.rs2 == 0 => Some(i.rs1),
+            Add | Or if i.rs1 == 0 => Some(i.rs2),
+            _ => None,
+        };
+        if let Some((rd, v)) = wrote {
+            if rd != 0 {
+                let rd_bit = 1u64 << rd;
+                for k in 0..st.handles.len() {
+                    if Some(k) == issued_handle {
+                        continue;
+                    }
+                    let src_live = copy_src
+                        .map_or(false, |s| s != 0 && st.handles[k].ids & (1u64 << s) != 0);
+                    if src_live {
+                        st.handles[k].ids |= rd_bit;
+                        continue;
+                    }
+                    if st.handles[k].ids & rd_bit != 0 {
+                        st.handles[k].ids &= !rd_bit;
+                        if collect
+                            && st.handles[k].st == Tri::Must
+                            && st.handles[k].ids == 0
+                            && !self.cfg.getfin_reachable_after(self.prog, at)
+                        {
+                            let site = self.issue_sites[k];
+                            self.emit(
+                                Code::RequestIdLeak,
+                                at,
+                                format!(
+                                    "overwrites r{rd}, the last live copy of the request id \
+                                     issued at inst {site}, with no getfin reachable"
+                                ),
+                            );
+                        }
+                    }
+                }
+                st.regs[rd as usize] = v;
+                st.uninit &= !(1u64 << rd);
+            }
+        }
+
+        // Termination with requests in flight on every path: halt, or a
+        // reachable fall-through off the program end (AMI002 fires too).
+        if collect && (i.op == Halt || (at + 1 == self.prog.len() && !is_terminator(i.op))) {
+            let must: Vec<usize> = st
+                .handles
+                .iter()
+                .enumerate()
+                .filter(|&(_, h)| h.st == Tri::Must)
+                .map(|(k, _)| self.issue_sites[k])
+                .collect();
+            if !must.is_empty() {
+                let verb = if i.op == Halt { "halts" } else { "runs off its end" };
+                self.emit(
+                    Code::HaltWithInFlight,
+                    at,
+                    format!(
+                        "program {verb} with {} async request(s) still in flight (issued at \
+                         inst {})",
+                        must.len(),
+                        must[0]
+                    ),
+                );
+            }
+        }
+    }
+
+    /// A constant-address sync access touching the far region marks the
+    /// sync->async transition state (cleared by `flush`).
+    fn note_sync_far(&self, st: &mut State, addr: u64) {
+        if region_of(addr) == MemRegion::Far {
+            st.far_dirty = true;
+        }
+    }
+
+    /// AMI016/AMI017: a sync SPM access whose byte range provably lies in
+    /// the scratchpad and overlaps the target region of a request that is
+    /// in flight on every path here — the use-before-completion race.
+    fn check_spm_access(&mut self, st: &State, at: usize, i: &Inst, addr: Ival, is_read: bool) {
+        let width = i.size.max(1) as u64;
+        let acc = Ival { lo: addr.lo, hi: addr.hi.saturating_add(width - 1) };
+        if !within_spm(acc) {
+            return;
+        }
+        for (k, h) in st.handles.iter().enumerate() {
+            if h.st == Tri::Must && within_spm(h.region) && acc.overlaps(h.region) {
+                let site = self.issue_sites[k];
+                let (code, verb) = if is_read {
+                    (Code::SpmReadInFlight, "reads")
+                } else {
+                    (Code::SpmWriteInFlight, "writes")
+                };
+                self.emit(
+                    code,
+                    at,
+                    format!(
+                        "{:?} {verb} SPM [{:#x}, {:#x}] while the request issued at inst \
+                         {site} targeting [{:#x}, {:#x}] is in flight",
+                        i.op, acc.lo, acc.hi, h.region.lo, h.region.hi
+                    ),
+                );
+            }
+        }
+    }
+
+    /// AMI018/AMI024 at an issue site: may-overlap against every other
+    /// must-in-flight handle, and the bounded-queue-depth check against a
+    /// constant-propagated `QueueLength`.
+    fn check_overlap_and_depth(&mut self, st: &State, at: usize, k: usize, region: Ival) {
+        if let Some(ql) = st.cfg[CfgReg::QueueLength as usize].as_const() {
+            let in_flight = st
+                .handles
+                .iter()
+                .enumerate()
+                .filter(|&(j, h)| j != k && h.st == Tri::Must)
+                .count() as u64;
+            if in_flight + 1 > ql {
+                self.emit(
+                    Code::QueueDepthExceeded,
+                    at,
+                    format!(
+                        "issue raises the in-flight request count to {}, exceeding the \
+                         configured QueueLength {ql}",
+                        in_flight + 1
+                    ),
+                );
+            }
+        }
+        if !within_spm(region) {
+            return;
+        }
+        for (j, h) in st.handles.iter().enumerate() {
+            if j != k && h.st == Tri::Must && within_spm(h.region) && region.overlaps(h.region) {
+                let site = self.issue_sites[j];
+                self.emit(
+                    Code::OverlappingRequests,
+                    at,
+                    format!(
+                        "request target [{:#x}, {:#x}] may overlap the in-flight request \
+                         issued at inst {site} targeting [{:#x}, {:#x}]: completion order \
+                         decides the slot contents",
+                        region.lo, region.hi, h.region.lo, h.region.hi
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Protocol checks at an `aload`/`astore` issue point.
+    fn check_issue(&mut self, st: &State, at: usize, i: &Inst, collect: bool) {
+        if !collect {
+            return;
+        }
+        let op = i.op;
+        if self.has_queue_cfg && st.queue_unconfig {
+            self.emit(
+                Code::QueueCfgNotDominating,
+                at,
+                format!(
+                    "{op:?} issued on a path where cfgwr QueueBase/QueueLength has not executed"
+                ),
+            );
+        }
+        if st.far_dirty {
+            self.emit(
+                Code::MissingFlush,
+                at,
+                format!(
+                    "{op:?} issued after a sync far-region access with no intervening flush \
+                     (sync->async transition)"
+                ),
+            );
+        }
+        let qreg = || {
+            Option::zip(
+                st.cfg[CfgReg::QueueBase as usize].as_const(),
+                st.cfg[CfgReg::QueueLength as usize].as_const(),
+            )
+            // AMART metadata: 32 B per queue entry (paper Table 2).
+            .map(|(qb, ql)| (qb, qb.saturating_add(ql.saturating_mul(32))))
+        };
+        let spm = st.regs[i.rs1 as usize];
+        if let Some(v) = spm.as_const() {
+            if region_of(v) != MemRegion::Spm {
+                self.emit(
+                    Code::SpmOperandOutOfRange,
+                    at,
+                    format!(
+                        "{op:?} SPM operand resolves to {v:#x}, outside the scratchpad"
+                    ),
+                );
+            } else if let Some((qb, qend)) = qreg() {
+                if v >= qb && v < qend {
+                    self.emit(
+                        Code::SpmOperandOutOfRange,
+                        at,
+                        format!(
+                            "{op:?} SPM operand {v:#x} lies inside the configured queue \
+                             region [{qb:#x}, {qend:#x})"
+                        ),
+                    );
+                }
+            }
+        } else if !spm.is_top() {
+            // Interval refinement (AMI022): a loop-varying/merged operand
+            // whose whole byte range is provably misplaced.
+            let g = st.cfg[CfgReg::Granularity as usize].as_const().unwrap_or(1);
+            let reg = target_region(spm, g);
+            if reg.hi < crate::isa::mem::SPM_BASE || reg.lo >= crate::isa::mem::SPM_END {
+                self.emit(
+                    Code::SpmIntervalOutOfRange,
+                    at,
+                    format!(
+                        "{op:?} SPM operand ranges over [{:#x}, {:#x}], entirely outside \
+                         the scratchpad",
+                        reg.lo, reg.hi
+                    ),
+                );
+            } else if let Some((qb, qend)) = qreg() {
+                if reg.lo >= qb && reg.hi < qend {
+                    self.emit(
+                        Code::SpmIntervalOutOfRange,
+                        at,
+                        format!(
+                            "{op:?} SPM operand range [{:#x}, {:#x}] lies inside the \
+                             configured queue region [{qb:#x}, {qend:#x})",
+                            reg.lo, reg.hi
+                        ),
+                    );
+                }
+            }
+        }
+        let mem = st.regs[i.rs2 as usize];
+        if let Some(v) = mem.as_const() {
+            if region_of(v) == MemRegion::Spm {
+                self.emit(
+                    Code::MemOperandInSpm,
+                    at,
+                    format!(
+                        "{op:?} memory operand resolves to {v:#x}, inside the scratchpad"
+                    ),
+                );
+            }
+        } else if !mem.is_top() && within_spm(mem) {
+            self.emit(
+                Code::MemIntervalInSpm,
+                at,
+                format!(
+                    "{op:?} memory operand ranges over [{:#x}, {:#x}], entirely inside \
+                     the scratchpad",
+                    mem.lo, mem.hi
+                ),
+            );
+        }
+    }
+}
+
+/// Refine the branch operand intervals along a `Taken`/`Fall` edge. A
+/// refinement that would empty an interval is skipped (the edge is still
+/// propagated unrefined — soundness over precision, so no previously
+/// analyzed block ever loses its state). Signed compares refine only when
+/// both operands provably fit in the non-negative signed range, where
+/// signed and unsigned order coincide. Hardwired r0 is never refined.
+fn refine_edge(st: &mut State, last: &Inst, kind: EdgeKind) {
+    if kind == EdgeKind::Other {
+        return;
+    }
+    let taken = kind == EdgeKind::Taken;
+    let a = st.regs[last.rs1 as usize];
+    let b = st.regs[last.rs2 as usize];
+    let (mut na, mut nb) = (a, b);
+    let signed_safe = |v: Ival| v.hi <= i64::MAX as u64;
+    match last.op {
+        Opcode::BltU => refine_ltu(&mut na, &mut nb, taken),
+        Opcode::Blt if signed_safe(a) && signed_safe(b) => refine_ltu(&mut na, &mut nb, taken),
+        Opcode::Bge if signed_safe(a) && signed_safe(b) => refine_ltu(&mut na, &mut nb, !taken),
+        Opcode::Beq => {
+            if taken {
+                refine_eq(&mut na, &mut nb);
+            } else {
+                refine_ne(&mut na, &mut nb);
+            }
+        }
+        Opcode::Bne => {
+            if taken {
+                refine_ne(&mut na, &mut nb);
+            } else {
+                refine_eq(&mut na, &mut nb);
+            }
+        }
+        _ => return,
+    }
+    if last.rs1 != 0 {
+        st.regs[last.rs1 as usize] = na;
+    }
+    if last.rs2 != 0 {
+        st.regs[last.rs2 as usize] = nb;
+    }
+}
+
+/// `a < b` (unsigned) when `lt`, else `a >= b`; tighten each side only
+/// when the new bound stays inside the interval.
+fn refine_ltu(a: &mut Ival, b: &mut Ival, lt: bool) {
+    if lt {
+        if b.hi > 0 {
+            let cap = b.hi - 1;
+            if cap < a.hi && cap >= a.lo {
+                a.hi = cap;
+            }
+        }
+        if a.lo < u64::MAX {
+            let floor = a.lo + 1;
+            if floor > b.lo && floor <= b.hi {
+                b.lo = floor;
+            }
+        }
+    } else {
+        if b.lo > a.lo && b.lo <= a.hi {
+            a.lo = b.lo;
+        }
+        if a.hi < b.hi && a.hi >= b.lo {
+            b.hi = a.hi;
+        }
+    }
+}
+
+fn refine_eq(a: &mut Ival, b: &mut Ival) {
+    let lo = a.lo.max(b.lo);
+    let hi = a.hi.min(b.hi);
+    if lo <= hi {
+        *a = Ival { lo, hi };
+        *b = *a;
+    }
+}
+
+/// `a != b`: trim a matching interval endpoint when the other side is a
+/// singleton (the only shape intervals can express).
+fn refine_ne(a: &mut Ival, b: &mut Ival) {
+    fn trim(v: &mut Ival, c: u64) {
+        if v.lo == v.hi {
+            return; // refusing to empty a singleton
+        }
+        if v.lo == c {
+            v.lo += 1;
+        } else if v.hi == c {
+            v.hi -= 1;
+        }
+    }
+    if let Some(c) = b.as_const() {
+        trim(a, c);
+    }
+    if let Some(c) = a.as_const() {
+        trim(b, c);
+    }
+}

@@ -1,0 +1,400 @@
+//! Diagnostic vocabulary: severities, the stable `AMIxxx` code set, and
+//! the per-program [`Report`] with its table and JSON renderings.
+
+/// Diagnostic severity. `Deny` findings make `run`/`sweep`/`mtrun` refuse
+/// the program; `Warn` findings fail `amu-sim check --deny-warnings`;
+/// `Info` findings never gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Deny,
+}
+
+impl Severity {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// Typed diagnostic codes. Stable identifiers: tests, CI and the README
+/// table key off these strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Code {
+    /// AMI001: branch/jump target outside the program.
+    BadTarget,
+    /// AMI002: execution can fall through past the last instruction.
+    FallsOffEnd,
+    /// AMI003: instruction unreachable from entry.
+    Unreachable,
+    /// AMI004: ALU/load result written to hardwired `r0` (discarded).
+    DeadWrite,
+    /// AMI005: register may be read before its first write.
+    MaybeUninit,
+    /// AMI006: `cfgwr`/`cfgrd` immediate names no configuration register.
+    BadCfgIndex,
+    /// AMI007: issue on a path where the queue configuration (`cfgwr`
+    /// `QueueBase`/`QueueLength`) has not executed, in a program that does
+    /// configure the queue elsewhere.
+    QueueCfgNotDominating,
+    /// AMI008: queue reconfigured while requests may be in flight.
+    QueueReconfigInFlight,
+    /// AMI009: constant SPM operand outside the scratchpad (or inside the
+    /// configured AMART queue region).
+    SpmOperandOutOfRange,
+    /// AMI010: constant memory operand inside the scratchpad.
+    MemOperandInSpm,
+    /// AMI011: async requests issued but the program contains no
+    /// reachable `getfin` drain.
+    IssueWithoutDrain,
+    /// AMI012: request ID written to `r0` — the request can never be
+    /// awaited individually.
+    DiscardedRequestId,
+    /// AMI013: `getfin` polling in a program that never issues a request.
+    DrainWithoutIssue,
+    /// AMI014: unbalanced `roi` markers: a begin with the window already
+    /// open on every path, an end with it open on no path, or a halt with
+    /// it open on every path. (Must-style conditions: the indirect-jump
+    /// over-approximation makes may-style ROI checks fire spuriously on
+    /// the coroutine scheduler.)
+    RoiImbalance,
+    /// AMI015: constant-address sync far access followed by an async
+    /// issue with no intervening `flush` (sync->async region transition).
+    MissingFlush,
+    /// AMI016: SPM read overlapping the target region of a request that is
+    /// in flight on every path here — the use-before-completion race: the
+    /// slot's contents are undefined until `getfin` reports the id.
+    SpmReadInFlight,
+    /// AMI017: SPM write overlapping the target region of an in-flight
+    /// request — the completion will clobber (or race with) the write.
+    SpmWriteInFlight,
+    /// AMI018: two simultaneously in-flight requests whose SPM target
+    /// regions may overlap — completion order decides the slot contents.
+    OverlappingRequests,
+    /// AMI019: the last live copy of an in-flight request id is
+    /// overwritten at a point from which no `getfin` is reachable — the
+    /// request can never be awaited and its queue entry leaks.
+    RequestIdLeak,
+    /// AMI020: the program can halt (or run off its end) with requests
+    /// still in flight on every path to that point.
+    HaltWithInFlight,
+    /// AMI021: `flush` targets the SPM region of an in-flight request.
+    FlushInFlightTarget,
+    /// AMI022: a loop-varying/merged SPM operand whose interval lies
+    /// entirely outside the scratchpad (or entirely inside the configured
+    /// queue region) — the interval-domain refinement of AMI009.
+    SpmIntervalOutOfRange,
+    /// AMI023: a loop-varying/merged memory operand whose interval lies
+    /// entirely inside the scratchpad — the interval refinement of AMI010.
+    MemIntervalInSpm,
+    /// AMI024: an issue raises the must-in-flight request count above the
+    /// constant-propagated `QueueLength`.
+    QueueDepthExceeded,
+}
+
+/// Every diagnostic code, in ascending `AMIxxx` order (the README table
+/// and the negative-corpus test iterate this).
+pub const ALL_CODES: &[Code] = &[
+    Code::BadTarget,
+    Code::FallsOffEnd,
+    Code::Unreachable,
+    Code::DeadWrite,
+    Code::MaybeUninit,
+    Code::BadCfgIndex,
+    Code::QueueCfgNotDominating,
+    Code::QueueReconfigInFlight,
+    Code::SpmOperandOutOfRange,
+    Code::MemOperandInSpm,
+    Code::IssueWithoutDrain,
+    Code::DiscardedRequestId,
+    Code::DrainWithoutIssue,
+    Code::RoiImbalance,
+    Code::MissingFlush,
+    Code::SpmReadInFlight,
+    Code::SpmWriteInFlight,
+    Code::OverlappingRequests,
+    Code::RequestIdLeak,
+    Code::HaltWithInFlight,
+    Code::FlushInFlightTarget,
+    Code::SpmIntervalOutOfRange,
+    Code::MemIntervalInSpm,
+    Code::QueueDepthExceeded,
+];
+
+impl Code {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Code::BadTarget => "AMI001",
+            Code::FallsOffEnd => "AMI002",
+            Code::Unreachable => "AMI003",
+            Code::DeadWrite => "AMI004",
+            Code::MaybeUninit => "AMI005",
+            Code::BadCfgIndex => "AMI006",
+            Code::QueueCfgNotDominating => "AMI007",
+            Code::QueueReconfigInFlight => "AMI008",
+            Code::SpmOperandOutOfRange => "AMI009",
+            Code::MemOperandInSpm => "AMI010",
+            Code::IssueWithoutDrain => "AMI011",
+            Code::DiscardedRequestId => "AMI012",
+            Code::DrainWithoutIssue => "AMI013",
+            Code::RoiImbalance => "AMI014",
+            Code::MissingFlush => "AMI015",
+            Code::SpmReadInFlight => "AMI016",
+            Code::SpmWriteInFlight => "AMI017",
+            Code::OverlappingRequests => "AMI018",
+            Code::RequestIdLeak => "AMI019",
+            Code::HaltWithInFlight => "AMI020",
+            Code::FlushInFlightTarget => "AMI021",
+            Code::SpmIntervalOutOfRange => "AMI022",
+            Code::MemIntervalInSpm => "AMI023",
+            Code::QueueDepthExceeded => "AMI024",
+        }
+    }
+
+    pub fn severity(&self) -> Severity {
+        match self {
+            Code::BadTarget
+            | Code::FallsOffEnd
+            | Code::BadCfgIndex
+            | Code::QueueCfgNotDominating
+            | Code::QueueReconfigInFlight
+            | Code::SpmOperandOutOfRange
+            | Code::MemOperandInSpm
+            | Code::IssueWithoutDrain
+            | Code::RoiImbalance
+            // Use-before-completion races and interval-refined operand
+            // violations are definite protocol breaches: the access/operand
+            // range is known to fall where it must not.
+            | Code::SpmReadInFlight
+            | Code::SpmWriteInFlight
+            | Code::SpmIntervalOutOfRange
+            | Code::MemIntervalInSpm => Severity::Deny,
+            Code::DeadWrite
+            | Code::DiscardedRequestId
+            | Code::DrainWithoutIssue
+            // Lifetime hazards below are may-facts over joined handle
+            // states (overlap/leak/depth depend on completion order or on
+            // which abstract path is real) — they gate only under
+            // --deny-warnings, like the other hygiene warns.
+            | Code::OverlappingRequests
+            | Code::RequestIdLeak
+            | Code::HaltWithInFlight
+            | Code::FlushInFlightTarget
+            | Code::QueueDepthExceeded => Severity::Warn,
+            // Unreachable defensive padding after indirect jumps is a
+            // deliberate idiom in the coroutine scheduler, registers
+            // architecturally reset to zero, and the far-dirty bit is a
+            // may-fact over an over-approximated CFG — notes, not gates.
+            Code::Unreachable | Code::MaybeUninit | Code::MissingFlush => Severity::Info,
+        }
+    }
+
+    /// One-line meaning for the README table and `check` summaries.
+    pub fn meaning(&self) -> &'static str {
+        match self {
+            Code::BadTarget => "branch/jump target outside the program",
+            Code::FallsOffEnd => "execution can fall through past the last instruction",
+            Code::Unreachable => "instruction unreachable from entry",
+            Code::DeadWrite => "result written to hardwired r0 and discarded",
+            Code::MaybeUninit => "register may be read before its first write",
+            Code::BadCfgIndex => "cfgwr/cfgrd immediate names no configuration register",
+            Code::QueueCfgNotDominating => {
+                "issue on a path where the AMART queue configuration has not executed"
+            }
+            Code::QueueReconfigInFlight => {
+                "queue reconfigured while async requests may be in flight"
+            }
+            Code::SpmOperandOutOfRange => {
+                "SPM operand outside the scratchpad or inside the configured queue region"
+            }
+            Code::MemOperandInSpm => "memory operand of an async request inside the scratchpad",
+            Code::IssueWithoutDrain => "async requests issued but no getfin drain is reachable",
+            Code::DiscardedRequestId => "request id written to r0; request cannot be awaited",
+            Code::DrainWithoutIssue => "getfin polling but the program never issues a request",
+            Code::RoiImbalance => "roi begin/end unbalanced on some path",
+            Code::MissingFlush => "sync far access reaches an async issue without a flush",
+            Code::SpmReadInFlight => {
+                "SPM read overlaps the target region of an in-flight async request"
+            }
+            Code::SpmWriteInFlight => {
+                "SPM write overlaps the target region of an in-flight async request"
+            }
+            Code::OverlappingRequests => {
+                "two in-flight async requests may target overlapping SPM regions"
+            }
+            Code::RequestIdLeak => {
+                "last copy of an in-flight request id overwritten with no getfin reachable"
+            }
+            Code::HaltWithInFlight => "program can halt with async requests still in flight",
+            Code::FlushInFlightTarget => {
+                "flush targets the SPM region of an in-flight async request"
+            }
+            Code::SpmIntervalOutOfRange => {
+                "SPM operand interval entirely outside the scratchpad or inside the queue region"
+            }
+            Code::MemIntervalInSpm => {
+                "memory operand interval entirely inside the scratchpad"
+            }
+            Code::QueueDepthExceeded => {
+                "in-flight request count exceeds the configured QueueLength"
+            }
+        }
+    }
+}
+
+/// One finding: code, location (instruction index), enclosing label
+/// context, and a concrete message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub code: Code,
+    /// Instruction index the finding anchors to.
+    pub at: usize,
+    /// Nearest label at or before `at` (empty if none).
+    pub label: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn severity(&self) -> Severity {
+        self.code.severity()
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let ctx = if self.label.is_empty() { "-".to_string() } else { self.label.clone() };
+        write!(
+            f,
+            "{} {} @{} ({}): {}",
+            self.code.tag(),
+            self.severity().tag(),
+            self.at,
+            ctx,
+            self.message
+        )
+    }
+}
+
+/// The verifier's result for one program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Report {
+    /// `Program::name` of the verified program.
+    pub program: String,
+    /// Program length in instructions.
+    pub insts: usize,
+    /// All findings, sorted by instruction index then code.
+    pub diags: Vec<Diagnostic>,
+    /// Blocks processed by the dataflow worklist before the fixpoint
+    /// converged (widening guarantees a bound; property-tested).
+    pub fixpoint_iters: usize,
+}
+
+impl Report {
+    pub fn count(&self, sev: Severity) -> usize {
+        self.diags.iter().filter(|d| d.severity() == sev).count()
+    }
+
+    pub fn deny_count(&self) -> usize {
+        self.count(Severity::Deny)
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    /// Does this report gate execution? With `deny_warnings`, warn-level
+    /// findings gate too (the CI configuration).
+    pub fn is_clean(&self, deny_warnings: bool) -> bool {
+        self.deny_count() == 0 && (!deny_warnings || self.warn_count() == 0)
+    }
+
+    /// Render findings at or above `min` as a fixed-width diagnostics
+    /// table (golden-pinned; `amu-sim check` output).
+    pub fn render_table(&self, min: Severity) -> String {
+        let mut s = String::new();
+        for d in self.diags.iter().filter(|d| d.severity() >= min) {
+            let ctx = if d.label.is_empty() { "-" } else { &d.label };
+            s.push_str(&format!(
+                "  {} {:<4} @{:<5} {:<14} {}\n",
+                d.code.tag(),
+                d.severity().tag(),
+                d.at,
+                ctx,
+                d.message
+            ));
+        }
+        s
+    }
+
+    /// Render this report as one entry of the `check --format json`
+    /// `programs` array. The field set (code/severity/index/label/message)
+    /// is a stable schema, golden-pinned in
+    /// `rust/tests/golden/verify_check.json`.
+    pub fn render_json(&self, label: &str) -> String {
+        let mut s = String::new();
+        s.push_str("    {\n");
+        s.push_str(&format!("      \"label\": \"{}\",\n", json_escape(label)));
+        s.push_str(&format!("      \"program\": \"{}\",\n", json_escape(&self.program)));
+        s.push_str(&format!("      \"insts\": {},\n", self.insts));
+        s.push_str(&format!("      \"deny\": {},\n", self.deny_count()));
+        s.push_str(&format!("      \"warn\": {},\n", self.warn_count()));
+        s.push_str(&format!("      \"info\": {},\n", self.count(Severity::Info)));
+        if self.diags.is_empty() {
+            s.push_str("      \"diagnostics\": []\n");
+        } else {
+            s.push_str("      \"diagnostics\": [\n");
+            for (k, d) in self.diags.iter().enumerate() {
+                s.push_str("        {\n");
+                s.push_str(&format!("          \"code\": \"{}\",\n", d.code.tag()));
+                s.push_str(&format!("          \"severity\": \"{}\",\n", d.severity().tag()));
+                s.push_str(&format!("          \"index\": {},\n", d.at));
+                s.push_str(&format!("          \"label\": \"{}\",\n", json_escape(&d.label)));
+                s.push_str(&format!("          \"message\": \"{}\"\n", json_escape(&d.message)));
+                s.push_str(if k + 1 < self.diags.len() { "        },\n" } else { "        }\n" });
+            }
+            s.push_str("      ]\n");
+        }
+        s.push_str("    }");
+        s
+    }
+
+    /// Compact one-line summary of the deny-level findings, for errors
+    /// raised by the fail-fast hook in the workload registry.
+    pub fn deny_summary(&self) -> String {
+        let denies: Vec<String> = self
+            .diags
+            .iter()
+            .filter(|d| d.severity() == Severity::Deny)
+            .take(3)
+            .map(|d| d.to_string())
+            .collect();
+        let extra = self.deny_count().saturating_sub(denies.len());
+        let mut s = denies.join("; ");
+        if extra > 0 {
+            s.push_str(&format!("; +{extra} more"));
+        }
+        s
+    }
+}
+
+/// Minimal JSON string escaping for the hand-rolled renderers (no JSON
+/// dependency in the crate; determinism matters more than generality).
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}

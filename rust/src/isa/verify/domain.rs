@@ -1,0 +1,303 @@
+//! The interval abstract domain and the fused forward dataflow state.
+//!
+//! Registers (and the three AMI configuration registers) are tracked as
+//! unsigned intervals `[lo, hi]` (inclusive). Singletons are evaluated
+//! exactly with wrapping arithmetic — bit-compatible with the old
+//! constant-propagation lattice — while non-singleton intervals use
+//! checked bound arithmetic and fall to `TOP` on any possible overflow,
+//! so bounds are always sound. Joins take the convex hull; loop heads are
+//! widened (lo -> 0, hi -> u64::MAX per moving bound) after a bounded
+//! number of changed joins, which makes the fixpoint terminate on
+//! arbitrary programs (property-tested in `rust/tests/verify.rs`).
+
+use super::lifetime::HandleState;
+use crate::isa::inst::NUM_ARCH_REGS;
+
+/// An unsigned interval `[lo, hi]`, inclusive on both ends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) struct Ival {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Ival {
+    pub const TOP: Ival = Ival { lo: 0, hi: u64::MAX };
+
+    pub fn singleton(v: u64) -> Ival {
+        Ival { lo: v, hi: v }
+    }
+
+    pub fn is_top(self) -> bool {
+        self == Ival::TOP
+    }
+
+    /// The single value this interval holds, if it holds exactly one.
+    pub fn as_const(self) -> Option<u64> {
+        if self.lo == self.hi {
+            Some(self.lo)
+        } else {
+            None
+        }
+    }
+
+    /// Convex hull (the interval join).
+    pub fn join(self, other: Ival) -> Ival {
+        Ival { lo: self.lo.min(other.lo), hi: self.hi.max(other.hi) }
+    }
+
+    /// Do the two (inclusive) intervals share at least one value?
+    pub fn overlaps(self, other: Ival) -> bool {
+        self.lo.max(other.lo) <= self.hi.min(other.hi)
+    }
+
+    /// Exact binary op, defined only when both sides are singletons
+    /// (xor/or and other non-monotone ops).
+    pub fn bin_exact(self, other: Ival, f: impl Fn(u64, u64) -> u64) -> Ival {
+        match (self.as_const(), other.as_const()) {
+            (Some(a), Some(b)) => Ival::singleton(f(a, b)),
+            _ => Ival::TOP,
+        }
+    }
+
+    pub fn add(self, other: Ival) -> Ival {
+        if let (Some(a), Some(b)) = (self.as_const(), other.as_const()) {
+            return Ival::singleton(a.wrapping_add(b));
+        }
+        match (self.lo.checked_add(other.lo), self.hi.checked_add(other.hi)) {
+            (Some(lo), Some(hi)) => Ival { lo, hi },
+            _ => Ival::TOP,
+        }
+    }
+
+    /// `self + imm` with a signed immediate (the `addi`/address-offset
+    /// shape); singletons wrap exactly.
+    pub fn add_imm(self, imm: i64) -> Ival {
+        if let Some(a) = self.as_const() {
+            return Ival::singleton(a.wrapping_add(imm as u64));
+        }
+        if imm >= 0 {
+            self.add(Ival::singleton(imm as u64))
+        } else {
+            self.sub(Ival::singleton(imm.unsigned_abs()))
+        }
+    }
+
+    pub fn sub(self, other: Ival) -> Ival {
+        if let (Some(a), Some(b)) = (self.as_const(), other.as_const()) {
+            return Ival::singleton(a.wrapping_sub(b));
+        }
+        if self.lo >= other.hi {
+            Ival { lo: self.lo - other.hi, hi: self.hi - other.lo }
+        } else {
+            Ival::TOP
+        }
+    }
+
+    pub fn mul(self, other: Ival) -> Ival {
+        if let (Some(a), Some(b)) = (self.as_const(), other.as_const()) {
+            return Ival::singleton(a.wrapping_mul(b));
+        }
+        match (self.lo.checked_mul(other.lo), self.hi.checked_mul(other.hi)) {
+            (Some(lo), Some(hi)) => Ival { lo, hi },
+            _ => Ival::TOP,
+        }
+    }
+
+    /// `self & mask` for a constant mask: the result is at most both the
+    /// mask and the original upper bound.
+    pub fn and_mask(self, mask: u64) -> Ival {
+        if let Some(a) = self.as_const() {
+            return Ival::singleton(a & mask);
+        }
+        Ival { lo: 0, hi: self.hi.min(mask) }
+    }
+
+    pub fn and(self, other: Ival) -> Ival {
+        match (self.as_const(), other.as_const()) {
+            (Some(a), Some(b)) => Ival::singleton(a & b),
+            (Some(m), None) => other.and_mask(m),
+            (None, Some(m)) => self.and_mask(m),
+            (None, None) => Ival { lo: 0, hi: self.hi.min(other.hi) },
+        }
+    }
+
+    pub fn shl_const(self, sh: u32) -> Ival {
+        if let Some(a) = self.as_const() {
+            return Ival::singleton(a.wrapping_shl(sh));
+        }
+        // Sound only if the top bound shifts without losing bits.
+        if self.hi.leading_zeros() >= sh {
+            Ival { lo: self.lo << sh, hi: self.hi << sh }
+        } else {
+            Ival::TOP
+        }
+    }
+
+    pub fn shr_const(self, sh: u32) -> Ival {
+        if let Some(a) = self.as_const() {
+            return Ival::singleton(a.wrapping_shr(sh));
+        }
+        Ival { lo: self.lo >> sh, hi: self.hi >> sh }
+    }
+
+    /// Dynamic shift: exact when the amount is a singleton.
+    pub fn shl_dyn(self, amount: Ival) -> Ival {
+        match amount.as_const() {
+            Some(sh) => self.shl_const(sh as u32 & 63),
+            None => Ival::TOP,
+        }
+    }
+
+    pub fn shr_dyn(self, amount: Ival) -> Ival {
+        match amount.as_const() {
+            Some(sh) => self.shr_const(sh as u32 & 63),
+            None => Ival::TOP,
+        }
+    }
+
+    pub fn sltu(self, other: Ival) -> Ival {
+        if self.hi < other.lo {
+            Ival::singleton(1)
+        } else if self.lo >= other.hi {
+            Ival::singleton(0)
+        } else {
+            Ival { lo: 0, hi: 1 }
+        }
+    }
+}
+
+/// Joined forward dataflow state at a program point. All components are
+/// may-facts (join = union / convex hull), so one fixpoint serves every
+/// check; the "queue configuration dominates" must-fact is encoded as its
+/// dual (`queue_unconfig`: the configuration *may not* have executed yet),
+/// and request lifetimes carry a three-point must/may lattice per issue
+/// site (see `lifetime`).
+#[derive(Clone, PartialEq)]
+pub(super) struct State {
+    /// Bit r set: register r may not have been written yet.
+    pub uninit: u64,
+    /// Queue configuration (`cfgwr QueueBase/QueueLength`) may not have
+    /// executed on some path to this point.
+    pub queue_unconfig: bool,
+    /// An async request may have been issued.
+    pub issued: bool,
+    /// The ROI window may be open / may be closed here.
+    pub roi_in: bool,
+    pub roi_out: bool,
+    /// A constant-address sync far access may have happened since the
+    /// last `flush`.
+    pub far_dirty: bool,
+    pub regs: [Ival; NUM_ARCH_REGS],
+    /// Value intervals of the three AMI configuration registers.
+    pub cfg: [Ival; 3],
+    /// One abstract request handle per static issue site, indexed like
+    /// `Verifier::issue_sites`.
+    pub handles: Vec<HandleState>,
+}
+
+impl State {
+    pub fn entry(nhandles: usize) -> State {
+        State {
+            uninit: !1u64, // every register but hardwired r0
+            queue_unconfig: true,
+            issued: false,
+            roi_in: false,
+            roi_out: true,
+            far_dirty: false,
+            // Architectural reset state: all registers read as zero.
+            regs: [Ival::singleton(0); NUM_ARCH_REGS],
+            cfg: [Ival::TOP; 3],
+            handles: vec![HandleState::bot(); nhandles],
+        }
+    }
+
+    pub fn join(&mut self, other: &State) -> bool {
+        let before = self.clone();
+        self.uninit |= other.uninit;
+        self.queue_unconfig |= other.queue_unconfig;
+        self.issued |= other.issued;
+        self.roi_in |= other.roi_in;
+        self.roi_out |= other.roi_out;
+        self.far_dirty |= other.far_dirty;
+        for (a, b) in self.regs.iter_mut().zip(other.regs.iter()) {
+            *a = a.join(*b);
+        }
+        for (a, b) in self.cfg.iter_mut().zip(other.cfg.iter()) {
+            *a = a.join(*b);
+        }
+        for (a, b) in self.handles.iter_mut().zip(other.handles.iter()) {
+            *a = a.join(*b);
+        }
+        *self != before
+    }
+
+    /// Widen every interval bound that moved since `prev` to its domain
+    /// extreme. Applied at join points after `WIDEN_AFTER` changed joins;
+    /// together with the monotone bit/tri-state components this bounds
+    /// the number of state changes per block, so the fixpoint terminates.
+    pub fn widen(&mut self, prev: &State) {
+        fn w(cur: &mut Ival, prev: Ival) {
+            if cur.lo < prev.lo {
+                cur.lo = 0;
+            }
+            if cur.hi > prev.hi {
+                cur.hi = u64::MAX;
+            }
+        }
+        for (c, p) in self.regs.iter_mut().zip(prev.regs.iter()) {
+            w(c, *p);
+        }
+        for (c, p) in self.cfg.iter_mut().zip(prev.cfg.iter()) {
+            w(c, *p);
+        }
+        for (c, p) in self.handles.iter_mut().zip(prev.handles.iter()) {
+            w(&mut c.region, p.region);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn singleton_arithmetic_is_exact_and_wrapping() {
+        let a = Ival::singleton(u64::MAX);
+        assert_eq!(a.add_imm(1), Ival::singleton(0));
+        assert_eq!(a.add(Ival::singleton(2)), Ival::singleton(1));
+        assert_eq!(Ival::singleton(3).mul(Ival::singleton(4)), Ival::singleton(12));
+    }
+
+    #[test]
+    fn nonsingleton_overflow_goes_top() {
+        let a = Ival { lo: 1, hi: u64::MAX };
+        assert!(a.add(Ival { lo: 0, hi: 1 }).is_top());
+        assert!(a.shl_const(1).is_top());
+    }
+
+    #[test]
+    fn bounded_ops_stay_bounded() {
+        let a = Ival { lo: 0, hi: 3 };
+        assert_eq!(a.shl_const(6), Ival { lo: 0, hi: 192 });
+        assert_eq!(a.add_imm(16), Ival { lo: 16, hi: 19 });
+        assert_eq!(a.and_mask(2), Ival { lo: 0, hi: 2 });
+        assert_eq!(Ival { lo: 8, hi: 24 }.sub(Ival { lo: 1, hi: 4 }), Ival { lo: 4, hi: 23 });
+    }
+
+    #[test]
+    fn sltu_decides_when_ranges_separate() {
+        assert_eq!(Ival { lo: 0, hi: 3 }.sltu(Ival::singleton(5)), Ival::singleton(1));
+        assert_eq!(Ival { lo: 9, hi: 12 }.sltu(Ival { lo: 0, hi: 4 }), Ival::singleton(0));
+        assert_eq!(Ival { lo: 0, hi: 9 }.sltu(Ival::singleton(5)), Ival { lo: 0, hi: 1 });
+    }
+
+    #[test]
+    fn widen_moves_only_changed_bounds() {
+        let mut st = State::entry(1);
+        let prev = st.clone();
+        st.regs[5] = Ival { lo: 0, hi: 7 };
+        st.widen(&prev);
+        assert_eq!(st.regs[5], Ival { lo: 0, hi: u64::MAX });
+        assert_eq!(st.regs[6], Ival::singleton(0));
+    }
+}

@@ -1,0 +1,102 @@
+//! The request-lifetime domain: one abstract handle per static
+//! `aload`/`astore` issue site.
+//!
+//! A handle tracks whether its site's most recent request is in flight on
+//! every path (`Must`), on some path (`Maybe`), or was never issued
+//! (`Bot`); which registers may still hold the request id (a bitmask,
+//! propagated through `mv`-shaped copies and intersected at joins); and
+//! the interval of the request's SPM target region. `getfin` demotes
+//! every `Must` handle to `Maybe` — after one drain poll the *specific*
+//! request that completed is unknown, so only never-polled requests
+//! support the deny-level use-before-completion race checks (AMI016/017).
+//! Re-issuing through the same site is a strong update: the handle state
+//! is replaced wholesale.
+
+use super::domain::Ival;
+use crate::isa::mem::{SPM_BASE, SPM_END};
+
+/// Three-point lattice for "this site's request is in flight here".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum Tri {
+    /// The site has not issued on any path to this point.
+    Bot,
+    /// In flight on every path to this point.
+    Must,
+    /// In flight on some path (or already drained on some path).
+    Maybe,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) struct HandleState {
+    pub st: Tri,
+    /// Bit r set: register r may still hold this request's id on every
+    /// path (intersected at joins: a must-fact, so AMI019 never fires on
+    /// a path that actually kept a copy).
+    pub ids: u64,
+    /// Interval of the request's SPM target region (inclusive bytes).
+    pub region: Ival,
+}
+
+impl HandleState {
+    pub fn bot() -> HandleState {
+        HandleState { st: Tri::Bot, ids: 0, region: Ival::TOP }
+    }
+
+    pub fn join(self, other: HandleState) -> HandleState {
+        match (self.st, other.st) {
+            (Tri::Bot, _) => other,
+            (_, Tri::Bot) => self,
+            (a, b) => HandleState {
+                st: if a == b { a } else { Tri::Maybe },
+                ids: self.ids & other.ids,
+                region: self.region.join(other.region),
+            },
+        }
+    }
+}
+
+/// Inclusive byte interval of a request's SPM target: the operand
+/// interval extended by the transfer granularity.
+pub(super) fn target_region(spm: Ival, granularity: u64) -> Ival {
+    let g = granularity.max(1);
+    Ival { lo: spm.lo, hi: spm.hi.saturating_add(g - 1) }
+}
+
+/// Is the whole (inclusive) interval inside the scratchpad? Widened/TOP
+/// intervals fail this, which keeps the race checks silent wherever the
+/// SPM slot address flows in from memory (every coroutine workload).
+pub(super) fn within_spm(v: Ival) -> bool {
+    v.lo >= SPM_BASE && v.hi < SPM_END
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_is_must_only_when_both_must() {
+        let must = HandleState { st: Tri::Must, ids: 0b110, region: Ival::singleton(SPM_BASE) };
+        let bot = HandleState::bot();
+        assert_eq!(must.join(bot), must);
+        assert_eq!(bot.join(must), must);
+        let other =
+            HandleState { st: Tri::Must, ids: 0b100, region: Ival::singleton(SPM_BASE + 64) };
+        let j = must.join(other);
+        assert_eq!(j.st, Tri::Must);
+        assert_eq!(j.ids, 0b100);
+        assert_eq!(j.region, Ival { lo: SPM_BASE, hi: SPM_BASE + 64 });
+        let maybe = HandleState { st: Tri::Maybe, ..other };
+        assert_eq!(must.join(maybe).st, Tri::Maybe);
+    }
+
+    #[test]
+    fn spm_containment_rejects_top_and_partial() {
+        assert!(within_spm(Ival { lo: SPM_BASE, hi: SPM_BASE + 63 }));
+        assert!(!within_spm(Ival::TOP));
+        assert!(!within_spm(Ival { lo: SPM_BASE - 1, hi: SPM_BASE }));
+        assert_eq!(
+            target_region(Ival::singleton(SPM_BASE), 64),
+            Ival { lo: SPM_BASE, hi: SPM_BASE + 63 }
+        );
+    }
+}

@@ -1,0 +1,228 @@
+//! Static analysis over assembled guest programs (`amu-sim check`).
+//!
+//! AMI decouples request issue (`aload`/`astore`) from response handling
+//! (`getfin`), with request state parked in SPM — so a guest program can be
+//! silently wrong in ways synchronous load/store code cannot: requests
+//! issued before the AMART queue is configured, SPM operands that alias the
+//! configured queue region, issue/drain imbalance that leaks request IDs,
+//! sync reads of an SPM slot whose fill request is still in flight, or
+//! unbalanced ROI markers that corrupt the measurement window. This module
+//! machine-checks every program before it reaches the cycle-accurate
+//! pipeline.
+//!
+//! The pass builds a CFG over instruction indices (branch/`jal`/`jalr`/
+//! `halt` terminators; indirect jumps approximated by the program's
+//! address-taken label set plus call-return sites — see [`cfg`]) and runs
+//! five analysis families:
+//!
+//! 1. **structural** — out-of-bounds jump targets, fall-through off the
+//!    program end, unreachable instructions, dead writes to hardwired `r0`;
+//! 2. **register dataflow** — use-before-def via a forward
+//!    may-be-uninitialized analysis (info-level: registers reset to zero),
+//!    plus an interval domain over register values ([`domain`]): joined at
+//!    merges, refined along branch edges, widened at loop heads — so
+//!    strided and loop-varying addresses stay analyzable, not just
+//!    constants;
+//! 3. **AMI protocol** — queue configuration dominating every issue, SPM
+//!    operands (constant *or* bounded-interval) inside the scratchpad and
+//!    outside the configured queue region, issue/drain balance, valid
+//!    `CfgReg` indices, no queue reconfiguration with requests in flight;
+//! 4. **request lifetimes** ([`lifetime`]) — one abstract handle per
+//!    static issue site tracks must/may in-flight state, the registers
+//!    still holding the request id, and the interval of the SPM target
+//!    region: sync access of an in-flight target (AMI016/017), overlapping
+//!    in-flight targets (AMI018), id overwritten with no drain ahead
+//!    (AMI019), halt with requests in flight (AMI020), flush of an
+//!    in-flight target (AMI021), and queue-depth overflow (AMI024);
+//! 5. **measurement hygiene** — `roi` begin/end paired on all paths,
+//!    `flush` between constant-address sync far accesses and async issue.
+//!
+//! The CFG still over-approximates indirect control flow (a `jalr` may
+//! target any address-taken label or call-return site), so path-sensitive
+//! checks are conservative: they never miss a violation on a real path,
+//! but exotic external programs may need restructuring to verify cleanly.
+//! Deny-level race findings additionally require the access *and* the
+//! in-flight target region to be provably inside the scratchpad, so
+//! widened or memory-fed addresses never produce false denials. Every
+//! built-in benchmark passes with zero deny- and warn-level findings
+//! (enforced in CI by `amu-sim check --all --deny-warnings`).
+
+mod cfg;
+mod checks;
+mod diag;
+mod domain;
+mod lifetime;
+
+pub use diag::{Code, Diagnostic, Report, Severity, ALL_CODES};
+pub(crate) use diag::json_escape;
+
+use super::inst::Program;
+
+/// Run the full static-analysis pass over an assembled program.
+pub fn verify(prog: &Program) -> Report {
+    checks::analyze(prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::mem::{FAR_BASE, SPM_BASE};
+    use crate::isa::Asm;
+
+    fn codes(r: &Report) -> Vec<Code> {
+        r.diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn clean_minimal_program() {
+        let mut a = Asm::new("ok");
+        a.li(1, 5).addi(1, 1, 1).halt();
+        let r = verify(&a.finish());
+        assert!(r.diags.is_empty(), "{:?}", r.diags);
+        assert!(r.is_clean(true));
+    }
+
+    #[test]
+    fn clean_ami_roundtrip() {
+        let mut a = Asm::new("ami-ok");
+        a.li(1, SPM_BASE as i64);
+        a.li(2, FAR_BASE as i64);
+        a.aload(3, 1, 2);
+        a.label("poll");
+        a.getfin(4);
+        a.beq(4, 0, "poll");
+        a.halt();
+        let r = verify(&a.finish());
+        assert!(r.is_clean(true), "{:?}", r.diags);
+    }
+
+    #[test]
+    fn empty_program_flagged() {
+        let r = verify(&Program { name: "empty".into(), ..Default::default() });
+        assert_eq!(codes(&r), vec![Code::FallsOffEnd]);
+    }
+
+    #[test]
+    fn falls_off_end() {
+        let mut a = Asm::new("fall");
+        a.li(1, 1);
+        let r = verify(&a.finish());
+        assert_eq!(codes(&r), vec![Code::FallsOffEnd]);
+        assert_eq!(r.diags[0].at, 0);
+    }
+
+    #[test]
+    fn label_context_attached() {
+        let mut a = Asm::new("ctx");
+        a.halt();
+        a.label("dead_code");
+        a.nop();
+        a.halt();
+        let r = verify(&a.finish());
+        assert_eq!(r.diags.len(), 1);
+        assert_eq!(r.diags[0].code, Code::Unreachable);
+        assert_eq!(r.diags[0].label, "dead_code");
+    }
+
+    #[test]
+    fn severity_order() {
+        assert!(Severity::Deny > Severity::Warn && Severity::Warn > Severity::Info);
+    }
+
+    #[test]
+    fn all_codes_unique_and_ordered() {
+        let tags: Vec<&str> = ALL_CODES.iter().map(|c| c.tag()).collect();
+        let mut sorted = tags.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(tags.len(), sorted.len());
+        assert_eq!(tags, sorted, "ALL_CODES must be in ascending AMIxxx order");
+    }
+
+    #[test]
+    fn report_counts_and_gating() {
+        let mut a = Asm::new("mix");
+        a.li(0, 1); // AMI004 warn
+        a.halt();
+        let r = verify(&a.finish());
+        assert_eq!((r.deny_count(), r.warn_count()), (0, 1));
+        assert!(r.is_clean(false) && !r.is_clean(true));
+    }
+
+    #[test]
+    fn widening_terminates_unbounded_loop() {
+        // r4 counts forever; without widening the interval [0, n] grows one
+        // join at a time and the fixpoint never converges.
+        let mut a = Asm::new("loop");
+        a.li(4, 0);
+        a.label("loop");
+        a.addi(4, 4, 1);
+        a.bne(4, 0, "loop");
+        a.halt();
+        let r = verify(&a.finish());
+        assert!(r.is_clean(true), "{:?}", r.diags);
+        assert!(
+            r.fixpoint_iters < 100,
+            "fixpoint took {} iterations — widening is not kicking in",
+            r.fixpoint_iters
+        );
+    }
+
+    #[test]
+    fn branch_refinement_bounds_a_counted_loop() {
+        // for r4 in 0..8 { r5 = SPM_BASE + (r4 << 3); aload r6, r5, r2 }:
+        // without the bltu-taken refinement r4's interval widens to TOP and
+        // AMI022 could never be judged; with it the operand stays inside
+        // the scratchpad and the program is clean.
+        let mut a = Asm::new("strided");
+        a.li(2, FAR_BASE as i64);
+        a.li(4, 0);
+        a.li(7, 8);
+        a.label("loop");
+        a.slli(5, 4, 3);
+        a.li(6, SPM_BASE as i64);
+        a.add(5, 5, 6);
+        a.aload(6, 5, 2);
+        a.getfin(0);
+        a.addi(4, 4, 1);
+        a.bltu(4, 7, "loop");
+        a.halt();
+        let r = verify(&a.finish());
+        assert!(r.is_clean(true), "{:?}", r.diags);
+    }
+
+    #[test]
+    fn jalr_targets_narrow_to_addr_taken_labels() {
+        // The only address-taken label is "cont": the refined CFG must not
+        // treat "skipped" as a jalr target, so its body is unreachable.
+        let mut a = Asm::new("jalr-narrow");
+        a.li_label(1, "cont");
+        a.jalr(0, 1);
+        a.label("skipped");
+        a.nop();
+        a.halt();
+        a.label("cont");
+        a.halt();
+        let r = verify(&a.finish());
+        assert_eq!(codes(&r), vec![Code::Unreachable]);
+        assert_eq!(r.diags[0].at, 2);
+    }
+
+    #[test]
+    fn raw_programs_fall_back_to_all_label_targets() {
+        // Hand-built programs carry no address-taken info: every label is
+        // a potential jalr target, so nothing here is unreachable.
+        let mut a = Asm::new("jalr-legacy");
+        a.li(1, 4);
+        a.jalr(0, 1);
+        a.label("a");
+        a.nop();
+        a.halt();
+        a.label("b");
+        a.halt();
+        let mut p = a.finish();
+        p.addr_taken.clear(); // simulate a raw Program
+        let r = verify(&p);
+        assert!(!codes(&r).contains(&Code::Unreachable), "{:?}", r.diags);
+    }
+}

@@ -141,6 +141,7 @@ const CHECK_SPECS: &[Spec] = &[
     flag("all", "check every registered benchmark"),
     flag("deny-warnings", "exit nonzero on warn-level findings too (the CI gate)"),
     flag("verbose", "also print info-level diagnostics"),
+    opt("format", "output format: table|json|sarif (default: table)"),
 ];
 
 fn parse_scale(s: &str) -> Result<Scale, String> {
@@ -450,8 +451,8 @@ fn cmd_bench(argv: &[String]) -> Result<(), String> {
 
 /// `amu-sim check`: run the static verifier (`isa::verify`) over built-in
 /// benchmark programs without simulating them, print the diagnostics
-/// table, and exit nonzero on deny-level findings (warn-level too under
-/// `--deny-warnings`).
+/// (as a table, JSON, or SARIF via `--format`), and exit nonzero on
+/// deny-level findings (warn-level too under `--deny-warnings`).
 fn cmd_check(argv: &[String]) -> Result<(), String> {
     use amu_sim::isa::Severity;
     use amu_sim::session::registry::{self, Workload};
@@ -460,10 +461,12 @@ fn cmd_check(argv: &[String]) -> Result<(), String> {
     let scale = parse_scale(&args.get_str("scale", "test"))?;
     let deny_warnings = args.has_flag("deny-warnings");
     let min = if args.has_flag("verbose") { Severity::Info } else { Severity::Warn };
+    let format = args.get_str("format", "table");
+    if !matches!(format.as_str(), "table" | "json" | "sarif") {
+        return Err(format!("unknown format '{format}' (valid: table, json, sarif)"));
+    }
     let benches: Vec<&'static dyn Workload> = match args.get("bench") {
-        Some(name) => vec![registry::find(&name).ok_or_else(|| {
-            format!("unknown benchmark '{name}' (valid: {})", workloads::ALL.join(", "))
-        })?],
+        Some(name) => vec![registry::find_or_err(&name).map_err(|e| e.to_string())?],
         None if args.has_flag("all") => registry::REGISTRY.to_vec(),
         None => return Err("pass --bench <name> or --all".into()),
     };
@@ -509,7 +512,11 @@ fn cmd_check(argv: &[String]) -> Result<(), String> {
             outcomes.push((format!("{}/{}", w.name(), v.tag()), spec.verify()));
         }
     }
-    print!("{}", report::check_table(&outcomes, min));
+    match format.as_str() {
+        "json" => print!("{}", report::check_json(&outcomes)),
+        "sarif" => print!("{}", report::check_sarif(&outcomes)),
+        _ => print!("{}", report::check_table(&outcomes, min)),
+    }
     let deny: usize = outcomes.iter().map(|(_, r)| r.deny_count()).sum();
     let warn: usize = outcomes.iter().map(|(_, r)| r.warn_count()).sum();
     if deny > 0 || (deny_warnings && warn > 0) {

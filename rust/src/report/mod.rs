@@ -572,6 +572,107 @@ pub fn check_table(
     s
 }
 
+/// `amu-sim check --format json`: the machine-readable diagnostics
+/// envelope. Hand-rolled (the crate carries no JSON dependency) and fully
+/// deterministic: same programs in, byte-identical text out. The
+/// per-diagnostic field set (code/severity/index/label/message) and the
+/// `schema_version` are a stable contract, golden-pinned in
+/// `rust/tests/golden/verify_check.json` and grepped by the CI lint job.
+pub fn check_json(outcomes: &[(String, crate::isa::VerifyReport)]) -> String {
+    use crate::isa::Severity;
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema_version\": 1,\n");
+    if outcomes.is_empty() {
+        s.push_str("  \"programs\": [],\n");
+    } else {
+        s.push_str("  \"programs\": [\n");
+        for (k, (label, rep)) in outcomes.iter().enumerate() {
+            s.push_str(&rep.render_json(label));
+            s.push_str(if k + 1 < outcomes.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ],\n");
+    }
+    let deny: usize = outcomes.iter().map(|(_, r)| r.deny_count()).sum();
+    let warn: usize = outcomes.iter().map(|(_, r)| r.warn_count()).sum();
+    let info: usize = outcomes.iter().map(|(_, r)| r.count(Severity::Info)).sum();
+    s.push_str("  \"totals\": {\n");
+    s.push_str(&format!("    \"programs\": {},\n", outcomes.len()));
+    s.push_str(&format!("    \"deny\": {deny},\n"));
+    s.push_str(&format!("    \"warn\": {warn},\n"));
+    s.push_str(&format!("    \"info\": {info}\n"));
+    s.push_str("  }\n");
+    s.push_str("}\n");
+    s
+}
+
+/// `amu-sim check --format sarif`: SARIF 2.1.0 for code-scanning UIs. One
+/// run; every `AMIxxx` code is a rule, every finding a result whose
+/// logical location is `<program label>@<instruction index>`.
+pub fn check_sarif(outcomes: &[(String, crate::isa::VerifyReport)]) -> String {
+    use crate::isa::verify::{json_escape, ALL_CODES};
+    use crate::isa::Severity;
+    let level = |sev: Severity| match sev {
+        Severity::Deny => "error",
+        Severity::Warn => "warning",
+        Severity::Info => "note",
+    };
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"$schema\": \"https://json.schemastore.org/sarif-2.1.0.json\",\n");
+    s.push_str("  \"version\": \"2.1.0\",\n");
+    s.push_str("  \"runs\": [\n    {\n");
+    s.push_str("      \"tool\": {\n        \"driver\": {\n");
+    s.push_str("          \"name\": \"amu-sim check\",\n");
+    s.push_str("          \"rules\": [\n");
+    for (k, code) in ALL_CODES.iter().enumerate() {
+        s.push_str("            {\n");
+        s.push_str(&format!("              \"id\": \"{}\",\n", code.tag()));
+        s.push_str(&format!(
+            "              \"shortDescription\": {{ \"text\": \"{}\" }},\n",
+            json_escape(code.meaning())
+        ));
+        s.push_str(&format!(
+            "              \"defaultConfiguration\": {{ \"level\": \"{}\" }}\n",
+            level(code.severity())
+        ));
+        s.push_str(if k + 1 < ALL_CODES.len() { "            },\n" } else { "            }\n" });
+    }
+    s.push_str("          ]\n        }\n      },\n");
+    let nresults: usize = outcomes.iter().map(|(_, r)| r.diags.len()).sum();
+    if nresults == 0 {
+        s.push_str("      \"results\": []\n");
+    } else {
+        s.push_str("      \"results\": [\n");
+        let mut k = 0usize;
+        for (label, rep) in outcomes {
+            for d in &rep.diags {
+                k += 1;
+                s.push_str("        {\n");
+                s.push_str(&format!("          \"ruleId\": \"{}\",\n", d.code.tag()));
+                s.push_str(&format!("          \"level\": \"{}\",\n", level(d.severity())));
+                s.push_str(&format!(
+                    "          \"message\": {{ \"text\": \"{}\" }},\n",
+                    json_escape(&d.message)
+                ));
+                s.push_str("          \"locations\": [\n");
+                s.push_str("            {\n              \"logicalLocations\": [\n");
+                s.push_str(&format!(
+                    "                {{ \"name\": \"{}\", \"fullyQualifiedName\": \"{}@{}\" }}\n",
+                    json_escape(if d.label.is_empty() { "-" } else { &d.label }),
+                    json_escape(label),
+                    d.at
+                ));
+                s.push_str("              ]\n            }\n          ]\n");
+                s.push_str(if k < nresults { "        },\n" } else { "        }\n" });
+            }
+        }
+        s.push_str("      ]\n");
+    }
+    s.push_str("    }\n  ]\n}\n");
+    s
+}
+
 pub fn write_report(name: &str, body: &str) {
     let path = results_dir().join(format!("{name}.txt"));
     std::fs::write(&path, body).ok();

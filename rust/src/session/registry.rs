@@ -72,6 +72,15 @@ pub fn find(name: &str) -> Option<&'static dyn Workload> {
     REGISTRY.iter().copied().find(|w| w.name() == name)
 }
 
+/// Look a benchmark up by name, or produce the canonical
+/// [`UnknownBench`](crate::session::SessionError::UnknownBench) error —
+/// one `Display` impl names the valid choices for every caller (CLI
+/// `check`, run requests, tenant specs) instead of each formatting its
+/// own list.
+pub fn find_or_err(name: &str) -> Result<&'static dyn Workload, crate::session::SessionError> {
+    find(name).ok_or_else(|| crate::session::SessionError::UnknownBench(name.to_string()))
+}
+
 /// All registered benchmark names, in registry order.
 pub fn names() -> Vec<&'static str> {
     REGISTRY.iter().map(|w| w.name()).collect()
@@ -90,6 +99,17 @@ mod tests {
     fn find_known_and_unknown() {
         assert_eq!(find("gups").map(|w| w.name()), Some("gups"));
         assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn find_or_err_unknown_names_the_choices() {
+        assert!(find_or_err("gups").is_ok());
+        let e = match find_or_err("nope") {
+            Ok(_) => panic!("expected UnknownBench"),
+            Err(e) => e.to_string(),
+        };
+        assert!(e.contains("unknown benchmark 'nope'"), "{e}");
+        assert!(e.contains("gups") && e.contains("stream"), "{e}");
     }
 
     #[test]

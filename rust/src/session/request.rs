@@ -305,8 +305,7 @@ impl RunRequestBuilder {
 
     /// Validate and produce the immutable request.
     pub fn build(self) -> Result<RunRequest, SessionError> {
-        let workload = registry::find(&self.bench)
-            .ok_or_else(|| SessionError::UnknownBench(self.bench.clone()))?;
+        let workload = registry::find_or_err(&self.bench)?;
         let mut cfg = match (self.config, self.config_name) {
             (Some(cfg), _) => cfg,
             (None, Some(name)) => {

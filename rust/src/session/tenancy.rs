@@ -92,9 +92,7 @@ impl TenantSpec {
         if bench.is_empty() {
             return Err(bad(format!("empty benchmark name in '{item}'")));
         }
-        if registry::find(bench).is_none() {
-            return Err(SessionError::UnknownBench(bench.to_string()));
-        }
+        registry::find_or_err(bench)?;
         Ok(TenantSpec { bench: bench.to_string(), count, weight, class })
     }
 
@@ -316,8 +314,7 @@ fn run_cell(
     let mut specs = Vec::new();
     let mut sims = Vec::new();
     for (i, t) in tenants.iter().enumerate() {
-        let w = registry::find(&t.bench)
-            .ok_or_else(|| SessionError::UnknownBench(t.bench.clone()))?;
+        let w = registry::find_or_err(&t.bench)?;
         let spec = w.build(&cfg, variant, scale);
         // This path wires simulators by hand (shared backend swap below),
         // bypassing `WorkloadSpec::run` — so it gates on the verifier here.

@@ -6,6 +6,20 @@ use crate::coro::CoroRt;
 use crate::isa::mem::Layout;
 use crate::isa::{Asm, Program};
 use crate::sim::Simulator;
+use crate::util::Fnv;
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Process-wide memo of verifier gate results, keyed by program
+/// fingerprint: `sweep`/`mtrun` build the same program once per grid point
+/// and would otherwise re-run the whole static analysis every time.
+static VERIFY_CACHE: OnceLock<Mutex<HashMap<u64, Result<(), String>>>> = OnceLock::new();
+
+/// Number of distinct programs this process has pushed through the
+/// verifier gate (test hook for the memoization).
+pub fn verify_cache_len() -> usize {
+    VERIFY_CACHE.get().map_or(0, |c| c.lock().unwrap().len())
+}
 
 /// A runnable benchmark instance: program + memory setup + validation.
 pub struct WorkloadSpec {
@@ -31,19 +45,44 @@ impl WorkloadSpec {
     }
 
     /// Like [`verify`](Self::verify), but collapsed to a gate: `Err` with a
-    /// one-line summary when the program has deny-level findings.
+    /// one-line summary when the program has deny-level findings. Memoized
+    /// per distinct (spec name, program) so sweeps verify each program
+    /// once per process, not once per grid point.
     pub fn verify_ok(&self) -> Result<(), String> {
+        let key = self.fingerprint();
+        let cache = VERIFY_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        if let Some(hit) = cache.lock().unwrap().get(&key) {
+            return hit.clone();
+        }
         let report = self.verify();
-        if report.deny_count() > 0 {
-            return Err(format!(
+        let result = if report.deny_count() > 0 {
+            Err(format!(
                 "{}: program rejected by the verifier ({} deny finding(s)): {} \
                  — run `amu-sim check` for the full diagnostics table",
                 self.name,
                 report.deny_count(),
                 report.deny_summary()
-            ));
+            ))
+        } else {
+            Ok(())
+        };
+        cache.lock().unwrap().insert(key, result.clone());
+        result
+    }
+
+    /// FNV-1a over the spec name and full instruction stream. The spec
+    /// name participates because the gate's error message embeds it.
+    fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        h.write(self.name.as_bytes());
+        h.write(&[0]);
+        h.write(self.prog.name.as_bytes());
+        h.write(&[0]);
+        for i in &self.prog.insts {
+            h.write(&[i.op as u8, i.rd, i.rs1, i.rs2, i.size]);
+            h.write(&i.imm.to_le_bytes());
         }
-        Ok(())
+        h.finish()
     }
 
     /// Run to completion and validate; returns the simulator for metrics.
@@ -253,6 +292,10 @@ impl AmuScaffold {
         rt.emit_prologue(&mut a);
         a.roi_begin();
         a.j("sched");
+        // Task bodies are entered via `jalr` on TCB resume pointers that
+        // the host seeds to "task"; record the escape so the verifier's
+        // narrowed indirect-target set keeps them reachable.
+        a.mark_addr_taken("task");
         a.label("task");
         emit_task(&mut a, &rt);
         a.label("sched");

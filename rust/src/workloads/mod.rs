@@ -14,7 +14,7 @@ pub mod redis;
 pub mod sl;
 pub mod stream;
 
-pub use common::{Scale, Variant, VariantKind, WorkloadSpec, ALL_VARIANT_KINDS};
+pub use common::{verify_cache_len, Scale, Variant, VariantKind, WorkloadSpec, ALL_VARIANT_KINDS};
 
 use crate::config::SimConfig;
 
