@@ -93,6 +93,9 @@ pub struct Asmc {
     pub subrequests: u64,
     pub completions: u64,
     pub alloc_failures: u64,
+    /// Reused scratch for draining `MemSys::asmc_completions` each tick
+    /// (batched completion draining without a per-cycle allocation).
+    drain_buf: Vec<crate::mem::Completion>,
 }
 
 impl Asmc {
@@ -115,6 +118,44 @@ impl Asmc {
             subrequests: 0,
             completions: 0,
             alloc_failures: 0,
+            drain_buf: Vec::new(),
+        }
+    }
+
+    /// Earliest future cycle at which the ASMC will act on its own: the
+    /// next ID-batch command arrival (pops the free/finished lists) or
+    /// response delivery (pollable by the ALSU). Queued requests and
+    /// sub-requests don't appear here because a tick with a non-empty queue
+    /// always makes progress — the fast-forward fixed-point check prevents
+    /// skipping over them.
+    pub fn next_event_cycle(&self) -> Option<u64> {
+        self.batches
+            .iter()
+            .map(|b| if b.ids.is_none() { b.arrive } else { b.deliver })
+            .min()
+    }
+
+    /// Mix everything an idle ASMC tick could structurally change into a
+    /// state fingerprint (queue lengths, batch lifecycle, table identity).
+    /// Counters are excluded: an ASMC fixed-point tick cannot advance them
+    /// (every counter bump coincides with a queue/batch mutation).
+    pub fn state_signature(&self, h: &mut crate::util::Mix64) {
+        h.mix(self.free_list.len() as u64);
+        h.mix(self.finished_list.len() as u64);
+        h.mix(self.req_queue.len() as u64);
+        h.mix(self.sub_queue.len() as u64);
+        h.mix(self.next_ticket);
+        h.mix(self.generation as u64);
+        h.mix(self.ids_at_alsu as u64);
+        h.mix(self.granularity);
+        h.mix(self.queue_length as u64);
+        h.mix(self.batches.len() as u64);
+        for b in &self.batches {
+            h.mix(b.ticket.0);
+            h.mix(match &b.ids {
+                Some(ids) => ids.len() as u64,
+                None => u64::MAX,
+            });
         }
     }
 
@@ -312,9 +353,12 @@ impl Asmc {
             stats.far_bytes += sub.bytes as u64;
         }
 
-        // 4. Retire completed sub-requests.
-        let completions: Vec<_> = mem_sys.asmc_completions.drain(..).collect();
-        for c in completions {
+        // 4. Retire completed sub-requests (drained in one batch into a
+        // reused buffer — no per-cycle allocation).
+        self.drain_buf.clear();
+        self.drain_buf.append(&mut mem_sys.asmc_completions);
+        for i in 0..self.drain_buf.len() {
+            let c = self.drain_buf[i];
             let id = ((c.token >> 8) & 0xFFFF) as usize;
             // A completion can outlive its AMART entry: `set_queue_length`
             // reinitializes the table (and may shrink it) while

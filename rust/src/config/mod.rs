@@ -465,6 +465,12 @@ pub struct SimConfig {
     pub amu: AmuConfig,
     /// Safety valve: abort runs exceeding this many cycles.
     pub max_cycles: u64,
+    /// Event-driven fast-forward: when the pipeline is provably at a fixed
+    /// point, jump the clock to the next scheduled event and fold the
+    /// skipped cycles into the counters in closed form. Statistics are
+    /// byte-identical either way; turning it off (`--no-fast-forward`)
+    /// only trades host time for a tick-by-tick replay.
+    pub fast_forward: bool,
 }
 
 fn l1d_table2() -> CacheConfig {
@@ -509,6 +515,7 @@ impl SimConfig {
             prefetch: PrefetchConfig::default(),
             amu: AmuConfig::default(),
             max_cycles: 2_000_000_000,
+            fast_forward: true,
         }
     }
 
@@ -630,6 +637,7 @@ impl SimConfig {
         Ok(match key {
             "seed" => set_u!(self.seed),
             "max_cycles" => set_u!(self.max_cycles),
+            "fast_forward" => set_b!(self.fast_forward),
             "name" => {
                 self.name = doc.get_str(key).ok_or("'name' must be a string")?.into();
                 true

@@ -8,7 +8,8 @@
 //!             per-tenant slowdown rows
 //!   report  — regenerate paper figures/tables (fig2..fig11, table4..6,
 //!             sweep, mt, all)
-//!   bench   — quick simulator-throughput benchmark (writes BENCH_PR6.json)
+//!   bench   — simulator-throughput benchmark, fast-forward on vs off
+//!             (writes BENCH_PR9.json)
 //!   check   — static-verify guest programs (isa::verify) without
 //!             simulating; prints the AMIxxx diagnostics table
 //!   list    — enumerate benchmarks, configuration presets, backends,
@@ -26,6 +27,13 @@
 //! congestion crosses `far.pool_adapt_threshold`, then least-loaded). The
 //! hybrid near tier's capacity is `--near-capacity` (64 B lines; 0 keeps
 //! the legacy `near_frac` coin-flip).
+//!
+//! Event-driven fast-forward is ON by default for every simulating
+//! subcommand: when the pipeline is provably at a fixed point the clock
+//! jumps to the next scheduled event and the skipped cycles fold into the
+//! counters in closed form — statistics are byte-identical either way (see
+//! README "Performance"). `--no-fast-forward` (alias `--no-ff`) ticks
+//! every cycle instead; `bench` measures both modes and reports the ratio.
 //!
 //! Metric columns (`--columns`): every CSV is emitted through the metric
 //! schema (`session::metrics`) — `core` (default; the historical row
@@ -66,83 +74,175 @@
 use amu_sim::config::SimConfig;
 use amu_sim::report;
 use amu_sim::session::{metrics, RunRequest, Selection, Session, SweepGrid, VariantSel};
-use amu_sim::util::cli::{self, flag, opt, Spec};
+use amu_sim::util::cli::{self, flag, opt, Spec, Validate};
 use amu_sim::workloads::{self, Scale};
 
+// ---------------------------------------------------------------------------
+// Shared option table: every flag is declared exactly ONCE — canonical name,
+// aliases, value placeholder, syntactic validator, help line — and the
+// subcommand tables below compose from these constants. `--help` output,
+// alias spellings, unknown-option suggestions, and number validation are
+// therefore consistent across run/sweep/mtrun/report/check/bench by
+// construction.
+// ---------------------------------------------------------------------------
+
+const O_BENCH: Spec = opt("bench", "name", "benchmark name (see `list`)");
+const O_BENCHES: Spec =
+    opt("benches", "list", "comma-separated benchmark names (default: all 11)");
+const O_CONFIG: Spec = opt(
+    "config",
+    "preset",
+    "configuration preset: baseline|cxl-ideal|amu|amu-dma|x2|x4 (see `list`)",
+);
+const O_CONFIGS: Spec = opt(
+    "configs",
+    "list",
+    "comma-separated presets (default: baseline,cxl-ideal,amu,amu-dma)",
+);
+const O_LATENCY: Spec = opt("latency-ns", "ns", "far-memory latency in ns (default: 1000)")
+    .aliases(&["latency"])
+    .validate(Validate::F64);
+const O_LATENCIES: Spec = opt(
+    "latencies-ns",
+    "list",
+    "comma-separated latencies in ns (default: paper's 6 points)",
+)
+.aliases(&["latencies"])
+.validate(Validate::F64List);
+const O_BACKEND: Spec = opt(
+    "backend",
+    "tag[,..]",
+    "far-memory backend(s): serial-link|pooled|distribution|hybrid",
+)
+.aliases(&["backends"]);
+const O_POOL_POLICY: Spec = opt(
+    "pool-policy",
+    "tag",
+    "pooled channel selection: hash|least-loaded|round-robin|adaptive (default: hash)",
+);
+const O_NEAR_CAPACITY: Spec = opt(
+    "near-capacity",
+    "lines",
+    "hybrid near-tier capacity in 64B lines (0 = near_frac coin-flip)",
+)
+.validate(Validate::U64);
+const O_QOS_POLICY: Spec = opt(
+    "qos-policy",
+    "list",
+    "comma-separated QoS policies: fair-share|priority|throttle (default: fair-share)",
+);
+const O_TENANTS: Spec = opt(
+    "tenants",
+    "spec",
+    "tenant specs: bench[:count][@weight][/priority],... (e.g. redis:2@3/high,bfs:1)",
+);
+const O_COLUMNS: Spec = opt(
+    "columns",
+    "sel",
+    "emit a column-selected CSV: core|backend|all|<comma-list> (see `list`)",
+)
+.aliases(&["cols"]);
+const O_VARIANT: Spec =
+    opt("variant", "sel", "auto|sync|amu|llvm|gp<N>|pf<N>[-<D>] (default: auto per config)");
+const O_SCALE: Spec = opt("scale", "test|paper", "workload scale (default: test)");
+const O_CONFIG_FILE: Spec =
+    opt("config-file", "path", "TOML-lite overrides applied on top of the preset");
+const O_OUT: Spec =
+    opt("out", "path", "write the output CSV/JSON to this path instead of stdout")
+        .aliases(&["output"]);
+const O_JOBS: Spec =
+    opt("jobs", "n", "worker threads (default: all cores)").validate(Validate::U64);
+const O_CACHE_FILE: Spec = opt("cache-file", "path", "explicit cache CSV path");
+const O_FORMAT: Spec = opt("format", "fmt", "output format: table|json|sarif (default: table)");
+const F_QUIET: Spec = flag("quiet", "suppress progress output").aliases(&["q"]);
+const F_NO_CACHE: Spec = flag("no-cache", "do not read or write the sweep cache");
+const F_NO_FF: Spec = flag(
+    "no-fast-forward",
+    "tick every cycle instead of event-driven fast-forward (identical statistics, slower host)",
+)
+.aliases(&["no-ff"]);
+const F_ALL: Spec = flag("all", "check every registered benchmark");
+const F_DENY_WARNINGS: Spec =
+    flag("deny-warnings", "exit nonzero on warn-level findings too (the CI gate)");
+const F_VERBOSE: Spec = flag("verbose", "also print info-level diagnostics");
+
 const RUN_SPECS: &[Spec] = &[
-    opt("bench", "benchmark name (see `list`)"),
-    opt("config", "configuration preset (baseline|cxl-ideal|amu|amu-dma|x2|x4)"),
-    opt("latency-ns", "additional far-memory latency in ns"),
-    opt("backend", "far-memory backend (serial-link|pooled|distribution|hybrid)"),
-    opt(
-        "pool-policy",
-        "pooled channel selection (hash|least-loaded|round-robin|adaptive)",
-    ),
-    opt("near-capacity", "hybrid near-tier capacity in 64B lines (0 = near_frac coin-flip)"),
-    opt("columns", "emit CSV instead: core|backend|all|<comma-list> (see `list`)"),
-    opt("scale", "test|paper"),
-    opt("variant", "auto|sync|amu|llvm|gp<N>|pf<N>[-<D>]"),
-    opt("config-file", "TOML-lite overrides applied on top of the preset"),
-    flag("quiet", "suppress progress output"),
+    O_BENCH,
+    O_CONFIG,
+    O_LATENCY,
+    O_BACKEND,
+    O_POOL_POLICY,
+    O_NEAR_CAPACITY,
+    O_COLUMNS,
+    O_SCALE,
+    O_VARIANT,
+    O_CONFIG_FILE,
+    F_NO_FF,
+    F_QUIET,
 ];
 
 const SWEEP_SPECS: &[Spec] = &[
-    opt("benches", "comma-separated benchmark names (default: all 11)"),
-    opt("configs", "comma-separated presets (default: baseline,cxl-ideal,amu,amu-dma)"),
-    opt("latencies-ns", "comma-separated latencies in ns (default: paper's 6 points)"),
-    opt("variant", "auto|sync|amu|llvm|gp<N>|pf<N>[-<D>] (default: auto per config)"),
-    opt(
-        "backend",
-        "comma-separated far-memory backends: serial-link|pooled|distribution|hybrid \
-         (default: serial-link)",
-    ),
-    opt(
-        "pool-policy",
-        "pooled channel selection: hash|least-loaded|round-robin|adaptive (default: hash)",
-    ),
-    opt("near-capacity", "hybrid near-tier capacity in 64B lines (default: 0)"),
-    opt("columns", "emit a column-selected CSV: core|backend|all|<comma-list>"),
-    opt("out", "write the --columns CSV to this path instead of stdout"),
-    opt("scale", "test|paper"),
-    opt("jobs", "worker threads (default: all cores)"),
-    opt("cache-file", "explicit cache CSV path"),
-    flag("no-cache", "do not read or write the sweep cache"),
-    flag("quiet", "suppress per-run progress output"),
+    O_BENCHES,
+    O_CONFIGS,
+    O_LATENCIES,
+    O_VARIANT,
+    O_BACKEND,
+    O_POOL_POLICY,
+    O_NEAR_CAPACITY,
+    O_COLUMNS,
+    O_OUT,
+    O_SCALE,
+    O_JOBS,
+    O_CACHE_FILE,
+    F_NO_CACHE,
+    F_NO_FF,
+    F_QUIET,
 ];
 
 const MTRUN_SPECS: &[Spec] = &[
-    opt(
-        "tenants",
-        "tenant specs: bench[:count][@weight][/priority],... (e.g. redis:2@3/high,bfs:1)",
-    ),
-    opt(
-        "qos-policy",
-        "comma-separated QoS policies: fair-share|priority|throttle (default: fair-share)",
-    ),
-    opt("config", "configuration preset applied to every tenant (default: amu)"),
-    opt("backend", "shared far-memory backend (default: pooled)"),
-    opt("latency-ns", "far-memory latency in ns (default: 1000)"),
-    opt("config-file", "TOML-lite overrides applied on top of the preset"),
-    opt("scale", "test|paper"),
-    opt("jobs", "worker threads across QoS cells and solo baselines (default: all cores)"),
-    opt("out", "write the per-tenant CSV to this path instead of stdout"),
-    flag("quiet", "suppress progress output"),
+    O_TENANTS,
+    O_QOS_POLICY,
+    O_CONFIG,
+    O_BACKEND,
+    O_LATENCY,
+    O_CONFIG_FILE,
+    O_SCALE,
+    O_JOBS,
+    O_OUT,
+    F_NO_FF,
+    F_QUIET,
 ];
 
-const BENCH_SPECS: &[Spec] = &[
-    opt("out", "output JSON path (default: <crate root>/BENCH_PR6.json)"),
-    flag("quiet", "suppress progress output"),
+const BENCH_SPECS: &[Spec] = &[O_OUT, F_NO_FF, F_QUIET];
+
+const CHECK_SPECS: &[Spec] =
+    &[O_BENCH, O_VARIANT, O_SCALE, O_FORMAT, F_ALL, F_DENY_WARNINGS, F_VERBOSE];
+
+const REPORT_SPECS: &[Spec] = &[
+    O_SCALE,
+    O_BACKEND,
+    O_POOL_POLICY,
+    O_NEAR_CAPACITY,
+    O_COLUMNS,
+    O_TENANTS,
+    O_QOS_POLICY,
+    O_CONFIG,
+    O_LATENCY,
+    O_CONFIG_FILE,
+    O_JOBS,
+    F_NO_FF,
+    F_QUIET,
 ];
 
-const CHECK_SPECS: &[Spec] = &[
-    opt("bench", "benchmark to check (default with --all: every registered benchmark)"),
-    opt("variant", "restrict to one variant: sync|amu|llvm|gp<N>|pf<N>[-<D>]"),
-    opt("scale", "test|paper (default: test)"),
-    flag("all", "check every registered benchmark"),
-    flag("deny-warnings", "exit nonzero on warn-level findings too (the CI gate)"),
-    flag("verbose", "also print info-level diagnostics"),
-    opt("format", "output format: table|json|sarif (default: table)"),
-];
+/// Parse a subcommand's argv against its spec table, honouring `--help`.
+/// Returns `None` when help was printed (the command should exit cleanly).
+fn parse_cmd(cmd: &str, argv: &[String], specs: &[Spec]) -> Result<Option<cli::Args>, String> {
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        print!("{}", cli::usage(cmd, specs));
+        return Ok(None);
+    }
+    cli::parse(argv, specs).map(Some).map_err(|e| e.to_string())
+}
 
 fn parse_scale(s: &str) -> Result<Scale, String> {
     s.parse()
@@ -156,13 +256,12 @@ fn parse_jobs(args: &cli::Args) -> Result<Option<usize>, String> {
     match args.get("jobs") {
         None => Ok(None),
         Some(s) => {
-            let n: usize = s
-                .parse()
+            let n = cli::parse_u64(s)
                 .map_err(|_| format!("--jobs: bad count '{s}' (expected a positive integer)"))?;
             if n == 0 {
                 return Err("--jobs must be >= 1".into());
             }
-            Ok(Some(n))
+            Ok(Some(n as usize))
         }
     }
 }
@@ -174,9 +273,8 @@ fn split_list(s: &str) -> Vec<String> {
 fn parse_near_capacity(args: &cli::Args) -> Result<Option<usize>, String> {
     match args.get("near-capacity") {
         None => Ok(None),
-        Some(s) => s
-            .parse::<usize>()
-            .map(Some)
+        Some(s) => cli::parse_u64(s)
+            .map(|n| Some(n as usize))
             .map_err(|_| format!("--near-capacity: bad line count '{s}' (expected an integer)")),
     }
 }
@@ -186,7 +284,7 @@ fn parse_columns(args: &cli::Args) -> Result<Option<Selection>, String> {
 }
 
 fn cmd_run(argv: &[String]) -> Result<(), String> {
-    let args = cli::parse(argv, RUN_SPECS).map_err(|e| e.to_string())?;
+    let Some(args) = parse_cmd("amu-sim run", argv, RUN_SPECS)? else { return Ok(()) };
     let bench = args.get_str("bench", "gups");
     let config = args.get_str("config", "baseline");
     let latency = args.get_f64("latency-ns", 1000.0).map_err(|e| e.to_string())?;
@@ -199,6 +297,7 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
         let doc = amu_sim::util::toml_lite::parse(&text).map_err(|e| e.to_string())?;
         cfg.apply_overrides(&doc)?;
     }
+    cfg.fast_forward = !args.has_flag("no-fast-forward");
     let mut builder = RunRequest::bench(bench).config(cfg).scale(scale);
     if let Some(b) = args.get("backend") {
         builder = builder.backend(b);
@@ -247,7 +346,7 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
 }
 
 fn cmd_sweep(argv: &[String]) -> Result<(), String> {
-    let args = cli::parse(argv, SWEEP_SPECS).map_err(|e| e.to_string())?;
+    let Some(args) = parse_cmd("amu-sim sweep", argv, SWEEP_SPECS)? else { return Ok(()) };
     let scale = parse_scale(&args.get_str("scale", "test"))?;
     let mut grid = SweepGrid::paper(scale);
     if let Some(s) = args.get("benches") {
@@ -282,6 +381,9 @@ fn cmd_sweep(argv: &[String]) -> Result<(), String> {
         // hybrid-sweeping grids get their own fingerprint and cache file.
         grid = grid.near_capacity(n);
     }
+    // Host-speed only: folded statistics are byte-identical, so this never
+    // enters the fingerprint and ff/non-ff runs share one cache entry.
+    grid = grid.fast_forward(!args.has_flag("no-fast-forward"));
     // Validate the emission flags up front: a typo'd column name or a
     // stray --out must fail in milliseconds, not after a paper-scale sweep.
     let columns = parse_columns(&args)?;
@@ -372,6 +474,7 @@ fn build_mt_request(args: &cli::Args) -> Result<amu_sim::session::MtRequest, Str
         let doc = amu_sim::util::toml_lite::parse(&text).map_err(|e| e.to_string())?;
         cfg.apply_overrides(&doc)?;
     }
+    cfg.fast_forward = !args.has_flag("no-fast-forward");
     let mut req = amu_sim::session::MtRequest::new(tenants, cfg);
     if let Some(s) = args.get("qos-policy") {
         req.policies = tenancy::parse_policies(s).map_err(|e| e.to_string())?;
@@ -386,7 +489,7 @@ fn build_mt_request(args: &cli::Args) -> Result<amu_sim::session::MtRequest, Str
 }
 
 fn cmd_mtrun(argv: &[String]) -> Result<(), String> {
-    let args = cli::parse(argv, MTRUN_SPECS).map_err(|e| e.to_string())?;
+    let Some(args) = parse_cmd("amu-sim mtrun", argv, MTRUN_SPECS)? else { return Ok(()) };
     let req = build_mt_request(&args)?;
     let t0 = std::time::Instant::now();
     let outcomes = req.run().map_err(|e| e.to_string())?;
@@ -407,41 +510,55 @@ fn cmd_mtrun(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-/// Simulator-throughput smoke benchmark: GUPS + BFS at the small test
-/// scale, reporting simulated cycles per host-second and wall time.
+/// Simulator-throughput smoke benchmark: GUPS (at 1 µs and the paper's
+/// 5 µs far latency) + BFS at the small test scale, each measured with
+/// event-driven fast-forward on and off, reporting simulated cycles per
+/// host-second and wall time. The two modes must produce identical
+/// `total_cycles`/`insts` (the determinism contract); the ratio of their
+/// `sim_cycles_per_host_s` is the fast-forward speedup.
 fn cmd_bench(argv: &[String]) -> Result<(), String> {
-    let args = cli::parse(argv, BENCH_SPECS).map_err(|e| e.to_string())?;
+    let Some(args) = parse_cmd("amu-sim bench", argv, BENCH_SPECS)? else { return Ok(()) };
     let quiet = args.has_flag("quiet");
+    // `--no-fast-forward` restricts to the tick-by-tick entries (useful to
+    // time the pure interpreter); by default both modes are measured.
+    let modes: &[bool] = if args.has_flag("no-fast-forward") { &[false] } else { &[true, false] };
     let mut entries = Vec::new();
-    for b in ["gups", "bfs"] {
-        if !quiet {
-            eprintln!("[bench] {b} (amu, test scale, 1000ns) ...");
+    for (b, latency_ns) in [("gups", 1000.0), ("gups", 5000.0), ("bfs", 1000.0)] {
+        for &ff in modes {
+            if !quiet {
+                eprintln!(
+                    "[bench] {b} (amu, test scale, {latency_ns}ns, fast_forward={ff}) ..."
+                );
+            }
+            let mut cfg = SimConfig::amu();
+            cfg.fast_forward = ff;
+            let t0 = std::time::Instant::now();
+            let r = RunRequest::bench(b)
+                .config(cfg)
+                .latency_ns(latency_ns)
+                .scale(Scale::Test)
+                .run()
+                .map_err(|e| e.to_string())?;
+            let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+            entries.push(format!(
+                "    {{\"bench\": \"{b}\", \"latency_ns\": {latency_ns:.1}, \
+                 \"fast_forward\": {ff}, \"total_cycles\": {}, \"insts\": {}, \
+                 \"wall_ms\": {:.3}, \"sim_cycles_per_host_s\": {:.0}}}",
+                r.total_cycles,
+                r.insts,
+                wall_s * 1e3,
+                r.total_cycles as f64 / wall_s
+            ));
         }
-        let t0 = std::time::Instant::now();
-        let r = RunRequest::bench(b)
-            .config(SimConfig::amu())
-            .latency_ns(1000.0)
-            .scale(Scale::Test)
-            .run()
-            .map_err(|e| e.to_string())?;
-        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
-        entries.push(format!(
-            "    {{\"bench\": \"{b}\", \"total_cycles\": {}, \"insts\": {}, \
-             \"wall_ms\": {:.3}, \"sim_cycles_per_host_s\": {:.0}}}",
-            r.total_cycles,
-            r.insts,
-            wall_s * 1e3,
-            r.total_cycles as f64 / wall_s
-        ));
     }
     let json = format!(
-        "{{\n  \"config\": \"amu\",\n  \"scale\": \"test\",\n  \"latency_ns\": 1000.0,\n  \
+        "{{\n  \"config\": \"amu\",\n  \"scale\": \"test\",\n  \
          \"workloads\": [\n{}\n  ]\n}}\n",
         entries.join(",\n")
     );
     let out = match args.get("out") {
         Some(p) => std::path::PathBuf::from(p),
-        None => std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_PR6.json"),
+        None => std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("BENCH_PR9.json"),
     };
     std::fs::write(&out, &json).map_err(|e| format!("{}: {e}", out.display()))?;
     print!("{json}");
@@ -457,7 +574,7 @@ fn cmd_check(argv: &[String]) -> Result<(), String> {
     use amu_sim::isa::Severity;
     use amu_sim::session::registry::{self, Workload};
     use amu_sim::workloads::{Variant, VariantKind};
-    let args = cli::parse(argv, CHECK_SPECS).map_err(|e| e.to_string())?;
+    let Some(args) = parse_cmd("amu-sim check", argv, CHECK_SPECS)? else { return Ok(()) };
     let scale = parse_scale(&args.get_str("scale", "test"))?;
     let deny_warnings = args.has_flag("deny-warnings");
     let min = if args.has_flag("verbose") { Severity::Info } else { Severity::Warn };
@@ -529,21 +646,14 @@ fn cmd_check(argv: &[String]) -> Result<(), String> {
 }
 
 fn cmd_report(argv: &[String]) -> Result<(), String> {
-    let specs: &[Spec] = &[
-        opt("scale", "test|paper"),
-        opt("backend", "far-memory backend for the sweep (default: serial-link)"),
-        opt("pool-policy", "pooled channel selection (default: hash)"),
-        opt("near-capacity", "hybrid near-tier capacity in 64B lines (default: 0)"),
-        opt("columns", "column selection for `report sweep`: core|backend|all|<comma-list>"),
-        opt("tenants", "`report mt` tenant specs: bench[:count][@weight][/priority],..."),
-        opt("qos-policy", "`report mt` QoS policies (default: fair-share)"),
-        opt("config", "`report mt` configuration preset (default: amu)"),
-        opt("latency-ns", "`report mt` far-memory latency in ns (default: 1000)"),
-        opt("config-file", "`report mt` TOML-lite overrides"),
-        opt("jobs", "worker threads for sweeps (default: all cores)"),
-        flag("quiet", "less progress"),
-    ];
-    let args = cli::parse(argv.get(1..).unwrap_or(&[]), specs).map_err(|e| e.to_string())?;
+    // `--help` may come before the report kind, so scan the full argv here
+    // (parse_cmd would only see the tail after the positional).
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        print!("{}", cli::usage("amu-sim report <kind>", REPORT_SPECS));
+        return Ok(());
+    }
+    let args =
+        cli::parse(argv.get(1..).unwrap_or(&[]), REPORT_SPECS).map_err(|e| e.to_string())?;
     let what = argv.first().map(|s| s.as_str()).unwrap_or("all");
     let scale = parse_scale(&args.get_str("scale", "paper"))?;
     let quiet = args.has_flag("quiet");
@@ -588,6 +698,7 @@ fn cmd_report(argv: &[String]) -> Result<(), String> {
         if let Some(n) = parse_near_capacity(&args)? {
             grid = grid.near_capacity(n);
         }
+        grid = grid.fast_forward(!args.has_flag("no-fast-forward"));
         session.sweep_default_cached(&grid).map_err(|e| e.to_string())?
     } else {
         Vec::new()
@@ -683,10 +794,13 @@ fn main() {
         _ => {
             eprintln!("amu-sim {} — AMU paper reproduction", amu_sim::version());
             eprintln!("usage: amu-sim <run|sweep|mtrun|bench|check|report|payload|list> [options]");
+            eprintln!("(every subcommand also accepts --help)");
             eprintln!("{}", cli::usage("amu-sim run", RUN_SPECS));
             eprintln!("{}", cli::usage("amu-sim sweep", SWEEP_SPECS));
             eprintln!("{}", cli::usage("amu-sim mtrun", MTRUN_SPECS));
+            eprintln!("{}", cli::usage("amu-sim bench", BENCH_SPECS));
             eprintln!("{}", cli::usage("amu-sim check", CHECK_SPECS));
+            eprintln!("{}", cli::usage("amu-sim report <kind>", REPORT_SPECS));
             eprintln!(
                 "reports: fig2 fig3 fig8 fig9 fig10 fig11 table4 table5 table6 headline sweep \
                  mt all"

@@ -86,6 +86,18 @@ pub trait FarBackend: Send {
     fn scenario_stats(&self) -> ScenarioStats {
         ScenarioStats::default()
     }
+
+    /// Earliest future cycle (strictly after `now`) at which this backend
+    /// will change state *on its own* — e.g. a link/channel becoming free
+    /// or an internally queued completion firing. The simulator's
+    /// fast-forward takes the min of this across the memory stack before
+    /// jumping the clock. Every data plane in this crate computes
+    /// completion times eagerly at submit and schedules them on the
+    /// [`super::MemSys`] event queue, so the default is "no self-driven
+    /// events"; a backend with internal timers must override this.
+    fn next_event_cycle(&self, _now: u64) -> Option<u64> {
+        None
+    }
 }
 
 /// Construct the backend selected by `cfg.backend`. When `cfg.qos_policy`

@@ -267,6 +267,42 @@ impl Cache {
             .filter(|m| m.targets.iter().all(|t| *t == Target::Prefetch))
             .count()
     }
+
+    // ---- fast-forward support ----
+
+    /// Counters advanced by rejected (retrying) accesses: the LRU clock and
+    /// the access/miss tallies. A rejected access never touches line state,
+    /// so these are the only fields an idle pipeline tick can move — the
+    /// simulator's fast-forward snapshots them, proves one tick is a fixed
+    /// point, and replays the deltas in closed form via [`Cache::fold_counters`].
+    pub fn counter_snapshot(&self) -> [u64; 5] {
+        [self.clock, self.accesses, self.misses, self.prefetch_hits, self.writebacks]
+    }
+
+    /// Replicate one idle tick's counter deltas across `k` skipped ticks.
+    /// Folding `clock` keeps future `last_use` stamps — and therefore LRU
+    /// victim choice — identical to a tick-by-tick run.
+    pub fn fold_counters(&mut self, k: u64, before: &[u64; 5]) {
+        self.clock += k * (self.clock - before[0]);
+        self.accesses += k * (self.accesses - before[1]);
+        self.misses += k * (self.misses - before[2]);
+        self.prefetch_hits += k * (self.prefetch_hits - before[3]);
+        self.writebacks += k * (self.writebacks - before[4]);
+    }
+
+    /// Mix the MSHR file's occupancy identity into a state fingerprint.
+    pub fn mshr_signature(&self, h: &mut crate::util::Mix64) {
+        for slot in &self.mshrs {
+            match slot {
+                Some(m) => {
+                    h.mix(m.line | 1);
+                    h.mix(m.allocated_at);
+                    h.mix((m.targets.len() as u64) << 1 | m.is_far as u64);
+                }
+                None => h.mix(0),
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -348,10 +348,63 @@ impl MemSys {
         self.events.len()
     }
 
-    /// Earliest pending event cycle (for idle fast-forwarding).
-    pub fn next_event_cycle(&self) -> Option<u64> {
-        self.events.peek().map(|Reverse((at, _, _))| *at)
+    /// Earliest future cycle at which the memory system can change state on
+    /// its own: the head of the event queue, or any backend-internal timer
+    /// (see [`FarBackend::next_event_cycle`]). `None` means fully idle —
+    /// nothing will happen until the core submits new work.
+    pub fn next_event_cycle(&self, now: u64) -> Option<u64> {
+        let ev = self.events.peek().map(|Reverse((at, _, _))| *at);
+        match (ev, self.link.next_event_cycle(now)) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
     }
+
+    // ---- fast-forward support ----
+
+    /// Mix everything an idle-retry tick could *structurally* change into a
+    /// state fingerprint. `(events.len, seq)` captures any schedule or pop
+    /// (`seq` is monotone), completion queue lengths capture undrained
+    /// deliveries, and the MSHR files capture miss-tracking state. Counters
+    /// (`mshr_rejects`, cache access tallies) are deliberately excluded —
+    /// they may advance every retry tick and are folded in closed form via
+    /// [`MemSys::counter_snapshot`] / [`MemSys::fold_idle_counters`].
+    pub fn state_signature(&self, h: &mut crate::util::Mix64) {
+        h.mix(self.events.len() as u64);
+        h.mix(self.seq);
+        h.mix(self.completions.len() as u64);
+        h.mix(self.asmc_completions.len() as u64);
+        h.mix(self.link.inflight());
+        self.l1d.mshr_signature(h);
+        self.l2.mshr_signature(h);
+    }
+
+    /// Snapshot the counters a rejected-access retry tick can advance.
+    pub fn counter_snapshot(&self) -> MemCounterSnap {
+        MemCounterSnap {
+            mshr_rejects: self.mshr_rejects,
+            pf_issued: self.pf_issued,
+            l1d: self.l1d.counter_snapshot(),
+            l2: self.l2.counter_snapshot(),
+        }
+    }
+
+    /// Replicate one idle tick's counter deltas across `k` skipped ticks.
+    pub fn fold_idle_counters(&mut self, k: u64, before: &MemCounterSnap) {
+        self.mshr_rejects += k * (self.mshr_rejects - before.mshr_rejects);
+        self.pf_issued += k * (self.pf_issued - before.pf_issued);
+        self.l1d.fold_counters(k, &before.l1d);
+        self.l2.fold_counters(k, &before.l2);
+    }
+}
+
+/// Snapshot of the memory-system counters an idle pipeline tick can move
+/// (see [`MemSys::counter_snapshot`]).
+pub struct MemCounterSnap {
+    mshr_rejects: u64,
+    pf_issued: u64,
+    l1d: [u64; 5],
+    l2: [u64; 5],
 }
 
 #[cfg(test)]

@@ -81,6 +81,12 @@ pub struct SweepGrid {
     ///
     /// [`SharedFar`]: crate::mem::backend::SharedFar
     pub qos_policy: String,
+    /// Event-driven fast-forward for every cell (default on). A pure
+    /// host-speed knob: folded statistics are byte-identical to ticked
+    /// ones, so this NEVER enters the fingerprint — rows computed either
+    /// way share one cache entry, and the determinism suite holds the
+    /// CSVs byte-identical across the toggle.
+    pub fast_forward: bool,
     pub scale: Scale,
 }
 
@@ -96,6 +102,7 @@ impl SweepGrid {
             pool_policy: PoolPolicy::default().tag().to_string(),
             near_capacity_lines: 0,
             qos_policy: QosPolicyKind::default().tag().to_string(),
+            fast_forward: true,
             scale,
         }
     }
@@ -202,6 +209,13 @@ impl SweepGrid {
         self
     }
 
+    /// Toggle event-driven fast-forward for every cell (host-speed only;
+    /// never part of the grid fingerprint — see the field docs).
+    pub fn fast_forward(mut self, on: bool) -> Self {
+        self.fast_forward = on;
+        self
+    }
+
     pub fn len(&self) -> usize {
         self.benches.len()
             * self.configs.len()
@@ -251,6 +265,7 @@ impl SweepGrid {
                 cfg.far.pool_policy = pool_policy;
                 cfg.far.near_capacity_lines = self.near_capacity_lines;
                 cfg.far.qos_policy = qos_policy;
+                cfg.fast_forward = self.fast_forward;
                 for &lat in &self.latencies_ns {
                     for sel in &self.variants {
                         for backend in &self.backends {

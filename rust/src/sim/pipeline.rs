@@ -13,9 +13,20 @@ use crate::isa::Program;
 use crate::mem::{AccessKind, MemSys, SubmitResult};
 use crate::sim::bpred::{BranchPredictor, Prediction};
 use crate::stats::{Region, Stats};
+use crate::util::Mix64;
 use std::collections::VecDeque;
 
 const NO_REG: u32 = u32::MAX;
+
+/// Fast-forward engages only when the jump would skip more than this many
+/// cycles: below it, the fixed-point proof (two fingerprints + a stats
+/// snapshot) costs more than the ticks it saves.
+const FF_MIN_SKIP: u64 = 4;
+
+/// After a failed fixed-point attempt (the machine is actively computing),
+/// wait this many cycles before trying again, so busy phases don't pay the
+/// fingerprint cost every tick.
+const FF_RETRY_BACKOFF: u64 = 6;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum UopKind {
@@ -181,6 +192,26 @@ pub struct Simulator {
     last_far_inflight: u64,
     /// Set when the architectural state diverges in an unrecoverable way.
     pub error: Option<String>,
+
+    // Event-driven fast-forward (see `tick_fast`).
+    fast_forward: bool,
+    /// Earliest cycle at which to attempt the next fixed-point proof
+    /// (backoff after a failed attempt).
+    ff_next_try: u64,
+    /// Host-side observability: cycles skipped by fast-forward jumps.
+    /// Deliberately NOT part of `Stats` — simulated statistics must be
+    /// identical with fast-forward on or off.
+    pub ff_jumped_cycles: u64,
+    /// `AMU_SIM_TRACE` presence, read once at construction instead of per
+    /// 10k-cycle window in the hot loop.
+    trace: bool,
+
+    // Reused tick-path scratch buffers (no per-cycle allocations).
+    scratch_iq: Vec<u64>,
+    scratch_wb: Vec<u64>,
+    scratch_std: Vec<u64>,
+    scratch_alsu: Vec<u64>,
+    scratch_comp: Vec<crate::mem::Completion>,
 }
 
 impl Simulator {
@@ -228,6 +259,15 @@ impl Simulator {
             in_roi: false,
             last_far_inflight: 0,
             error: None,
+            fast_forward: cfg.fast_forward,
+            ff_next_try: 0,
+            ff_jumped_cycles: 0,
+            trace: std::env::var("AMU_SIM_TRACE").is_ok(),
+            scratch_iq: Vec::new(),
+            scratch_wb: Vec::new(),
+            scratch_std: Vec::new(),
+            scratch_alsu: Vec::new(),
+            scratch_comp: Vec::new(),
             cfg,
         }
     }
@@ -544,8 +584,10 @@ impl Simulator {
         let mut issued = 0usize;
         let width = self.cfg.core.issue_width;
 
-        let iq_snapshot: Vec<u64> = self.iq.clone();
-        for seq in iq_snapshot {
+        let mut iq_snapshot = std::mem::take(&mut self.scratch_iq);
+        iq_snapshot.clear();
+        iq_snapshot.extend_from_slice(&self.iq);
+        for &seq in iq_snapshot.iter() {
             if issued >= width {
                 break;
             }
@@ -736,6 +778,7 @@ impl Simulator {
             self.writeback.push((complete_at, seq));
             self.stats.iq_wakeups += 1;
         }
+        self.scratch_iq = iq_snapshot;
     }
 
     fn alu_result(inst: &Inst, v1: u64, v2: u64, pc: usize) -> u64 {
@@ -791,13 +834,10 @@ impl Simulator {
     fn alsu_poll(&mut self) {
         let now = self.cycle;
         // At most one batch outstanding (batch_busy contract).
-        let waiting: Vec<u64> = self
-            .rob
-            .iter()
-            .filter(|e| e.batch_wait.is_some())
-            .map(|e| e.seq)
-            .collect();
-        for seq in waiting {
+        let mut waiting = std::mem::take(&mut self.scratch_alsu);
+        waiting.clear();
+        waiting.extend(self.rob.iter().filter(|e| e.batch_wait.is_some()).map(|e| e.seq));
+        for &seq in waiting.iter() {
             let Some(idx) = self.rob_idx(seq) else { continue };
             let ticket = self.rob[idx].batch_wait.unwrap();
             if let Some(ids) = self.asmc.poll_batch(ticket, now) {
@@ -826,6 +866,7 @@ impl Simulator {
                 self.writeback.push((now + 1, seq));
             }
         }
+        self.scratch_alsu = waiting;
         // If the batch initiator was squashed, the delivery still clears the
         // busy flag (uncommitted-ID-register recovery): handled in squash by
         // keeping a phantom entry? Simpler: orphaned tickets are drained
@@ -859,7 +900,8 @@ impl Simulator {
     /// operand as soon as it is produced, then complete.
     fn std_pump(&mut self) {
         let now = self.cycle;
-        let mut done = Vec::new();
+        let mut done = std::mem::take(&mut self.scratch_std);
+        done.clear();
         let mut i = 0;
         while i < self.std_wait.len() {
             let seq = self.std_wait[i];
@@ -880,9 +922,10 @@ impl Simulator {
                 i += 1;
             }
         }
-        for seq in done {
+        for &seq in done.iter() {
             self.writeback.push((now + 1, seq));
         }
+        self.scratch_std = done;
     }
 
     fn lq_pump(&mut self) {
@@ -1012,7 +1055,8 @@ impl Simulator {
 
     fn writeback_stage(&mut self) {
         let now = self.cycle;
-        let mut due: Vec<u64> = Vec::new();
+        let mut due = std::mem::take(&mut self.scratch_wb);
+        due.clear();
         self.writeback.retain(|&(when, seq)| {
             if when <= now {
                 due.push(seq);
@@ -1021,7 +1065,7 @@ impl Simulator {
                 true
             }
         });
-        for seq in due {
+        for &seq in due.iter() {
             let Some(idx) = self.rob_idx(seq) else { continue };
             // A load completing from memory/SPM reads its value now (the
             // architectural state reflects exactly the stores that committed
@@ -1085,6 +1129,7 @@ impl Simulator {
                 _ => {}
             }
         }
+        self.scratch_wb = due;
     }
 
     fn branch_taken(inst: &Inst, v1: u64, v2: u64) -> bool {
@@ -1256,8 +1301,10 @@ impl Simulator {
     // ---------------- memory completion handling ----------------
 
     fn drain_mem_completions(&mut self) {
-        let completions: Vec<_> = self.memsys.completions.drain(..).collect();
-        for c in completions {
+        let mut completions = std::mem::take(&mut self.scratch_comp);
+        completions.clear();
+        completions.append(&mut self.memsys.completions);
+        for &c in completions.iter() {
             match self.token_take(c.token) {
                 Some(TokenTarget::Load(seq)) => {
                     if seq == u64::MAX {
@@ -1285,6 +1332,7 @@ impl Simulator {
                 None => {} // squashed load or dropped prefetch
             }
         }
+        self.scratch_comp = completions;
     }
 
     // ---------------- per-cycle stats ----------------
@@ -1356,10 +1404,184 @@ impl Simulator {
         !self.cfg.amu.enabled || self.asmc.id_conservation_holds()
     }
 
-    /// Run to completion (Halt) or `max_cycles`.
-    pub fn run(&mut self) -> Result<SimResult, String> {
+    // ---------------- event-driven fast-forward ----------------
+
+    /// Earliest future cycle at which anything inside the machine can change
+    /// *on its own*: pending memory-system events (which subsume backend
+    /// link/channel timers via [`MemSys::next_event_cycle`]), ASMC ID-batch
+    /// arrivals/deliveries, scheduled writebacks, and frontend µops still
+    /// traversing the fetch pipeline. Everything else (issue, commit, LSQ
+    /// pumps, dispatch) only acts when state changes — which the fixed-point
+    /// fingerprint check rules out before a jump.
+    fn next_wake_cycle(&self) -> u64 {
+        let mut wake = u64::MAX;
+        if let Some(t) = self.memsys.next_event_cycle(self.cycle) {
+            wake = wake.min(t);
+        }
+        if self.cfg.amu.enabled {
+            if let Some(t) = self.asmc.next_event_cycle() {
+                wake = wake.min(t);
+            }
+        }
+        for &(when, _) in &self.writeback {
+            wake = wake.min(when);
+        }
+        if let Some(f) = self.fetch_q.front() {
+            if f.ready_at > self.cycle {
+                wake = wake.min(f.ready_at);
+            }
+        }
+        wake
+    }
+
+    /// Mix all the pipeline state a tick could structurally change — queues,
+    /// tables, flags, timers — into one word. Two consecutive ticks with
+    /// equal fingerprints prove the machine is at a fixed point. Monotone
+    /// counters are deliberately excluded (retry loops bump them every idle
+    /// cycle; they are folded in closed form instead), as are value arrays
+    /// (PRF contents, cache lines, guest memory, predictor tables): those
+    /// are only written on paths that also change fingerprinted state (ROB
+    /// flags, queue occupancy, MSHR slots, event-queue sequence numbers).
+    fn state_fingerprint(&self) -> u64 {
+        let mut h = Mix64::new();
+        h.mix(self.pc as u64);
+        h.mix(self.next_seq);
+        h.mix(self.done as u64
+            | (self.fetch_halted as u64) << 1
+            | (self.in_roi as u64) << 2
+            | (self.alsu.batch_busy as u64) << 3);
+        h.mix(self.fetch_blocked_on.unwrap_or(u64::MAX));
+        h.mix(self.fetch_q.len() as u64);
+        for f in &self.fetch_q {
+            h.mix(f.seq);
+            h.mix(f.ready_at);
+        }
+        h.mix(self.prf_free.len() as u64);
+        h.mix(self.rob.len() as u64);
+        for e in &self.rob {
+            h.mix(e.seq);
+            h.mix(e.in_iq as u64
+                | (e.executing as u64) << 1
+                | (e.completed as u64) << 2
+                | (e.issued_batch as u64) << 3
+                | e.batch_wait.map_or(0, |t| t.0 + 1) << 8);
+            h.mix(e.result);
+        }
+        h.mix(self.iq.len() as u64);
+        for &s in &self.iq {
+            h.mix(s);
+        }
+        h.mix(self.lq.len() as u64);
+        for l in &self.lq {
+            h.mix(l.seq);
+            h.mix(l.addr);
+            h.mix((l.state as u64) << 1 | l.has_addr as u64);
+            h.mix(l.issue_cycle);
+        }
+        h.mix(self.sq.len() as u64);
+        for s in &self.sq {
+            h.mix(s.seq);
+            h.mix(s.addr);
+            h.mix(s.value);
+            h.mix((s.has_addr as u64) << 1 | s.has_value as u64);
+        }
+        h.mix(self.sb.len() as u64);
+        for (id, e) in &self.sb {
+            h.mix(*id);
+            h.mix(e.addr);
+            h.mix((e.issued as u64) << 1 | e.done as u64);
+        }
+        h.mix(self.next_sb_id);
+        h.mix(self.writeback.len() as u64);
+        for &(when, seq) in &self.writeback {
+            h.mix(when);
+            h.mix(seq);
+        }
+        h.mix(self.std_wait.len() as u64);
+        for &s in &self.std_wait {
+            h.mix(s);
+        }
+        h.mix(self.tokens.len() as u64);
+        for t in &self.tokens {
+            h.mix(match t {
+                None => 0,
+                Some(TokenTarget::Load(s)) => 1 | s << 2,
+                Some(TokenTarget::StoreBuf(i)) => 2 | i << 2,
+            });
+        }
+        h.mix(self.token_free.len() as u64);
+        for &t in &self.token_free {
+            h.mix(t as u64);
+        }
+        h.mix(self.alsu.free_lvr.len() as u64);
+        for &id in &self.alsu.free_lvr {
+            h.mix(id as u64);
+        }
+        h.mix(self.alsu.fin_lvr.len() as u64);
+        for &id in &self.alsu.fin_lvr {
+            h.mix(id as u64);
+        }
+        self.asmc.state_signature(&mut h);
+        self.memsys.state_signature(&mut h);
+        h.finish()
+    }
+
+    /// One stepping quantum with fast-forward: run a single *trial* tick
+    /// (always kept), and if it proves to be a fixed point — identical
+    /// fingerprint, no histogram/level movement — replicate its counter
+    /// deltas across every cycle up to `bound` or the next wake event,
+    /// whichever is earlier, and jump the clock there. The skipped ticks are
+    /// identical by induction: the machine state they would act on is
+    /// byte-for-byte the state the trial tick acted on, and no timer fires
+    /// before the target.
+    fn tick_fast(&mut self, bound: u64) {
+        let now = self.cycle;
+        if now < self.ff_next_try {
+            self.tick();
+            return;
+        }
+        let target = self.next_wake_cycle().min(bound);
+        if target <= now.saturating_add(FF_MIN_SKIP) {
+            self.tick();
+            return;
+        }
+        let before_fp = self.state_fingerprint();
+        let before_stats = self.stats.clone();
+        let before_mem = self.memsys.counter_snapshot();
+        self.tick();
+        if self.done
+            || self.state_fingerprint() != before_fp
+            || !self.stats.hists_and_levels_unchanged(&before_stats)
+        {
+            // Actively computing: don't re-pay the proof cost every tick.
+            self.ff_next_try = self.cycle + FF_RETRY_BACKOFF;
+            return;
+        }
+        // Fixed point: ticks at now+1 .. target-1 are identical to the trial
+        // tick. Fold their counter deltas in closed form and jump.
+        let k = target - (now + 1);
+        if k == 0 {
+            return;
+        }
+        self.stats.fold_idle(k, &before_stats);
+        self.memsys.fold_idle_counters(k, &before_mem);
+        self.ff_jumped_cycles += k;
+        self.cycle = target;
+        self.stats.cycles = target;
+    }
+
+    // ---------------- top-level stepping ----------------
+
+    /// Shared stepping core behind [`Simulator::run`] and
+    /// [`Simulator::run_for`]: ticks (fast-forwarding across provably idle
+    /// spans unless `cfg.fast_forward` is off) until the program halts,
+    /// `stop_at` is reached, the `max_cycles` ceiling trips, or the drained-
+    /// pipeline deadlock detector fires. Both error paths live only here, so
+    /// the solo and multi-tenant drivers report identical diagnostics.
+    fn step_until(&mut self, stop_at: u64) -> Result<(), String> {
         let max = self.cfg.max_cycles;
-        while !self.done {
+        let bound = stop_at.min(max);
+        while !self.done && self.cycle < stop_at {
             if self.cycle >= max {
                 return Err(format!(
                     "simulation exceeded {max} cycles at pc={} (rob={}, iq={}, fetch_q={})",
@@ -1369,8 +1591,12 @@ impl Simulator {
                     self.fetch_q.len()
                 ));
             }
-            self.tick();
-            if self.cycle % 10_000 == 0 && std::env::var("AMU_SIM_TRACE").is_ok() {
+            if self.fast_forward {
+                self.tick_fast(bound);
+            } else {
+                self.tick();
+            }
+            if self.trace && self.cycle % 10_000 == 0 {
                 eprintln!(
                     "[trace] cyc={} pc={} rob={} iq={} lq={} sq={} wb={} tokens={} fetchq={} committed={} inflight={} batches={} memev={} stdw={}",
                     self.cycle,
@@ -1400,11 +1626,19 @@ impl Simulator {
                 return Err("pipeline drained without Halt (fell off program end)".into());
             }
         }
-        // Harvest backend scenario counters (near-tier hits/evictions,
-        // pool congestion, policy switches) now that the far data plane is
-        // quiescent. One assignment regardless of how many columns the
-        // scenario schema grows.
-        self.stats.scenario = self.memsys.scenario_stats();
+        if self.done {
+            // Harvest backend scenario counters (near-tier hits/evictions,
+            // pool congestion, policy switches) now that the far data plane
+            // is quiescent. One assignment regardless of how many columns
+            // the scenario schema grows.
+            self.stats.scenario = self.memsys.scenario_stats();
+        }
+        Ok(())
+    }
+
+    /// Run to completion (Halt) or `max_cycles`.
+    pub fn run(&mut self) -> Result<SimResult, String> {
+        self.step_until(u64::MAX)?;
         Ok(SimResult {
             cycles: self.cycle,
             committed_insts: self.stats.insts_committed,
@@ -1418,34 +1652,11 @@ impl Simulator {
     /// through this, so tenants sharing one far-memory pool perceive each
     /// other's congestion while each pipeline stays single-threaded. The
     /// same `max_cycles` ceiling and drained-pipeline deadlock detector as
-    /// `run` apply across calls.
+    /// `run` apply across calls; fast-forward jumps clamp to the budget
+    /// boundary so round-based interleaving sees identical timing.
     pub fn run_for(&mut self, budget: u64) -> Result<bool, String> {
-        let max = self.cfg.max_cycles;
         let stop_at = self.cycle.saturating_add(budget);
-        while !self.done && self.cycle < stop_at {
-            if self.cycle >= max {
-                return Err(format!(
-                    "simulation exceeded {max} cycles at pc={} (rob={}, iq={}, fetch_q={})",
-                    self.rob.front().map(|e| e.pc).unwrap_or(self.pc),
-                    self.rob.len(),
-                    self.iq.len(),
-                    self.fetch_q.len()
-                ));
-            }
-            self.tick();
-            if self.rob.is_empty()
-                && self.fetch_q.is_empty()
-                && self.fetch_halted
-                && self.fetch_blocked_on.is_none()
-                && !self.done
-                && self.sb.is_empty()
-            {
-                return Err("pipeline drained without Halt (fell off program end)".into());
-            }
-        }
-        if self.done {
-            self.stats.scenario = self.memsys.scenario_stats();
-        }
+        self.step_until(stop_at)?;
         Ok(self.done)
     }
 }
@@ -1531,6 +1742,121 @@ mod tests {
         // Once done, further budget is a no-op.
         assert!(chunked.run_for(64).expect("idempotent"));
         assert_eq!(chunked.cycle, res.cycles);
+    }
+
+    #[test]
+    fn run_and_run_for_report_identical_max_cycles_error() {
+        // Both entry points delegate to one stepping core; the ceiling
+        // diagnostic must be byte-identical whichever path trips it.
+        let mk = || {
+            let mut a = Asm::new("spin");
+            a.li(1, 0).li(2, 1);
+            a.label("loop");
+            a.blt(1, 2, "loop"); // 0 < 1 forever
+            a.halt();
+            let mut cfg = SimConfig::baseline();
+            cfg.max_cycles = 2_000;
+            Simulator::new(cfg, a.finish())
+        };
+        let e_run = mk().run().expect_err("must exceed max_cycles");
+        let mut sim = mk();
+        let e_run_for = loop {
+            match sim.run_for(128) {
+                Ok(done) => assert!(!done, "spin loop must not complete"),
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(e_run, e_run_for, "both stepping paths share one error site");
+        assert!(e_run.contains("simulation exceeded 2000 cycles"), "{e_run}");
+    }
+
+    #[test]
+    fn run_and_run_for_report_identical_drained_pipeline_error() {
+        // A program with no Halt falls off the end: same deadlock text from
+        // the shared stepping core on both paths.
+        let mk = || {
+            let mut a = Asm::new("noend");
+            a.li(1, 7);
+            a.add(2, 1, 1);
+            Simulator::new(SimConfig::baseline(), a.finish())
+        };
+        let e_run = mk().run().expect_err("must detect drained pipeline");
+        let mut sim = mk();
+        let e_run_for = loop {
+            match sim.run_for(16) {
+                Ok(done) => assert!(!done, "drained pipeline must not report done"),
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(e_run, e_run_for, "both stepping paths share one error site");
+        assert_eq!(e_run, "pipeline drained without Halt (fell off program end)");
+    }
+
+    #[test]
+    fn fast_forward_folds_idle_spans_and_preserves_all_stats() {
+        // Strided far loads at 5 µs: the pipeline spends almost all its
+        // cycles stalled on the link, which fast-forward must skip without
+        // perturbing a single counter, histogram, or occupancy integral.
+        let mk = |ff: bool| {
+            let mut a = Asm::new("ff");
+            a.li(1, FAR_BASE as i64);
+            a.li(2, 0).li(3, 0).li(4, 24);
+            a.roi_begin();
+            a.label("loop");
+            a.ld64(5, 1, 0);
+            a.add(3, 3, 5);
+            a.addi(1, 1, 64); // next line: every iteration is a far miss
+            a.addi(2, 2, 1);
+            a.blt(2, 4, "loop");
+            a.roi_end();
+            a.halt();
+            let mut cfg = SimConfig::baseline().with_far_latency_ns(5000.0);
+            cfg.far.jitter_frac = 0.0;
+            cfg.fast_forward = ff;
+            Simulator::new(cfg, a.finish())
+        };
+        let mut fast = mk(true);
+        fast.run().expect("fast-forward run");
+        let mut slow = mk(false);
+        slow.run().expect("tick-by-tick run");
+        assert!(fast.ff_jumped_cycles > 0, "5us far stalls must trigger jumps");
+        assert_eq!(slow.ff_jumped_cycles, 0, "disabled means every cycle ticks");
+        assert_eq!(fast.cycle, slow.cycle, "fast-forward must not change timing");
+        assert_eq!(fast.arch_reg(3), slow.arch_reg(3), "architectural state");
+        assert_eq!(fast.stats, slow.stats, "every statistic must be identical");
+    }
+
+    #[test]
+    fn fast_forward_is_chunk_boundary_invariant() {
+        // run_for with fast-forward on: jumps clamp to the budget boundary,
+        // so round-based multi-tenant stepping still matches a whole run.
+        let mk = || {
+            let mut a = Asm::new("ffchunk");
+            a.li(1, FAR_BASE as i64);
+            a.li(2, 0).li(3, 0).li(4, 12);
+            a.label("loop");
+            a.ld64(5, 1, 0);
+            a.add(3, 3, 5);
+            a.addi(1, 1, 64);
+            a.addi(2, 2, 1);
+            a.blt(2, 4, "loop");
+            a.halt();
+            let mut cfg = SimConfig::baseline().with_far_latency_ns(5000.0);
+            cfg.far.jitter_frac = 0.0;
+            Simulator::new(cfg, a.finish())
+        };
+        let mut whole = mk();
+        whole.run().expect("run");
+        let mut chunked = mk();
+        let mut rounds = 0u64;
+        while !chunked.run_for(1024).expect("run_for") {
+            rounds += 1;
+            assert!(rounds < 1_000_000, "chunked run must terminate");
+        }
+        assert!(rounds > 1, "budget must take multiple rounds");
+        assert!(chunked.ff_jumped_cycles > 0, "chunked runs still fast-forward");
+        assert_eq!(chunked.cycle, whole.cycle);
+        assert_eq!(chunked.stats, whole.stats, "round boundaries are invisible");
     }
 
     #[test]

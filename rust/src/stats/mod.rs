@@ -15,7 +15,7 @@ pub use schema::{ScenarioCol, ScenarioStats};
 
 /// Time-weighted average of a level signal (e.g. "requests in flight").
 /// `update` must be called with non-decreasing cycles.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Integrator {
     last_cycle: u64,
     value: u64,
@@ -57,7 +57,7 @@ impl Integrator {
 }
 
 /// Power-of-two bucketed histogram for latencies / sizes.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Hist {
     pub buckets: [u64; 64],
     pub count: u64,
@@ -131,7 +131,7 @@ impl Region {
 }
 
 /// All statistics for one simulation run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Stats {
     // Progress.
     pub cycles: u64,
@@ -243,6 +243,85 @@ impl Stats {
             self.region_cycles[r as usize] as f64 / total as f64
         }
     }
+
+    /// Replicate the counter deltas of one idle (fixed-point) pipeline tick
+    /// across `k` further skipped ticks, in closed form: for every plain
+    /// counter, `self += k * (self - before)` where `before` is the snapshot
+    /// taken just before that tick. Used by the simulator's event-driven
+    /// fast-forward; `cycles` is excluded (the caller sets the clock
+    /// directly), and integrators/histograms are excluded because a fixed
+    /// point cannot change them (guarded by
+    /// [`Stats::hists_and_levels_unchanged`]) — integrator area over the
+    /// skipped span accrues exactly at the next real update since the level
+    /// is constant.
+    pub fn fold_idle(&mut self, k: u64, before: &Stats) {
+        macro_rules! fold {
+            ($($f:ident),* $(,)?) => {
+                $( self.$f += k * (self.$f - before.$f); )*
+            };
+        }
+        fold!(
+            insts_committed,
+            uops_committed,
+            measured_cycles,
+            measured_insts,
+            fetched_uops,
+            branches,
+            branch_mispredicts,
+            squashed_uops,
+            rob_writes,
+            iq_writes,
+            iq_wakeups,
+            regfile_reads,
+            regfile_writes,
+            lsq_searches,
+            l1d_accesses,
+            l1d_misses,
+            l2_accesses,
+            l2_misses,
+            spm_accesses,
+            dram_reads,
+            dram_writes,
+            far_reads,
+            far_writes,
+            far_bytes,
+            link_stall_cycles,
+            prefetches_issued,
+            prefetches_useful,
+            mshr_reject_events,
+            aloads,
+            astores,
+            getfins,
+            getfin_misses,
+            id_batch_fetches,
+            amu_subrequests,
+            amu_speculative_rollbacks,
+            amart_full_events,
+            stale_completions,
+        );
+        for i in 0..NUM_REGIONS {
+            self.region_cycles[i] += k * (self.region_cycles[i] - before.region_cycles[i]);
+            self.region_uops[i] += k * (self.region_uops[i] - before.region_uops[i]);
+        }
+    }
+
+    /// True when a tick left every histogram and every time-weighted level
+    /// untouched — the part of `Stats` that [`Stats::fold_idle`] cannot
+    /// replicate. A genuine fixed-point tick always satisfies this; the
+    /// fast-forward path checks it as a defense before folding.
+    pub fn hists_and_levels_unchanged(&self, before: &Stats) -> bool {
+        self.far_read_latency.count == before.far_read_latency.count
+            && self.sync_load_latency.count == before.sync_load_latency.count
+            && self.ami_completion_latency.count == before.ami_completion_latency.count
+            && self.rob_occ.current() == before.rob_occ.current()
+            && self.iq_occ.current() == before.iq_occ.current()
+            && self.lq_occ.current() == before.lq_occ.current()
+            && self.sq_occ.current() == before.sq_occ.current()
+            && self.l1d_mshr_occ.current() == before.l1d_mshr_occ.current()
+            && self.l2_mshr_occ.current() == before.l2_mshr_occ.current()
+            && self.far_inflight.current() == before.far_inflight.current()
+            && self.amu_inflight.current() == before.amu_inflight.current()
+    }
 }
 
 #[cfg(test)]
@@ -298,6 +377,45 @@ mod tests {
         s.cycles = 100;
         s.far_inflight.update(0, 8);
         assert!((s.mlp() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fold_idle_replicates_explicit_ticks() {
+        // Simulate an "idle retry" tick that bumps a few counters by fixed
+        // deltas, and check the closed-form fold equals ticking k more times.
+        let tick = |s: &mut Stats| {
+            s.lsq_searches += 3;
+            s.l1d_accesses += 2;
+            s.mshr_reject_events += 2;
+            s.getfins += 1;
+            s.measured_cycles += 1;
+            s.region_cycles[Region::Main as usize] += 1;
+        };
+        let mut folded = Stats::default();
+        folded.lsq_searches = 10; // pre-existing totals
+        let mut explicit = folded.clone();
+
+        let before = folded.clone();
+        tick(&mut folded);
+        assert!(folded.hists_and_levels_unchanged(&before));
+        folded.fold_idle(7, &before);
+
+        for _ in 0..8 {
+            tick(&mut explicit);
+        }
+        assert_eq!(folded, explicit);
+    }
+
+    #[test]
+    fn hists_and_levels_unchanged_detects_changes() {
+        let base = Stats::default();
+        let mut h = base.clone();
+        h.far_read_latency.add(100);
+        assert!(!h.hists_and_levels_unchanged(&base));
+        let mut l = base.clone();
+        l.rob_occ.update(5, 3);
+        assert!(!l.hists_and_levels_unchanged(&base));
+        assert!(base.clone().hists_and_levels_unchanged(&base));
     }
 
     #[test]

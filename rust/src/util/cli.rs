@@ -2,6 +2,14 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, and positional
 //! arguments, with typed getters and an auto-generated usage string.
+//!
+//! Options are *declared once* as [`Spec`] constants and composed into
+//! per-subcommand tables (see `main.rs`): a spec carries its canonical
+//! name, alias spellings, a value placeholder for help text, and an
+//! optional syntactic validator that runs at parse time — so `--latency`
+//! and `--latency-ns` land in the same slot, a typo'd option error names
+//! every valid choice for the subcommand, and a malformed number fails
+//! before any simulation starts.
 
 use std::collections::BTreeMap;
 
@@ -22,32 +30,110 @@ impl std::fmt::Display for ArgError {
 }
 impl std::error::Error for ArgError {}
 
-/// Declarative option spec so `parse` can distinguish value-taking options
-/// from boolean flags and emit usage text.
+/// Syntactic value check applied at parse time, before the value reaches
+/// the subcommand. Semantic validation (known preset names, policy tags,
+/// ...) stays with the consumer — the parser only rejects what can never
+/// be well-formed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Validate {
+    /// Any string.
+    Str,
+    /// One integer, `parse_u64` syntax (`64k`, `0x10`, `1_000`).
+    U64,
+    /// One float.
+    F64,
+    /// Comma-separated floats (e.g. `--latencies-ns 300,1000,5000`).
+    F64List,
+}
+
+/// Declarative option spec: canonical name, alias spellings, value
+/// placeholder for help text, syntactic validator, and help line. Declared
+/// once per option as a `const` and shared across subcommand tables.
+#[derive(Debug, Clone, Copy)]
 pub struct Spec {
     pub name: &'static str,
+    pub aliases: &'static [&'static str],
     pub takes_value: bool,
+    pub value_name: &'static str,
+    pub validate: Validate,
     pub help: &'static str,
 }
 
-pub const fn opt(name: &'static str, help: &'static str) -> Spec {
-    Spec { name, takes_value: true, help }
+/// A value-taking option: `--name <value_name>` (or `--name=<value>`).
+pub const fn opt(name: &'static str, value_name: &'static str, help: &'static str) -> Spec {
+    Spec { name, aliases: &[], takes_value: true, value_name, validate: Validate::Str, help }
 }
 
+/// A boolean flag: `--name`.
 pub const fn flag(name: &'static str, help: &'static str) -> Spec {
-    Spec { name, takes_value: false, help }
+    Spec { name, aliases: &[], takes_value: false, value_name: "", validate: Validate::Str, help }
 }
 
+impl Spec {
+    /// Alias spellings that canonicalize to `self.name` at parse time.
+    pub const fn aliases(mut self, aliases: &'static [&'static str]) -> Self {
+        self.aliases = aliases;
+        self
+    }
+
+    /// Attach a syntactic validator (value-taking options only).
+    pub const fn validate(mut self, v: Validate) -> Self {
+        self.validate = v;
+        self
+    }
+
+    fn matches(&self, key: &str) -> bool {
+        self.name == key || self.aliases.contains(&key)
+    }
+
+    fn check(&self, val: &str) -> Result<(), ArgError> {
+        let bad = |what: &str| ArgError(format!("--{}: bad {what} '{val}'", self.name));
+        match self.validate {
+            Validate::Str => Ok(()),
+            Validate::U64 => parse_u64(val)
+                .map(drop)
+                .map_err(|e| ArgError(format!("--{}: {e}", self.name))),
+            Validate::F64 => val.parse::<f64>().map(drop).map_err(|_| bad("float")),
+            Validate::F64List => {
+                for item in val.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+                    item.parse::<f64>().map_err(|_| bad("float list"))?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Render the option table for `cmd`, one aligned line per spec with the
+/// value placeholder and any alias spellings.
 pub fn usage(cmd: &str, specs: &[Spec]) -> String {
+    let lhs: Vec<String> = specs
+        .iter()
+        .map(|sp| {
+            if sp.takes_value {
+                format!("--{} <{}>", sp.name, sp.value_name)
+            } else {
+                format!("--{}", sp.name)
+            }
+        })
+        .collect();
+    let width = lhs.iter().map(|l| l.len()).max().unwrap_or(0);
     let mut s = format!("usage: {cmd} [options]\n");
-    for sp in specs {
-        let v = if sp.takes_value { " <value>" } else { "" };
-        s.push_str(&format!("  --{}{:<12} {}\n", sp.name, v, sp.help));
+    for (sp, l) in specs.iter().zip(&lhs) {
+        let alias = if sp.aliases.is_empty() {
+            String::new()
+        } else {
+            let spelled: Vec<String> = sp.aliases.iter().map(|a| format!("--{a}")).collect();
+            format!(" (alias: {})", spelled.join(", "))
+        };
+        s.push_str(&format!("  {l:<width$}  {}{alias}\n", sp.help));
     }
     s
 }
 
-/// Parse `argv` (without the program name) against `specs`.
+/// Parse `argv` (without the program name) against `specs`. Alias
+/// spellings are canonicalized — the `Args` maps are keyed by `Spec::name`
+/// only — and an unknown option error names every valid choice.
 pub fn parse(argv: &[String], specs: &[Spec]) -> Result<Args, ArgError> {
     let mut out = Args::default();
     let mut i = 0;
@@ -55,13 +141,15 @@ pub fn parse(argv: &[String], specs: &[Spec]) -> Result<Args, ArgError> {
         let a = &argv[i];
         if let Some(body) = a.strip_prefix("--") {
             let (key, inline_val) = match body.split_once('=') {
-                Some((k, v)) => (k.to_string(), Some(v.to_string())),
-                None => (body.to_string(), None),
+                Some((k, v)) => (k, Some(v.to_string())),
+                None => (body, None),
             };
-            let spec = specs
-                .iter()
-                .find(|s| s.name == key)
-                .ok_or_else(|| ArgError(format!("unknown option --{key}")))?;
+            let spec = specs.iter().find(|s| s.matches(key)).ok_or_else(|| {
+                let valid: Vec<String> =
+                    specs.iter().map(|s| format!("--{}", s.name)).collect();
+                ArgError(format!("unknown option --{key} (valid: {})", valid.join(", ")))
+            })?;
+            let key = spec.name.to_string();
             if spec.takes_value {
                 let val = match inline_val {
                     Some(v) => v,
@@ -72,6 +160,7 @@ pub fn parse(argv: &[String], specs: &[Spec]) -> Result<Args, ArgError> {
                             .ok_or_else(|| ArgError(format!("--{key} needs a value")))?
                     }
                 };
+                spec.check(&val)?;
                 out.options.entry(key).or_default().push(val);
             } else {
                 if inline_val.is_some() {
@@ -154,8 +243,10 @@ mod tests {
     }
 
     const SPECS: &[Spec] = &[
-        opt("latency", "far memory latency"),
-        opt("config", "preset name"),
+        opt("latency", "ns", "far memory latency").aliases(&["lat"]).validate(Validate::F64),
+        opt("config", "name", "preset name"),
+        opt("count", "n", "a count").validate(Validate::U64),
+        opt("points", "list", "comma floats").validate(Validate::F64List),
         flag("verbose", "chatty output"),
     ];
 
@@ -169,13 +260,33 @@ mod tests {
 
     #[test]
     fn parses_equals_form() {
-        let a = parse(&argv(&["--latency=5us_is_not_a_number"]), SPECS).unwrap();
-        assert_eq!(a.get("latency"), Some("5us_is_not_a_number"));
+        let a = parse(&argv(&["--config=amu"]), SPECS).unwrap();
+        assert_eq!(a.get("config"), Some("amu"));
     }
 
     #[test]
-    fn unknown_option_rejected() {
-        assert!(parse(&argv(&["--bogus"]), SPECS).is_err());
+    fn alias_canonicalizes_to_primary_name() {
+        let a = parse(&argv(&["--lat", "250", "--latency=500"]), SPECS).unwrap();
+        // Both spellings land in the same slot, under the canonical name.
+        assert_eq!(a.get_all("latency"), vec!["250", "500"]);
+        assert_eq!(a.get("lat"), None);
+    }
+
+    #[test]
+    fn unknown_option_error_names_valid_choices() {
+        let e = parse(&argv(&["--bogus"]), SPECS).unwrap_err();
+        assert!(e.0.contains("unknown option --bogus"), "{}", e.0);
+        assert!(e.0.contains("--latency"), "{}", e.0);
+        assert!(e.0.contains("--verbose"), "{}", e.0);
+    }
+
+    #[test]
+    fn validators_reject_malformed_values_at_parse_time() {
+        assert!(parse(&argv(&["--latency", "fast"]), SPECS).is_err());
+        assert!(parse(&argv(&["--count", "banana"]), SPECS).is_err());
+        assert!(parse(&argv(&["--points", "1,two,3"]), SPECS).is_err());
+        assert!(parse(&argv(&["--count", "64k"]), SPECS).is_ok());
+        assert!(parse(&argv(&["--points", "1,2.5,3e3"]), SPECS).is_ok());
     }
 
     #[test]
@@ -196,6 +307,14 @@ mod tests {
     }
 
     #[test]
+    fn usage_lists_value_names_and_aliases() {
+        let u = usage("amu-sim test", SPECS);
+        assert!(u.contains("--latency <ns>"), "{u}");
+        assert!(u.contains("alias: --lat"), "{u}");
+        assert!(u.contains("--verbose"), "{u}");
+    }
+
+    #[test]
     fn suffix_integers() {
         assert_eq!(parse_u64("64k").unwrap(), 64 * 1024);
         assert_eq!(parse_u64("1m").unwrap(), 1024 * 1024);
@@ -207,7 +326,7 @@ mod tests {
     #[test]
     fn typed_getters_defaults() {
         let a = parse(&argv(&[]), SPECS).unwrap();
-        assert_eq!(a.get_u64("latency", 300).unwrap(), 300);
+        assert_eq!(a.get_u64("count", 300).unwrap(), 300);
         assert_eq!(a.get_str("config", "baseline"), "baseline");
     }
 }

@@ -33,6 +33,35 @@ impl Fnv {
     }
 }
 
+/// Fast word-at-a-time mixer for in-memory state fingerprints (the
+/// simulator's fast-forward fixed-point detection hashes a few thousand
+/// words per attempt, so the byte-serial [`Fnv`] is too slow). One multiply
+/// per word. Unlike [`Fnv`] this is never persisted to disk and carries no
+/// stability guarantee across versions.
+pub struct Mix64(u64);
+
+impl Default for Mix64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Mix64 {
+    pub fn new() -> Self {
+        Mix64(0x243f_6a88_85a3_08d3)
+    }
+
+    #[inline]
+    pub fn mix(&mut self, v: u64) {
+        self.0 = (self.0 ^ v).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        self.0 ^= self.0 >> 29;
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
 /// Geometric mean of positive values; `None` if empty or any non-positive.
 pub fn geomean(xs: &[f64]) -> Option<f64> {
     if xs.is_empty() || xs.iter().any(|&x| x <= 0.0) {
@@ -90,6 +119,21 @@ mod tests {
         let mut h = Fnv::new();
         h.write(b"foobar");
         assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn mix64_order_and_value_sensitive() {
+        let mut a = Mix64::new();
+        a.mix(1);
+        a.mix(2);
+        let mut b = Mix64::new();
+        b.mix(2);
+        b.mix(1);
+        assert_ne!(a.finish(), b.finish());
+        let mut c = Mix64::new();
+        c.mix(1);
+        c.mix(2);
+        assert_eq!(a.finish(), c.finish());
     }
 
     #[test]

@@ -1,0 +1,103 @@
+//! Fast-forward determinism suite: event-driven fast-forward must be a
+//! pure host-speed optimization. Every simulated statistic, sweep CSV
+//! byte, and multi-tenant outcome must be identical with the feature on
+//! or off — across all four far-memory backends — and the grid
+//! fingerprint must not fork on the toggle (ff and non-ff runs share one
+//! cache entry). The CI determinism leg repeats the CSV comparisons
+//! through the real binary.
+
+use amu_sim::config::{FarBackendKind, SimConfig};
+use amu_sim::session::tenancy::{self, MtRequest};
+use amu_sim::session::{cache, metrics, RunRequest, Selection, Session, SweepGrid};
+use amu_sim::workloads::Scale;
+
+fn grid(ff: bool, backend: &str) -> SweepGrid {
+    SweepGrid::new(Scale::Test)
+        .benches(["gups", "ll"])
+        .configs(["baseline", "amu"])
+        .latencies_ns([300.0, 1500.0])
+        .backends([backend])
+        .fast_forward(ff)
+}
+
+/// The headline guard: for each backend, the same grid swept with
+/// fast-forward on and off must produce byte-identical CSV — row order,
+/// every counter, every occupancy integral.
+#[test]
+fn sweep_csv_is_byte_identical_with_fast_forward_on_or_off_for_every_backend() {
+    for backend in ["serial-link", "pooled", "distribution", "hybrid"] {
+        let on = grid(true, backend);
+        let off = grid(false, backend);
+        assert_eq!(
+            on.fingerprint(),
+            off.fingerprint(),
+            "{backend}: the toggle must not fork the cache fingerprint"
+        );
+        let rows_on = Session::new().jobs(2).quiet(true).sweep(&on).unwrap();
+        let rows_off = Session::new().jobs(2).quiet(true).sweep(&off).unwrap();
+        let csv_on = cache::to_csv_string(on.fingerprint(), &rows_on);
+        let csv_off = cache::to_csv_string(off.fingerprint(), &rows_off);
+        assert_eq!(
+            csv_on, csv_off,
+            "{backend}: fast-forward must not change a byte of the sweep CSV"
+        );
+    }
+}
+
+/// Replay property: a fast-forwarded run re-executed tick-by-tick must
+/// land on the same row across the FULL metric schema (scenario columns
+/// included) — i.e. `next_event_cycle` never over-jumps past a cycle at
+/// which anything could have changed. GUPS at the paper's 5 µs far
+/// latency is the cell the fast-forward speedup target is measured on.
+#[test]
+fn fast_forwarded_rows_match_tick_by_tick_replay_across_the_full_schema() {
+    let all = Selection::parse("all").unwrap();
+    let cells = [
+        ("gups", "baseline", 5000.0),
+        ("gups", "amu", 5000.0),
+        ("bfs", "amu", 1000.0),
+        ("ll", "cxl-ideal", 1500.0),
+    ];
+    for (bench, config, latency_ns) in cells {
+        let run = |ff: bool| {
+            let mut cfg = SimConfig::preset(config).unwrap();
+            cfg.fast_forward = ff;
+            RunRequest::bench(bench)
+                .config(cfg)
+                .latency_ns(latency_ns)
+                .scale(Scale::Test)
+                .run()
+                .unwrap()
+        };
+        let fast = run(true);
+        let slow = run(false);
+        assert_eq!(
+            metrics::csv_row(&fast, &all),
+            metrics::csv_row(&slow, &all),
+            "{bench}/{config}@{latency_ns}ns: full-schema row must be identical"
+        );
+    }
+}
+
+/// Multi-tenant rounds interleave `run_for` windows on one shared pool:
+/// fast-forward jumps clamp to the round boundary, so the per-tenant
+/// slowdown CSV must be byte-identical with the feature on or off.
+#[test]
+fn mtrun_csv_is_byte_identical_with_fast_forward_on_or_off() {
+    let request = |ff: bool| {
+        let mut cfg = SimConfig::amu().with_far_latency_ns(1000.0);
+        cfg.far.backend = FarBackendKind::Pooled;
+        cfg.fast_forward = ff;
+        let tenants = tenancy::parse_tenants("gups:2,bfs:1").unwrap();
+        let mut req = MtRequest::new(tenants, cfg);
+        req.scale = Scale::Test;
+        req.jobs = 2;
+        req.quiet = true;
+        req
+    };
+    let on = request(true);
+    let off = request(false);
+    let csv_on = tenancy::mt_csv(&on.tenants, on.scale, &on.run().unwrap());
+    let csv_off = tenancy::mt_csv(&off.tenants, off.scale, &off.run().unwrap());
+    assert_eq!(csv_on, csv_off, "fast-forward must not change a byte of mtrun output");
+}
