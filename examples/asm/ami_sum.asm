@@ -1,0 +1,51 @@
+; Asynchronous far-memory reduction through the AMI instructions: stage
+; each 8-byte word into an SPM slot with `aload`, poll `getfin` until the
+; request completes, then read the slot and accumulate. Single request in
+; flight — the protocol-conformance baseline for the verifier (issue /
+; drain / read-after-completion all clean). Needs --config amu.
+; sum(far[i]) = sum(1..n).
+.program ami_sum
+.arg n 256
+.check LOCAL_BASE $n*$n/2+$n/2
+
+.region setup
+  li r1, 0                  ; i
+  li r2, $n
+  li r3, FAR_BASE
+init:
+  addi r4, r1, 1
+  st.8 r4, 0(r3)            ; far[i] = i+1
+  addi r3, r3, 8
+  addi r1, r1, 1
+  blt r1, r2, init
+
+  li r3, FAR_BASE           ; hand the staged lines back to far memory
+  li r1, 0
+  li r2, $n/8               ; n words / 8 words-per-64B-line
+fl:
+  flush 0(r3)
+  addi r3, r3, 64
+  addi r1, r1, 1
+  blt r1, r2, fl
+
+.region main
+  li r1, 8
+  cfgwr r1, granularity     ; 8-byte transfers
+  li r2, SPM_BASE           ; staging slot
+  li r3, FAR_BASE           ; cursor
+  li r4, FAR_BASE+$n*8      ; end
+  li r9, 0                  ; sum
+  roi.begin
+loop:
+  aload r6, r2, r3          ; issue: far[cursor] -> SPM slot
+wait:
+  getfin r7                 ; drain completions
+  beq r7, zero, wait
+  ld.8 r8, 0(r2)            ; slot is safe after the drain
+  add r9, r9, r8
+  addi r3, r3, 8
+  blt r3, r4, loop
+  roi.end
+  li r5, LOCAL_BASE
+  st.8 r9, 0(r5)
+  halt

@@ -1,0 +1,56 @@
+; GUPS-style random-access updates: table[h(i) % tbl_words] ^= i with a
+; splitmix-style index hash, then an XOR fold over the table. Every i is
+; XORed into exactly one slot, so the fold equals XOR(0..updates-1) = 0
+; when updates is a multiple of 4.
+.program gups_lite
+.arg updates 2048
+.arg tbl_words 1024
+.check LOCAL_BASE 0
+
+.region setup
+  li r2, FAR_BASE           ; zero the table
+  li r7, 0
+  li r8, $tbl_words
+  li r9, 0
+zinit:
+  st.8 r9, 0(r2)
+  addi r2, r2, 8
+  addi r7, r7, 1
+  blt r7, r8, zinit
+
+.region main
+  li r1, 0                  ; i
+  li r3, $updates
+  li r2, FAR_BASE
+  li r20, 0x9E3779B97F4A7C15
+  li r21, 0xBF58476D1CE4E5B9
+  roi.begin
+update:
+  mul r4, r1, r20           ; h = splitmix-ish(i)
+  srli r5, r4, 31
+  xor r4, r4, r5
+  mul r4, r4, r21
+  srli r5, r4, 27
+  xor r4, r4, r5
+  andi r4, r4, $tbl_words-1
+  slli r4, r4, 3
+  add r4, r4, r2
+  ld.8 r5, 0(r4)            ; table[h] ^= i
+  xor r5, r5, r1
+  st.8 r5, 0(r4)
+  addi r1, r1, 1
+  blt r1, r3, update
+  roi.end
+
+  li r2, FAR_BASE           ; XOR-fold the table
+  li r7, 0
+  li r6, 0
+fold:
+  ld.8 r5, 0(r2)
+  xor r6, r6, r5
+  addi r2, r2, 8
+  addi r7, r7, 1
+  blt r7, r8, fold
+  li r9, LOCAL_BASE
+  st.8 r6, 0(r9)
+  halt

@@ -1,0 +1,79 @@
+; Open-addressing hash table in far memory: 16-byte slots [key, value],
+; linear probing. Phase 1 inserts `keys` distinct nonzero keys (a
+; splitmix-style hash of i+1, which is injective); phase 2 looks every
+; key back up and sums the values: sum(1..keys).
+.program hash_probe
+.arg keys 256
+.arg slots 2048
+.check LOCAL_BASE $keys*$keys/2+$keys/2
+
+.region setup
+  li r2, FAR_BASE           ; zero the key fields
+  li r5, 0
+  li r6, $slots
+  li r7, 0
+zinit:
+  st.8 r7, 0(r2)
+  addi r2, r2, 16
+  addi r5, r5, 1
+  blt r5, r6, zinit
+
+  li r1, 0                  ; i
+  li r3, $keys
+  li r2, FAR_BASE
+  li r20, 0x9E3779B97F4A7C15
+  li r21, 0xBF58476D1CE4E5B9
+insert:
+  addi r4, r1, 1            ; key = splitmix-ish(i+1), nonzero
+  mul r4, r4, r20
+  srli r5, r4, 31
+  xor r4, r4, r5
+  mul r4, r4, r21
+  srli r5, r4, 27
+  xor r4, r4, r5
+  andi r6, r4, $slots-1     ; slot
+ins_probe:
+  slli r7, r6, 4
+  add r7, r7, r2
+  ld.8 r8, 0(r7)
+  beq r8, zero, ins_put     ; empty slot -> claim it
+  addi r6, r6, 1
+  andi r6, r6, $slots-1
+  j ins_probe
+ins_put:
+  st.8 r4, 0(r7)
+  addi r9, r1, 1
+  st.8 r9, 8(r7)            ; value = i+1
+  addi r1, r1, 1
+  blt r1, r3, insert
+
+.region main
+  li r1, 0
+  li r11, 0                 ; sum
+  roi.begin
+lookup:
+  addi r4, r1, 1            ; recompute key i+1
+  mul r4, r4, r20
+  srli r5, r4, 31
+  xor r4, r4, r5
+  mul r4, r4, r21
+  srli r5, r4, 27
+  xor r4, r4, r5
+  andi r6, r4, $slots-1
+lk_probe:
+  slli r7, r6, 4
+  add r7, r7, r2
+  ld.8 r8, 0(r7)
+  beq r8, r4, lk_hit        ; keys are all present: must terminate
+  addi r6, r6, 1
+  andi r6, r6, $slots-1
+  j lk_probe
+lk_hit:
+  ld.8 r9, 8(r7)
+  add r11, r11, r9
+  addi r1, r1, 1
+  blt r1, r3, lookup
+  roi.end
+  li r5, LOCAL_BASE
+  st.8 r11, 0(r5)
+  halt

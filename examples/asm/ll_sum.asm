@@ -1,0 +1,38 @@
+; Linked-list walk: 16-byte nodes [value, next] laid out contiguously in
+; far memory, last node's next = 0. The walk is a dependent-load chain
+; like pchase but with a data payload: sum(values) = sum(1..nodes).
+.program ll_sum
+.arg nodes 256
+.check LOCAL_BASE $nodes*$nodes/2+$nodes/2
+
+.region setup
+  li r1, 0                  ; i
+  li r3, $nodes
+  li r2, FAR_BASE           ; &node[i]
+init:
+  addi r4, r1, 1
+  st.8 r4, 0(r2)            ; value = i+1
+  beq r4, r3, last          ; i+1 == nodes -> tail
+  addi r6, r2, 16
+  j cont
+last:
+  li r6, 0
+cont:
+  st.8 r6, 8(r2)            ; next
+  addi r2, r2, 16
+  addi r1, r1, 1
+  blt r1, r3, init
+
+.region main
+  li r8, FAR_BASE           ; cursor
+  li r9, 0                  ; sum
+  roi.begin
+walk:
+  ld.8 r4, 0(r8)
+  add r9, r9, r4
+  ld.8 r8, 8(r8)
+  bne r8, zero, walk
+  roi.end
+  li r5, LOCAL_BASE
+  st.8 r9, 0(r5)
+  halt

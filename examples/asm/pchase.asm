@@ -1,0 +1,38 @@
+; Pointer chase over a strided ring in far memory: the classic
+; latency-bound dependent-load chain. node[i] = &node[(i+stride) % nodes];
+; the chase walks `steps` hops from node 0 and stores the final cursor.
+; steps*stride mod nodes = 1000*17 mod 512 = 104 -> FAR_BASE + 104*8.
+.program pchase
+.arg nodes 512
+.arg steps 1000
+.arg stride 17
+.check LOCAL_BASE FAR_BASE+104*8
+
+.region setup
+  li r1, 0                  ; i
+  li r3, $nodes
+  li r2, FAR_BASE           ; &node[i]
+  li r5, FAR_BASE
+init:
+  addi r4, r1, $stride
+  andi r4, r4, $nodes-1
+  slli r4, r4, 3
+  add r4, r5, r4
+  st.8 r4, 0(r2)
+  addi r2, r2, 8
+  addi r1, r1, 1
+  blt r1, r3, init
+
+.region main
+  li r6, 0                  ; step
+  li r7, $steps
+  li r8, FAR_BASE           ; cursor
+  roi.begin
+chase:
+  ld.8 r8, 0(r8)
+  addi r6, r6, 1
+  blt r6, r7, chase
+  roi.end
+  li r9, LOCAL_BASE
+  st.8 r8, 0(r9)
+  halt

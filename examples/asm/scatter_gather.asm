@@ -1,0 +1,37 @@
+; Gather reduction through a permuted index: sum src[(7i+3) % n] for all
+; i. gcd(7, n) = 1 makes the index a bijection, so the sum equals
+; sum(0..n-1) = n*(n-1)/2 regardless of order.
+.program scatter_gather
+.arg n 1024
+.check LOCAL_BASE $n*$n/2-$n/2
+
+.region setup
+  li r1, 0                  ; j
+  li r3, $n
+  li r2, FAR_BASE           ; &src[0]
+init:
+  st.8 r1, 0(r2)            ; src[j] = j
+  addi r2, r2, 8
+  addi r1, r1, 1
+  blt r1, r3, init
+
+.region main
+  li r1, 0                  ; i
+  li r2, FAR_BASE
+  li r9, 0                  ; sum
+  roi.begin
+gather:
+  slli r4, r1, 3            ; 7i = 8i - i
+  sub r4, r4, r1
+  addi r4, r4, 3
+  andi r4, r4, $n-1
+  slli r4, r4, 3
+  add r4, r4, r2
+  ld.8 r5, 0(r4)
+  add r9, r9, r5
+  addi r1, r1, 1
+  blt r1, r3, gather
+  roi.end
+  li r6, LOCAL_BASE
+  st.8 r9, 0(r6)
+  halt

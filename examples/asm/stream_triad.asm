@@ -1,0 +1,55 @@
+; STREAM triad over far memory: a[i] = b[i] + scalar * c[i], then a
+; checksum reduction so the run is self-validating. Exercises sized
+; loads/stores, .region attribution, the ROI window, and .arg expressions.
+.program stream_triad
+.arg n 1024
+.arg scalar 3
+; sum(a) = sum(i + scalar*2i) = (1+2*scalar) * n*(n-1)/2, paren-free:
+.check LOCAL_BASE $n/2*7*$n-$n/2*7
+
+.region setup
+  li r5, $n
+  li r1, 0                  ; i
+  li r2, FAR_BASE           ; &b[0]
+  li r3, FAR_BASE+0x100000  ; &c[0]
+init:
+  st.8 r1, 0(r2)            ; b[i] = i
+  slli r6, r1, 1
+  st.8 r6, 0(r3)            ; c[i] = 2*i
+  addi r2, r2, 8
+  addi r3, r3, 8
+  addi r1, r1, 1
+  blt r1, r5, init
+
+.region main
+  li r1, 0
+  li r2, FAR_BASE
+  li r3, FAR_BASE+0x100000
+  li r4, FAR_BASE+0x200000  ; &a[0]
+  li r8, $scalar
+  roi.begin
+triad:
+  ld.8 r6, 0(r2)
+  ld.8 r7, 0(r3)
+  mul r7, r7, r8
+  add r6, r6, r7
+  st.8 r6, 0(r4)
+  addi r2, r2, 8
+  addi r3, r3, 8
+  addi r4, r4, 8
+  addi r1, r1, 1
+  blt r1, r5, triad
+  roi.end
+
+  li r1, 0                  ; checksum pass over a[]
+  li r4, FAR_BASE+0x200000
+  li r9, 0
+sum:
+  ld.8 r6, 0(r4)
+  add r9, r9, r6
+  addi r4, r4, 8
+  addi r1, r1, 1
+  blt r1, r5, sum
+  li r6, LOCAL_BASE
+  st.8 r9, 0(r6)
+  halt

@@ -1,0 +1,231 @@
+//! Canonical text rendering of an assembled [`Program`] in the `isa::parse`
+//! grammar.
+//!
+//! `parse_str(disasm(&p), ...)` reproduces `p` exactly (same instruction
+//! words, same `addr_taken` set, same labels up to the assembler's
+//! arbitrary ordering of labels that share an instruction index) — the
+//! round-trip is property-tested over every builtin × variant, and the
+//! grammar itself is pinned by `rust/tests/golden/disasm_reference.txt`.
+//!
+//! Canonical choices: sized memory ops always print as `ld.N`/`st.N`
+//! (never `ld64`), `li` always prints a numeric immediate (label addresses
+//! that escape into data are carried by `.addr_taken` directives), and
+//! `jal r0`/`jalr r0` print as their `j`/`jr` shorthands.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use super::inst::{Inst, Opcode, Program};
+
+fn region_name(r: u8) -> &'static str {
+    match r {
+        1 => "scheduler",
+        2 => "disambig",
+        3 => "setup",
+        _ => "main",
+    }
+}
+
+fn cfg_name(imm: i64) -> String {
+    match imm {
+        0 => "granularity".to_string(),
+        1 => "queue_base".to_string(),
+        2 => "queue_length".to_string(),
+        other => other.to_string(),
+    }
+}
+
+fn render(inst: &Inst, label_of: &dyn Fn(usize) -> String) -> String {
+    use Opcode::*;
+    let Inst { rd, rs1, rs2, imm, size, .. } = *inst;
+    let alu = |m: &str| format!("{m} r{rd}, r{rs1}, r{rs2}");
+    let alui = |m: &str| format!("{m} r{rd}, r{rs1}, {imm}");
+    let br = |m: &str| format!("{m} r{rs1}, r{rs2}, {}", label_of(imm as usize));
+    match inst.op {
+        Add => alu("add"),
+        Sub => alu("sub"),
+        Xor => alu("xor"),
+        And => alu("and"),
+        Or => alu("or"),
+        Sll => alu("sll"),
+        Srl => alu("srl"),
+        Mul => alu("mul"),
+        SltU => alu("sltu"),
+        Addi => alui("addi"),
+        Xori => alui("xori"),
+        Andi => alui("andi"),
+        Ori => alui("ori"),
+        Slli => alui("slli"),
+        Srli => alui("srli"),
+        Li => format!("li r{rd}, {imm}"),
+        Ld => format!("ld.{size} r{rd}, {imm}(r{rs1})"),
+        St => format!("st.{size} r{rs2}, {imm}(r{rs1})"),
+        Prefetch => format!("prefetch {imm}(r{rs1})"),
+        Flush => format!("flush {imm}(r{rs1})"),
+        Beq => br("beq"),
+        Bne => br("bne"),
+        Blt => br("blt"),
+        Bge => br("bge"),
+        BltU => br("bltu"),
+        Jal if rd == 0 => format!("j {}", label_of(imm as usize)),
+        Jal => format!("jal r{rd}, {}", label_of(imm as usize)),
+        Jalr if rd == 0 => format!("jr r{rs1}"),
+        Jalr => format!("jalr r{rd}, r{rs1}"),
+        ALoad => format!("aload r{rd}, r{rs1}, r{rs2}"),
+        AStore => format!("astore r{rd}, r{rs1}, r{rs2}"),
+        GetFin => format!("getfin r{rd}"),
+        CfgWr => format!("cfgwr r{rs1}, {}", cfg_name(imm)),
+        CfgRd => format!("cfgrd r{rd}, {}", cfg_name(imm)),
+        Nop => "nop".to_string(),
+        Halt => "halt".to_string(),
+        Roi if imm != 0 => "roi.begin".to_string(),
+        Roi => "roi.end".to_string(),
+    }
+}
+
+/// Render `prog` as parseable AMI assembly text.
+pub fn disasm(prog: &Program) -> String {
+    // First label at each index names branch targets; indices that are
+    // referenced (branch/jump target or addr-taken) without any label get
+    // a synthesized `__L<idx>` one so the text always parses back.
+    let mut first_label: HashMap<usize, String> = HashMap::new();
+    let taken_names: HashSet<&str> = prog.labels.iter().map(|(n, _)| n.as_str()).collect();
+    for (name, at) in &prog.labels {
+        first_label.entry(*at).or_insert_with(|| name.clone());
+    }
+    let mut referenced: Vec<usize> = prog.addr_taken.clone();
+    for inst in &prog.insts {
+        if matches!(
+            inst.op,
+            Opcode::Beq | Opcode::Bne | Opcode::Blt | Opcode::Bge | Opcode::BltU | Opcode::Jal
+        ) {
+            referenced.push(inst.imm as usize);
+        }
+    }
+    let mut emit_at: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    for (name, at) in &prog.labels {
+        emit_at.entry(*at).or_default().push(name.clone());
+    }
+    for idx in referenced {
+        if !first_label.contains_key(&idx) {
+            let mut synth = format!("__L{idx}");
+            while taken_names.contains(synth.as_str()) {
+                synth.push('_');
+            }
+            emit_at.entry(idx).or_default().push(synth.clone());
+            first_label.insert(idx, synth);
+        }
+    }
+    let label_of = |idx: usize| -> String {
+        first_label.get(&idx).cloned().unwrap_or_else(|| format!("__L{idx}"))
+    };
+
+    let mut out = String::new();
+    out.push_str(&format!(".program {}\n", prog.name));
+    for &idx in &prog.addr_taken {
+        out.push_str(&format!(".addr_taken {}\n", label_of(idx)));
+    }
+    let mut region = 0u8;
+    for (i, inst) in prog.insts.iter().enumerate() {
+        if let Some(names) = emit_at.get(&i) {
+            for name in names {
+                out.push_str(&format!("{name}:\n"));
+            }
+        }
+        if inst.region != region {
+            region = inst.region;
+            out.push_str(&format!(".region {}\n", region_name(region)));
+        }
+        out.push_str(&format!("  {}\n", render(inst, &label_of)));
+    }
+    if let Some(names) = emit_at.get(&prog.insts.len()) {
+        for name in names {
+            out.push_str(&format!("{name}:\n"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::Asm;
+    use crate::isa::parse::parse_str;
+    use crate::stats::Region;
+
+    /// Labels that share an instruction index come back from `try_finish`
+    /// in arbitrary (HashMap) order; compare them as sorted sets.
+    fn normalized_labels(p: &Program) -> Vec<(usize, String)> {
+        let mut v: Vec<(usize, String)> =
+            p.labels.iter().map(|(n, at)| (*at, n.clone())).collect();
+        v.sort();
+        v
+    }
+
+    fn assert_round_trip(p: &Program) {
+        let text = disasm(p);
+        let q = parse_str(&text, "<disasm>", &p.name).unwrap_or_else(|e| {
+            panic!("disasm output failed to re-parse: {e}\n{text}");
+        });
+        assert_eq!(p.insts, q.prog.insts, "instructions drifted:\n{text}");
+        assert_eq!(p.name, q.prog.name);
+        assert_eq!(p.addr_taken, q.prog.addr_taken, "addr_taken drifted:\n{text}");
+        assert_eq!(normalized_labels(p), normalized_labels(&q.prog));
+    }
+
+    #[test]
+    fn loops_branches_and_regions_round_trip() {
+        let mut a = Asm::new("rt");
+        a.region(Region::Setup);
+        a.li(1, 0);
+        a.li(2, 64);
+        a.region(Region::Main);
+        a.label("loop");
+        a.ld64(3, 1, 8);
+        a.st(3, 1, -8, 4);
+        a.addi(1, 1, 1);
+        a.blt(1, 2, "loop");
+        a.halt();
+        assert_round_trip(&a.finish());
+    }
+
+    #[test]
+    fn ami_and_pseudo_ops_round_trip() {
+        let mut a = Asm::new("rt2");
+        a.li_label(1, "task");
+        a.mark_addr_taken("task");
+        a.call("task");
+        a.j("done");
+        a.label("task");
+        a.aload(3, 4, 5);
+        a.getfin(6);
+        a.ret();
+        a.label("done");
+        a.roi_begin();
+        a.prefetch(4, 64);
+        a.flush(4, 0);
+        a.roi_end();
+        a.halt();
+        assert_round_trip(&a.finish());
+    }
+
+    #[test]
+    fn unlabeled_branch_target_synthesizes_a_label() {
+        // A hand-built program whose branch target has no label must still
+        // disassemble to parseable text.
+        use crate::isa::inst::{Inst, Opcode};
+        let prog = Program {
+            name: "raw".to_string(),
+            insts: vec![
+                Inst { op: Opcode::Beq, rd: 0, rs1: 1, rs2: 0, imm: 2, size: 0, region: 0 },
+                Inst::nop(),
+                Inst { op: Opcode::Halt, rd: 0, rs1: 0, rs2: 0, imm: 0, size: 0, region: 0 },
+            ],
+            labels: vec![],
+            addr_taken: vec![],
+        };
+        let text = disasm(&prog);
+        assert!(text.contains("beq r1, r0, __L2"), "{text}");
+        let q = parse_str(&text, "<disasm>", "raw").unwrap();
+        assert_eq!(prog.insts, q.prog.insts);
+    }
+}

@@ -85,7 +85,7 @@ pub enum Opcode {
 }
 
 /// One decoded guest instruction. Flat layout keeps the pipeline simple.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Inst {
     pub op: Opcode,
     pub rd: u8,
@@ -165,7 +165,7 @@ impl Inst {
 }
 
 /// An assembled guest program.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Program {
     pub name: String,
     pub insts: Vec<Inst>,

@@ -2,13 +2,17 @@
 //! interpreter used as the timing model's architectural oracle.
 
 pub mod asm;
+pub mod disasm;
 pub mod inst;
 pub mod interp;
 pub mod mem;
+pub mod parse;
 pub mod verify;
 
 pub use asm::{Asm, AsmError};
+pub use disasm::disasm;
 pub use inst::{CfgReg, Inst, Opcode, Program};
 pub use interp::{CompletionOrder, Interp};
 pub use mem::{region_of, GuestMem, Layout, MemRegion, FAR_BASE, LOCAL_BASE, SPM_BASE};
+pub use parse::{parse_str, ParseError, ParseErrorKind, ParsedProgram};
 pub use verify::{verify, Code as VerifyCode, Diagnostic, Report as VerifyReport, Severity};

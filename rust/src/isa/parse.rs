@@ -1,0 +1,814 @@
+//! Text-format AMI assembly.
+//!
+//! A line-oriented assembler front-end over [`Asm`]: every builder
+//! mnemonic has a textual spelling, so guest programs can be loaded from
+//! `.asm` files at runtime instead of being compiled into the simulator
+//! (see `session::programs` for the loader and the README "External AMI
+//! programs" section for the grammar reference). The parser produces the
+//! same [`Program`] the builder would, which means external programs flow
+//! through the identical `isa::verify` gate as the built-in benchmarks.
+//!
+//! Errors are typed and carry an exact `file:line:col` position; the
+//! parser never panics on malformed input (the builder's `aload`/`astore`
+//! alias asserts are pre-checked here as [`ParseErrorKind::AliasedRequestRegs`]).
+//!
+//! Grammar sketch (`;` and `#` start comments, commas are whitespace):
+//!
+//! ```text
+//! .program gups_lite            ; program name (defaults to the file stem)
+//! .arg n 1024                   ; scalar argument, referenced as $n
+//! .mem FAR_BASE 1 2 3           ; u64 words at FAR_BASE, FAR_BASE+8, ...
+//! .check LOCAL_BASE 42          ; post-run validation: [addr] == value
+//! .region setup                 ; stats attribution (main|scheduler|disambig|setup)
+//! .addr_taken task              ; label escapes into data (jalr target set)
+//! top: li r1, FAR_BASE+8*4      ; labels, symbolic constants, + - * /
+//!   ld.8 r2, 0(r1)              ; sized loads/stores: ld.1/.2/.4/.8, ld64
+//!   aload r3, r4, r5            ; AMI: rd, spm-addr reg, mem-addr reg
+//!   cfgwr r1, granularity       ; AMI config: granularity|queue_base|queue_length
+//!   beq r2, zero, top
+//!   halt
+//! ```
+
+use std::collections::HashMap;
+use std::fmt;
+
+use super::asm::{Asm, AsmError};
+use super::inst::{CfgReg, Program, LINK, NUM_ARCH_REGS};
+use super::mem::{FAR_BASE, FAR_END, LOCAL_BASE, SPM_BASE, SPM_END};
+use crate::stats::Region;
+
+/// What went wrong, without the position (see [`ParseError`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParseErrorKind {
+    UnknownMnemonic(String),
+    UnknownDirective(String),
+    BadRegister(String),
+    /// Malformed immediate expression (bad literal, trailing operator,
+    /// division by zero).
+    BadImmediate(String),
+    WrongOperandCount { mnemonic: String, expected: &'static str, got: usize },
+    /// Memory operand that is not `off(reg)`.
+    BadAddressOperand(String),
+    BadCfgReg(String),
+    BadRegion(String),
+    /// `ld.`/`st.` size suffix other than 1/2/4/8.
+    BadSize(String),
+    DuplicateLabel(String),
+    UndefinedLabel(String),
+    DuplicateArg(String),
+    /// Unresolvable `$arg` or symbolic constant in an expression.
+    UnknownSymbol(String),
+    /// `aload`/`astore` rd aliasing an operand register (the ID-allocation
+    /// µop writes rd before the request µop reads rs1/rs2).
+    AliasedRequestRegs(String),
+    EmptyProgram,
+}
+
+impl fmt::Display for ParseErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use ParseErrorKind::*;
+        match self {
+            UnknownMnemonic(m) => write!(f, "unknown mnemonic '{m}'"),
+            UnknownDirective(d) => write!(f, "unknown directive '{d}'"),
+            BadRegister(r) => {
+                write!(f, "bad register '{r}' (expected r0..r63, zero, or ra)")
+            }
+            BadImmediate(e) => write!(f, "bad immediate expression '{e}'"),
+            WrongOperandCount { mnemonic, expected, got } => {
+                write!(f, "'{mnemonic}' expects operands `{expected}`, got {got}")
+            }
+            BadAddressOperand(a) => {
+                write!(f, "bad address operand '{a}' (expected off(reg), e.g. 8(r2))")
+            }
+            BadCfgReg(c) => write!(
+                f,
+                "bad AMI config register '{c}' (expected granularity, queue_base, \
+                 queue_length, or an index 0..=2)"
+            ),
+            BadRegion(r) => {
+                write!(f, "bad region '{r}' (expected main, scheduler, disambig, or setup)")
+            }
+            BadSize(m) => write!(f, "bad access size in '{m}' (expected .1/.2/.4/.8)"),
+            DuplicateLabel(l) => write!(f, "duplicate label '{l}'"),
+            UndefinedLabel(l) => write!(f, "undefined label '{l}'"),
+            DuplicateArg(a) => write!(f, "duplicate .arg '{a}'"),
+            UnknownSymbol(s) => write!(f, "unknown symbol '{s}'"),
+            AliasedRequestRegs(m) => {
+                write!(f, "'{m}': rd must not alias the spm/mem operand registers")
+            }
+            EmptyProgram => write!(f, "program contains no instructions"),
+        }
+    }
+}
+
+/// A parse failure at an exact source position (1-based line and column).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub kind: ParseErrorKind,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{}: {}", self.file, self.line, self.col, self.kind)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A parsed `.asm` file: the assembled program plus its header directives.
+#[derive(Debug, Clone)]
+pub struct ParsedProgram {
+    pub prog: Program,
+    /// `.arg name value` scalars, in declaration order.
+    pub args: Vec<(String, u64)>,
+    /// `.mem` memory-image words: `(byte address, u64 value)`.
+    pub mem: Vec<(u64, u64)>,
+    /// `.check` post-run assertions: `(byte address, expected u64)`.
+    pub checks: Vec<(u64, u64)>,
+}
+
+/// One source token with its 1-based column.
+struct Tok {
+    text: String,
+    col: u32,
+}
+
+/// Split a line into tokens on whitespace and commas; `;` and `#` start a
+/// comment. `off(base)` address operands survive as single tokens.
+fn tokenize(line: &str) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    let mut cur = String::new();
+    let mut start = 0u32;
+    for (i, ch) in line.chars().enumerate() {
+        if ch == ';' || ch == '#' {
+            break;
+        }
+        if ch.is_whitespace() || ch == ',' {
+            if !cur.is_empty() {
+                toks.push(Tok { text: std::mem::take(&mut cur), col: start });
+            }
+        } else {
+            if cur.is_empty() {
+                start = i as u32 + 1;
+            }
+            cur.push(ch);
+        }
+    }
+    if !cur.is_empty() {
+        toks.push(Tok { text: cur, col: start });
+    }
+    toks
+}
+
+/// Parse a u64 literal: decimal or `0x` hex, `_` separators allowed.
+fn parse_u64_lit(s: &str) -> Option<u64> {
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if let Some(hex) = cleaned.strip_prefix("0x").or_else(|| cleaned.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        cleaned.parse::<u64>().ok()
+    }
+}
+
+/// Expression lexemes: atoms separated by `+ - * /` operators.
+enum Lx {
+    Atom(String),
+    Op(char),
+}
+
+fn lex_expr(s: &str) -> Vec<Lx> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for ch in s.chars() {
+        if matches!(ch, '+' | '-' | '*' | '/') {
+            if !cur.is_empty() {
+                out.push(Lx::Atom(std::mem::take(&mut cur)));
+            }
+            out.push(Lx::Op(ch));
+        } else {
+            cur.push(ch);
+        }
+    }
+    if !cur.is_empty() {
+        out.push(Lx::Atom(cur));
+    }
+    out
+}
+
+struct Parser<'a> {
+    file: &'a str,
+    asm: Asm,
+    args: Vec<(String, u64)>,
+    mem: Vec<(u64, u64)>,
+    checks: Vec<(u64, u64)>,
+    /// Label definitions seen so far: name -> (line, col) of the definition.
+    defined: HashMap<String, (u32, u32)>,
+    /// Label references in source order: (name, line, col).
+    refs: Vec<(String, u32, u32)>,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, line: u32, col: u32, kind: ParseErrorKind) -> ParseError {
+        ParseError { file: self.file.to_string(), line, col, kind }
+    }
+
+    fn reg_str(&self, s: &str, line: u32, col: u32) -> Result<u8, ParseError> {
+        match s {
+            "zero" => return Ok(0),
+            "ra" => return Ok(LINK),
+            _ => {}
+        }
+        if let Some(num) = s.strip_prefix('r') {
+            if !num.is_empty() && num.bytes().all(|b| b.is_ascii_digit()) {
+                if let Ok(n) = num.parse::<usize>() {
+                    if n < NUM_ARCH_REGS {
+                        return Ok(n as u8);
+                    }
+                }
+            }
+        }
+        Err(self.err(line, col, ParseErrorKind::BadRegister(s.to_string())))
+    }
+
+    fn reg(&self, t: &Tok, line: u32) -> Result<u8, ParseError> {
+        self.reg_str(&t.text, line, t.col)
+    }
+
+    fn atom(&self, a: &str, line: u32, col: u32) -> Result<u64, ParseError> {
+        if let Some(name) = a.strip_prefix('$') {
+            return self
+                .args
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|&(_, v)| v)
+                .ok_or_else(|| self.err(line, col, ParseErrorKind::UnknownSymbol(a.to_string())));
+        }
+        if a.starts_with(|c: char| c.is_ascii_digit()) {
+            return parse_u64_lit(a)
+                .ok_or_else(|| self.err(line, col, ParseErrorKind::BadImmediate(a.to_string())));
+        }
+        match a {
+            "LOCAL_BASE" => Ok(LOCAL_BASE),
+            "FAR_BASE" => Ok(FAR_BASE),
+            "FAR_END" => Ok(FAR_END),
+            "SPM_BASE" => Ok(SPM_BASE),
+            "SPM_END" => Ok(SPM_END),
+            _ => Err(self.err(line, col, ParseErrorKind::UnknownSymbol(a.to_string()))),
+        }
+    }
+
+    /// `atom (('*'|'/') atom)*` — `*` and `/` bind tighter than `+`/`-`.
+    fn prod(
+        &self,
+        lex: &[Lx],
+        i: &mut usize,
+        whole: &str,
+        line: u32,
+        col: u32,
+    ) -> Result<u64, ParseError> {
+        let bad = || self.err(line, col, ParseErrorKind::BadImmediate(whole.to_string()));
+        let mut v = match lex.get(*i) {
+            Some(Lx::Atom(a)) => self.atom(a, line, col)?,
+            _ => return Err(bad()),
+        };
+        *i += 1;
+        while let Some(Lx::Op(op @ ('*' | '/'))) = lex.get(*i) {
+            let op = *op;
+            *i += 1;
+            let rhs = match lex.get(*i) {
+                Some(Lx::Atom(a)) => self.atom(a, line, col)?,
+                _ => return Err(bad()),
+            };
+            *i += 1;
+            v = if op == '*' {
+                v.wrapping_mul(rhs)
+            } else if rhs == 0 {
+                return Err(bad());
+            } else {
+                v / rhs
+            };
+        }
+        Ok(v)
+    }
+
+    /// Evaluate an immediate expression: `['-'] prod (('+'|'-') prod)*`,
+    /// wrapping u64 arithmetic (negatives are two's-complement).
+    fn eval_str(&self, s: &str, line: u32, col: u32) -> Result<u64, ParseError> {
+        let bad = || self.err(line, col, ParseErrorKind::BadImmediate(s.to_string()));
+        let lex = lex_expr(s);
+        let mut i = 0usize;
+        let neg = matches!(lex.first(), Some(Lx::Op('-')));
+        if neg {
+            i = 1;
+        }
+        let mut acc = self.prod(&lex, &mut i, s, line, col)?;
+        if neg {
+            acc = 0u64.wrapping_sub(acc);
+        }
+        while i < lex.len() {
+            let op = match lex[i] {
+                Lx::Op(op @ ('+' | '-')) => op,
+                _ => return Err(bad()),
+            };
+            i += 1;
+            let rhs = self.prod(&lex, &mut i, s, line, col)?;
+            acc = if op == '+' { acc.wrapping_add(rhs) } else { acc.wrapping_sub(rhs) };
+        }
+        Ok(acc)
+    }
+
+    fn expr(&self, t: &Tok, line: u32) -> Result<u64, ParseError> {
+        self.eval_str(&t.text, line, t.col)
+    }
+
+    fn imm(&self, t: &Tok, line: u32) -> Result<i64, ParseError> {
+        Ok(self.expr(t, line)? as i64)
+    }
+
+    /// `off(reg)` address operand; an empty offset means 0.
+    fn addr(&self, t: &Tok, line: u32) -> Result<(i64, u8), ParseError> {
+        let s = &t.text;
+        let bad = || self.err(line, t.col, ParseErrorKind::BadAddressOperand(s.clone()));
+        let open = s.find('(').ok_or_else(bad)?;
+        if !s.ends_with(')') || open + 2 > s.len() - 1 {
+            return Err(bad());
+        }
+        let off_s = &s[..open];
+        let reg_s = &s[open + 1..s.len() - 1];
+        let off =
+            if off_s.is_empty() { 0 } else { self.eval_str(off_s, line, t.col)? as i64 };
+        let base = self.reg_str(reg_s, line, t.col + open as u32 + 1)?;
+        Ok((off, base))
+    }
+
+    fn cfg_reg(&self, t: &Tok, line: u32) -> Result<CfgReg, ParseError> {
+        match t.text.as_str() {
+            "granularity" | "0" => Ok(CfgReg::Granularity),
+            "queue_base" | "1" => Ok(CfgReg::QueueBase),
+            "queue_length" | "2" => Ok(CfgReg::QueueLength),
+            _ => Err(self.err(line, t.col, ParseErrorKind::BadCfgReg(t.text.clone()))),
+        }
+    }
+
+    fn mem_size(&self, t: &Tok, line: u32) -> Result<u8, ParseError> {
+        match t.text[2..].strip_prefix('.') {
+            Some("1") => Ok(1),
+            Some("2") => Ok(2),
+            Some("4") => Ok(4),
+            Some("8") => Ok(8),
+            _ => Err(self.err(line, t.col, ParseErrorKind::BadSize(t.text.clone()))),
+        }
+    }
+
+    fn expect_ops<'t>(
+        &self,
+        m: &Tok,
+        ops: &'t [Tok],
+        n: usize,
+        expected: &'static str,
+        line: u32,
+    ) -> Result<&'t [Tok], ParseError> {
+        if ops.len() != n {
+            return Err(self.err(
+                line,
+                m.col,
+                ParseErrorKind::WrongOperandCount {
+                    mnemonic: m.text.clone(),
+                    expected,
+                    got: ops.len(),
+                },
+            ));
+        }
+        Ok(ops)
+    }
+
+    fn directive(&mut self, m: &Tok, ops: &[Tok], line: u32) -> Result<(), ParseError> {
+        match m.text.as_str() {
+            ".program" => {
+                // The name was applied by the pre-scan (first occurrence
+                // wins); here we only validate the operand count.
+                self.expect_ops(m, ops, 1, "name", line)?;
+            }
+            ".arg" => {
+                let o = self.expect_ops(m, ops, 2, "name value", line)?;
+                let name = o[0].text.clone();
+                if self.args.iter().any(|(n, _)| *n == name) {
+                    return Err(self.err(line, o[0].col, ParseErrorKind::DuplicateArg(name)));
+                }
+                let v = self.expr(&o[1], line)?;
+                self.args.push((name, v));
+            }
+            ".mem" => {
+                if ops.len() < 2 {
+                    return Err(self.err(
+                        line,
+                        m.col,
+                        ParseErrorKind::WrongOperandCount {
+                            mnemonic: m.text.clone(),
+                            expected: "addr value...",
+                            got: ops.len(),
+                        },
+                    ));
+                }
+                let base = self.expr(&ops[0], line)?;
+                for (i, v) in ops[1..].iter().enumerate() {
+                    let v = self.expr(v, line)?;
+                    self.mem.push((base.wrapping_add(8 * i as u64), v));
+                }
+            }
+            ".check" => {
+                let o = self.expect_ops(m, ops, 2, "addr value", line)?;
+                let addr = self.expr(&o[0], line)?;
+                let v = self.expr(&o[1], line)?;
+                self.checks.push((addr, v));
+            }
+            ".region" => {
+                let o = self.expect_ops(m, ops, 1, "main|scheduler|disambig|setup", line)?;
+                let r = match o[0].text.as_str() {
+                    "main" => Region::Main,
+                    "scheduler" => Region::Scheduler,
+                    "disambig" => Region::Disambig,
+                    "setup" => Region::Setup,
+                    other => {
+                        return Err(self.err(
+                            line,
+                            o[0].col,
+                            ParseErrorKind::BadRegion(other.to_string()),
+                        ))
+                    }
+                };
+                self.asm.region(r);
+            }
+            ".addr_taken" => {
+                let o = self.expect_ops(m, ops, 1, "label", line)?;
+                self.refs.push((o[0].text.clone(), line, o[0].col));
+                self.asm.mark_addr_taken(&o[0].text);
+            }
+            other => {
+                return Err(self.err(
+                    line,
+                    m.col,
+                    ParseErrorKind::UnknownDirective(other.to_string()),
+                ))
+            }
+        }
+        Ok(())
+    }
+
+    fn instruction(&mut self, m: &Tok, ops: &[Tok], line: u32) -> Result<(), ParseError> {
+        match m.text.as_str() {
+            "add" | "sub" | "xor" | "and" | "or" | "sll" | "srl" | "mul" | "sltu" => {
+                let o = self.expect_ops(m, ops, 3, "rd, rs1, rs2", line)?;
+                let rd = self.reg(&o[0], line)?;
+                let rs1 = self.reg(&o[1], line)?;
+                let rs2 = self.reg(&o[2], line)?;
+                match m.text.as_str() {
+                    "add" => self.asm.add(rd, rs1, rs2),
+                    "sub" => self.asm.sub(rd, rs1, rs2),
+                    "xor" => self.asm.xor(rd, rs1, rs2),
+                    "and" => self.asm.and(rd, rs1, rs2),
+                    "or" => self.asm.or(rd, rs1, rs2),
+                    "sll" => self.asm.sll(rd, rs1, rs2),
+                    "srl" => self.asm.srl(rd, rs1, rs2),
+                    "mul" => self.asm.mul(rd, rs1, rs2),
+                    _ => self.asm.sltu(rd, rs1, rs2),
+                };
+            }
+            "addi" | "xori" | "andi" | "ori" | "slli" | "srli" => {
+                let o = self.expect_ops(m, ops, 3, "rd, rs1, imm", line)?;
+                let rd = self.reg(&o[0], line)?;
+                let rs1 = self.reg(&o[1], line)?;
+                let imm = self.imm(&o[2], line)?;
+                match m.text.as_str() {
+                    "addi" => self.asm.addi(rd, rs1, imm),
+                    "xori" => self.asm.xori(rd, rs1, imm),
+                    "andi" => self.asm.andi(rd, rs1, imm),
+                    "ori" => self.asm.ori(rd, rs1, imm),
+                    "slli" => self.asm.slli(rd, rs1, imm),
+                    _ => self.asm.srli(rd, rs1, imm),
+                };
+            }
+            "li" => {
+                let o = self.expect_ops(m, ops, 2, "rd, imm|@label", line)?;
+                let rd = self.reg(&o[0], line)?;
+                if let Some(label) = o[1].text.strip_prefix('@') {
+                    if label.is_empty() {
+                        return Err(self.err(
+                            line,
+                            o[1].col,
+                            ParseErrorKind::BadImmediate(o[1].text.clone()),
+                        ));
+                    }
+                    self.refs.push((label.to_string(), line, o[1].col));
+                    self.asm.li_label(rd, label);
+                } else {
+                    let imm = self.imm(&o[1], line)?;
+                    self.asm.li(rd, imm);
+                }
+            }
+            "mv" => {
+                let o = self.expect_ops(m, ops, 2, "rd, rs", line)?;
+                let rd = self.reg(&o[0], line)?;
+                let rs = self.reg(&o[1], line)?;
+                self.asm.mv(rd, rs);
+            }
+            "beq" | "bne" | "blt" | "bge" | "bltu" => {
+                let o = self.expect_ops(m, ops, 3, "rs1, rs2, label", line)?;
+                let rs1 = self.reg(&o[0], line)?;
+                let rs2 = self.reg(&o[1], line)?;
+                let target = o[2].text.as_str();
+                self.refs.push((target.to_string(), line, o[2].col));
+                match m.text.as_str() {
+                    "beq" => self.asm.beq(rs1, rs2, target),
+                    "bne" => self.asm.bne(rs1, rs2, target),
+                    "blt" => self.asm.blt(rs1, rs2, target),
+                    "bge" => self.asm.bge(rs1, rs2, target),
+                    _ => self.asm.bltu(rs1, rs2, target),
+                };
+            }
+            "j" => {
+                let o = self.expect_ops(m, ops, 1, "label", line)?;
+                self.refs.push((o[0].text.clone(), line, o[0].col));
+                self.asm.j(&o[0].text);
+            }
+            "jal" => {
+                let o = self.expect_ops(m, ops, 2, "rd, label", line)?;
+                let rd = self.reg(&o[0], line)?;
+                self.refs.push((o[1].text.clone(), line, o[1].col));
+                self.asm.jal(rd, &o[1].text);
+            }
+            "jalr" => {
+                let o = self.expect_ops(m, ops, 2, "rd, rs1", line)?;
+                let rd = self.reg(&o[0], line)?;
+                let rs1 = self.reg(&o[1], line)?;
+                self.asm.jalr(rd, rs1);
+            }
+            "jr" => {
+                let o = self.expect_ops(m, ops, 1, "rs1", line)?;
+                let rs1 = self.reg(&o[0], line)?;
+                self.asm.jr(rs1);
+            }
+            "call" => {
+                let o = self.expect_ops(m, ops, 1, "label", line)?;
+                self.refs.push((o[0].text.clone(), line, o[0].col));
+                self.asm.call(&o[0].text);
+            }
+            "ret" => {
+                self.expect_ops(m, ops, 0, "", line)?;
+                self.asm.ret();
+            }
+            "prefetch" | "flush" => {
+                let o = self.expect_ops(m, ops, 1, "off(base)", line)?;
+                let (off, base) = self.addr(&o[0], line)?;
+                if m.text.as_str() == "prefetch" {
+                    self.asm.prefetch(base, off);
+                } else {
+                    self.asm.flush(base, off);
+                }
+            }
+            "aload" | "astore" => {
+                let o = self.expect_ops(m, ops, 3, "rd, spm, mem", line)?;
+                let rd = self.reg(&o[0], line)?;
+                let spm = self.reg(&o[1], line)?;
+                let mem = self.reg(&o[2], line)?;
+                if rd == spm || rd == mem {
+                    return Err(self.err(
+                        line,
+                        o[0].col,
+                        ParseErrorKind::AliasedRequestRegs(m.text.clone()),
+                    ));
+                }
+                if m.text.as_str() == "aload" {
+                    self.asm.aload(rd, spm, mem);
+                } else {
+                    self.asm.astore(rd, spm, mem);
+                }
+            }
+            "getfin" => {
+                let o = self.expect_ops(m, ops, 1, "rd", line)?;
+                let rd = self.reg(&o[0], line)?;
+                self.asm.getfin(rd);
+            }
+            "cfgwr" => {
+                let o = self.expect_ops(m, ops, 2, "rs1, cfg", line)?;
+                let rs1 = self.reg(&o[0], line)?;
+                let cfg = self.cfg_reg(&o[1], line)?;
+                self.asm.cfgwr(rs1, cfg);
+            }
+            "cfgrd" => {
+                let o = self.expect_ops(m, ops, 2, "rd, cfg", line)?;
+                let rd = self.reg(&o[0], line)?;
+                let cfg = self.cfg_reg(&o[1], line)?;
+                self.asm.cfgrd(rd, cfg);
+            }
+            "nop" => {
+                self.expect_ops(m, ops, 0, "", line)?;
+                self.asm.nop();
+            }
+            "halt" => {
+                self.expect_ops(m, ops, 0, "", line)?;
+                self.asm.halt();
+            }
+            "roi.begin" => {
+                self.expect_ops(m, ops, 0, "", line)?;
+                self.asm.roi_begin();
+            }
+            "roi.end" => {
+                self.expect_ops(m, ops, 0, "", line)?;
+                self.asm.roi_end();
+            }
+            t if t == "ld64" || t.starts_with("ld.") => {
+                let size = if t == "ld64" { 8 } else { self.mem_size(m, line)? };
+                let o = self.expect_ops(m, ops, 2, "rd, off(base)", line)?;
+                let rd = self.reg(&o[0], line)?;
+                let (off, base) = self.addr(&o[1], line)?;
+                self.asm.ld(rd, base, off, size);
+            }
+            t if t == "st64" || t.starts_with("st.") => {
+                let size = if t == "st64" { 8 } else { self.mem_size(m, line)? };
+                let o = self.expect_ops(m, ops, 2, "src, off(base)", line)?;
+                let src = self.reg(&o[0], line)?;
+                let (off, base) = self.addr(&o[1], line)?;
+                self.asm.st(src, base, off, size);
+            }
+            other => {
+                return Err(self.err(
+                    line,
+                    m.col,
+                    ParseErrorKind::UnknownMnemonic(other.to_string()),
+                ))
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse AMI assembly text into a [`ParsedProgram`]. `file` is used only
+/// for error positions; the program name is the `.program` directive or,
+/// absent one, `default_name`.
+pub fn parse_str(src: &str, file: &str, default_name: &str) -> Result<ParsedProgram, ParseError> {
+    // Pre-scan for the program name: Asm binds it at construction.
+    let mut name = default_name.to_string();
+    for line in src.lines() {
+        let toks = tokenize(line);
+        if toks.len() == 2 && toks[0].text == ".program" {
+            name = toks[1].text.clone();
+            break;
+        }
+    }
+
+    let mut p = Parser {
+        file,
+        asm: Asm::new(&name),
+        args: Vec::new(),
+        mem: Vec::new(),
+        checks: Vec::new(),
+        defined: HashMap::new(),
+        refs: Vec::new(),
+    };
+
+    for (ln0, line) in src.lines().enumerate() {
+        let ln = ln0 as u32 + 1;
+        let toks = tokenize(line);
+        let mut idx = 0usize;
+        while idx < toks.len() && toks[idx].text.len() > 1 && toks[idx].text.ends_with(':') {
+            let t = &toks[idx];
+            let lname = t.text[..t.text.len() - 1].to_string();
+            if p.defined.contains_key(&lname) {
+                return Err(p.err(ln, t.col, ParseErrorKind::DuplicateLabel(lname)));
+            }
+            p.defined.insert(lname.clone(), (ln, t.col));
+            p.asm.label(&lname);
+            idx += 1;
+        }
+        if idx >= toks.len() {
+            continue;
+        }
+        let (m, ops) = (&toks[idx], &toks[idx + 1..]);
+        if m.text.starts_with('.') {
+            p.directive(m, ops, ln)?;
+        } else {
+            p.instruction(m, ops, ln)?;
+        }
+    }
+
+    if p.asm.here() == 0 {
+        return Err(p.err(1, 1, ParseErrorKind::EmptyProgram));
+    }
+    for (lname, ln, col) in &p.refs {
+        if !p.defined.contains_key(lname) {
+            return Err(p.err(*ln, *col, ParseErrorKind::UndefinedLabel(lname.clone())));
+        }
+    }
+    let Parser { asm, args, mem, checks, file, .. } = p;
+    // All duplicate/undefined labels were reported above with positions;
+    // map any residual assembler error defensively (never panic).
+    let prog = asm.try_finish().map_err(|e| {
+        let kind = match e {
+            AsmError::DuplicateLabel { label, .. } => ParseErrorKind::DuplicateLabel(label),
+            AsmError::UndefinedLabel { label, .. } => ParseErrorKind::UndefinedLabel(label),
+        };
+        ParseError { file: file.to_string(), line: 1, col: 1, kind }
+    })?;
+    Ok(ParsedProgram { prog, args, mem, checks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::inst::Opcode;
+
+    fn parse(src: &str) -> ParsedProgram {
+        parse_str(src, "<test>", "t").unwrap()
+    }
+
+    #[test]
+    fn text_matches_builder_encoding() {
+        let p = parse(
+            "top: addi r1, r1, 1\n\
+             ld.4 r2, 8(r1)\n\
+             st64 r2, 0(r1)\n\
+             bne r1, zero, top\n\
+             halt\n",
+        );
+        let mut a = Asm::new("t");
+        a.label("top");
+        a.addi(1, 1, 1);
+        a.ld(2, 1, 8, 4);
+        a.st64(2, 1, 0);
+        a.bne(1, 0, "top");
+        a.halt();
+        let b = a.finish();
+        assert_eq!(p.prog.insts, b.insts);
+        assert_eq!(p.prog.labels, b.labels);
+    }
+
+    #[test]
+    fn expressions_and_args_evaluate() {
+        let p = parse(
+            ".arg n 64\n\
+             .mem FAR_BASE+8 1 2\n\
+             .check LOCAL_BASE $n*2-1\n\
+             li r1, FAR_BASE+$n*8\n\
+             li r2, -4\n\
+             li r3, $n/4\n\
+             halt\n",
+        );
+        assert_eq!(p.args, vec![("n".to_string(), 64)]);
+        assert_eq!(p.mem, vec![(FAR_BASE + 8, 1), (FAR_BASE + 16, 2)]);
+        assert_eq!(p.checks, vec![(LOCAL_BASE, 127)]);
+        assert_eq!(p.prog.insts[0].imm, (FAR_BASE + 512) as i64);
+        assert_eq!(p.prog.insts[1].imm, -4);
+        assert_eq!(p.prog.insts[2].imm, 16);
+    }
+
+    #[test]
+    fn li_label_and_addr_taken_resolve() {
+        let p = parse(
+            ".addr_taken task\n\
+             li r1, @task\n\
+             jalr r0, r1\n\
+             task: halt\n",
+        );
+        assert_eq!(p.prog.insts[0].op, Opcode::Li);
+        assert_eq!(p.prog.insts[0].imm, 2);
+        assert_eq!(p.prog.addr_taken, vec![2]);
+    }
+
+    #[test]
+    fn ami_forms_parse() {
+        let p = parse(
+            "li r1, 8\n\
+             cfgwr r1, granularity\n\
+             cfgrd r2, 2\n\
+             aload r3, r4, r5\n\
+             astore r6, r4, r5\n\
+             getfin r7\n\
+             halt\n",
+        );
+        assert_eq!(p.prog.insts[1].op, Opcode::CfgWr);
+        assert_eq!(p.prog.insts[1].imm, CfgReg::Granularity as i64);
+        assert_eq!(p.prog.insts[2].imm, CfgReg::QueueLength as i64);
+        assert_eq!(p.prog.insts[3].op, Opcode::ALoad);
+        assert_eq!(p.prog.insts[4].op, Opcode::AStore);
+    }
+
+    #[test]
+    fn program_directive_names_the_program() {
+        let p = parse(".program foo\nnop\nhalt\n");
+        assert_eq!(p.prog.name, "foo");
+        let q = parse("nop\nhalt\n");
+        assert_eq!(q.prog.name, "t");
+    }
+
+    #[test]
+    fn error_positions_are_exact() {
+        let e = parse_str("nop\n  frobnicate r1\n", "f.asm", "t").unwrap_err();
+        assert_eq!((e.line, e.col), (2, 3));
+        assert_eq!(e.kind, ParseErrorKind::UnknownMnemonic("frobnicate".to_string()));
+        assert_eq!(e.to_string(), "f.asm:2:3: unknown mnemonic 'frobnicate'");
+    }
+}

@@ -12,9 +12,19 @@
 //!             (writes BENCH_PR9.json)
 //!   check   — static-verify guest programs (isa::verify) without
 //!             simulating; prints the AMIxxx diagnostics table
+//!   disasm  — emit a built-in benchmark program (or a loaded .asm file)
+//!             in the text assembly format (round-trips through `isa::parse`)
 //!   list    — enumerate benchmarks, configuration presets, backends,
 //!             policies, and metric columns
 //!   payload — smoke-test the PJRT payload engine (artifacts/)
+//!
+//! External programs (`--program <file.asm>`, repeatable): `run`, `sweep`,
+//! and `check` load text-format AMI assembly files (see README "External
+//! AMI programs" and `examples/asm/`). A loaded program passes the same
+//! `isa::verify` deny gate as the built-ins and registers under its
+//! `.program` name as a first-class benchmark; sweep cache fingerprints
+//! fold in the file's content hash so an edited program never reuses a
+//! stale cache.
 //!
 //! Far-memory backends (`--backend`): every command that simulates far
 //! memory accepts a backend selecting the data-plane model — `serial-link`
@@ -73,7 +83,7 @@
 
 use amu_sim::config::SimConfig;
 use amu_sim::report;
-use amu_sim::session::{metrics, RunRequest, Selection, Session, SweepGrid, VariantSel};
+use amu_sim::session::{metrics, RunRequest, Selection, Session, SweepGrid, VariantSel, Workload};
 use amu_sim::util::cli::{self, flag, opt, Spec, Validate};
 use amu_sim::workloads::{self, Scale};
 
@@ -142,6 +152,11 @@ const O_COLUMNS: Spec = opt(
     "emit a column-selected CSV: core|backend|all|<comma-list> (see `list`)",
 )
 .aliases(&["cols"]);
+const O_PROGRAM: Spec = opt(
+    "program",
+    "file.asm",
+    "load an external AMI assembly program (repeatable; see README \"External AMI programs\")",
+);
 const O_VARIANT: Spec =
     opt("variant", "sel", "auto|sync|amu|llvm|gp<N>|pf<N>[-<D>] (default: auto per config)");
 const O_SCALE: Spec = opt("scale", "test|paper", "workload scale (default: test)");
@@ -168,6 +183,7 @@ const F_VERBOSE: Spec = flag("verbose", "also print info-level diagnostics");
 
 const RUN_SPECS: &[Spec] = &[
     O_BENCH,
+    O_PROGRAM,
     O_CONFIG,
     O_LATENCY,
     O_BACKEND,
@@ -183,6 +199,7 @@ const RUN_SPECS: &[Spec] = &[
 
 const SWEEP_SPECS: &[Spec] = &[
     O_BENCHES,
+    O_PROGRAM,
     O_CONFIGS,
     O_LATENCIES,
     O_VARIANT,
@@ -216,7 +233,9 @@ const MTRUN_SPECS: &[Spec] = &[
 const BENCH_SPECS: &[Spec] = &[O_OUT, F_NO_FF, F_QUIET];
 
 const CHECK_SPECS: &[Spec] =
-    &[O_BENCH, O_VARIANT, O_SCALE, O_FORMAT, F_ALL, F_DENY_WARNINGS, F_VERBOSE];
+    &[O_BENCH, O_PROGRAM, O_VARIANT, O_SCALE, O_FORMAT, F_ALL, F_DENY_WARNINGS, F_VERBOSE];
+
+const DISASM_SPECS: &[Spec] = &[O_BENCH, O_PROGRAM, O_VARIANT, O_SCALE, O_OUT];
 
 const REPORT_SPECS: &[Spec] = &[
     O_SCALE,
@@ -283,9 +302,26 @@ fn parse_columns(args: &cli::Args) -> Result<Option<Selection>, String> {
     args.get("columns").map(|s| Selection::parse(s)).transpose()
 }
 
+/// Load every `--program <file.asm>` given on the command line through the
+/// verify-gated loader, returning the registered handles in argv order.
+/// Parse errors surface as `file:line:col: ...`, deny-level verifier
+/// findings as the AMIxxx summary — never a panic or a silent skip.
+fn load_programs(
+    args: &cli::Args,
+) -> Result<Vec<&'static amu_sim::session::LoadedProgram>, String> {
+    args.get_all("program")
+        .into_iter()
+        .map(|p| amu_sim::session::programs::load_file(p).map_err(|e| e.to_string()))
+        .collect()
+}
+
 fn cmd_run(argv: &[String]) -> Result<(), String> {
     let Some(args) = parse_cmd("amu-sim run", argv, RUN_SPECS)? else { return Ok(()) };
-    let bench = args.get_str("bench", "gups");
+    let programs = load_programs(&args)?;
+    // `--program x.asm` without `--bench` runs the loaded file; the
+    // historical default (gups) only applies when nothing was loaded.
+    let default_bench = programs.first().map(|p| p.name()).unwrap_or("gups");
+    let bench = args.get_str("bench", default_bench);
     let config = args.get_str("config", "baseline");
     let latency = args.get_f64("latency-ns", 1000.0).map_err(|e| e.to_string())?;
     let scale = parse_scale(&args.get_str("scale", "test"))?;
@@ -348,9 +384,25 @@ fn cmd_run(argv: &[String]) -> Result<(), String> {
 fn cmd_sweep(argv: &[String]) -> Result<(), String> {
     let Some(args) = parse_cmd("amu-sim sweep", argv, SWEEP_SPECS)? else { return Ok(()) };
     let scale = parse_scale(&args.get_str("scale", "test"))?;
+    let programs = load_programs(&args)?;
     let mut grid = SweepGrid::paper(scale);
     if let Some(s) = args.get("benches") {
         grid.benches = split_list(s);
+    } else if !programs.is_empty() {
+        // `--program` without `--benches` sweeps just the loaded files
+        // (sweeping the full built-in grid too would be surprising).
+        grid.benches = programs.iter().map(|p| p.name().to_string()).collect();
+    }
+    if !programs.is_empty() {
+        // Loaded programs that the grid actually sweeps refine the cache
+        // fingerprint with their content hash: editing the .asm forks the
+        // cache file instead of resurrecting stale rows.
+        let swept: Vec<(String, u64)> = programs
+            .iter()
+            .filter(|p| grid.benches.iter().any(|b| b == p.name()))
+            .map(|p| (p.name().to_string(), p.fingerprint()))
+            .collect();
+        grid = grid.programs(swept);
     }
     if let Some(s) = args.get("configs") {
         grid.configs = split_list(s);
@@ -582,10 +634,22 @@ fn cmd_check(argv: &[String]) -> Result<(), String> {
     if !matches!(format.as_str(), "table" | "json" | "sarif") {
         return Err(format!("unknown format '{format}' (valid: table, json, sarif)"));
     }
+    // `--program <file.asm>` verifies external files standalone: parsed
+    // (typed file:line:col errors) but NOT registered or deny-gated — the
+    // whole point of `check` is to see the full report, including the
+    // findings that would refuse a `run`-path registration.
+    let program_files = args.get_all("program");
+    let mut outcomes = Vec::new();
+    for path in &program_files {
+        let (name, prog) = amu_sim::session::programs::parse_for_check(path)
+            .map_err(|e| e.to_string())?;
+        outcomes.push((format!("{name}/asm"), amu_sim::isa::verify(&prog)));
+    }
     let benches: Vec<&'static dyn Workload> = match args.get("bench") {
         Some(name) => vec![registry::find_or_err(&name).map_err(|e| e.to_string())?],
         None if args.has_flag("all") => registry::REGISTRY.to_vec(),
-        None => return Err("pass --bench <name> or --all".into()),
+        None if !program_files.is_empty() => Vec::new(),
+        None => return Err("pass --bench <name>, --all, or --program <file.asm>".into()),
     };
     let variant_filter = match args.get("variant") {
         Some(s) => Some(s.parse::<Variant>()?),
@@ -600,7 +664,6 @@ fn cmd_check(argv: &[String]) -> Result<(), String> {
         VariantKind::GroupPrefetch => Variant::GroupPrefetch(16),
         VariantKind::SwPrefetch => Variant::SwPrefetch { batch: 16, depth: 2 },
     };
-    let mut outcomes = Vec::new();
     for w in &benches {
         let variants: Vec<Variant> = match variant_filter {
             Some(v) => {
@@ -641,6 +704,53 @@ fn cmd_check(argv: &[String]) -> Result<(), String> {
             "check failed: {deny} deny-level and {warn} warn-level finding(s){}",
             if deny_warnings { " (--deny-warnings)" } else { "" }
         ));
+    }
+    Ok(())
+}
+
+/// `amu-sim disasm`: emit a benchmark's program in the text assembly
+/// format (the `isa::parse` grammar — the output reassembles to an
+/// identical `Program`). Works for built-ins (`--bench`, optionally
+/// `--variant`/`--scale` to pick the concrete instance) and for loaded
+/// `.asm` files (`--program`), which round-trips the canonical form.
+fn cmd_disasm(argv: &[String]) -> Result<(), String> {
+    use amu_sim::session::registry;
+    use amu_sim::workloads::{Variant, VariantKind};
+    let Some(args) = parse_cmd("amu-sim disasm", argv, DISASM_SPECS)? else { return Ok(()) };
+    let scale = parse_scale(&args.get_str("scale", "test"))?;
+    let programs = load_programs(&args)?;
+    let bench = match args.get("bench") {
+        Some(b) => b.to_string(),
+        None => match programs.first() {
+            Some(p) => p.name().to_string(),
+            None => return Err("pass --bench <name> or --program <file.asm>".into()),
+        },
+    };
+    let w = registry::find_or_err(&bench).map_err(|e| e.to_string())?;
+    // AMI-only programs don't implement sync: default to the first
+    // variant the benchmark actually supports.
+    let default_variant =
+        if w.supported_variants().contains(&VariantKind::Sync) { "sync" } else { "amu" };
+    let v: Variant = args.get_str("variant", default_variant).parse()?;
+    if !w.supported_variants().contains(&v.kind()) {
+        return Err(format!(
+            "benchmark '{}' does not support variant '{}'",
+            w.name(),
+            v.tag()
+        ));
+    }
+    let cfg = match v.kind() {
+        VariantKind::Amu | VariantKind::AmuLlvm => SimConfig::amu(),
+        _ => SimConfig::baseline(),
+    };
+    let spec = w.build(&cfg, v, scale);
+    let text = amu_sim::isa::disasm(&spec.prog);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text).map_err(|e| format!("{path}: {e}"))?;
+            eprintln!("[disasm] wrote {path}");
+        }
+        None => print!("{text}"),
     }
     Ok(())
 }
@@ -766,6 +876,7 @@ fn main() {
         Some("mtrun") => cmd_mtrun(&argv[1..]),
         Some("bench") => cmd_bench(&argv[1..]),
         Some("check") => cmd_check(&argv[1..]),
+        Some("disasm") => cmd_disasm(&argv[1..]),
         Some("report") => cmd_report(&argv[1..]),
         Some("payload") => cmd_payload(),
         Some("list") => {
@@ -793,13 +904,16 @@ fn main() {
         }
         _ => {
             eprintln!("amu-sim {} — AMU paper reproduction", amu_sim::version());
-            eprintln!("usage: amu-sim <run|sweep|mtrun|bench|check|report|payload|list> [options]");
+            eprintln!(
+                "usage: amu-sim <run|sweep|mtrun|bench|check|disasm|report|payload|list> [options]"
+            );
             eprintln!("(every subcommand also accepts --help)");
             eprintln!("{}", cli::usage("amu-sim run", RUN_SPECS));
             eprintln!("{}", cli::usage("amu-sim sweep", SWEEP_SPECS));
             eprintln!("{}", cli::usage("amu-sim mtrun", MTRUN_SPECS));
             eprintln!("{}", cli::usage("amu-sim bench", BENCH_SPECS));
             eprintln!("{}", cli::usage("amu-sim check", CHECK_SPECS));
+            eprintln!("{}", cli::usage("amu-sim disasm", DISASM_SPECS));
             eprintln!("{}", cli::usage("amu-sim report <kind>", REPORT_SPECS));
             eprintln!(
                 "reports: fig2 fig3 fig8 fig9 fig10 fig11 table4 table5 table6 headline sweep \

@@ -87,6 +87,13 @@ pub struct SweepGrid {
     /// way share one cache entry, and the determinism suite holds the
     /// CSVs byte-identical across the toggle.
     pub fast_forward: bool,
+    /// Externally loaded `.asm` programs swept by this grid:
+    /// `(program name, source-content FNV fingerprint)`. Empty for
+    /// builtin-only grids (which keeps every pre-existing fingerprint
+    /// valid); when non-empty the content fingerprints are folded into
+    /// [`fingerprint`](Self::fingerprint) so a cached row can never
+    /// survive an edit to the `.asm` file it was simulated from.
+    pub programs: Vec<(String, u64)>,
     pub scale: Scale,
 }
 
@@ -103,6 +110,7 @@ impl SweepGrid {
             near_capacity_lines: 0,
             qos_policy: QosPolicyKind::default().tag().to_string(),
             fast_forward: true,
+            programs: Vec::new(),
             scale,
         }
     }
@@ -193,6 +201,18 @@ impl SweepGrid {
     /// `0` (the default) keeps the legacy `near_frac` coin-flip model.
     pub fn near_capacity(mut self, lines: usize) -> Self {
         self.near_capacity_lines = lines;
+        self
+    }
+
+    /// Record the external `.asm` programs this grid sweeps as
+    /// `(name, content fingerprint)` pairs (see
+    /// [`LoadedProgram::fingerprint`](crate::session::programs::LoadedProgram::fingerprint)).
+    /// Program *content* then participates in the grid fingerprint.
+    pub fn programs<I>(mut self, programs: I) -> Self
+    where
+        I: IntoIterator<Item = (String, u64)>,
+    {
+        self.programs = programs.into_iter().collect();
         self
     }
 
@@ -344,6 +364,22 @@ impl SweepGrid {
             h.write(&[0xFB]);
             h.write(b"qos_policy=");
             h.write(self.qos_policy.as_bytes());
+        }
+        // External `.asm` program content: empty for builtin-only grids
+        // (every fingerprint minted before the loader existed stays
+        // valid); sorted by name so registration order can't fork the
+        // hash; the content fingerprint means editing the file's bytes
+        // invalidates its cached rows.
+        if !self.programs.is_empty() {
+            let mut programs = self.programs.clone();
+            programs.sort();
+            h.write(&[0xFA]);
+            h.write(b"programs=");
+            for (name, fp) in &programs {
+                h.write(name.as_bytes());
+                h.write(&[0xFF]);
+                h.write(&fp.to_le_bytes());
+            }
         }
         h.finish()
     }
@@ -623,6 +659,27 @@ mod tests {
             SweepGrid::paper(Scale::Test).backend("pooled").qos_policy("prio").fingerprint(),
             prio.fingerprint()
         );
+    }
+
+    #[test]
+    fn program_content_refines_the_fingerprint() {
+        // No programs: identical to a grid minted before the loader
+        // existed — the axis is invisible.
+        let base = SweepGrid::paper(Scale::Test);
+        let empty = SweepGrid::paper(Scale::Test).programs([]);
+        assert_eq!(base, empty);
+        assert_eq!(base.fingerprint(), empty.fingerprint());
+        // A program forks the fingerprint; changed content forks it again.
+        let v1 = SweepGrid::paper(Scale::Test).programs([("pchase".to_string(), 0x1111)]);
+        let v2 = SweepGrid::paper(Scale::Test).programs([("pchase".to_string(), 0x2222)]);
+        assert_ne!(base.fingerprint(), v1.fingerprint());
+        assert_ne!(v1.fingerprint(), v2.fingerprint());
+        // Registration order doesn't matter: the fold is name-sorted.
+        let ab = SweepGrid::paper(Scale::Test)
+            .programs([("a".to_string(), 1), ("b".to_string(), 2)]);
+        let ba = SweepGrid::paper(Scale::Test)
+            .programs([("b".to_string(), 2), ("a".to_string(), 1)]);
+        assert_eq!(ab.fingerprint(), ba.fingerprint());
     }
 
     #[test]

@@ -6,6 +6,10 @@
 //! * [`registry`] — the [`Workload`](registry::Workload) trait and the
 //!   benchmark registry (typed lookup instead of a panic-on-unknown string
 //!   `match`).
+//! * [`programs`] — the external-program loader behind `--program
+//!   <file.asm>`: text-format AMI assembly parsed by `isa::parse`,
+//!   verified by the same gate as the builtins, registered as a
+//!   first-class [`Workload`](registry::Workload).
 //! * [`request`] — the [`RunRequest`] builder: bench/config/variant/latency
 //!   combinations validated at construction, every failure a
 //!   [`SessionError`] naming the valid choices.
@@ -70,6 +74,7 @@ pub mod cache;
 pub mod executor;
 pub mod grid;
 pub mod metrics;
+pub mod programs;
 pub mod registry;
 pub mod request;
 pub mod tenancy;
@@ -77,6 +82,7 @@ pub mod tenancy;
 pub use executor::Session;
 pub use grid::{SweepGrid, VariantSel, PAPER_CONFIGS};
 pub use metrics::{MetricSet, Selection};
+pub use programs::{LoadedProgram, ProgramError};
 pub use registry::Workload;
 pub use request::{RunRequest, RunRequestBuilder, SessionError};
 pub use tenancy::{MtOutcome, MtRequest, MtRow, TenantSpec};

@@ -1,0 +1,312 @@
+//! Loader for external `.asm` AMI programs (`amu-sim run/sweep/check
+//! --program <file.asm>`).
+//!
+//! A loaded program is a first-class [`Workload`]: it parses through
+//! `isa::parse`, passes the exact `isa::verify` gate the built-in
+//! benchmarks pass (deny-level AMIxxx findings refuse registration), and
+//! then registers into a dynamic registry that `session::registry::find`
+//! consults alongside the static one — `run`, `sweep`, `mtrun` tenant
+//! specs, and `check` all resolve it by name from that point on.
+//!
+//! The `.arg`/`.mem`/`.check` header directives become the workload's
+//! setup and validation closures: `.mem` words are written into guest
+//! memory before the run, `.check` assertions are compared after it.
+//! Each program also carries an FNV-1a fingerprint of its source bytes;
+//! `SweepGrid` folds it into the sweep fingerprint so a cache entry can
+//! never survive an edit to the file it was simulated from.
+
+use std::fmt;
+use std::path::Path;
+use std::sync::{Mutex, OnceLock};
+
+use crate::config::SimConfig;
+use crate::isa::parse::{self, ParseError};
+use crate::isa::Program;
+use crate::session::registry::{self, Workload};
+use crate::util::Fnv;
+use crate::workloads::{Scale, Variant, VariantKind, WorkloadSpec};
+
+/// Why a `.asm` file could not be loaded.
+#[derive(Debug)]
+pub enum ProgramError {
+    /// The file could not be read.
+    Io { path: String, msg: String },
+    /// The text failed to parse (typed, with `file:line:col`).
+    Parse(ParseError),
+    /// The program parsed but has deny-level verifier findings (AMIxxx).
+    Verify(String),
+    /// The `.program` name collides with a built-in benchmark.
+    ShadowsBuiltin(String),
+}
+
+impl fmt::Display for ProgramError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProgramError::Io { path, msg } => write!(f, "{path}: {msg}"),
+            ProgramError::Parse(e) => write!(f, "{e}"),
+            ProgramError::Verify(e) => write!(f, "{e}"),
+            ProgramError::ShadowsBuiltin(name) => {
+                write!(f, "program name '{name}' shadows a built-in benchmark")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProgramError {}
+
+/// Variants an external program can run under. Programs that issue AMI
+/// instructions need the AMU datapath: under an `amu.enabled = false`
+/// config the ID-allocation µop would wait forever on a unit that never
+/// ticks, so such programs only advertise the AMU variants and a
+/// `--config baseline` request fails with the typed `UnsupportedVariant`
+/// error instead of hanging.
+const AMI_VARIANTS: &[VariantKind] = &[VariantKind::Amu, VariantKind::AmuLlvm];
+const SYNC_VARIANTS: &[VariantKind] =
+    &[VariantKind::Sync, VariantKind::Amu, VariantKind::AmuLlvm];
+
+/// A verified external program registered as a [`Workload`].
+pub struct LoadedProgram {
+    name: &'static str,
+    path: String,
+    prog: Program,
+    mem: Vec<(u64, u64)>,
+    checks: Vec<(u64, u64)>,
+    uses_ami: bool,
+    fingerprint: u64,
+}
+
+impl LoadedProgram {
+    /// FNV-1a fingerprint of the source bytes (folded into sweep
+    /// fingerprints via [`SweepGrid::programs`](crate::session::SweepGrid::programs)).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// The file the program was loaded from (display only).
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+impl Workload for LoadedProgram {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// External programs are config-agnostic: the instruction stream is
+    /// fixed by the file, only the timing model varies, so `variant` and
+    /// `scale` are accepted for interface parity and ignored.
+    fn build(&self, _cfg: &SimConfig, _variant: Variant, _scale: Scale) -> WorkloadSpec {
+        let mem = self.mem.clone();
+        let checks = self.checks.clone();
+        WorkloadSpec {
+            name: self.name.to_string(),
+            prog: self.prog.clone(),
+            setup: Box::new(move |sim| {
+                for &(addr, v) in &mem {
+                    sim.guest.write_u64(addr, v);
+                }
+            }),
+            validate: Box::new(move |sim| {
+                for &(addr, want) in &checks {
+                    let got = sim.guest.read_u64(addr);
+                    if got != want {
+                        return Err(format!(
+                            ".check failed at {addr:#x}: got {got}, want {want}"
+                        ));
+                    }
+                }
+                Ok(())
+            }),
+        }
+    }
+
+    fn supported_variants(&self) -> &'static [VariantKind] {
+        if self.uses_ami {
+            AMI_VARIANTS
+        } else {
+            SYNC_VARIANTS
+        }
+    }
+}
+
+fn store() -> &'static Mutex<Vec<&'static LoadedProgram>> {
+    static LOADED: OnceLock<Mutex<Vec<&'static LoadedProgram>>> = OnceLock::new();
+    LOADED.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Look a loaded program up by name.
+pub fn find(name: &str) -> Option<&'static LoadedProgram> {
+    store().lock().unwrap().iter().copied().find(|p| p.name == name)
+}
+
+/// Names of all loaded programs, in load order.
+pub fn names() -> Vec<&'static str> {
+    store().lock().unwrap().iter().map(|p| p.name).collect()
+}
+
+fn content_fingerprint(src: &str) -> u64 {
+    let mut h = Fnv::new();
+    h.write(src.as_bytes());
+    h.finish()
+}
+
+/// Parse a `.asm` file without registering it — the `check --program`
+/// path, which wants the full verifier report (including deny findings
+/// that [`load_file`] would refuse). Returns the program name and the
+/// assembled program.
+pub fn parse_for_check(path: &str) -> Result<(String, Program), ProgramError> {
+    let src = read(path)?;
+    let parsed = parse::parse_str(&src, path, &stem(path)).map_err(ProgramError::Parse)?;
+    Ok((parsed.prog.name.clone(), parsed.prog))
+}
+
+/// Load, verify, and register a `.asm` program file. Idempotent: loading
+/// a byte-identical file again returns the existing registration; loading
+/// a changed file under the same name replaces it (latest wins).
+pub fn load_file(path: &str) -> Result<&'static LoadedProgram, ProgramError> {
+    let src = read(path)?;
+    load_str(&src, path)
+}
+
+/// [`load_file`] over in-memory source; `path` is used for error
+/// positions and the default program name (its file stem).
+pub fn load_str(src: &str, path: &str) -> Result<&'static LoadedProgram, ProgramError> {
+    let parsed = parse::parse_str(src, path, &stem(path)).map_err(ProgramError::Parse)?;
+    let name = parsed.prog.name.clone();
+    if registry::find_builtin(&name).is_some() {
+        return Err(ProgramError::ShadowsBuiltin(name));
+    }
+    let fingerprint = content_fingerprint(src);
+    if let Some(existing) = find(&name) {
+        if existing.fingerprint == fingerprint {
+            return Ok(existing);
+        }
+    }
+    let uses_ami = parsed.prog.insts.iter().any(|i| i.is_ami());
+    let lp = LoadedProgram {
+        name: Box::leak(name.clone().into_boxed_str()),
+        path: path.to_string(),
+        prog: parsed.prog,
+        mem: parsed.mem,
+        checks: parsed.checks,
+        uses_ami,
+        fingerprint,
+    };
+    // Same deny gate as the builtins: build the spec and run it through
+    // the memoized verifier before the name becomes resolvable.
+    let spec = lp.build(&SimConfig::baseline(), Variant::Sync, Scale::Test);
+    spec.verify_ok().map_err(ProgramError::Verify)?;
+    let lp: &'static LoadedProgram = Box::leak(Box::new(lp));
+    let mut v = store().lock().unwrap();
+    match v.iter_mut().find(|p| p.name == lp.name) {
+        Some(slot) => *slot = lp,
+        None => v.push(lp),
+    }
+    Ok(lp)
+}
+
+fn read(path: &str) -> Result<String, ProgramError> {
+    std::fs::read_to_string(path)
+        .map_err(|e| ProgramError::Io { path: path.to_string(), msg: e.to_string() })
+}
+
+fn stem(path: &str) -> String {
+    Path::new(path)
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "program".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "\
+.program tprog_good
+.mem FAR_BASE 7
+.check LOCAL_BASE 7
+  li r1, FAR_BASE
+  ld.8 r2, 0(r1)
+  li r3, LOCAL_BASE
+  st.8 r2, 0(r3)
+  halt
+";
+
+    #[test]
+    fn load_verify_and_find() {
+        let lp = load_str(GOOD, "tprog_good.asm").expect("loads clean");
+        assert_eq!(lp.name(), "tprog_good");
+        assert!(!lp.uses_ami);
+        assert_eq!(lp.supported_variants(), SYNC_VARIANTS);
+        assert!(find("tprog_good").is_some());
+        // Idempotent: same bytes return the same registration.
+        let again = load_str(GOOD, "tprog_good.asm").unwrap();
+        assert_eq!(again.fingerprint(), lp.fingerprint());
+        // Resolvable through the merged registry lookup.
+        assert!(registry::find("tprog_good").is_some());
+    }
+
+    #[test]
+    fn changed_bytes_replace_and_refingerprint() {
+        let v1 = "\n.program tprog_edit\n  nop\n  halt\n";
+        let v2 = "\n.program tprog_edit\n  nop\n  nop\n  halt\n";
+        let a = load_str(v1, "tprog_edit.asm").unwrap().fingerprint();
+        let b = load_str(v2, "tprog_edit.asm").unwrap().fingerprint();
+        assert_ne!(a, b, "content fingerprint must fork on a byte change");
+        assert_eq!(find("tprog_edit").unwrap().fingerprint(), b, "latest wins");
+    }
+
+    #[test]
+    fn ami_programs_advertise_amu_variants_only() {
+        let src = "\
+.program tprog_ami
+  li r1, 8
+  cfgwr r1, granularity
+  li r2, SPM_BASE
+  li r3, FAR_BASE
+  aload r4, r2, r3
+w: getfin r5
+  beq r5, zero, w
+  halt
+";
+        let lp = load_str(src, "tprog_ami.asm").expect("verifies clean");
+        assert!(lp.uses_ami);
+        assert_eq!(lp.supported_variants(), AMI_VARIANTS);
+    }
+
+    #[test]
+    fn deny_findings_refuse_registration() {
+        // aload without any reachable getfin: AMI010-family deny finding.
+        let src = "\
+.program tprog_bad
+  li r1, 8
+  cfgwr r1, granularity
+  li r2, SPM_BASE
+  li r3, FAR_BASE
+  aload r4, r2, r3
+  halt
+";
+        let e = load_str(src, "tprog_bad.asm").unwrap_err();
+        assert!(matches!(e, ProgramError::Verify(_)), "{e}");
+        assert!(e.to_string().contains("AMI"), "{e}");
+        assert!(find("tprog_bad").is_none(), "rejected programs must not register");
+    }
+
+    #[test]
+    fn builtin_names_cannot_be_shadowed() {
+        let e = load_str(".program gups\n  nop\n  halt\n", "gups.asm").unwrap_err();
+        assert!(matches!(e, ProgramError::ShadowsBuiltin(_)), "{e}");
+    }
+
+    #[test]
+    fn parse_errors_carry_position() {
+        let e = load_str("  bogus r1\n", "x.asm").unwrap_err();
+        match e {
+            ProgramError::Parse(p) => {
+                assert_eq!((p.line, p.col), (1, 3));
+            }
+            other => panic!("expected parse error, got {other}"),
+        }
+    }
+}

@@ -67,9 +67,17 @@ workload_entry!(Stream, "stream", stream, ALL_VARIANT_KINDS);
 pub static REGISTRY: &[&dyn Workload] =
     &[&Bfs, &Bs, &Gups, &Hj, &Ht, &Hpcg, &Is, &Ll, &Redis, &Sl, &Stream];
 
-/// Look a benchmark up by name.
-pub fn find(name: &str) -> Option<&'static dyn Workload> {
+/// Look a *built-in* benchmark up by name (static registry only).
+pub fn find_builtin(name: &str) -> Option<&'static dyn Workload> {
     REGISTRY.iter().copied().find(|w| w.name() == name)
+}
+
+/// Look a benchmark up by name: built-ins first, then externally loaded
+/// `.asm` programs (see [`crate::session::programs`]). Built-ins always
+/// win — the loader refuses registrations that would shadow one.
+pub fn find(name: &str) -> Option<&'static dyn Workload> {
+    find_builtin(name)
+        .or_else(|| crate::session::programs::find(name).map(|p| p as &'static dyn Workload))
 }
 
 /// Look a benchmark up by name, or produce the canonical
@@ -81,9 +89,45 @@ pub fn find_or_err(name: &str) -> Result<&'static dyn Workload, crate::session::
     find(name).ok_or_else(|| crate::session::SessionError::UnknownBench(name.to_string()))
 }
 
-/// All registered benchmark names, in registry order.
+/// All *built-in* benchmark names, in registry order (matches
+/// [`workloads::ALL`]; externally loaded programs are not included —
+/// see [`known_names`] for the merged list).
 pub fn names() -> Vec<&'static str> {
     REGISTRY.iter().map(|w| w.name()).collect()
+}
+
+/// Every currently resolvable benchmark name — built-ins plus loaded
+/// `.asm` programs — sorted and deduplicated, for suggestion lists.
+pub fn known_names() -> Vec<&'static str> {
+    let mut v = names();
+    v.extend(crate::session::programs::names());
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Levenshtein edit distance, for near-miss suggestions. Both inputs are
+/// benchmark-name-sized, so the O(|a|·|b|) DP is fine.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// A known name one edit away from `name` (first in sorted order on
+/// ties) — the "did you mean `gups`?" hint for typos.
+pub fn nearest(name: &str) -> Option<&'static str> {
+    known_names().into_iter().find(|c| edit_distance(name, c) == 1)
 }
 
 #[cfg(test)]
@@ -99,6 +143,34 @@ mod tests {
     fn find_known_and_unknown() {
         assert_eq!(find("gups").map(|w| w.name()), Some("gups"));
         assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn known_names_are_sorted_and_deduped() {
+        let names = known_names();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(names, sorted);
+        assert!(names.contains(&"gups") && names.contains(&"stream"));
+    }
+
+    #[test]
+    fn nearest_suggests_one_edit_typos() {
+        assert_eq!(nearest("gupz"), Some("gups"));
+        assert_eq!(nearest("sream"), Some("stream"));
+        // Distance 2+ or exact matches produce no hint.
+        assert_eq!(nearest("gups"), None, "exact match is distance 0");
+        assert_eq!(nearest("zzzzzz"), None);
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("gups", "gups"), 0);
+        assert_eq!(edit_distance("gups", "cups"), 1);
+        assert_eq!(edit_distance("gups", "gup"), 1);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 
     #[test]

@@ -34,11 +34,19 @@ pub enum SessionError {
 impl std::fmt::Display for SessionError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SessionError::UnknownBench(name) => write!(
-                f,
-                "unknown benchmark '{name}' (valid: {})",
-                workloads::ALL.join(", ")
-            ),
+            SessionError::UnknownBench(name) => {
+                // Built-ins plus loaded `.asm` programs, sorted + deduped;
+                // one-edit-distance typos get a nearest-name hint.
+                write!(
+                    f,
+                    "unknown benchmark '{name}' (valid: {})",
+                    crate::session::registry::known_names().join(", ")
+                )?;
+                if let Some(hint) = crate::session::registry::nearest(name) {
+                    write!(f, " — did you mean '{hint}'?")?;
+                }
+                Ok(())
+            }
             SessionError::UnknownConfig(name) => write!(
                 f,
                 "unknown config '{name}' (valid: {})",
@@ -360,6 +368,16 @@ impl RunRequestBuilder {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn unknown_bench_hints_at_one_edit_typos() {
+        let e = RunRequest::bench("gupz").build().unwrap_err();
+        assert!(matches!(e, SessionError::UnknownBench(_)));
+        assert!(e.to_string().contains("did you mean 'gups'?"), "{e}");
+        // No hint when nothing is one edit away.
+        let e = RunRequest::bench("zzzzzz").build().unwrap_err();
+        assert!(!e.to_string().contains("did you mean"), "{e}");
+    }
 
     #[test]
     fn builder_validates_bench_and_config() {

@@ -1,0 +1,446 @@
+//! Integration tests for the text-format AMI assembly subsystem:
+//!
+//! * negative corpus — one malformed program per `ParseErrorKind`, each
+//!   asserting the exact `line:col` the parser reports;
+//! * disasm round-trip over every builtin benchmark × representative
+//!   variant (`parse_str(disasm(p)) == p`);
+//! * golden file — the canonical grammar pinned byte-for-byte;
+//! * the `examples/asm/` corpus — parses, verifies with zero deny AND
+//!   zero warn findings (the CI `--deny-warnings` gate), and runs
+//!   end-to-end through the loader with its `.check` assertions;
+//! * sweep-cache fingerprint forking on a `.asm` byte change.
+
+use std::path::{Path, PathBuf};
+
+use amu_sim::config::SimConfig;
+use amu_sim::isa::{disasm, parse_str, ParseErrorKind};
+use amu_sim::session::programs::{self, ProgramError};
+use amu_sim::session::registry;
+use amu_sim::session::{RunRequest, SweepGrid, Workload};
+use amu_sim::workloads::{Scale, Variant, VariantKind};
+
+// ---------------------------------------------------------------------------
+// Negative corpus: exact positions for every ParseErrorKind.
+// ---------------------------------------------------------------------------
+
+fn parse_err(src: &str) -> amu_sim::isa::ParseError {
+    parse_str(src, "neg.asm", "neg").expect_err("program must not parse")
+}
+
+#[test]
+fn unknown_mnemonic_position() {
+    let e = parse_err("nop\n  frobnicate r1\n");
+    assert_eq!((e.line, e.col), (2, 3));
+    assert_eq!(e.kind, ParseErrorKind::UnknownMnemonic("frobnicate".into()));
+    assert_eq!(e.to_string(), "neg.asm:2:3: unknown mnemonic 'frobnicate'");
+}
+
+#[test]
+fn unknown_directive_position() {
+    let e = parse_err(".programme foo\nhalt\n");
+    assert_eq!((e.line, e.col), (1, 1));
+    assert_eq!(e.kind, ParseErrorKind::UnknownDirective(".programme".into()));
+}
+
+#[test]
+fn bad_register_position() {
+    let e = parse_err("add r1, r99, r2\nhalt\n");
+    assert_eq!((e.line, e.col), (1, 9));
+    assert_eq!(e.kind, ParseErrorKind::BadRegister("r99".into()));
+}
+
+#[test]
+fn bad_immediate_position() {
+    let e = parse_err("li r1, 12x9\nhalt\n");
+    assert_eq!((e.line, e.col), (1, 8));
+    assert_eq!(e.kind, ParseErrorKind::BadImmediate("12x9".into()));
+    // Division by zero is a bad immediate too, not a panic.
+    let e = parse_err("li r1, 8/0\nhalt\n");
+    assert_eq!((e.line, e.col), (1, 8));
+    assert_eq!(e.kind, ParseErrorKind::BadImmediate("8/0".into()));
+}
+
+#[test]
+fn wrong_operand_count_position() {
+    let e = parse_err("add r1, r2\nhalt\n");
+    assert_eq!((e.line, e.col), (1, 1));
+    match e.kind {
+        ParseErrorKind::WrongOperandCount { mnemonic, expected, got } => {
+            assert_eq!(mnemonic, "add");
+            assert_eq!(expected, "rd, rs1, rs2");
+            assert_eq!(got, 2);
+        }
+        other => panic!("expected WrongOperandCount, got {other:?}"),
+    }
+}
+
+#[test]
+fn bad_address_operand_position() {
+    let e = parse_err("ld.8 r1, r2\nhalt\n");
+    assert_eq!((e.line, e.col), (1, 10));
+    assert_eq!(e.kind, ParseErrorKind::BadAddressOperand("r2".into()));
+}
+
+#[test]
+fn bad_cfg_reg_position() {
+    let e = parse_err("cfgwr r1, turbo\nhalt\n");
+    assert_eq!((e.line, e.col), (1, 11));
+    assert_eq!(e.kind, ParseErrorKind::BadCfgReg("turbo".into()));
+}
+
+#[test]
+fn bad_region_position() {
+    let e = parse_err(".region fast\nnop\nhalt\n");
+    assert_eq!((e.line, e.col), (1, 9));
+    assert_eq!(e.kind, ParseErrorKind::BadRegion("fast".into()));
+}
+
+#[test]
+fn bad_size_position() {
+    let e = parse_err("ld.3 r1, 0(r2)\nhalt\n");
+    assert_eq!((e.line, e.col), (1, 1));
+    assert_eq!(e.kind, ParseErrorKind::BadSize("ld.3".into()));
+}
+
+#[test]
+fn duplicate_label_position() {
+    let e = parse_err("x: nop\nx: halt\n");
+    assert_eq!((e.line, e.col), (2, 1));
+    assert_eq!(e.kind, ParseErrorKind::DuplicateLabel("x".into()));
+}
+
+#[test]
+fn undefined_label_position() {
+    // Reported at the first reference, in source order.
+    let e = parse_err("j nowhere\nhalt\n");
+    assert_eq!((e.line, e.col), (1, 3));
+    assert_eq!(e.kind, ParseErrorKind::UndefinedLabel("nowhere".into()));
+}
+
+#[test]
+fn duplicate_arg_position() {
+    let e = parse_err(".arg n 1\n.arg n 2\nnop\nhalt\n");
+    assert_eq!((e.line, e.col), (2, 6));
+    assert_eq!(e.kind, ParseErrorKind::DuplicateArg("n".into()));
+}
+
+#[test]
+fn unknown_symbol_position() {
+    let e = parse_err("li r1, $bogus\nhalt\n");
+    assert_eq!((e.line, e.col), (1, 8));
+    assert_eq!(e.kind, ParseErrorKind::UnknownSymbol("$bogus".into()));
+}
+
+#[test]
+fn aliased_request_regs_position() {
+    // The builder would assert (panic); the parser must pre-check.
+    let e = parse_err("aload r2, r2, r3\nhalt\n");
+    assert_eq!((e.line, e.col), (1, 7));
+    assert_eq!(e.kind, ParseErrorKind::AliasedRequestRegs("aload".into()));
+}
+
+#[test]
+fn empty_program_position() {
+    let e = parse_err("; nothing but comments\n\n# and blanks\n");
+    assert_eq!((e.line, e.col), (1, 1));
+    assert_eq!(e.kind, ParseErrorKind::EmptyProgram);
+}
+
+// ---------------------------------------------------------------------------
+// Round-trip: every builtin × representative variant re-parses identically.
+// ---------------------------------------------------------------------------
+
+fn normalized_labels(p: &amu_sim::isa::Program) -> Vec<(usize, String)> {
+    let mut v: Vec<(usize, String)> = p.labels.iter().map(|(n, at)| (*at, n.clone())).collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn every_builtin_variant_round_trips_through_disasm() {
+    let representative = |kind: VariantKind| match kind {
+        VariantKind::Sync => Variant::Sync,
+        VariantKind::Amu => Variant::Amu,
+        VariantKind::AmuLlvm => Variant::AmuLlvm,
+        VariantKind::GroupPrefetch => Variant::GroupPrefetch(16),
+        VariantKind::SwPrefetch => Variant::SwPrefetch { batch: 16, depth: 2 },
+    };
+    for w in registry::REGISTRY {
+        for &kind in w.supported_variants() {
+            let v = representative(kind);
+            let cfg = match kind {
+                VariantKind::Amu | VariantKind::AmuLlvm => SimConfig::amu(),
+                _ => SimConfig::baseline(),
+            };
+            let spec = w.build(&cfg, v, Scale::Test);
+            let text = disasm(&spec.prog);
+            let q = parse_str(&text, "<disasm>", &spec.prog.name).unwrap_or_else(|e| {
+                panic!("{}/{:?}: disasm failed to re-parse: {e}", w.name(), kind)
+            });
+            assert_eq!(spec.prog.insts, q.prog.insts, "{}/{kind:?}", w.name());
+            assert_eq!(spec.prog.name, q.prog.name, "{}/{kind:?}", w.name());
+            assert_eq!(
+                spec.prog.addr_taken,
+                q.prog.addr_taken,
+                "{}/{kind:?}",
+                w.name()
+            );
+            assert_eq!(
+                normalized_labels(&spec.prog),
+                normalized_labels(&q.prog),
+                "{}/{kind:?}",
+                w.name()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden file: the canonical grammar, pinned byte-for-byte.
+// ---------------------------------------------------------------------------
+
+/// A hand-rolled program exercising every mnemonic family the
+/// disassembler can emit; its canonical text lives in
+/// `tests/golden/disasm_reference.txt`.
+fn golden_program() -> amu_sim::isa::Program {
+    use amu_sim::isa::{Asm, CfgReg};
+    use amu_sim::stats::Region;
+    let mut a = Asm::new("golden");
+    a.region(Region::Setup);
+    a.li(1, 0);
+    a.li_label(2, "task");
+    a.mark_addr_taken("task");
+    a.region(Region::Main);
+    a.label("loop");
+    a.add(3, 1, 2);
+    a.sub(4, 3, 1);
+    a.xor(5, 4, 3);
+    a.and(6, 5, 4);
+    a.or(7, 6, 5);
+    a.sll(8, 7, 1);
+    a.srl(9, 8, 1);
+    a.mul(10, 9, 8);
+    a.sltu(11, 10, 9);
+    a.addi(12, 11, 5);
+    a.xori(13, 12, 3);
+    a.andi(14, 13, 7);
+    a.ori(15, 14, 1);
+    a.slli(16, 15, 2);
+    a.srli(17, 16, 2);
+    a.ld(18, 1, 8, 8);
+    a.ld(19, 1, 0, 4);
+    a.st(18, 1, -8, 2);
+    a.st(19, 1, 16, 1);
+    a.prefetch(1, 64);
+    a.flush(1, 0);
+    a.beq(1, 2, "loop");
+    a.bne(3, 4, "loop");
+    a.blt(5, 6, "loop");
+    a.bge(7, 8, "loop");
+    a.bltu(9, 10, "loop");
+    a.call("task");
+    a.j("after");
+    a.label("task");
+    a.region(Region::Scheduler);
+    a.cfgwr(1, CfgReg::Granularity);
+    a.cfgwr(1, CfgReg::QueueBase);
+    a.cfgwr(1, CfgReg::QueueLength);
+    a.cfgrd(20, CfgReg::Granularity);
+    a.aload(21, 22, 23);
+    a.astore(24, 22, 23);
+    a.getfin(25);
+    a.ret();
+    a.label("after");
+    a.region(Region::Disambig);
+    a.jal(26, "task");
+    a.jalr(0, 26);
+    a.jalr(27, 26);
+    a.region(Region::Main);
+    a.roi_begin();
+    a.nop();
+    a.roi_end();
+    a.halt();
+    a.finish()
+}
+
+fn golden_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/disasm_reference.txt")
+}
+
+#[test]
+fn disasm_matches_the_golden_reference() {
+    let prog = golden_program();
+    let text = disasm(&prog);
+    let golden = std::fs::read_to_string(golden_path())
+        .expect("tests/golden/disasm_reference.txt must exist");
+    assert_eq!(
+        text, golden,
+        "canonical disasm drifted from the golden file; if the grammar \
+         change is intentional, regenerate the golden"
+    );
+    // And the golden text itself reassembles to the identical program.
+    let q = parse_str(&golden, "golden", "golden").expect("golden must parse");
+    assert_eq!(prog.insts, q.prog.insts);
+    assert_eq!(prog.addr_taken, q.prog.addr_taken);
+    assert_eq!(normalized_labels(&prog), normalized_labels(&q.prog));
+}
+
+// ---------------------------------------------------------------------------
+// The examples/asm corpus: clean verification and end-to-end runs.
+// ---------------------------------------------------------------------------
+
+fn corpus_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/asm")
+}
+
+fn corpus_files() -> Vec<PathBuf> {
+    let mut v: Vec<PathBuf> = std::fs::read_dir(corpus_dir())
+        .expect("examples/asm must exist")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "asm"))
+        .collect();
+    v.sort();
+    assert!(v.len() >= 6, "corpus shrank: {} kernels", v.len());
+    v
+}
+
+#[test]
+fn corpus_verifies_with_zero_deny_and_zero_warn() {
+    for path in corpus_files() {
+        let (name, prog) = programs::parse_for_check(path.to_str().unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let report = amu_sim::isa::verify(&prog);
+        assert_eq!(
+            (report.deny_count(), report.warn_count()),
+            (0, 0),
+            "{name} has findings: {report:?}"
+        );
+    }
+}
+
+#[test]
+fn corpus_loads_and_runs_end_to_end() {
+    for path in corpus_files() {
+        let lp = programs::load_file(path.to_str().unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let ami = !lp.supported_variants().contains(&VariantKind::Sync);
+        let cfg = if ami { SimConfig::amu() } else { SimConfig::baseline() };
+        // `.run()` validates the program's `.check` assertions.
+        let r = RunRequest::bench(lp.name())
+            .config(cfg)
+            .latency_ns(300.0)
+            .scale(Scale::Test)
+            .run()
+            .unwrap_or_else(|e| panic!("{}: {e}", lp.name()));
+        assert!(r.insts > 0, "{}", lp.name());
+    }
+}
+
+#[test]
+fn ami_corpus_program_refuses_the_baseline_config() {
+    // Under amu.enabled = false the AMI datapath never ticks; the loader
+    // must surface a typed UnsupportedVariant error instead of hanging.
+    let path = corpus_dir().join("ami_sum.asm");
+    let lp = programs::load_file(path.to_str().unwrap()).expect("loads clean");
+    assert_eq!(
+        lp.supported_variants(),
+        &[VariantKind::Amu, VariantKind::AmuLlvm][..]
+    );
+    let e = RunRequest::bench(lp.name())
+        .config(SimConfig::baseline())
+        .scale(Scale::Test)
+        .build()
+        .expect_err("baseline config must be rejected");
+    assert!(
+        e.to_string().contains("does not support variant"),
+        "unexpected error: {e}"
+    );
+}
+
+#[test]
+fn loaded_corpus_round_trips_through_disasm() {
+    for path in corpus_files() {
+        let src = std::fs::read_to_string(&path).unwrap();
+        let parsed =
+            parse_str(&src, path.to_str().unwrap(), "x").expect("corpus parses");
+        let text = disasm(&parsed.prog);
+        let q = parse_str(&text, "<disasm>", &parsed.prog.name).unwrap_or_else(|e| {
+            panic!("{}: disasm failed to re-parse: {e}", path.display())
+        });
+        assert_eq!(parsed.prog.insts, q.prog.insts, "{}", path.display());
+        assert_eq!(parsed.prog.addr_taken, q.prog.addr_taken, "{}", path.display());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sweep-cache fingerprint forking on .asm byte changes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn editing_a_program_file_forks_the_sweep_fingerprint() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("amu_fork_{}.asm", std::process::id()));
+    let p = path.to_str().unwrap();
+
+    std::fs::write(&path, ".program tprog_fork\n  nop\n  halt\n").unwrap();
+    let fp1 = programs::load_file(p).expect("v1 loads").fingerprint();
+
+    std::fs::write(&path, ".program tprog_fork\n  nop\n  nop\n  halt\n").unwrap();
+    let fp2 = programs::load_file(p).expect("v2 loads").fingerprint();
+    assert_ne!(fp1, fp2, "content fingerprint must fork on a byte change");
+
+    let base = SweepGrid::new(Scale::Test)
+        .benches(["tprog_fork"])
+        .configs(["baseline"])
+        .latencies_ns([300.0]);
+    let g1 = base.clone().programs([("tprog_fork".to_string(), fp1)]);
+    let g2 = base.clone().programs([("tprog_fork".to_string(), fp2)]);
+    assert_ne!(
+        g1.fingerprint(),
+        g2.fingerprint(),
+        "sweep fingerprint must fork when the program bytes change"
+    );
+    assert_ne!(
+        base.fingerprint(),
+        g1.fingerprint(),
+        "a swept program refines the plain grid fingerprint"
+    );
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Registry integration: loaded programs merge into names and suggestions.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn loaded_programs_join_known_names_and_typo_hints() {
+    programs::load_str(
+        ".program tprog_suggest_me\n  nop\n  halt\n",
+        "tprog_suggest_me.asm",
+    )
+    .expect("loads clean");
+    let names = registry::known_names();
+    assert!(names.contains(&"tprog_suggest_me"), "{names:?}");
+    let mut sorted = names.clone();
+    sorted.sort_unstable();
+    assert_eq!(names, sorted, "known_names must stay sorted");
+
+    // One-edit typo resolves to the loaded program in the error hint.
+    let e = RunRequest::bench("tprog_suggest_mq").build().expect_err("unknown");
+    let msg = e.to_string();
+    assert!(msg.contains("unknown benchmark 'tprog_suggest_mq'"), "{msg}");
+    assert!(msg.contains("did you mean 'tprog_suggest_me'?"), "{msg}");
+    assert!(msg.contains("tprog_suggest_me"), "{msg}");
+}
+
+#[test]
+fn shadowing_and_io_errors_are_typed() {
+    let e = programs::load_str(".program gups\n  nop\n  halt\n", "gups.asm")
+        .expect_err("builtin shadowing must be refused");
+    assert!(matches!(e, ProgramError::ShadowsBuiltin(_)), "{e}");
+
+    let e = programs::load_file("/nonexistent/nope.asm").expect_err("missing file");
+    assert!(matches!(e, ProgramError::Io { .. }), "{e}");
+    assert!(e.to_string().contains("/nonexistent/nope.asm"), "{e}");
+}
